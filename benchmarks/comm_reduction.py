@@ -1,0 +1,118 @@
+"""Paper §5.2 / Figure 5: communication reduction of pipeline parallelism
+vs BSP data parallelism.
+
+Two sources:
+  1. The 2018 model zoo through the partitioner (per-worker wire bytes:
+     boundary activations+gradients vs full parameter sync) — the
+     paper's ≥90% claims for VGG16/AlexNet/S2VT.
+  2. The assigned LM architectures analytically: PipeDream stage-boundary
+     bytes per microbatch vs replicated-parameter all-reduce bytes — the
+     same trend at transformer scale (plus the HLO-measured collective
+     bytes from the dry-run artifacts, when present).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import models_2018 as zoo
+from benchmarks.table1 import comm_bytes_bsp, comm_bytes_pp
+from repro import configs
+from repro.core import profiler as prof
+from repro.core.partitioner import partition
+
+
+def zoo_rows(machines: int = 8):
+    out = []
+    for name, (fn, mb) in zoo.MODELS.items():
+        for hw in (prof.CLUSTER_A, prof.CLUSTER_B):
+            profiles = fn(hw, mb)
+            part = partition(profiles, machines, hw)
+            bsp = comm_bytes_bsp(profiles, machines, hw)
+            pp = comm_bytes_pp(profiles, part, hw)
+            out.append({"model": name, "cluster": hw.name,
+                        "config": part.config_string,
+                        "bsp_bytes": bsp, "pp_bytes": pp,
+                        "reduction_pct": 100 * (1 - pp / bsp)})
+    return out
+
+
+def lm_rows():
+    """Assigned archs, train_4k: per-device per-microbatch bytes.
+
+    BSP: ring all-reduce of all grads = 2(d−1)/d · P · 2B per microbatch
+    (d = 256 data replicas).  PipeDream: one boundary activation + one
+    gradient = 2 · mb·seq·d_model · 2B, plus the stage-replica sync of
+    1/pp of the params over 16 replicas.
+    """
+    shape = configs.SHAPES["train_4k"]
+    out = []
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get(arch)
+        spec, plan = cfg.full_spec(), cfg.PLAN
+        chips = 256
+        dp = chips // (plan.pp * plan.tp)
+        mb_tokens = shape.seq_len * shape.global_batch // (dp * 8)
+        p_bytes = spec.param_count() * 2
+        bsp = 2 * (chips - 1) / chips * p_bytes
+        act = 2 * mb_tokens * spec.d_model * 2
+        stage_sync = (2 * (dp - 1) / dp * p_bytes / plan.pp
+                      / max(plan.tp, 1))
+        pp = act + stage_sync
+        out.append({"model": arch, "cluster": "tpu-v5e-256",
+                    "config": f"pp{plan.pp}xtp{plan.tp}",
+                    "bsp_bytes": bsp, "pp_bytes": pp,
+                    "reduction_pct": 100 * (1 - pp / bsp)})
+    return out
+
+
+def hlo_rows(dryrun_dir: str = "experiments/dryrun"):
+    """Measured per-device collective bytes from dry-run artifacts."""
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir,
+                                              "*train_4k__16x16*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        out.append({"model": r["arch"], "shape": r["shape"],
+                    "coll_bytes": r["coll_operand_bytes"],
+                    "per_kind": r["per_collective"]})
+    return out
+
+
+def main():
+    print("== 2018 zoo (partitioner-chosen configs, 8 machines) ==")
+    for r in zoo_rows():
+        print(f"{r['model']:14s} {r['cluster']:16s} {r['config']:>10s} "
+              f"bsp={r['bsp_bytes'] / 1e6:9.1f}MB "
+              f"pp={r['pp_bytes'] / 1e6:9.1f}MB "
+              f"reduction={r['reduction_pct']:5.1f}%")
+    print("\n== assigned archs (train_4k, 256 chips, analytic) ==")
+    rows = lm_rows()
+    for r in rows:
+        print(f"{r['model']:18s} {r['config']:>10s} "
+              f"bsp={r['bsp_bytes'] / 1e9:7.2f}GB "
+              f"pp={r['pp_bytes'] / 1e9:7.2f}GB "
+              f"reduction={r['reduction_pct']:5.1f}%")
+    hlo = hlo_rows()
+    if hlo:
+        print("\n== HLO-measured per-device collective bytes "
+              "(dry-run, train_4k) ==")
+        for r in hlo:
+            print(f"{r['model']:18s} {r['coll_bytes']:.3e} B/device/step")
+    for path in sorted(glob.glob("experiments/dryrun/bsp_compare__*.json")):
+        with open(path) as f:
+            r = json.load(f)
+        print(f"\n== compiled BSP vs PipeDream ({r['arch']}, 256 chips) ==")
+        print(f"BSP {r['bsp_coll_bytes_per_device']:.3e} B/dev/step  "
+              f"PP {r['pp_coll_bytes_per_device']:.3e} B/dev/step  "
+              f"reduction {r['reduction_pct']:.1f}%")
+    print("\nname,us_per_call,derived")
+    for r in zoo_rows() + rows:
+        print(f"comm_reduction.{r['model']}.{r['cluster']},0.0,"
+              f"reduction={r['reduction_pct']:.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+"""Layer profiles for the paper's five evaluation models (§5.1).
+
+Parameter counts are the published per-layer tables (VGG16 exact;
+AlexNet exact; others grouped into modules).  Compute times come from
+published per-image FLOPs divided through hw.flops_peak × hw.mfu — the
+same analytic mode the TPU partitioner uses (profiler.py), so the Table-1
+reproduction exercises the production code path end-to-end.
+
+Activation sizes a_l are per-minibatch output bytes (fp32), the paper's
+Figure-5 quantities.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.profiler import Hardware, LayerProfile
+
+BWD_FACTOR = 2.0  # paper §3.3: backward ≈ 2× forward
+
+
+def _mk(name, gflops_fwd, act_bytes, params, hw, mb):
+    t_f = gflops_fwd * 1e9 * mb / (hw.flops_peak * hw.mfu)
+    return LayerProfile(name, t_f, BWD_FACTOR * t_f, act_bytes * mb, params)
+
+
+# --------------------------------------------------------------------------
+# VGG16 — 138.3 M params (553 MB fp32), 15.5 GFLOPs/image fwd
+# --------------------------------------------------------------------------
+
+_VGG16 = [
+    # name, GFLOPs fwd/img, out C×H×W, params
+    ("conv1_1", 0.087, 64 * 224 * 224, 1_792),
+    ("conv1_2", 1.850, 64 * 224 * 224, 36_928),
+    ("conv2_1", 0.924, 128 * 112 * 112, 73_856),
+    ("conv2_2", 1.850, 128 * 112 * 112, 147_584),
+    ("conv3_1", 0.925, 256 * 56 * 56, 295_168),
+    ("conv3_2", 1.850, 256 * 56 * 56, 590_080),
+    ("conv3_3", 1.850, 256 * 56 * 56, 590_080),
+    ("conv4_1", 0.924, 512 * 28 * 28, 1_180_160),
+    ("conv4_2", 1.850, 512 * 28 * 28, 2_359_808),
+    ("conv4_3", 1.850, 512 * 28 * 28, 2_359_808),
+    ("conv5_1", 0.462, 512 * 14 * 14, 2_359_808),
+    ("conv5_2", 0.462, 512 * 14 * 14, 2_359_808),
+    ("conv5_3", 0.462, 512 * 14 * 14, 2_359_808),
+    ("fc6", 0.206, 4096, 102_764_544),
+    ("fc7", 0.034, 4096, 16_781_312),
+    ("fc8", 0.008, 1000, 4_097_000),
+]
+
+
+def vgg16(hw: Hardware, mb: int = 32) -> List[LayerProfile]:
+    return [_mk(n, f, c * 4, p, hw, mb) for n, f, c, p in _VGG16]
+
+
+# --------------------------------------------------------------------------
+# AlexNet — 61 M params (244 MB), 0.72 GFLOPs/image
+# --------------------------------------------------------------------------
+
+_ALEXNET = [
+    ("conv1", 0.105, 96 * 55 * 55, 34_944),
+    ("conv2", 0.224, 256 * 27 * 27, 614_656),
+    ("conv3", 0.150, 384 * 13 * 13, 885_120),
+    ("conv4", 0.112, 384 * 13 * 13, 1_327_488),
+    ("conv5", 0.075, 256 * 13 * 13, 884_992),
+    ("fc6", 0.075, 4096, 37_752_832),
+    ("fc7", 0.034, 4096, 16_781_312),
+    ("fc8", 0.008, 1000, 4_097_000),
+]
+
+
+def alexnet(hw: Hardware, mb: int = 32) -> List[LayerProfile]:
+    return [_mk(n, f, c * 4, p, hw, mb) for n, f, c, p in _ALEXNET]
+
+
+# --------------------------------------------------------------------------
+# Inception-v3 — 23.8 M params (95 MB; paper quotes 157 MB with optimizer
+# state), 5.7 GFLOPs/image, small activations after the stem
+# --------------------------------------------------------------------------
+
+def inception_v3(hw: Hardware, mb: int = 32) -> List[LayerProfile]:
+    out = [_mk("stem", 1.2, 192 * 35 * 35, 1_000_000, hw, mb)]
+    # 11 inception modules, compute-heavy, modest params/activations
+    for i, (g, c, p) in enumerate(
+            [(0.30, 288 * 35 * 35, 400_000)] * 3
+            + [(0.45, 768 * 17 * 17, 1_300_000)] * 5
+            + [(0.50, 1280 * 8 * 8, 3_500_000)] * 3):
+        out.append(_mk(f"mixed{i}", g, c, p, hw, mb))
+    out.append(_mk("logits", 0.05, 1000, 2_049_000, hw, mb))
+    return out
+
+
+# --------------------------------------------------------------------------
+# ResNet-50 — 25.6 M params (102 MB), 4.1 GFLOPs/image
+# --------------------------------------------------------------------------
+
+def resnet50(hw: Hardware, mb: int = 32) -> List[LayerProfile]:
+    out = [_mk("stem", 0.24, 64 * 112 * 112, 9_472, hw, mb)]
+    blocks = ([(0.24, 256 * 56 * 56, 75_008)] * 3
+              + [(0.24, 512 * 28 * 28, 280_064)] * 4
+              + [(0.24, 1024 * 14 * 14, 1_117_184)] * 6
+              + [(0.24, 2048 * 7 * 7, 4_462_592)] * 3)
+    for i, (g, c, p) in enumerate(blocks):
+        out.append(_mk(f"block{i}", g, c, p, hw, mb))
+    out.append(_mk("fc", 0.004, 1000, 2_049_000, hw, mb))
+    return out
+
+
+# --------------------------------------------------------------------------
+# S2VT — seq-to-seq video captioning (paper: 349 MB ⇒ ~87 M params),
+# 2-layer LSTM over 80-frame clips, minibatch 80.  LSTM compute per
+# step: 2 × 4 × d_in × d_hid MACs; params dominate compute ⇒ the
+# comm-bound regime the paper reports (70% overhead on 4×Cluster-A).
+# --------------------------------------------------------------------------
+
+def s2vt(hw: Hardware, mb: int = 80, steps: int = 80) -> List[LayerProfile]:
+    d_feat, d_hid, vocab = 4096, 1000, 12_594
+    out = [_mk("embed", 0.001, d_feat, 500 * d_hid, hw, mb)]
+    # LSTM1: input 4096 -> 1000; LSTM2: (1000+500) -> 1000
+    for name, d_in in (("lstm1", d_feat + d_hid), ("lstm2", 1500 + d_hid)):
+        g = 2 * 4 * d_in * d_hid * steps / 1e9
+        p = 4 * (d_in * d_hid + d_hid)
+        out.append(_mk(name, g, steps * d_hid, p, hw, mb))
+    # the 349 MB model size is dominated by the embedding/projection
+    out.append(_mk("proj", 2 * d_hid * vocab * steps / 1e9,
+                   steps * vocab, 62_000_000, hw, mb))
+    return out
+
+
+MODELS = {
+    "vgg16": (vgg16, 32),
+    "alexnet": (alexnet, 32),
+    "inception_v3": (inception_v3, 32),
+    "resnet50": (resnet50, 32),
+    "s2vt": (s2vt, 80),
+}

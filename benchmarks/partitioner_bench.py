@@ -1,0 +1,71 @@
+"""Partitioner scaling benchmark (paper: O(N²M²)) + DP-vs-simulator
+cross-check (the DP's predicted bottleneck must match the event-driven
+steady state)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import models_2018 as zoo
+from benchmarks.simulator import simulate_pipeline
+from repro.core import profiler as prof
+from repro.core.partitioner import partition
+
+
+def timing_rows():
+    hw = prof.CLUSTER_A
+    rng = np.random.default_rng(0)
+    rows = []
+    for n_layers in (16, 32, 64):
+        for machines in (4, 8, 16):
+            profiles = [prof.LayerProfile(
+                f"l{i}", rng.uniform(0.001, 0.01), rng.uniform(0.002, 0.02),
+                rng.uniform(1e5, 1e7), rng.uniform(1e4, 1e7))
+                for i in range(n_layers)]
+            t0 = time.perf_counter()
+            part = partition(profiles, machines, hw)
+            dt = time.perf_counter() - t0
+            rows.append({"n": n_layers, "m": machines, "seconds": dt,
+                         "config": part.config_string})
+    return rows
+
+
+def crosscheck_rows():
+    rows = []
+    for name, (fn, mb) in zoo.MODELS.items():
+        hw = prof.CLUSTER_A
+        profiles = fn(hw, mb)
+        part = partition(profiles, 8, hw)
+        sim = simulate_pipeline(profiles, part, hw)
+        # the simulated steady state may add boundary-link time the DP
+        # bounds by 2·C_i; both must agree within the link service
+        rel = abs(sim.per_minibatch - part.bottleneck_time) \
+            / part.bottleneck_time
+        rows.append({"model": name, "dp": part.bottleneck_time,
+                     "sim": sim.per_minibatch, "rel_err": rel})
+    return rows
+
+
+def main():
+    print("== partitioner runtime (O(N^2 M^2)) ==")
+    t_rows = timing_rows()
+    for r in t_rows:
+        print(f"N={r['n']:3d} M={r['m']:3d}  {r['seconds'] * 1e3:8.1f} ms"
+              f"  -> {r['config']}")
+    print("\n== DP bottleneck vs event-driven steady state ==")
+    c_rows = crosscheck_rows()
+    for r in c_rows:
+        print(f"{r['model']:14s} dp={r['dp'] * 1e3:8.2f}ms "
+              f"sim={r['sim'] * 1e3:8.2f}ms rel={r['rel_err']:.3f}")
+    print("\nname,us_per_call,derived")
+    for r in t_rows:
+        print(f"partitioner.N{r['n']}.M{r['m']},{r['seconds'] * 1e6:.0f},"
+              f"config={r['config']}")
+    for r in c_rows:
+        print(f"dp_vs_sim.{r['model']},0.0,rel_err={r['rel_err']:.4f}")
+    return t_rows, c_rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Aggregate the dry-run roofline artifacts into the §Roofline table.
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and
+prints per (arch × shape × mesh): the three terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs usefulness, and roofline fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import defaultdict
+
+
+def load(dryrun_dir: str = "experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if "mesh" in r:                # skip non-roofline artifacts
+            rows.append(r)
+    return rows
+
+
+def fmt(rows, mesh: str = "16x16", note: str = ""):
+    out = []
+    for r in rows:
+        if r["mesh"] != mesh or r.get("note", "") != note:
+            continue
+        out.append(r)
+    out.sort(key=lambda r: (r["arch"], r["shape"]))
+    print(f"\n== roofline terms, mesh={mesh}"
+          + (f", note={note}" if note else "") + " ==")
+    print(f"{'arch':18s} {'shape':12s} {'plan':22s} "
+          f"{'compute':>9s} {'memory':>9s} {'collective':>10s} "
+          f"{'dominant':>10s} {'useful':>6s} {'frac':>6s}")
+    for r in out:
+        print(f"{r['arch']:18s} {r['shape']:12s} {r['plan']:22s} "
+              f"{r['compute_s'] * 1e3:8.1f}ms {r['memory_s'] * 1e3:8.1f}ms "
+              f"{r['collective_s'] * 1e3:9.1f}ms {r['dominant']:>10s} "
+              f"{r['useful_ratio']:6.2f} {r['roofline_fraction']:6.3f}")
+    return out
+
+
+def main():
+    rows = load()
+    if not rows:
+        print("no dry-run artifacts found; run "
+              "`python -m repro.launch.dryrun --all` first")
+        return []
+    by = defaultdict(int)
+    for r in rows:
+        by[(r["mesh"], r.get("note", ""))] += 1
+    for (mesh, note), n in sorted(by.items()):
+        fmt(rows, mesh, note)
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        tag = f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}"
+        if r.get("note"):
+            tag += f".{r['note']}"
+        print(f"{tag},{r['step_seconds'] * 1e6:.1f},"
+              f"dom={r['dominant']};frac={r['roofline_fraction']:.4f};"
+              f"useful={r['useful_ratio']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Benchmark aggregator: one section per paper table/figure.
+
+  table1            paper Table 1 (PipeDream vs BSP speedups, configs)
+  comm_reduction    paper Figure 5 / §5.2 (comm bytes PP vs BSP)
+  partitioner       §3.2 DP runtime + DP-vs-simulator cross-check
+  roofline          §Roofline terms from the dry-run artifacts
+
+Each prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    failures = []
+    for name in ("table1", "comm_reduction", "partitioner_bench",
+                 "roofline_table"):
+        print(f"\n{'=' * 72}\n== benchmarks.{name}\n{'=' * 72}")
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"\nFAILED benchmarks: {failures}")
+        sys.exit(1)
+    print("\nall benchmarks OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""Event-driven cluster simulator for PipeDream configurations.
+
+Reproduces the paper's Table 1 / Figure 13 *throughput* comparisons
+without GPUs: given per-layer profiles (T_l, a_l, w_l) and a cluster
+(compute speed, network bandwidth), it simulates
+
+  * BSP data parallelism: per-minibatch compute + parameter-server sync
+    with wait-free backprop overlap,
+  * ASP: compute only (no sync stall, statistical efficiency ignored),
+  * model parallelism (no pipelining): one minibatch at a time crossing
+    all stages,
+  * pipeline parallelism (straight or replicated stages): 1F1B steady
+    state — throughput governed by the slowest stage
+    max(compute, sync, boundary-activation transfer), startup ignored
+    (steady-state epochs).
+
+Steady-state epoch time = minibatches_per_epoch × bottleneck_time —
+the same objective PipeDream's partitioner optimizes (§3.2), evaluated
+by a discrete-event engine rather than the DP formula so the two
+implementations cross-check each other (tests + benchmarks assert the
+DP's predicted bottleneck matches the simulated one).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.partitioner import Partition, Stage
+from repro.core.profiler import (Hardware, LayerProfile,
+                                 comm_time_activations,
+                                 comm_time_weight_sync)
+
+
+@dataclasses.dataclass
+class SimResult:
+    per_minibatch: float          # steady-state seconds per minibatch
+    bottleneck_stage: int
+    stage_times: List[float]
+
+    def epoch_seconds(self, minibatches: int) -> float:
+        return self.per_minibatch * minibatches
+
+
+def _stage_compute(profiles, st: Stage) -> float:
+    return sum(p.t_total for p in profiles[st.start:st.end + 1])
+
+
+def _stage_sync(profiles, st: Stage, hw: Hardware) -> float:
+    w = sum(p.w_params for p in profiles[st.start:st.end + 1])
+    return comm_time_weight_sync(w, st.replicas, hw)
+
+
+def simulate_pipeline(profiles: Sequence[LayerProfile], part: Partition,
+                      hw: Hardware, *, n_minibatches: int = 64) -> SimResult:
+    """Discrete-event simulation of the 1F1B pipeline in steady state.
+
+    Each stage is a server processing one minibatch-slot (F+B merged —
+    double-tick granularity) at its per-minibatch service time
+    T_stage = max(compute, weight-sync)/replicas; boundary links are
+    servers with service 2·C_i.  Throughput = 1/busiest-server-rate
+    (Jackson-network bottleneck); the event engine verifies it.
+    """
+    stages = part.stages
+    svc: List[float] = []
+    for st in stages:
+        # steady-state service: wait-free backprop overlaps the sync of
+        # one minibatch with the next minibatch's compute, so the stage
+        # runs at max(compute, sync) — exactly the paper's T(i→j,m).
+        svc.append(max(_stage_compute(profiles, st),
+                       _stage_sync(profiles, st, hw)) / st.replicas)
+    links = [2.0 * comm_time_activations(profiles[st.end].a_bytes, hw)
+             for st in stages[:-1]]
+
+    # event-driven: tokens flow input->output; each server FIFO
+    servers = []
+    for i, s in enumerate(svc):
+        servers.append(("stage", i, s))
+        if i < len(links):
+            servers.append(("link", i, links[i]))
+    free_at = [0.0] * len(servers)
+    done_last: List[float] = []
+    for m in range(n_minibatches):
+        t = 0.0
+        for j, (_, _, service) in enumerate(servers):
+            start = max(t, free_at[j])
+            free_at[j] = start + service
+            t = start + service
+        done_last.append(t)
+    # steady-state rate from the tail spacing
+    tail = done_last[n_minibatches // 2:]
+    per_mb = (tail[-1] - tail[0]) / max(len(tail) - 1, 1)
+    stage_times = svc
+    bottleneck = max(range(len(svc)), key=lambda i: svc[i])
+    return SimResult(per_mb, bottleneck, stage_times)
+
+
+def simulate_bsp(profiles: Sequence[LayerProfile], machines: int,
+                 hw: Hardware) -> SimResult:
+    """BSP data parallelism with wait-free backprop: the backward pass
+    overlaps gradient pushes; per-minibatch time = max(compute,
+    total-sync) (perfect overlap bound, same model as §3.2's T(i→j,m))."""
+    part = Partition((Stage(0, len(profiles) - 1, machines),), 0.0, 1)
+    return simulate_pipeline(profiles, part, hw)
+
+
+def simulate_asp(profiles: Sequence[LayerProfile], machines: int,
+                 hw: Hardware) -> SimResult:
+    """ASP: no sync stall at all (paper: poor statistical efficiency —
+    hardware throughput only)."""
+    t = sum(p.t_total for p in profiles)
+    return SimResult(t / machines, 0, [t / machines])
+
+
+def simulate_model_parallel(profiles: Sequence[LayerProfile],
+                            n_stages: int, hw: Hardware) -> SimResult:
+    """No pipelining: one minibatch occupies the machines sequentially
+    (paper Figure 3) — per-minibatch = sum of stage+link times."""
+    n = len(profiles)
+    per = n // n_stages
+    bounds = [(i * per, (i + 1) * per - 1 if i < n_stages - 1 else n - 1)
+              for i in range(n_stages)]
+    t = 0.0
+    for i, (a, b) in enumerate(bounds):
+        t += sum(p.t_total for p in profiles[a:b + 1])
+        if i + 1 < n_stages:
+            t += 2.0 * comm_time_activations(profiles[b].a_bytes, hw)
+    return SimResult(t, 0, [t])
+
+
+def simulate_single_machine(profiles: Sequence[LayerProfile]) -> SimResult:
+    t = sum(p.t_total for p in profiles)
+    return SimResult(t, 0, [t])

@@ -1,0 +1,124 @@
+"""Reproduce paper Table 1: PipeDream vs BSP data parallelism.
+
+For each (model, machines, cluster) row: run PipeDream's partitioner on
+the analytic profiles (benchmarks/models_2018.py), simulate steady-state
+throughput for single-machine / BSP / PipeDream (benchmarks/simulator.py),
+and compare speedups to the published numbers.
+
+Hardware efficiency only — the paper's time-to-accuracy additionally
+folds in statistical efficiency, identical between BSP and PipeDream
+with weight stashing (§3.4), so throughput ratios are the comparable
+quantity.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from benchmarks import models_2018 as zoo
+from benchmarks.simulator import (simulate_bsp, simulate_model_parallel,
+                                  simulate_pipeline,
+                                  simulate_single_machine)
+from repro.core import profiler as prof
+from repro.core.partitioner import partition
+
+
+@dataclasses.dataclass
+class Row:
+    model: str
+    machines: int
+    cluster: str
+    paper_config: str
+    paper_bsp_speedup: Optional[float]
+    paper_pd_speedup: Optional[float]     # over 1 machine
+    paper_comm_reduction: Optional[float]  # %
+
+
+TABLE1 = [
+    Row("vgg16", 4, "A", "2-1-1", 1.47, 3.14, 90.0),
+    Row("vgg16", 8, "A", "7-1", 2.35, 7.04, 95.0),
+    Row("vgg16", 16, "A", "9-5-1-1", 3.28, 9.86, 91.0),
+    Row("vgg16", 8, "B", "7-1", 1.36, 6.98, 95.0),
+    Row("inception_v3", 8, "A", "8", 7.66, 7.66, 0.0),
+    Row("inception_v3", 8, "B", "7-1", 4.74, 6.88, 47.0),
+    Row("s2vt", 4, "A", "2-1-1", 1.10, 3.34, 95.0),
+    # §5.2 text: AlexNet / ResNet-50 throughput vs 8-machine BSP (B)
+    Row("alexnet", 8, "B", None, None, None, None),
+    Row("resnet50", 8, "B", None, None, None, None),
+]
+
+
+def comm_bytes_bsp(profiles, m, hw):
+    w = sum(p.w_params for p in profiles)
+    return hw.ps_factor * (m - 1) * w * hw.param_bytes / m
+
+
+def comm_bytes_pp(profiles, part, hw):
+    """Per-minibatch worst-stage wire bytes: boundary activations +
+    gradient (×2) + intra-stage replica sync."""
+    worst = 0.0
+    for i, st in enumerate(part.stages):
+        b = 0.0
+        if i + 1 < len(part.stages):
+            b += 2.0 * profiles[st.end].a_bytes
+        if i > 0:
+            b += 2.0 * profiles[part.stages[i - 1].end].a_bytes
+        w = sum(p.w_params for p in profiles[st.start:st.end + 1])
+        b += (hw.ps_factor * (st.replicas - 1) * w * hw.param_bytes
+              / max(st.replicas, 1))
+        worst = max(worst, b)
+    return worst
+
+
+def run_row(row: Row):
+    hw = prof.CLUSTER_A if row.cluster == "A" else prof.CLUSTER_B
+    fn, mb = zoo.MODELS[row.model]
+    profiles = fn(hw, mb)
+    part = partition(profiles, row.machines, hw)
+    single = simulate_single_machine(profiles).per_minibatch
+    bsp = simulate_bsp(profiles, row.machines, hw).per_minibatch
+    pd = simulate_pipeline(profiles, part, hw).per_minibatch
+    mp = simulate_model_parallel(profiles, min(row.machines, 4),
+                                 hw).per_minibatch
+    comm_red = 100.0 * (1.0 - comm_bytes_pp(profiles, part, hw)
+                        / comm_bytes_bsp(profiles, row.machines, hw))
+    return {
+        "model": row.model, "machines": row.machines,
+        "cluster": row.cluster,
+        "config": part.config_string, "noam": part.noam,
+        "bsp_speedup": single / bsp,
+        "pd_speedup": single / pd,
+        "pd_over_bsp": bsp / pd,
+        "mp_slowdown": single / mp,
+        "comm_reduction_pct": comm_red,
+        "paper": row,
+    }
+
+
+def main(csv: bool = True):
+    rows = []
+    print(f"{'model':14s} {'m':>3s} cl {'config':>10s} "
+          f"{'BSP×':>6s}({'paper':>5s}) {'PD×':>6s}({'paper':>5s}) "
+          f"{'PD/BSP':>6s} {'comm−%':>6s}({'paper':>5s})")
+    for row in TABLE1:
+        r = run_row(row)
+        p = r["paper"]
+        print(f"{r['model']:14s} {r['machines']:3d}  {r['cluster']} "
+              f"{r['config']:>10s} "
+              f"{r['bsp_speedup']:6.2f}({p.paper_bsp_speedup or 0:5.2f}) "
+              f"{r['pd_speedup']:6.2f}({p.paper_pd_speedup or 0:5.2f}) "
+              f"{r['pd_over_bsp']:6.2f} "
+              f"{r['comm_reduction_pct']:6.1f}({p.paper_comm_reduction or 0:5.1f})")
+        rows.append(r)
+    if csv:
+        print("\nname,us_per_call,derived")
+        for r in rows:
+            tag = f"table1.{r['model']}.{r['machines']}{r['cluster']}"
+            print(f"{tag},{0.0},pd_over_bsp={r['pd_over_bsp']:.3f};"
+                  f"config={r['config']};"
+                  f"comm_red={r['comm_reduction_pct']:.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Pipelined serving example: batched prefill + streaming decode of an
+RWKV6-family model (O(1) recurrent state) across 2 pipeline stages.
+
+    python examples/serve_pipeline.py
+"""
+import os
+import sys
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=2")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve  # noqa: E402
+
+
+def main():
+    serve.main(["--arch", "rwkv6-1.6b", "--smoke", "--batch", "4",
+                "--prefill", "32", "--tokens", "24", "--data", "1"])
+
+
+if __name__ == "__main__":
+    main()

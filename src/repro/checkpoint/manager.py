@@ -1,0 +1,178 @@
+"""Per-stage local checkpointing (paper §4, "Checkpointing").
+
+The paper: "Checkpoints don't require expensive global coordination; each
+stage locally decides to dump its model parameters … Restarting entails
+starting from the last epoch successfully checkpointed by all stages."
+
+Layout on disk:
+    <dir>/round_<n>/stage_<s>.npz     one file per pipeline stage
+    <dir>/round_<n>/shared.npz        embed / head / final_norm / encoder
+    <dir>/round_<n>/opt.npz           optimizer + stash ring + step
+    <dir>/round_<n>/MANIFEST.json     {"round": n, "stages": [...], "done": bool}
+
+``latest_complete_round`` scans manifests and returns the newest round for
+which every stage file landed — a stage failure mid-dump leaves an
+incomplete manifest that restart skips, exactly the paper's semantics.
+
+``reshard_stages`` re-groups stage-stacked leaves when the pipeline depth
+changes (elastic scaling): parameters are keyed by global layer index, so
+moving stage boundaries is a pure reshape.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten_into(template, flat, prefix=""):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(v, flat, f"{prefix}{k}/")
+                for k, v in template.items()}
+    if isinstance(template, (tuple, list)):
+        vals = [_unflatten_into(v, flat, f"{prefix}{i}/")
+                for i, v in enumerate(template)]
+        return type(template)(vals)
+    arr = flat[prefix[:-1]]
+    return jnp.asarray(arr).astype(template.dtype)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+
+    def _round_dir(self, rnd: int) -> str:
+        return os.path.join(self.dir, f"round_{rnd:08d}")
+
+    # ---------------- save ------------------------------------------------
+
+    def save(self, rnd: int, state: Dict[str, Any], n_stages: int,
+             fail_after_stage: Optional[int] = None):
+        """Per-stage dump. ``fail_after_stage`` simulates a crash mid-save
+        (used by the fault-tolerance tests): stages > that index are not
+        written and the manifest stays incomplete."""
+        d = self._round_dir(rnd)
+        os.makedirs(d, exist_ok=True)
+        state = jax.device_get(state)
+        stages = state["params"]["stages"]
+        written: List[int] = []
+        manifest = {"round": rnd, "stages": [], "n_stages": n_stages,
+                    "done": False}
+
+        for s in range(n_stages):
+            if fail_after_stage is not None and s > fail_after_stage:
+                break
+            part = jax.tree.map(lambda a: np.asarray(a[s:s + 1]), stages)
+            np.savez(os.path.join(d, f"stage_{s}.npz"), **_flatten(part))
+            written.append(s)
+            manifest["stages"] = written
+            with open(os.path.join(d, "MANIFEST.json"), "w") as f:
+                json.dump(manifest, f)
+
+        if len(written) == n_stages:
+            shared = {k: v for k, v in state["params"].items()
+                      if k != "stages"}
+            np.savez(os.path.join(d, "shared.npz"), **_flatten(shared))
+            rest = {k: v for k, v in state.items() if k != "params"}
+            np.savez(os.path.join(d, "opt.npz"), **_flatten(rest))
+            manifest["done"] = True
+            with open(os.path.join(d, "MANIFEST.json"), "w") as f:
+                json.dump(manifest, f)
+
+    # ---------------- restore --------------------------------------------
+
+    def latest_complete_round(self) -> Optional[int]:
+        best = None
+        for name in os.listdir(self.dir):
+            mf = os.path.join(self.dir, name, "MANIFEST.json")
+            if not os.path.exists(mf):
+                continue
+            with open(mf) as f:
+                m = json.load(f)
+            if m.get("done"):
+                best = max(best or -1, m["round"])
+        return best
+
+    def restore(self, rnd: int, state_template: Dict[str, Any]
+                ) -> Dict[str, Any]:
+        d = self._round_dir(rnd)
+        n_stages = jax.tree.leaves(
+            state_template["params"]["stages"])[0].shape[0]
+        shared = dict(np.load(os.path.join(d, "shared.npz")))
+        rest = dict(np.load(os.path.join(d, "opt.npz")))
+
+        parts = []
+        for s in range(n_stages):
+            parts.append(dict(np.load(os.path.join(d, f"stage_{s}.npz"))))
+        stage_flat = {k: np.concatenate([p[k] for p in parts], axis=0)
+                      for k in parts[0]}
+
+        params_t = state_template["params"]
+        params = {
+            "stages": _unflatten_into(params_t["stages"], stage_flat),
+            **_unflatten_into({k: v for k, v in params_t.items()
+                               if k != "stages"}, shared),
+        }
+        out = _unflatten_into({k: v for k, v in state_template.items()
+                               if k != "params"}, rest)
+        out["params"] = params
+        return out
+
+
+# --------------------------------------------------------------------------
+# Elastic resharding: move stage boundaries (pp -> pp')
+# --------------------------------------------------------------------------
+
+def reshard_stages(stages_tree: Dict[str, Any], old_pp: int, new_pp: int
+                   ) -> Dict[str, Any]:
+    """Re-group per-(stage, position) leaves for a new pipeline depth.
+
+    Old layout: stages['layer_i'][leaf] has shape [old_pp, ...], holding
+    global layer (s*lps_old + i).  New layout must satisfy
+    n_layers % new_pp == 0 and the stage-program pattern must still align
+    (validated by the caller via spec.stage_program(new_pp)).
+    """
+    old_positions = sorted(stages_tree.keys(),
+                           key=lambda k: int(k.split("_")[1]))
+    lps_old = len(old_positions)
+    n_layers = lps_old * old_pp
+    assert n_layers % new_pp == 0, (n_layers, new_pp)
+    lps_new = n_layers // new_pp
+
+    # global layer -> leaf arrays
+    def global_layer(leaf_name):
+        def get(gl):
+            s, i = divmod(gl, lps_old)
+            return jax.tree.map(lambda a: a[s],
+                                stages_tree[f"layer_{i}"])
+        return get
+
+    out: Dict[str, Any] = {}
+    for i_new in range(lps_new):
+        per_stage = []
+        for s_new in range(new_pp):
+            gl = s_new * lps_new + i_new
+            s_old, i_old = divmod(gl, lps_old)
+            per_stage.append(jax.tree.map(lambda a: a[s_old],
+                                          stages_tree[f"layer_{i_old}"]))
+        out[f"layer_{i_new}"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs, axis=0), *per_stage)
+    return out

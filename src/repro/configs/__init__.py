@@ -1,0 +1,97 @@
+"""Architecture registry: 10 assigned archs × 4 input shapes.
+
+Every config module exposes:
+  full_spec()   — the exact published configuration (models.spec.ModelSpec)
+  smoke_spec()  — reduced same-family config for CPU smoke tests
+  PLAN          — production ParallelismPlan (pp·tp == 16 model shards)
+  SMOKE_PLAN    — small-plan used by the smoke tests
+  OPTIMIZER     — (name, lr) the end-to-end examples default to
+
+Shape semantics (task spec):
+  train_4k     seq 4 096 × batch 256   -> pipelined train_step
+  prefill_32k  seq 32 768 × batch 32   -> pipelined prefill_step
+  decode_32k   seq 32 768 × batch 128  -> pipelined decode_step (1 new token,
+                                          KV cache of seq_len)
+  long_500k    seq 524 288 × batch 1   -> sequence-parallel decode_step;
+                                          only sub-quadratic-memory archs
+                                          (spec.subquadratic) run it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Iterator, Optional, Tuple
+
+ARCH_IDS = (
+    "qwen3_14b",
+    "gemma3_4b",
+    "chatglm3_6b",
+    "h2o_danube3_4b",
+    "llava_next_34b",
+    "olmoe_1b_7b",
+    "deepseek_moe_16b",
+    "whisper_medium",
+    "rwkv6_1b6",
+    "jamba_v01_52b",
+)
+
+# CLI ids (dashes) -> module names
+_ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+_ALIASES.update({
+    "qwen3-14b": "qwen3_14b",
+    "gemma3-4b": "gemma3_4b",
+    "chatglm3-6b": "chatglm3_6b",
+    "h2o-danube-3-4b": "h2o_danube3_4b",
+    "llava-next-34b": "llava_next_34b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "whisper-medium": "whisper_medium",
+    "rwkv6-1.6b": "rwkv6_1b6",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str            # train | prefill | decode | long_decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "long_decode", 524288, 1),
+}
+
+
+def resolve(arch: str) -> str:
+    key = _ALIASES.get(arch, arch)
+    if key not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ALIASES)}")
+    return key
+
+
+def get(arch: str):
+    """Return the config module for an arch id (dash or underscore form)."""
+    return importlib.import_module(f"repro.configs.{resolve(arch)}")
+
+
+def supports(arch: str, shape: str) -> Tuple[bool, str]:
+    """(runs?, reason).  long_500k requires sub-quadratic KV memory."""
+    cfg = get(arch)
+    spec = cfg.full_spec()
+    if shape == "long_500k" and not spec.subquadratic:
+        return False, ("quadratic full-attention KV at 524k tokens "
+                       "(skip noted in DESIGN.md §8)")
+    return True, ""
+
+
+def cells() -> Iterator[Tuple[str, str, bool, str]]:
+    """All 40 (arch, shape) cells with their skip status."""
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            ok, why = supports(arch, shape)
+            yield arch, shape, ok, why

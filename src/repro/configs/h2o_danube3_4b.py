@@ -1,0 +1,41 @@
+"""h2o-danube-3-4b [dense] — 24L d_model=3840 32H (GQA kv=8) d_ff=10240
+vocab=32000 — llama+mistral mix with sliding-window attention.
+[arXiv:2401.16818; unverified]
+
+Every layer uses a 4096-token mistral-style sliding window, so KV memory
+is O(window): long_500k RUNS with ring-buffer caches.  Deepest faithful
+pipeline of the pool (pp=8 → stash ring V=15) — the stress test for the
+paper's weight-stashing memory model.
+"""
+from repro.models import spec as S
+from repro.parallel.mesh import ParallelismPlan
+
+OPTIMIZER = ("adam", 3e-4)
+
+SWA_WINDOW = 4096
+
+PLAN = ParallelismPlan(pp=8, tp=2, microbatches=16, stash_mode="stash",
+                       zero1=True, remat=True)
+SMOKE_PLAN = ParallelismPlan(pp=2, tp=1, microbatches=2, stash_mode="stash",
+                             zero1=False)
+
+
+def full_spec() -> S.ModelSpec:
+    blocks = tuple(S.BlockSpec(mixer="attn", ffn="dense",
+                               window=SWA_WINDOW, rope_theta=5e5)
+                   for _ in range(24))
+    return S.ModelSpec(
+        name="h2o-danube-3-4b", d_model=3840, n_layers=24, n_heads=32,
+        n_kv=8, d_head=120, d_ff=10240, vocab=32000, blocks=blocks,
+        norm="rmsnorm", act="silu",
+        family="dense", subquadratic=True)
+
+
+def smoke_spec() -> S.ModelSpec:
+    blocks = tuple(S.BlockSpec(mixer="attn", ffn="dense", window=8)
+                   for _ in range(4))
+    return S.ModelSpec(
+        name="danube3-smoke", d_model=64, n_layers=4, n_heads=4, n_kv=2,
+        d_head=16, d_ff=128, vocab=256, blocks=blocks,
+        norm="rmsnorm", act="silu",
+        family="dense", subquadratic=True)

@@ -1,0 +1,53 @@
+"""jamba-v0.1-52b [hybrid] — 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=65536, MoE 16 experts top-2 — Mamba+attention 1:7 interleave.
+[arXiv:2403.19887; hf]
+
+Layer period 8 (the released model's "Jamba block"): attention at
+position 4, Mamba elsewhere; MoE FFN on odd layers, dense on even.
+pp=4 splits the 32 layers into 4 identical period-8 stages.
+
+51.6 B params (2.8 B active-FFN equivalent per token): weights alone are
+6.4 GB/dev at 16-way model sharding, so flush mode (no stash ring) +
+ZeRO-1 — documented in DESIGN.md §6/§8.  long_500k RUNS: only the 4
+attention layers hold full-length KV (SP-sharded); Mamba state is O(1).
+"""
+from repro.models import spec as S
+from repro.parallel.mesh import ParallelismPlan
+
+OPTIMIZER = ("adam", 1.5e-4)
+
+PLAN = ParallelismPlan(pp=4, tp=4, microbatches=8, stash_mode="flush",
+                       zero1=True, remat=True)
+SMOKE_PLAN = ParallelismPlan(pp=2, tp=1, microbatches=2, stash_mode="flush",
+                             zero1=False)
+
+
+def _block(i: int) -> S.BlockSpec:
+    mixer = "attn" if i % 8 == 4 else "mamba"
+    ffn = "moe" if i % 2 == 1 else "dense"
+    return S.BlockSpec(mixer=mixer, ffn=ffn)
+
+
+def full_spec() -> S.ModelSpec:
+    return S.ModelSpec(
+        name="jamba-v0.1-52b", d_model=4096, n_layers=32, n_heads=32,
+        n_kv=8, d_head=128, d_ff=14336, vocab=65536,
+        blocks=tuple(_block(i) for i in range(32)),
+        norm="rmsnorm", act="silu",
+        moe=S.MoESpec(n_experts=16, top_k=2, d_expert=14336),
+        mamba=S.MambaSpec(d_state=16, d_conv=4, expand=2),
+        family="hybrid", subquadratic=True)
+
+
+def smoke_spec() -> S.ModelSpec:
+    def blk(i):
+        return S.BlockSpec(mixer=("attn" if i % 4 == 0 else "mamba"),
+                           ffn=("moe" if i % 2 == 1 else "dense"))
+    return S.ModelSpec(
+        name="jamba-smoke", d_model=64, n_layers=8, n_heads=4, n_kv=2,
+        d_head=16, d_ff=128, vocab=256,
+        blocks=tuple(blk(i) for i in range(8)),
+        norm="rmsnorm", act="silu",
+        moe=S.MoESpec(n_experts=4, top_k=2, d_expert=32),
+        mamba=S.MambaSpec(d_state=4, d_conv=4, expand=2),
+        family="hybrid", subquadratic=True)

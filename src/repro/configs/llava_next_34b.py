@@ -1,0 +1,43 @@
+"""llava-next-34b [vlm] — 60L d_model=7168 56H (GQA kv=8) d_ff=20480
+vocab=64000 — anyres tiling.  [hf:llava-hf/llava-v1.6-mistral-7b-hf;
+unverified]
+
+The modality frontend is a STUB per the task spec: input_specs() provides
+576 precomputed patch embeddings (one 24×24 CLIP tile) at d_model,
+prepended to the text sequence; anyres would only change n_patches.
+
+34.3 B params: a full stash ring cannot fit 16 GB HBM at 16-way model
+sharding (V=3 ⇒ 16.7 GB of weights alone), so this arch uses the
+synchronous flush mode (PipeDream-flush, the authors' follow-up) with the
+no-ring optimization + ZeRO-1 — see DESIGN.md §6/§8.
+"""
+from repro.models import spec as S
+from repro.parallel.mesh import ParallelismPlan
+
+OPTIMIZER = ("adam", 1.5e-4)
+
+N_PATCHES = 576
+
+PLAN = ParallelismPlan(pp=2, tp=8, microbatches=8, stash_mode="flush",
+                       zero1=True, remat=True)
+SMOKE_PLAN = ParallelismPlan(pp=2, tp=1, microbatches=2, stash_mode="flush",
+                             zero1=False)
+
+
+def full_spec() -> S.ModelSpec:
+    blocks = tuple(S.BlockSpec(mixer="attn", ffn="dense", rope_theta=5e6)
+                   for _ in range(60))
+    return S.ModelSpec(
+        name="llava-next-34b", d_model=7168, n_layers=60, n_heads=56,
+        n_kv=8, d_head=128, d_ff=20480, vocab=64000, blocks=blocks,
+        norm="rmsnorm", act="silu", frontend="vision", n_patches=N_PATCHES,
+        family="vlm", subquadratic=False)
+
+
+def smoke_spec() -> S.ModelSpec:
+    blocks = tuple(S.BlockSpec(mixer="attn", ffn="dense") for _ in range(4))
+    return S.ModelSpec(
+        name="llava-smoke", d_model=64, n_layers=4, n_heads=4, n_kv=2,
+        d_head=16, d_ff=128, vocab=256, blocks=blocks,
+        norm="rmsnorm", act="silu", frontend="vision", n_patches=8,
+        family="vlm", subquadratic=False)

@@ -1,0 +1,38 @@
+"""qwen3-14b [dense] — 40L d_model=5120 40H (GQA kv=8) d_ff=17408
+vocab=151936 — qk_norm, GQA.  [hf:Qwen/Qwen3-8B; hf]
+
+Plan: pp=2 × tp=8, full weight stashing (V = 3 ring slots), ZeRO-1.
+Memory (v5e, bf16): stage weights 1.65 GB/dev × 4 copies (current + ring)
+= 6.6 GB; Adam state ZeRO-1-sharded 0.41 GB; fits 16 GB HBM.  long_500k
+skipped: full causal attention, 40 layers × 524k KV is quadratic-memory.
+"""
+from repro.models import spec as S
+from repro.parallel.mesh import ParallelismPlan
+
+OPTIMIZER = ("adam", 3e-4)
+
+PLAN = ParallelismPlan(pp=2, tp=8, microbatches=8, stash_mode="stash",
+                       zero1=True, remat=True)
+SMOKE_PLAN = ParallelismPlan(pp=2, tp=1, microbatches=2, stash_mode="stash",
+                             zero1=False)
+
+
+def full_spec() -> S.ModelSpec:
+    blocks = tuple(S.BlockSpec(mixer="attn", ffn="dense",
+                               window=S.GLOBAL_WINDOW, rope_theta=1e6)
+                   for _ in range(40))
+    return S.ModelSpec(
+        name="qwen3-14b", d_model=5120, n_layers=40, n_heads=40, n_kv=8,
+        d_head=128, d_ff=17408, vocab=151936, blocks=blocks,
+        norm="rmsnorm", act="silu", qk_norm=True,
+        family="dense", subquadratic=False)
+
+
+def smoke_spec() -> S.ModelSpec:
+    blocks = tuple(S.BlockSpec(mixer="attn", ffn="dense", rope_theta=1e6)
+                   for _ in range(4))
+    return S.ModelSpec(
+        name="qwen3-smoke", d_model=64, n_layers=4, n_heads=4, n_kv=2,
+        d_head=16, d_ff=128, vocab=256, blocks=blocks,
+        norm="rmsnorm", act="silu", qk_norm=True,
+        family="dense", subquadratic=False)

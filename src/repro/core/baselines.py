@@ -1,0 +1,120 @@
+"""Baselines the paper compares against (§5).
+
+  * BSP data parallelism — model replicated, batch over every mesh axis,
+    gradients all-reduced each minibatch (the paper's main baseline).
+  * ASP — relaxed sync, adapted to SPMD as local-SGD: workers apply local
+    updates and synchronize parameters every ``sync_every`` rounds (the
+    paper's ASP has no sync point at all; lockstep SPMD needs one, so this
+    is the closest TPU-idiomatic equivalent — see DESIGN.md).
+  * Model parallelism without pipelining — the pipeline with R=1: one
+    minibatch in flight, ≤1 stage busy at a time (paper Figure 3).
+
+BSP runs at pjit level (no shard_map): XLA inserts the gradient
+all-reduce, which is exactly the communication the paper measures.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import lm_head
+from repro.models import spec as spec_lib
+from repro.models.init import init_params
+from repro.models.stage import full_transformer, make_statics
+from repro.parallel.mesh import ParallelismPlan
+
+
+def build_bsp(spec: spec_lib.ModelSpec, mesh: Mesh, *, seq_len: int,
+              global_batch: int, optimizer, sync_every: int = 1,
+              compute_dtype=jnp.bfloat16, aux_weight: float = 0.01):
+    """Pure data-parallel BSP (sync_every=1) or ASP-like local SGD (>1).
+
+    Batch is sharded over every mesh axis; parameters are replicated.
+    Returns (train_step, init_state, state_shardings, batch_specs).
+    """
+    all_axes = tuple(mesh.axis_names)
+    plan = ParallelismPlan(pp=1, tp=1, microbatches=1, stash_mode="flush")
+    statics = make_statics(spec, plan, tokens_per_mb=seq_len)
+    asp = sync_every > 1
+
+    def loss_fn(params, tokens, labels):
+        embeds = lm_head.embed_tokens(params["embed"], tokens)
+        pos = jnp.broadcast_to(jnp.arange(seq_len, dtype=jnp.int32),
+                               tokens.shape)
+        h, aux = full_transformer(params, embeds.astype(compute_dtype),
+                                  statics, positions=pos)
+        vmask = (labels >= 0).astype(jnp.float32)
+        loss, _ = lm_head.head_loss(
+            params["head"], params["final_norm"]["scale"], h,
+            jnp.maximum(labels, 0), norm_kind=spec.norm,
+            norm_bias=params["final_norm"].get("bias"), valid_mask=vmask,
+            vocab=spec.vocab)
+        return loss + aux_weight * aux, (loss, aux)
+
+    def train_step(state, batch):
+        params, opt, step = state["params"], state["opt"], state["step"]
+        diffable = {k: v for k, v in params.items()
+                    if k not in ("layer_windows", "layer_thetas")}
+        statics_p = {k: v for k, v in params.items()
+                     if k in ("layer_windows", "layer_thetas")}
+
+        def f(dp):
+            return loss_fn({**dp, **statics_p}, batch["tokens"],
+                           batch["labels"])
+
+        (total, (loss, aux)), grads = jax.value_and_grad(
+            f, has_aux=True)(diffable)
+        new_p, new_opt = optimizer.update(grads, opt, diffable, step)
+        params = {**new_p, **statics_p}
+        return ({"params": params, "opt": new_opt, "step": step + 1},
+                {"loss": loss, "aux": aux})
+
+    def init_state(key):
+        params, _ = init_params(spec, plan, key, compute_dtype)
+        diffable = {k: v for k, v in params.items()
+                    if k not in ("layer_windows", "layer_thetas")}
+        return {"params": params, "opt": optimizer.init(diffable),
+                "step": jnp.zeros((), jnp.int32)}
+
+    # parameters replicated; batch over all axes
+    def _state_pspecs():
+        _box = {}
+
+        def go():
+            p, s = init_params(spec, plan, jax.random.key(0), compute_dtype)
+            _box["s"] = s
+            return p
+
+        pshape = jax.eval_shape(go)
+        rep = jax.tree.map(lambda _: P(), pshape)
+        diffable = {k: v for k, v in pshape.items()
+                    if k not in ("layer_windows", "layer_thetas")}
+        opt_shape = jax.eval_shape(lambda: optimizer.init(diffable))
+        return {"params": rep,
+                "opt": jax.tree.map(lambda _: P(), opt_shape),
+                "step": P()}
+
+    state_pspecs = _state_pspecs()
+    state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    bsh = NamedSharding(mesh, P(all_axes, None))
+    batch_specs = {
+        "tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32,
+                                       sharding=bsh),
+        "labels": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32,
+                                       sharding=bsh),
+    }
+    return train_step, init_state, state_sh, batch_specs
+
+
+def build_model_parallel(spec, plan, mesh, **kw):
+    """Paper Figure 3: model parallelism without pipelining = R=1 flush."""
+    from repro.core.pipeline import build_pipeline
+
+    mp_plan = plan.with_(microbatches=1, stash_mode="flush")
+    return build_pipeline(spec, mp_plan, mesh, **kw)

@@ -1,0 +1,200 @@
+"""PipeDream's partitioning algorithm (paper §3.2) — exact DP.
+
+A(j, m): time of the slowest stage in the optimal pipeline over layers
+1..j using m machines.  Either one stage replicated m ways (Case 1) or an
+optimal sub-pipeline over 1..i with m−m' machines followed by one stage
+over i+1..j replicated m' ways (Case 2):
+
+    T(i→j, m) = (1/m) · max(Σ T_l, Σ W_l^m)
+    A(j, m)   = min_{i,m'} max( A(i, m−m'), 2·C_i, T(i+1→j, m') )
+
+O(N²M²) as in the paper.  ``general`` mode reproduces the paper's
+non-uniform replication configs (e.g. 7-1, 9-5-1-1); ``rectangular`` mode
+constrains replication to be uniform (the TPU data axis) and only splits
+layers into S balanced stages.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.profiler import (Hardware, LayerProfile,
+                                 comm_time_activations, comm_time_weight_sync)
+from repro.core.schedule import paper_noam
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    start: int                 # first layer index (inclusive)
+    end: int                   # last layer index (inclusive)
+    replicas: int
+
+    def __str__(self):
+        return f"[{self.start}..{self.end}]x{self.replicas}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Partition:
+    stages: Tuple[Stage, ...]
+    bottleneck_time: float     # A(N, M): slowest-stage time
+    noam: int
+
+    @property
+    def config_string(self) -> str:
+        """Paper notation, e.g. '7-1' = 7 replicas then 1."""
+        return "-".join(str(s.replicas) for s in self.stages)
+
+
+def _prefix_sums(profiles: Sequence[LayerProfile]):
+    t = np.concatenate([[0.0], np.cumsum([p.t_total for p in profiles])])
+    w = np.concatenate([[0.0], np.cumsum([p.w_params for p in profiles])])
+    return t, w
+
+
+def stage_time(profiles: Sequence[LayerProfile], i: int, j: int, m: int,
+               hw: Hardware, prefix=None) -> float:
+    """T(i→j, m), layers i..j inclusive (0-indexed)."""
+    if prefix is None:
+        t_sum = sum(p.t_total for p in profiles[i:j + 1])
+        w_sum = sum(p.w_params for p in profiles[i:j + 1])
+    else:
+        tp, wp = prefix
+        t_sum = tp[j + 1] - tp[i]
+        w_sum = wp[j + 1] - wp[i]
+    sync = comm_time_weight_sync(w_sum, m, hw)
+    return max(t_sum, sync) / m
+
+
+def partition(profiles: Sequence[LayerProfile], machines: int, hw: Hardware,
+              *, max_stages: Optional[int] = None) -> Partition:
+    """The paper's DP (general mode, per-stage replication)."""
+    n = len(profiles)
+    M = machines
+    prefix = _prefix_sums(profiles)
+    c = [comm_time_activations(p.a_bytes, hw) for p in profiles]
+
+    INF = float("inf")
+    A = np.full((n + 1, M + 1), INF)
+    # split[j][m] = (i, m') chosen, or None for single stage
+    split: List[List[Optional[Tuple[int, int]]]] = [
+        [None] * (M + 1) for _ in range(n + 1)]
+
+    for m in range(1, M + 1):
+        A[1][m] = stage_time(profiles, 0, 0, m, hw, prefix)
+    for j in range(1, n + 1):
+        A[j][1] = stage_time(profiles, 0, j - 1, 1, hw, prefix)
+
+    for j in range(2, n + 1):
+        for m in range(2, M + 1):
+            best = stage_time(profiles, 0, j - 1, m, hw, prefix)  # Case 1
+            arg = None
+            for i in range(1, j):
+                for mp in range(1, m):
+                    cand = max(A[i][m - mp],
+                               2.0 * c[i - 1],
+                               stage_time(profiles, i, j - 1, mp, hw, prefix))
+                    if cand < best - 1e-15:
+                        best, arg = cand, (i, mp)
+            A[j][m] = best
+            split[j][m] = arg
+
+    # Reconstruct
+    stages: List[Stage] = []
+    j, m = n, M
+    while j > 0:
+        arg = split[j][m]
+        if arg is None:
+            stages.append(Stage(0, j - 1, m))
+            break
+        i, mp = arg
+        stages.append(Stage(i, j - 1, mp))
+        j, m = i, m - mp
+    stages.reverse()
+    if max_stages is not None and len(stages) > max_stages:
+        # Re-solve with fewer machines per stage is out of scope of the
+        # paper's DP; callers wanting a cap use partition_rectangular.
+        pass
+    noam = paper_noam(machines, stages[0].replicas)
+    return Partition(tuple(stages), float(A[n][M]), noam)
+
+
+def partition_brute_force(profiles: Sequence[LayerProfile], machines: int,
+                          hw: Hardware) -> float:
+    """Exhaustive optimum (tiny instances only) — test oracle for the DP."""
+    n = len(profiles)
+    prefix = _prefix_sums(profiles)
+    c = [comm_time_activations(p.a_bytes, hw) for p in profiles]
+    best = [float("inf")]
+
+    def rec(layer: int, machines_left: int, cur_max: float):
+        if cur_max >= best[0]:
+            return
+        if layer == n:
+            if machines_left == 0:
+                best[0] = cur_max
+            return
+        for j in range(layer, n):
+            comm = 2.0 * c[j] if j + 1 < n else 0.0
+            for m in range(1, machines_left + 1):
+                t = stage_time(profiles, layer, j, m, hw, prefix)
+                rec(j + 1, machines_left - m, max(cur_max, t, comm))
+
+    rec(0, machines, 0.0)
+    return best[0]
+
+
+# --------------------------------------------------------------------------
+# Rectangular mode: uniform replication (TPU data axis), S stages
+# --------------------------------------------------------------------------
+
+def partition_rectangular(profiles: Sequence[LayerProfile], n_stages: int,
+                          data_replicas: int, hw: Hardware) -> Partition:
+    """Balanced contiguous split into exactly ``n_stages`` stages.
+
+    Replication is uniform (= the data mesh axis), so the objective is the
+    paper's with m' fixed: minimize max(stage compute, uniform sync, 2·C
+    at each boundary).  DP over (layer, stage) in O(N²S).
+    """
+    n = len(profiles)
+    prefix = _prefix_sums(profiles)
+    c = [comm_time_activations(p.a_bytes, hw) for p in profiles]
+
+    def seg(i, j):  # layers i..j inclusive
+        tp, wp = prefix
+        t_sum = tp[j + 1] - tp[i]
+        sync = comm_time_weight_sync(wp[j + 1] - wp[i], data_replicas, hw)
+        return max(t_sum, sync)
+
+    INF = float("inf")
+    A = np.full((n + 1, n_stages + 1), INF)
+    arg = np.full((n + 1, n_stages + 1), -1, np.int64)
+    A[0][0] = 0.0
+    for j in range(1, n + 1):
+        for k in range(1, min(j, n_stages) + 1):
+            for i in range(k - 1, j):
+                boundary = 2.0 * c[i - 1] if i > 0 else 0.0
+                cand = max(A[i][k - 1], boundary, seg(i, j - 1))
+                if cand < A[j][k]:
+                    A[j][k] = cand
+                    arg[j][k] = i
+
+    stages: List[Stage] = []
+    j, k = n, n_stages
+    while k > 0:
+        i = int(arg[j][k])
+        stages.append(Stage(i, j - 1, data_replicas))
+        j, k = i, k - 1
+    stages.reverse()
+    return Partition(tuple(stages), float(A[n][n_stages]),
+                     paper_noam(n_stages, 1))
+
+
+def uniform_layer_split(n_layers: int, n_stages: int) -> List[Tuple[int, int]]:
+    """Equal-count contiguous split (what the mesh path uses when all
+    blocks are homogeneous — the rectangular DP reduces to this)."""
+    assert n_layers % n_stages == 0
+    lps = n_layers // n_stages
+    return [(s * lps, (s + 1) * lps - 1) for s in range(n_stages)]

@@ -1,0 +1,664 @@
+"""PipeDream pipelined training as one jit'd SPMD step (paper §3.3–3.5).
+
+One ``train_step`` = one *round* of R microbatches through the 1F1B
+schedule.  The scan body is one double-tick:
+
+  F shard_map   every stage forwards its scheduled microbatch with its
+                *latest* weights, writes that version into the stash ring
+                (weight stashing), saves the stage input (residual), and
+                ppermutes activations to the next stage.
+  head/loss     (pjit level, vocab-sharded over the whole model axis) the
+                microbatch exiting the output stage gets its loss and
+                d(loss)/d(hidden); the output stage starts its backward in
+                the same tick — Figure 8's F(m),B(m) adjacency.
+  B shard_map   every stage backwards its scheduled microbatch using the
+                *stashed* weights from its forward (jax.vjp re-runs the
+                stage forward: stage-granular remat), psums stage grads
+                over the replica axis (replicated stages, §3.2), applies
+                its update immediately (asynchronous per-stage updates),
+                and ppermutes input grads to the previous stage.
+
+Modes (plan.stash_mode):
+  stash     paper default: F uses latest, B uses stashed, update per mb.
+  vertical  vertical sync: F and B both use the version the input stage
+            had when the microbatch entered (slot index shift m -> m − s).
+  flush     GPipe / PipeDream-flush: single version, grads accumulated,
+            one synchronous update per round (baseline).
+  2bw       two versions + per-round accumulation (PipeDream-2BW-style
+            memory-optimized variant; beyond-paper).
+
+Boundary ticks run the same program on masked data — the pipeline bubble
+costs real slots, exactly as on hardware.  Embedding updates apply once
+per round; head/final-norm update per tick (output-stage semantics).  See
+DESIGN.md §5/§7.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+try:  # jax >= 0.6 moved shard_map to the top level
+    from jax import shard_map  # type: ignore
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+from repro.core.schedule import Schedule1F1B
+from repro.models import lm_head
+from repro.models import spec as spec_lib
+from repro.models.init import init_params, padded_vocab
+from repro.models.stage import StageStatics, encoder_fwd, make_statics, stage_fwd
+from repro.parallel.mesh import AXIS_STAGE, AXIS_TENSOR, ParallelismPlan, data_axes
+
+# --------------------------------------------------------------------------
+# Pytree ring-buffer helpers
+# --------------------------------------------------------------------------
+
+def tree_ring_read(tree, idx):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0, keepdims=False), tree)
+
+
+def tree_ring_write(tree, idx, val, valid):
+    def w(a, v):
+        cur = jax.lax.dynamic_index_in_dim(a, idx, 0, keepdims=False)
+        new = jnp.where(valid, v.astype(a.dtype), cur)
+        return jax.lax.dynamic_update_index_in_dim(a, new, idx, 0)
+    return jax.tree.map(w, tree, val)
+
+
+def tree_select(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda a: a * s.astype(a.dtype), tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def _is_pspec(x):
+    return isinstance(x, P)
+
+
+# --------------------------------------------------------------------------
+# ZeRO-1 (beyond-paper): shard optimizer state over the data axes.
+#
+# Per stage-parameter leaf we pick one dimension whose *local* (post-tensor-
+# sharding) size divides the data-parallel degree; gradients are
+# reduce-scattered along it, the optimizer update runs on the 1/dp shard,
+# and the updated weights are all-gathered back.  Elementwise optimizers
+# (SGDM / Adam / RMSProp) commute with the sharding, so results match the
+# replicated update exactly (up to fp reduction order).  Leaves with no
+# divisible dim fall back to the replicated psum path (axis = -1).
+# --------------------------------------------------------------------------
+
+def zero1_axes(stage_shapes, stage_pspecs, mesh, dp: int):
+    """Tree of ints: per-leaf shard dim for optimizer state (-1 = none)."""
+
+    def pick(sds, pspec):
+        if dp <= 1:
+            return -1
+        shape = sds.shape
+        for ax in range(1, len(shape)):  # dim 0 is the stacked stage dim
+            ent = pspec[ax] if ax < len(pspec) else None
+            names = () if ent is None else (
+                ent if isinstance(ent, tuple) else (ent,))
+            tp_div = 1
+            for nm in names:
+                tp_div *= mesh.devices.shape[mesh.axis_names.index(nm)]
+            if shape[ax] % tp_div:
+                continue
+            local = shape[ax] // tp_div
+            if local % dp == 0 and local >= dp:
+                return ax
+        return -1
+
+    return jax.tree.map(pick, stage_shapes, stage_pspecs, is_leaf=None)
+
+
+def zero1_opt_pspec(stage_pspecs, axes_tree, daxes):
+    """Stage pspecs with the data axes added on the chosen dim."""
+
+    def combine(pspec, ax):
+        if ax < 0:
+            return pspec
+        ents = list(pspec) + [None] * (ax + 1 - len(pspec))
+        ent = ents[ax]
+        names = () if ent is None else (
+            ent if isinstance(ent, tuple) else (ent,))
+        ents[ax] = tuple(names) + tuple(daxes)
+        return P(*ents)
+
+    return jax.tree.map(combine, stage_pspecs, axes_tree, is_leaf=_is_pspec)
+
+
+# --------------------------------------------------------------------------
+# Bundle
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PipelineBundle:
+    spec: spec_lib.ModelSpec
+    plan: ParallelismPlan
+    mesh: Mesh
+    statics: StageStatics
+    sched: Schedule1F1B
+    train_step: Callable            # (state, batch) -> (state, metrics)
+    init_state: Callable            # (key) -> state
+    state_pspecs: Any
+    batch_pspecs: Dict[str, P]
+    batch_shapes: Dict[str, jax.ShapeDtypeStruct]
+    seq_len: int
+    microbatch_size: int
+
+    def state_shardings(self):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.state_pspecs, is_leaf=_is_pspec)
+
+    def batch_shardings(self):
+        return {k: NamedSharding(self.mesh, v)
+                for k, v in self.batch_pspecs.items()}
+
+    def batch_specs(self):
+        sh = self.batch_shardings()
+        return {k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=sh[k])
+                for k, v in self.batch_shapes.items()}
+
+
+def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
+                   mesh: Mesh, *, seq_len: int, global_batch: int,
+                   optimizer, aux_weight: float = 0.01,
+                   compute_dtype=jnp.bfloat16) -> PipelineBundle:
+    """Construct the pipelined train step for one (arch, shape, mesh)."""
+    S = plan.pp
+    R = plan.microbatches
+    daxes = data_axes(mesh)
+    dp = int(np.prod([mesh.devices.shape[mesh.axis_names.index(a)]
+                      for a in daxes]))
+    assert global_batch % (dp * R) == 0, (global_batch, dp, R)
+    mb = global_batch // (dp * R)          # per-replica microbatch size
+    bmb = global_batch // R                # global rows per microbatch
+    sched = Schedule1F1B(S, R)
+    V = plan.stash_slots
+    tp_axis = AXIS_TENSOR if plan.tp > 1 else None
+    accumulate = (plan.stash_mode in ("flush", "2bw")
+                  or plan.grad_sync == "per_round")
+    # Flush mode: weights never change mid-round, so the stash ring would
+    # hold V identical copies of the current weights — drop it entirely
+    # (saves one full stage-weight copy per device; see DESIGN.md §6).
+    use_ring = plan.stash_mode != "flush"
+    # ZeRO-1: opt-state sharding over data applies in every mode; the
+    # manual reduce-scatter/all-gather update is only needed on the
+    # per-microbatch (non-accumulate) path — the round-end pjit update
+    # is partitioned by XLA from the pspecs alone.
+    zero1_shard = plan.zero1 and dp > 1
+    zero1_manual = zero1_shard and not accumulate
+    is_vlm = spec.frontend == "vision"
+    has_enc = spec.encoder is not None
+    n_patch = spec.n_patches if is_vlm else 0
+    text_len = seq_len - n_patch
+
+    statics = make_statics(spec, plan, tokens_per_mb=mb * seq_len)
+    dnames = daxes if len(daxes) > 1 else daxes[0]
+
+    enc_len = spec.encoder.source_len if has_enc else 1
+    d_enc = spec.encoder.d_model if has_enc else 1
+
+    def run_stage(w_stage, x, windows, thetas, cross_x=None):
+        pos = jnp.broadcast_to(jnp.arange(seq_len, dtype=jnp.int32),
+                               (x.shape[0], seq_len))
+        h, _, aux = stage_fwd(w_stage, x, statics, positions=pos,
+                              windows=windows, thetas=thetas,
+                              tp_axis=tp_axis, cross_x=cross_x)
+        return h, aux
+
+    fwd_perm = [(i, i + 1) for i in range(S - 1)]
+    bwd_perm = [(i + 1, i) for i in range(S - 1)]
+
+    # ======================= F phase (shard_map body) ===================
+    def f_phase(tick, weights, stash, resid, recv_f, embeds, windows,
+                thetas, enc_ring):
+        s = jax.lax.axis_index(AXIS_STAGE)
+        f = tick - s
+        valid = (f >= 0) & (f < R)
+        fsafe = jnp.clip(f, 0, R - 1)
+        slot = fsafe % V
+
+        x0 = jax.lax.dynamic_index_in_dim(embeds, fsafe, 0, keepdims=False)
+        x_in = jnp.where(s == 0, x0, recv_f[0])
+        if use_ring:
+            stash = tree_ring_write(stash, slot, weights, valid)
+        if plan.stash_mode == "vertical":
+            # Uniform input-stage version m − 2(S−1): stage s stashed it
+            # at F(m − 2s)  (version(F(m')) at stage s = m' − 2(S−1−s)).
+            vslot = jnp.clip(f - 2 * s, 0, R - 1) % V
+            w_f = tree_ring_read(stash, vslot)
+        else:
+            w_f = weights
+        cross = None
+        if has_enc:
+            cross = jax.lax.dynamic_index_in_dim(enc_ring, fsafe, 0,
+                                                 keepdims=False)
+        h, aux = run_stage(w_f, x_in, windows[0], thetas[0], cross)
+        old = jax.lax.dynamic_index_in_dim(resid, slot, 0, keepdims=False)
+        resid = jax.lax.dynamic_update_index_in_dim(
+            resid, jnp.where(valid, x_in[None].astype(resid.dtype), old),
+            slot, 0)
+        h_send = jax.lax.ppermute(h, AXIS_STAGE, fwd_perm) if S > 1 else h
+        aux = aux * valid.astype(aux.dtype)
+        return stash, resid, h_send[None], h[None], aux[None]
+
+    # ======================= B phase (shard_map body) ===================
+    def b_phase(tick, step, weights, stash, opt_state, resid, recv_b,
+                g_exit, grad_acc, windows, thetas, enc_ring, denc_ring):
+        s = jax.lax.axis_index(AXIS_STAGE)
+        b = tick - 2 * (S - 1) + s
+        valid = (b >= 0) & (b < R)
+        bsafe = jnp.clip(b, 0, R - 1)
+        if plan.stash_mode == "vertical":
+            slot = jnp.clip(b - 2 * s, 0, R - 1) % V
+        else:
+            slot = bsafe % V
+
+        g_in = jnp.where(s == S - 1, g_exit, recv_b[0])
+        w_used = tree_ring_read(stash, slot) if use_ring else weights
+        x_saved = jax.lax.dynamic_index_in_dim(resid, slot, 0,
+                                               keepdims=False)[0]
+        # g_exit carries global-batch normalization (head loss is a mean
+        # over all Bmb rows), so psum of per-replica partial dW is already
+        # the exact global gradient; aux is averaged over replicas.
+        aux_ct = jnp.float32(aux_weight / dp) * valid.astype(jnp.float32)
+
+        if has_enc:
+            cross = jax.lax.dynamic_index_in_dim(enc_ring, bsafe, 0,
+                                                 keepdims=False)
+
+            def f_full(w, x, cx):
+                return run_stage(w, x, windows[0], thetas[0], cx)
+
+            _, vjp = jax.vjp(f_full, w_used, x_saved, cross)
+            dW, dx, dcx = vjp((g_in.astype(x_saved.dtype), aux_ct))
+            old = jax.lax.dynamic_index_in_dim(denc_ring[0], bsafe, 0,
+                                               keepdims=False)
+            dcx = jnp.where(valid, dcx.astype(denc_ring.dtype), old)
+            denc_ring = jax.lax.dynamic_update_index_in_dim(
+                denc_ring[0], dcx, bsafe, 0)[None]
+        else:
+            def f_txt(w, x):
+                return run_stage(w, x, windows[0], thetas[0])
+
+            _, vjp = jax.vjp(f_txt, w_used, x_saved)
+            dW, dx = vjp((g_in.astype(x_saved.dtype), aux_ct))
+
+        dW = tree_scale(dW, valid.astype(jnp.float32))
+        dx = dx * valid.astype(dx.dtype)
+
+        if accumulate:
+            grad_acc = tree_add(grad_acc, dW)
+            new_w, new_opt = weights, opt_state
+        elif zero1_manual:
+            # ZeRO-1 update: reduce-scatter grads over the data axes,
+            # update the local 1/dp optimizer-state + weight shard, and
+            # all-gather the fresh weights (same bytes on the wire as the
+            # psum — an all-reduce IS RS+AG — but 1/dp optimizer memory
+            # and 1/dp optimizer FLOPs per device).
+            rank = jax.lax.axis_index(daxes)
+
+            def rs(g, ax):
+                if ax < 0:
+                    return jax.lax.psum(g, dnames)
+                return jax.lax.psum_scatter(g, daxes, scatter_dimension=ax,
+                                            tiled=True)
+
+            def shard(w, ax):
+                if ax < 0:
+                    return w
+                sz = w.shape[ax] // dp
+                return jax.lax.dynamic_slice_in_dim(w, rank * sz, sz, ax)
+
+            def gather(w, ax):
+                if ax < 0:
+                    return w
+                return jax.lax.all_gather(w, daxes, axis=ax, tiled=True)
+
+            dW_sh = jax.tree.map(rs, dW, z1_axes)
+            w_sh = jax.tree.map(shard, weights, z1_axes)
+            upd_w, upd_opt = optimizer.update(dW_sh, opt_state, w_sh, step)
+            upd_w = tree_select(valid, upd_w, w_sh)
+            new_opt = tree_select(valid, upd_opt, opt_state)
+            new_w = jax.tree.map(gather, upd_w, z1_axes)
+        else:
+            # Replicated-stage sync (paper §3.2): per-microbatch psum over
+            # the data axis — on TPU, XLA schedules this async against the
+            # next tick's compute (wait-free backprop).
+            dW = jax.tree.map(lambda g: jax.lax.psum(g, dnames), dW)
+            upd_w, upd_opt = optimizer.update(dW, opt_state, weights, step)
+            new_w = tree_select(valid, upd_w, weights)
+            new_opt = tree_select(valid, upd_opt, opt_state)
+
+        g_send = jax.lax.ppermute(dx, AXIS_STAGE, bwd_perm) if S > 1 else dx
+        return new_w, new_opt, g_send[None], grad_acc, dx[None], denc_ring
+
+    # ======================= pspecs =====================================
+    _box = {}
+
+    def _init_for_shapes():
+        p, s = init_params(spec, plan, jax.random.key(0), compute_dtype)
+        _box["pspecs"] = s  # pspecs are static; capture via side channel
+        return p
+
+    params_shape = jax.eval_shape(_init_for_shapes)
+    pspecs = _box["pspecs"]
+
+    stage_pspec = pspecs["stages"]
+    stash_pspec = (jax.tree.map(lambda p: P(None, *p), stage_pspec,
+                                is_leaf=_is_pspec)
+                   if use_ring else {"_": P()})
+    act_pspec = P(AXIS_STAGE, dnames, None, None)         # (pp,Bmb,S,d)
+    resid_pspec = P(None, AXIS_STAGE, dnames, None, None)  # (V,pp,Bmb,S,d)
+    emb_pspec = P(None, dnames, None, None)               # (R,Bmb,S,d)
+    gexit_pspec = P(dnames, None, None)
+    win_pspec = P(AXIS_STAGE, None)
+    scalar_pspec = P()
+
+    enc_pspec = P(None, dnames, None, None)
+    denc_pspec = (P(AXIS_STAGE, None, dnames, None, None) if has_enc
+                  else P(AXIS_STAGE, None, None, None, None))
+
+    z1_axes = (zero1_axes(params_shape["stages"], stage_pspec, mesh, dp)
+               if zero1_shard else
+               jax.tree.map(lambda _: -1, params_shape["stages"]))
+    opt_leaf_pspec = (zero1_opt_pspec(stage_pspec, z1_axes, daxes)
+                      if zero1_shard else stage_pspec)
+    opt_st_shape = jax.eval_shape(
+        lambda: optimizer.init(params_shape["stages"]))
+    opt_stage_pspec = {slot: opt_leaf_pspec for slot in opt_st_shape}
+
+    if accumulate:
+        gacc_pspec = jax.tree.map(lambda p: P(dnames, *p), stage_pspec,
+                                  is_leaf=_is_pspec)
+    else:
+        gacc_pspec = {"_": P(dnames, None)}
+
+    f_sharded = shard_map(
+        f_phase, mesh=mesh,
+        in_specs=(scalar_pspec, stage_pspec, stash_pspec, resid_pspec,
+                  act_pspec, emb_pspec, win_pspec, win_pspec, enc_pspec),
+        out_specs=(stash_pspec, resid_pspec, act_pspec, act_pspec,
+                   P(AXIS_STAGE)),
+        check_vma=False)
+
+    b_sharded = shard_map(
+        b_phase, mesh=mesh,
+        in_specs=(scalar_pspec, scalar_pspec, stage_pspec, stash_pspec,
+                  opt_stage_pspec, resid_pspec, act_pspec, gexit_pspec,
+                  gacc_pspec, win_pspec, win_pspec, enc_pspec, denc_pspec),
+        out_specs=(stage_pspec, opt_stage_pspec, act_pspec, gacc_pspec,
+                   act_pspec, denc_pspec),
+        check_vma=False)
+
+    # ======================= the train step =============================
+    def train_step(state, batch):
+        params = state["params"]
+        tokens, labels = batch["tokens"], batch["labels"]  # (R,Bmb,text)
+        step = state["step"]
+
+        text_embeds = lm_head.embed_tokens(params["embed"], tokens)
+        if is_vlm:
+            embeds = jnp.concatenate(
+                [batch["patches"].astype(text_embeds.dtype), text_embeds],
+                axis=2)
+            lab_full = jnp.concatenate(
+                [jnp.full((R, bmb, n_patch), -1, labels.dtype), labels],
+                axis=2)
+        else:
+            embeds, lab_full = text_embeds, labels
+        embeds = jax.lax.with_sharding_constraint(
+            embeds.astype(compute_dtype), NamedSharding(mesh, emb_pspec))
+
+        enc_vjp = None
+        if has_enc:
+            fr = batch["frames"].reshape(R * bmb, enc_len, d_enc)
+            enc_out_flat, enc_vjp = jax.vjp(
+                lambda ep, fx: encoder_fwd(ep, fx, spec),
+                params["encoder"], fr.astype(compute_dtype))
+            enc_ring = jax.lax.with_sharding_constraint(
+                enc_out_flat.reshape(R, bmb, enc_len, d_enc),
+                NamedSharding(mesh, enc_pspec))
+        else:
+            enc_ring = jnp.zeros((1, bmb, 1, 1), compute_dtype)
+
+        zeros_act = jnp.zeros((S, bmb, seq_len, spec.d_model), compute_dtype)
+        carry = {
+            "w": state["stash"]["current"],
+            "stash": (state["stash"]["ring"] if use_ring
+                      else {"_": jnp.zeros((1,), jnp.float32)}),
+            "opt": state["opt_stages"],
+            "head": params["head"],
+            "fnorm": params["final_norm"],
+            "head_opt": state["opt_head"],
+            "recv_f": zeros_act,
+            "recv_b": zeros_act,
+            "resid": jnp.zeros((V, S, bmb, seq_len, spec.d_model),
+                               compute_dtype),
+            "gacc": (jax.tree.map(
+                lambda a: jnp.zeros((dp,) + a.shape, jnp.float32),
+                params["stages"]) if accumulate
+                else {"_": jnp.zeros((dp, 1), jnp.float32)}),
+            "dhead_acc": (jnp.zeros(params["head"].shape, jnp.float32)
+                          if accumulate else jnp.zeros((1,), jnp.float32)),
+            "dfnorm_acc": (jax.tree.map(
+                lambda a: jnp.zeros(a.shape, jnp.float32),
+                params["final_norm"]) if accumulate
+                else jnp.zeros((1,), jnp.float32)),
+            "d_embeds": jnp.zeros((R, bmb, seq_len, spec.d_model),
+                                  compute_dtype),
+            "denc": (jnp.zeros((S, R, bmb, enc_len, d_enc), compute_dtype)
+                     if has_enc
+                     else jnp.zeros((S, 1, 1, 1, 1), compute_dtype)),
+            "loss_sum": jnp.zeros((), jnp.float32),
+            "aux_sum": jnp.zeros((), jnp.float32),
+        }
+
+        win, th = params["layer_windows"], params["layer_thetas"]
+
+        def tick_body(carry, tick):
+            stash, resid, recv_f, h_all, aux = f_sharded(
+                tick, carry["w"], carry["stash"], carry["resid"],
+                carry["recv_f"], embeds, win, th, enc_ring)
+            carry["stash"], carry["resid"], carry["recv_f"] = \
+                stash, resid, recv_f
+            carry["aux_sum"] = carry["aux_sum"] + aux.sum()
+
+            # ---- head + loss for the exiting microbatch ----------------
+            m_exit = tick - (S - 1)
+            valid_e = (m_exit >= 0) & (m_exit < R)
+            msafe = jnp.clip(m_exit, 0, R - 1)
+            h_exit = h_all[S - 1]
+            lab = jax.lax.dynamic_index_in_dim(lab_full, msafe, 0,
+                                               keepdims=False)
+            vmask = (lab >= 0).astype(jnp.float32)
+            lab_safe = jnp.maximum(lab, 0)
+
+            def loss_fn(head, fnorm, h):
+                loss, _ = lm_head.head_loss(
+                    head, fnorm["scale"], h, lab_safe, norm_kind=spec.norm,
+                    norm_bias=fnorm.get("bias"), valid_mask=vmask,
+                    vocab=spec.vocab)
+                return loss
+
+            loss, (dhead, dfnorm, dh) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1, 2))(
+                carry["head"], carry["fnorm"], h_exit)
+            ve = valid_e.astype(jnp.float32)
+            carry["loss_sum"] = carry["loss_sum"] + loss * ve
+            g_exit = (dh.astype(jnp.float32) * ve).astype(compute_dtype)
+
+            if accumulate:
+                carry["dhead_acc"] = carry["dhead_acc"] + \
+                    dhead.astype(jnp.float32) * ve
+                carry["dfnorm_acc"] = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) * ve,
+                    carry["dfnorm_acc"], dfnorm)
+            else:
+                hf_new, hf_opt = optimizer.update(
+                    {"h": dhead, "f": dfnorm}, carry["head_opt"],
+                    {"h": carry["head"], "f": carry["fnorm"]}, step)
+                carry["head"] = tree_select(valid_e, hf_new["h"],
+                                            carry["head"])
+                carry["fnorm"] = tree_select(valid_e, hf_new["f"],
+                                             carry["fnorm"])
+                carry["head_opt"] = tree_select(valid_e, hf_opt,
+                                                carry["head_opt"])
+
+            # ---- backward phase -----------------------------------------
+            new_w, new_opt, recv_b, gacc, dx_all, denc = b_sharded(
+                tick, step, carry["w"], carry["stash"], carry["opt"],
+                carry["resid"], carry["recv_b"], g_exit, carry["gacc"],
+                win, th, enc_ring, carry["denc"])
+            carry["w"], carry["opt"], carry["recv_b"] = new_w, new_opt, recv_b
+            carry["gacc"], carry["denc"] = gacc, denc
+
+            # stage 0's dx is d(embeddings) for its backward microbatch
+            b0 = tick - 2 * (S - 1)
+            valid_b0 = (b0 >= 0) & (b0 < R)
+            b0safe = jnp.clip(b0, 0, R - 1)
+            prev = jax.lax.dynamic_index_in_dim(carry["d_embeds"], b0safe, 0,
+                                                keepdims=False)
+            upd = jnp.where(valid_b0, dx_all[0], prev)
+            carry["d_embeds"] = jax.lax.dynamic_update_index_in_dim(
+                carry["d_embeds"], upd, b0safe, 0)
+            return carry, None
+
+        carry, _ = jax.lax.scan(tick_body, carry,
+                                jnp.arange(sched.n_ticks, dtype=jnp.int32))
+
+        # ---- round-end updates -------------------------------------------
+        new_params = dict(params)
+        new_state = dict(state)
+        step = state["step"]
+
+        if accumulate:
+            g_st = jax.tree.map(lambda a: jnp.sum(a, axis=0) / R,
+                                carry["gacc"])
+            carry["w"], carry["opt"] = optimizer.update(
+                g_st, carry["opt"], carry["w"], step)
+            hf_new, hf_opt = optimizer.update(
+                {"h": carry["dhead_acc"] / R,
+                 "f": jax.tree.map(lambda a: a / R, carry["dfnorm_acc"])},
+                carry["head_opt"],
+                {"h": carry["head"], "f": carry["fnorm"]}, step)
+            carry["head"], carry["fnorm"] = hf_new["h"], hf_new["f"]
+            carry["head_opt"] = hf_opt
+
+        # embedding update, once per round (DESIGN.md §7)
+        demb = carry["d_embeds"][:, :, n_patch:, :] if is_vlm \
+            else carry["d_embeds"]
+        d_table = lm_head.embed_bwd(params["embed"], tokens,
+                                    demb.astype(jnp.float32)) / R
+        emb2, eopt2 = optimizer.update(d_table, state["opt_embed"],
+                                       params["embed"], step)
+        new_params["embed"] = emb2
+        new_state["opt_embed"] = eopt2
+
+        if has_enc:
+            denc_sum = jnp.sum(carry["denc"].astype(jnp.float32), axis=0)
+            (denc_params, _) = enc_vjp(
+                denc_sum.reshape(R * bmb, enc_len, d_enc).astype(
+                    compute_dtype))
+            encp2, encopt2 = optimizer.update(
+                jax.tree.map(lambda a: a.astype(jnp.float32) / R,
+                             denc_params),
+                state["opt_encoder"], params["encoder"], step)
+            new_params["encoder"] = encp2
+            new_state["opt_encoder"] = encopt2
+
+        new_params["head"] = carry["head"]
+        new_params["final_norm"] = carry["fnorm"]
+        new_params["stages"] = carry["w"]
+        new_state["params"] = new_params
+        new_state["stash"] = ({"current": carry["w"], "ring": carry["stash"]}
+                              if use_ring else {"current": carry["w"]})
+        new_state["opt_stages"] = carry["opt"]
+        new_state["opt_head"] = carry["head_opt"]
+        new_state["step"] = step + 1
+
+        metrics = {"loss": carry["loss_sum"] / R,
+                   "aux": carry["aux_sum"] / R}
+        return new_state, metrics
+
+    # ======================= state init + pspecs ========================
+    def init_state(key):
+        params, _ = init_params(spec, plan, key, compute_dtype)
+        stages = params["stages"]
+        stash = {"current": stages}
+        if use_ring:
+            stash["ring"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (V,) + a.shape) + 0,
+                stages)
+        state = {
+            "params": params,
+            "stash": stash,
+            "opt_stages": optimizer.init(stages),
+            "opt_head": optimizer.init({"h": params["head"],
+                                        "f": params["final_norm"]}),
+            "opt_embed": optimizer.init(params["embed"]),
+            "step": jnp.zeros((), jnp.int32),
+        }
+        if has_enc:
+            state["opt_encoder"] = optimizer.init(params["encoder"])
+        return state
+
+    opt_hf_shape = jax.eval_shape(lambda: optimizer.init(
+        {"h": params_shape["head"], "f": params_shape["final_norm"]}))
+    opt_head_pspec = {slot: {"h": pspecs["head"], "f": pspecs["final_norm"]}
+                      for slot in opt_hf_shape}
+    opt_emb_shape = jax.eval_shape(
+        lambda: optimizer.init(params_shape["embed"]))
+    opt_emb_pspec = {slot: pspecs["embed"] for slot in opt_emb_shape}
+
+    state_pspecs = {
+        "params": pspecs,
+        "stash": ({"current": stage_pspec, "ring": stash_pspec}
+                  if use_ring else {"current": stage_pspec}),
+        "opt_stages": opt_stage_pspec,
+        "opt_head": opt_head_pspec,
+        "opt_embed": opt_emb_pspec,
+        "step": P(),
+    }
+    if has_enc:
+        opt_enc_shape = jax.eval_shape(
+            lambda: optimizer.init(params_shape["encoder"]))
+        state_pspecs["opt_encoder"] = {slot: pspecs["encoder"]
+                                       for slot in opt_enc_shape}
+
+    batch_shapes = {
+        "tokens": jax.ShapeDtypeStruct((R, bmb, text_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((R, bmb, text_len), jnp.int32),
+    }
+    batch_pspecs = {
+        "tokens": P(None, dnames, None),
+        "labels": P(None, dnames, None),
+    }
+    if is_vlm:
+        batch_shapes["patches"] = jax.ShapeDtypeStruct(
+            (R, bmb, n_patch, spec.d_model), compute_dtype)
+        batch_pspecs["patches"] = P(None, dnames, None, None)
+    if has_enc:
+        batch_shapes["frames"] = jax.ShapeDtypeStruct(
+            (R, bmb, enc_len, d_enc), compute_dtype)
+        batch_pspecs["frames"] = P(None, dnames, None, None)
+
+    return PipelineBundle(
+        spec=spec, plan=plan, mesh=mesh, statics=statics, sched=sched,
+        train_step=train_step, init_state=init_state,
+        state_pspecs=state_pspecs, batch_pspecs=batch_pspecs,
+        batch_shapes=batch_shapes, seq_len=seq_len, microbatch_size=mb)

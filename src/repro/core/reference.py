@@ -1,0 +1,337 @@
+"""Sequential oracle for the pipelined train step.
+
+Executes the identical 1F1B double-tick schedule, weight stashing, and
+per-microbatch updates with plain Python loops on one device — no
+shard_map, no collectives.  Bit-exact (fp32) against core/pipeline.py on
+a single data replica; used by the semantics tests.
+
+Also provides ``staleness_formula_step``: a *third*, independent
+implementation that applies the paper's §3.4 update rule directly
+(gradients of the full model evaluated at per-stage delayed weight
+versions) — validating that 1F1B + weight stashing implements
+    w^(t+1) = w^(t) − ν·∇f(w_1^(t−n+1), …, w_n^(t))
+"""
+from __future__ import annotations
+
+import copy
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule import Schedule1F1B
+from repro.models import lm_head
+from repro.models.stage import make_statics, stage_fwd
+from repro.parallel.mesh import ParallelismPlan
+
+
+def reference_init_state(spec, plan: ParallelismPlan, optimizer, key,
+                         dtype=jnp.float32):
+    """Single-device state matching core/pipeline.py::init_state."""
+    from repro.models.init import init_params
+
+    params, _ = init_params(spec, plan, key, dtype)
+    stages = params["stages"]
+    stash = {"current": stages}
+    if plan.stash_mode != "flush":
+        stash["ring"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None],
+                                       (plan.stash_slots,) + a.shape) + 0,
+            stages)
+    state = {
+        "params": params,
+        "stash": stash,
+        "opt_stages": optimizer.init(stages),
+        "opt_head": optimizer.init({"h": params["head"],
+                                    "f": params["final_norm"]}),
+        "opt_embed": optimizer.init(params["embed"]),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if spec.encoder is not None:
+        state["opt_encoder"] = optimizer.init(params["encoder"])
+    return state
+
+
+def _stage_slice(tree, s):
+    return jax.tree.map(lambda a: a[s:s + 1], tree)
+
+
+def _stage_unslice(full, s, part):
+    return jax.tree.map(
+        lambda a, p: a.at[s:s + 1].set(p.astype(a.dtype)), full, part)
+
+
+def reference_train_step(spec, plan: ParallelismPlan, state, batch,
+                         optimizer, aux_weight: float = 0.01):
+    """Mirror of core/pipeline.py train_step, sequential, 1 data replica."""
+    S, R = plan.pp, plan.microbatches
+    V = plan.stash_slots
+    sched = Schedule1F1B(S, R)
+    accumulate = (plan.stash_mode in ("flush", "2bw")
+                  or plan.grad_sync == "per_round")
+    use_ring = plan.stash_mode != "flush"
+    params = state["params"]
+    tokens, labels = batch["tokens"], batch["labels"]   # (R, Bmb, S_text)
+    step = state["step"]
+    is_vlm = spec.frontend == "vision"
+    has_enc = spec.encoder is not None
+    n_patch = spec.n_patches if is_vlm else 0
+    bmb = tokens.shape[1]
+    seq_len = tokens.shape[2] + n_patch
+    # The reference sees full (unsharded) parameters: tp=1 view of the plan.
+    statics = make_statics(spec, plan.with_(tp=1),
+                           tokens_per_mb=bmb * seq_len)
+
+    text_embeds = lm_head.embed_tokens(params["embed"], tokens)
+    if is_vlm:
+        embeds = jnp.concatenate(
+            [batch["patches"].astype(text_embeds.dtype), text_embeds],
+            axis=2)
+        labels = jnp.concatenate(
+            [jnp.full((labels.shape[0], bmb, n_patch), -1, labels.dtype),
+             labels], axis=2)
+    else:
+        embeds = text_embeds
+    if has_enc:
+        from repro.models.stage import encoder_fwd
+        enc_len = spec.encoder.source_len
+        d_enc = spec.encoder.d_model
+        R_ = tokens.shape[0]
+        fr = batch["frames"].reshape(R_ * bmb, enc_len, d_enc)
+        enc_out_flat, enc_vjp = jax.vjp(
+            lambda ep, fx: encoder_fwd(ep, fx, spec),
+            params["encoder"], fr.astype(embeds.dtype))
+        enc_ring = enc_out_flat.reshape(R_, bmb, enc_len, d_enc)
+        denc = [None] * R_
+    pos = jnp.broadcast_to(jnp.arange(seq_len, dtype=jnp.int32),
+                           (bmb, seq_len))
+
+    def run_stage(w_stage, x, s, cross=None):
+        h, _, aux = stage_fwd(w_stage, x, statics, positions=pos,
+                              windows=params["layer_windows"][s],
+                              thetas=params["layer_thetas"][s],
+                              tp_axis=None, cross_x=cross)
+        return h, aux
+
+    # per-stage python state; ring leaves are [V, pp, ...]
+    weights = [_stage_slice(state["stash"]["current"], s) for s in range(S)]
+    stash: List[List[Any]] = [
+        [jax.tree.map(lambda a: a[v, s:s + 1], state["stash"]["ring"])
+         for v in range(V)] for s in range(S)] if use_ring else \
+        [[None] * V for _ in range(S)]
+    opt = [_opt_slice(state["opt_stages"], s) for s in range(S)]
+    head, fnorm = params["head"], params["final_norm"]
+    head_opt = state["opt_head"]
+
+    recv_f = [None] * S
+    recv_b = [None] * S
+    resid = [[None] * V for _ in range(S)]
+    gacc = [None] * S
+    d_embeds = [None] * R
+    loss_sum = jnp.zeros((), jnp.float32)
+    aux_sum = jnp.zeros((), jnp.float32)
+
+    for tick in range(sched.n_ticks):
+        # ---------------- F phase (all stages, pre-update weights) -------
+        new_recv_f = [None] * S
+        h_exit = None
+        for s in range(S):
+            f = sched.fwd_mb(tick, s)
+            if f < 0:
+                continue
+            x_in = embeds[f] if s == 0 else recv_f[s]
+            slot = f % V
+            if use_ring:
+                stash[s][slot] = weights[s]
+            if plan.stash_mode == "vertical":
+                vslot = max(f - 2 * s, 0) % V
+                w_f = stash[s][vslot]
+            else:
+                w_f = weights[s]
+            h, aux = run_stage(w_f, x_in, s,
+                               enc_ring[f] if has_enc else None)
+            aux_sum = aux_sum + aux
+            resid[s][slot] = x_in
+            if s + 1 < S:
+                new_recv_f[s + 1] = h
+            else:
+                h_exit = h
+        recv_f = new_recv_f
+
+        # ---------------- head / loss ------------------------------------
+        g_exit = None
+        m_exit = tick - (S - 1)
+        if 0 <= m_exit < R:
+            lab = labels[m_exit]
+            vmask = (lab >= 0).astype(jnp.float32)
+            lab_safe = jnp.maximum(lab, 0)
+
+            def loss_fn(hd, fn, h):
+                loss, _ = lm_head.head_loss(
+                    hd, fn["scale"], h, lab_safe, norm_kind=spec.norm,
+                    norm_bias=fn.get("bias"), valid_mask=vmask,
+                    vocab=spec.vocab)
+                return loss
+
+            loss, (dhead, dfnorm, dh) = jax.value_and_grad(
+                loss_fn, argnums=(0, 1, 2))(head, fnorm, h_exit)
+            loss_sum = loss_sum + loss
+            g_exit = dh.astype(h_exit.dtype)
+            if not accumulate:
+                hf_new, head_opt = optimizer.update(
+                    {"h": dhead, "f": dfnorm}, head_opt,
+                    {"h": head, "f": fnorm}, step)
+                head, fnorm = hf_new["h"], hf_new["f"]
+            else:
+                dhead_acc = dhead if tick == S - 1 else dhead_acc + dhead
+                dfnorm_acc = dfnorm if tick == S - 1 else jax.tree.map(
+                    jnp.add, dfnorm_acc, dfnorm)
+
+        # ---------------- B phase -----------------------------------------
+        new_recv_b = [None] * S
+        for s in range(S):
+            b = sched.bwd_mb(tick, s)
+            if b < 0:
+                continue
+            if plan.stash_mode == "vertical":
+                slot = max(b - 2 * s, 0) % V
+            else:
+                slot = b % V
+            g_in = g_exit if s == S - 1 else recv_b[s]
+            w_used = stash[s][slot] if use_ring else weights[s]
+
+            if has_enc:
+                def f_enc(w, x, cx):
+                    return run_stage(w, x, s, cx)
+
+                _, vjp = jax.vjp(f_enc, w_used, resid[s][slot], enc_ring[b])
+                dW, dx, dcx = vjp((g_in.astype(resid[s][slot].dtype),
+                                   jnp.float32(aux_weight)))
+                denc[b] = dcx if denc[b] is None else denc[b] + dcx
+            else:
+                def f_txt(w, x):
+                    return run_stage(w, x, s)
+
+                _, vjp = jax.vjp(f_txt, w_used, resid[s][slot])
+                dW, dx = vjp((g_in.astype(resid[s][slot].dtype),
+                              jnp.float32(aux_weight)))
+            if accumulate:
+                gacc[s] = dW if gacc[s] is None else jax.tree.map(
+                    jnp.add, gacc[s], dW)
+            else:
+                new_w, new_opt = optimizer.update(dW, opt[s], weights[s], step)
+                weights[s], opt[s] = new_w, new_opt
+            if s > 0:
+                new_recv_b[s - 1] = dx
+            else:
+                d_embeds[b] = dx
+        recv_b = new_recv_b
+
+    # ---------------- round end -------------------------------------------
+    if accumulate:
+        for s in range(S):
+            g = jax.tree.map(lambda a: a / R, gacc[s])
+            weights[s], opt[s] = optimizer.update(g, opt[s], weights[s], step)
+        hf_new, head_opt = optimizer.update(
+            {"h": dhead_acc / R,
+             "f": jax.tree.map(lambda a: a / R, dfnorm_acc)},
+            head_opt, {"h": head, "f": fnorm}, step)
+        head, fnorm = hf_new["h"], hf_new["f"]
+
+    demb = jnp.stack([d.astype(jnp.float32) for d in d_embeds])
+    if is_vlm:
+        demb = demb[:, :, n_patch:, :]
+    d_table = lm_head.embed_bwd(params["embed"], tokens, demb) / R
+    emb2, eopt2 = optimizer.update(d_table, state["opt_embed"],
+                                   params["embed"], step)
+    if has_enc:
+        denc_sum = jnp.stack(denc).astype(jnp.float32)
+        (denc_params, _) = enc_vjp(
+            denc_sum.reshape(R * bmb, enc_len, d_enc).astype(embeds.dtype))
+        encp2, encopt2 = optimizer.update(
+            jax.tree.map(lambda a: a.astype(jnp.float32) / R, denc_params),
+            state["opt_encoder"], params["encoder"], step)
+
+    # reassemble state
+    stages_full = state["stash"]["current"]
+    for s in range(S):
+        stages_full = _stage_unslice(stages_full, s, weights[s])
+    if use_ring:
+        ring_full = state["stash"]["ring"]
+        for s in range(S):
+            for v in range(V):
+                ring_full = jax.tree.map(
+                    lambda a, p: a.at[v, s:s + 1].set(p.astype(a.dtype)),
+                    ring_full, stash[s][v])
+    opt_full = state["opt_stages"]
+    for s in range(S):
+        opt_full = _opt_unslice(opt_full, s, opt[s])
+
+    new_params = dict(params)
+    new_params["embed"] = emb2
+    new_params["head"] = head
+    new_params["final_norm"] = fnorm
+    new_params["stages"] = stages_full
+    new_state = dict(state)
+    if has_enc:
+        new_params["encoder"] = encp2
+        new_state["opt_encoder"] = encopt2
+    new_state["params"] = new_params
+    new_state["stash"] = ({"current": stages_full, "ring": ring_full}
+                          if use_ring else {"current": stages_full})
+    new_state["opt_stages"] = opt_full
+    new_state["opt_head"] = head_opt
+    new_state["opt_embed"] = eopt2
+    new_state["step"] = step + 1
+    metrics = {"loss": loss_sum / R, "aux": aux_sum / R}
+    return new_state, metrics
+
+
+def _opt_slice(opt_tree, s):
+    return jax.tree.map(lambda a: a[s:s + 1], opt_tree)
+
+
+def _opt_unslice(full, s, part):
+    return jax.tree.map(
+        lambda a, p: a.at[s:s + 1].set(p.astype(a.dtype)), full, part)
+
+
+# --------------------------------------------------------------------------
+# Direct §3.4 staleness-formula implementation (straight pipeline)
+# --------------------------------------------------------------------------
+
+def staleness_formula_run(spec, plan, init_stage_weights, loss_grad_fn,
+                          optimizer, opt_state, n_minibatches: int,
+                          mode: str = "stash"):
+    """Applies the paper's update rule directly, one minibatch at a time.
+
+    init_stage_weights: list of per-stage weight pytrees.
+    loss_grad_fn(mixed_weights, m) -> list of per-stage grads, where
+        mixed_weights[s] is the version stage s uses for minibatch m.
+    In 'stash' mode stage s uses the version available after its own
+    update for minibatch m − delay(s), delay(s) = 2(S−1−s) in double-tick
+    units; in 'vertical' mode every stage uses delay(0).
+
+    Returns the per-stage weights after n_minibatches updates.  History is
+    kept so delayed versions are exact.
+    """
+    S = plan.pp
+    hist: List[List[Any]] = [[w] for w in init_stage_weights]  # versions
+    opt = list(opt_state)
+
+    def delay(s):
+        return 2 * (S - 1 - s)
+
+    for m in range(n_minibatches):
+        mixed = []
+        for s in range(S):
+            d = delay(s) if mode == "stash" else delay(0)
+            ver = max(m - d, 0)
+            ver = min(ver, len(hist[s]) - 1)
+            mixed.append(hist[s][ver])
+        grads = loss_grad_fn(mixed, m)
+        for s in range(S):
+            new_w, opt[s] = optimizer.update(grads[s], opt[s],
+                                             hist[s][-1], m)
+            hist[s].append(new_w)
+    return [h[-1] for h in hist], opt

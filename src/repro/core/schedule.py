@@ -1,0 +1,80 @@
+"""1F1B schedule (paper §3.3) as static tables.
+
+We use the "double-tick" formulation: one tick = one F-slot followed by one
+B-slot on every stage.  In steady state each stage alternates F and B — the
+paper's one-forward-one-backward policy — and the startup/drain phases fall
+out as ticks whose F- or B-slot is invalid (the pipeline bubble).
+
+Indices (S stages, R microbatches, stage s ∈ [0, S), tick τ):
+    F slot:  microbatch f = τ − s                  valid iff 0 ≤ f < R
+    B slot:  microbatch b = τ − 2(S−1) + s         valid iff 0 ≤ b < R
+The output stage (s = S−1) runs F(m) and B(m) in the same tick — exactly
+Figure 8.  Weight versions in flight at stage s: 2(S−1−s)+1, so the
+SPMD-uniform stash ring needs V = 2(S−1)+1 slots (paper: NOAM versions at
+the input stage; the factor-2 reflects equal F/B slot granularity).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule1F1B:
+    n_stages: int
+    n_microbatches: int
+
+    def __post_init__(self):
+        assert self.n_stages >= 1 and self.n_microbatches >= 1
+
+    @property
+    def n_ticks(self) -> int:
+        return self.n_microbatches + 2 * (self.n_stages - 1)
+
+    @property
+    def stash_slots(self) -> int:
+        return 2 * (self.n_stages - 1) + 1
+
+    def fwd_mb(self, tick: int, stage: int) -> int:
+        """Microbatch this stage forwards at this tick (-1 if bubble)."""
+        f = tick - stage
+        return f if 0 <= f < self.n_microbatches else -1
+
+    def bwd_mb(self, tick: int, stage: int) -> int:
+        b = tick - 2 * (self.n_stages - 1) + stage
+        return b if 0 <= b < self.n_microbatches else -1
+
+    def max_in_flight(self, stage: int) -> int:
+        """Microbatches between F(m) and B(m) at this stage (incl. current)."""
+        return 2 * (self.n_stages - 1 - stage) + 1
+
+    def tables(self):
+        """(fwd[T, S], bwd[T, S]) int arrays, -1 marks bubble slots."""
+        t, s = self.n_ticks, self.n_stages
+        fwd = np.full((t, s), -1, np.int32)
+        bwd = np.full((t, s), -1, np.int32)
+        for tick in range(t):
+            for stage in range(s):
+                fwd[tick, stage] = self.fwd_mb(tick, stage)
+                bwd[tick, stage] = self.bwd_mb(tick, stage)
+        return fwd, bwd
+
+    @property
+    def bubble_fraction(self) -> float:
+        """Fraction of (tick, stage, slot) triples idle over a round."""
+        total = 2 * self.n_ticks * self.n_stages
+        busy = 2 * self.n_microbatches * self.n_stages
+        return 1.0 - busy / total
+
+    def steady_state_ticks(self):
+        """Tick range in which every stage has both slots busy."""
+        lo = 2 * (self.n_stages - 1)
+        hi = self.n_microbatches - 1
+        return (lo, hi) if hi >= lo else None
+
+
+def paper_noam(total_machines: int, input_stage_machines: int) -> int:
+    """NUM_OPT_ACTIVE_MINIBATCHES = ceil(#machines / #machines input stage)."""
+    return math.ceil(total_machines / input_stage_machines)

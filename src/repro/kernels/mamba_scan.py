@@ -1,0 +1,119 @@
+"""Mamba selective-scan Pallas TPU kernel.
+
+The diagonal SSM recurrence
+
+    h_t = exp(dt_t ⊙ A) ⊙ h_{t-1} + (dt_t u_t) ⊗ B_t
+    y_t = h_t · C_t + D ⊙ u_t
+
+expands to a (Ci × N) state per token; the XLA twin (models/nn.py::
+selective_scan) must materialize (chunk, Ci, N) decay tensors at fusion
+boundaries — the dominant HBM-byte signature of the jamba dry-run.  The
+kernel keeps the (ci_block × N) state AND the expansion in VMEM: HBM
+traffic collapses to streaming u/dt (Ci-major) and B/C (N-major) in, y
+out — the roofline-ideal O(S·Ci) bytes.
+
+Grid: (B, Ci/ci_block, S/chunk) — chunk axis innermost/sequential, state
+scratch (ci_block, N) f32 carried across chunks; within a chunk a
+fori_loop steps token by token entirely in VMEM/VREGs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mamba_kernel(u_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref,
+                  hout_ref, h_scr, *, chunk: int, nc: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0].astype(jnp.float32)                  # (ci_b, N)
+    dvec = d_ref[0].astype(jnp.float32)               # (ci_b,)
+    u = u_ref[0].astype(jnp.float32)                  # (chunk, ci_b)
+    dt = dt_ref[0].astype(jnp.float32)
+    bm = b_ref[0].astype(jnp.float32)                 # (chunk, N)
+    cm = c_ref[0].astype(jnp.float32)
+
+    def step(t, carry):
+        h, y = carry                                  # h (ci_b, N)
+        dt_t = jax.lax.dynamic_slice_in_dim(dt, t, 1, 0)[0]      # (ci_b,)
+        u_t = jax.lax.dynamic_slice_in_dim(u, t, 1, 0)[0]
+        b_t = jax.lax.dynamic_slice_in_dim(bm, t, 1, 0)[0]       # (N,)
+        c_t = jax.lax.dynamic_slice_in_dim(cm, t, 1, 0)[0]
+        da = jnp.exp(dt_t[:, None] * a)                          # (ci_b, N)
+        h = da * h + (dt_t * u_t)[:, None] * b_t[None, :]
+        y_t = jnp.sum(h * c_t[None, :], axis=-1) + dvec * u_t    # (ci_b,)
+        y = jax.lax.dynamic_update_slice_in_dim(y, y_t[None], t, 0)
+        return h, y
+
+    h0 = h_scr[...]
+    y0 = jnp.zeros((chunk, u.shape[1]), jnp.float32)
+    h_last, y = jax.lax.fori_loop(0, chunk, step, (h0, y0))
+    h_scr[...] = h_last
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _emit():
+        hout_ref[0] = h_last
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "ci_block",
+                                             "interpret"))
+def mamba_scan(u, dt, A, B, C, D, *, chunk: int = 128,
+               ci_block: int = 512, interpret: bool = False):
+    """u, dt: (B, S, Ci); A: (Ci, N); B, C: (B, S, N); D: (Ci,).
+
+    Returns (y (B,S,Ci) in u.dtype — D⊙u included, h_last (B,Ci,N) f32).
+    S % chunk == 0 and Ci % ci_block == 0 (pad outside).
+    """
+    b, s, ci = u.shape
+    n = A.shape[-1]
+    ci_block = min(ci_block, ci)
+    assert s % chunk == 0 and ci % ci_block == 0, (s, chunk, ci, ci_block)
+    nc = s // chunk
+    nci = ci // ci_block
+
+    kernel = functools.partial(_mamba_kernel, chunk=chunk, nc=nc)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(b, nci, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, ci_block),
+                         lambda b_, ici, ic: (b_, ic, ici)),   # u
+            pl.BlockSpec((1, chunk, ci_block),
+                         lambda b_, ici, ic: (b_, ic, ici)),   # dt
+            pl.BlockSpec((1, chunk, n),
+                         lambda b_, ici, ic: (b_, ic, 0)),     # B
+            pl.BlockSpec((1, chunk, n),
+                         lambda b_, ici, ic: (b_, ic, 0)),     # C
+            pl.BlockSpec((1, ci_block, n),
+                         lambda b_, ici, ic: (ici, 0, 0)),     # A (lead 1)
+            pl.BlockSpec((1, ci_block),
+                         lambda b_, ici, ic: (ici, 0)),        # D
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, ci_block),
+                         lambda b_, ici, ic: (b_, ic, ici)),   # y
+            pl.BlockSpec((1, ci_block, n),
+                         lambda b_, ici, ic: (b_ * nci + ici, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, ci), u.dtype),
+            jax.ShapeDtypeStruct((b * nci, ci_block, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((ci_block, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(u, dt,
+      B, C,
+      A.reshape(nci, ci_block, n), D.reshape(nci, ci_block))
+    h_last = h_last.reshape(b, ci, n)
+    return y, h_last

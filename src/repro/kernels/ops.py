@@ -1,0 +1,94 @@
+"""jit'd wrappers + dispatch for the Pallas kernels.
+
+On TPU the kernels run compiled; this CPU container validates them in
+``interpret=True`` mode (the kernel body executes in Python — exact
+semantics, no Mosaic).  ``use_pallas()`` gates the dispatch from
+models/nn.py: by default the XLA-lowerable jnp twins run (fast on CPU and
+inside big jit graphs); set REPRO_USE_PALLAS=1 (or call ``enable(True)``)
+to route attention / WKV through the kernels.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.mamba_scan import mamba_scan as _mamba
+from repro.kernels.wkv6 import wkv6 as _wkv6
+
+_FORCE: Optional[bool] = None
+
+
+def enable(on: bool = True):
+    global _FORCE
+    _FORCE = on
+
+
+def use_pallas() -> bool:
+    if _FORCE is not None:
+        return _FORCE
+    return os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+
+
+def interpret_mode() -> bool:
+    """Pallas interpret mode whenever we are not actually on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = -1,
+                    block_q: int = 128, block_k: int = 128):
+    """Shape-padding wrapper: pads Sq/Sk up to block multiples and crops.
+
+    Padding keys sit *after* the real ones, so causal masking plus the
+    in-kernel kpos bound keeps them unattended for any real query.
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    block_q = min(block_q, max(sq, 8))
+    block_k = min(block_k, max(sk, 8))
+    pq = (-sq) % block_q
+    pk = (-sk) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))) if pq else q
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else k
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))) if pk else v
+    out = _flash(qp, kp, vp, causal=causal, window=window,
+                 block_q=block_q, block_k=block_k,
+                 interpret=interpret_mode())
+    return out[:, :sq]
+
+
+def mamba_scan(u, dt, A, B, C, D, *, chunk: int = 128,
+               ci_block: int = 512):
+    """Pads S to the chunk multiple (dt=0 padding is state-neutral)."""
+    b, s, ci = u.shape
+    chunk = min(chunk, max(s, 8))
+    ci_block = min(ci_block, ci)
+    while ci % ci_block:
+        ci_block //= 2
+    pad = (-s) % chunk
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0))
+        u, dt, B, C = (jnp.pad(a, zp) for a in (u, dt, B, C))
+    y, h_last = _mamba(u, dt, A, B, C, D, chunk=chunk, ci_block=ci_block,
+                       interpret=interpret_mode())
+    return y[:, :s], h_last
+
+
+def wkv6(r, k, v, w, u, *, chunk: int = 128
+         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pads S up to the chunk multiple (w=1 padding is decay-neutral)."""
+    b, s, h, dh = r.shape
+    chunk = min(chunk, max(s, 8))
+    pad = (-s) % chunk
+    if pad:
+        zp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, zp)
+        k = jnp.pad(k, zp)
+        v = jnp.pad(v, zp)
+        w = jnp.pad(w, zp, constant_values=1.0)
+    y, s_last = _wkv6(r, k, v, w, u, chunk=chunk,
+                      interpret=interpret_mode())
+    return y[:, :s], s_last

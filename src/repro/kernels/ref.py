@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references the kernel tests assert against
+(tests/test_kernels.py sweeps shapes/dtypes in interpret mode).  They are
+deliberately the *naive* O(S²)/O(S·D²) formulations — independent of both
+the kernels and the blockwise jnp twins used inside the training graph
+(models/nn.py), so a bug in the shared chunking logic cannot hide.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = -1):
+    """q: (B, Sq, H, Dh); k, v: (B, Sk, KV, Dh) with H % KV == 0.
+
+    Softmax in f32; returns (B, Sq, H, Dh) in q.dtype.
+    """
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    if kv != h:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+    scale = 1.0 / np.sqrt(dh)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def mamba_scan_ref(u, dt, A, B, C, D, h0=None):
+    """Stepwise diagonal SSM recurrence (Mamba-1 definition).
+
+    u, dt: (B, S, Ci); A: (Ci, N); B, C: (B, S, N); D: (Ci,).
+        h_t = exp(dt_t ⊙ A) ⊙ h_{t-1} + (dt_t u_t) ⊗ B_t
+        y_t = h_t · C_t + D ⊙ u_t
+    Returns (y (B,S,Ci), h_last (B,Ci,N) f32).
+    """
+    b, s, ci = u.shape
+    n = A.shape[-1]
+    uf, dtf = u.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = B.astype(jnp.float32), C.astype(jnp.float32)
+    Af, Df = A.astype(jnp.float32), D.astype(jnp.float32)
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None] * Af)                  # (B,Ci,N)
+        h = da * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bcn,bn->bc", h, c_t) + Df * u_t
+        return h, y
+
+    if h0 is None:
+        h0 = jnp.zeros((b, ci, n), jnp.float32)
+    xs = (uf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+          Bf.swapaxes(0, 1), Cf.swapaxes(0, 1))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(u.dtype), h_last
+
+
+def wkv6_ref(r, k, v, w, u, s0=None):
+    """RWKV6 WKV recurrence, step by step (the paper's definition).
+
+    r, k, v, w: (B, S, H, Dh); w is the per-channel decay in (0, 1];
+    u: (H, Dh) bonus.  Returns (y (B,S,H,Dh) f32->r.dtype, s_last f32).
+
+        y_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    b, s, h, dh = r.shape
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    uf = u.astype(jnp.float32)
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                         # (B,H,Dh)
+        kv = kt[..., :, None] * vt[..., None, :]     # (B,H,Dh,Dh)
+        y = jnp.einsum("bhd,bhde->bhe", rt,
+                       state + uf[None, :, :, None] * kv)
+        state = wt[..., None] * state + kv
+        return state, y
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (rf, kf, vf, wf))  # (S,B,H,D)
+    s_last, ys = jax.lax.scan(step, s0, xs)
+    y = ys.transpose(1, 0, 2, 3)                                   # (B,S,H,D)
+    return y.astype(r.dtype), s_last

@@ -1,0 +1,129 @@
+"""(architecture × input-shape × mesh) cell builder.
+
+One cell = one dry-run / benchmark unit: the jit-able step function, its
+ShapeDtypeStruct input stand-ins (``input_specs`` — no device allocation),
+and the in/out shardings.  train_* shapes lower the pipelined train_step;
+prefill_* the pipelined prefill; decode_*/long_* the pipelined decode step
+(long_* with the sequence-parallel KV cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.core.pipeline import build_pipeline
+from repro.optim.optimizers import by_name
+from repro.parallel.mesh import ParallelismPlan, data_axes, split_model_axis
+from repro.serving.engine import build_serving
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: configs.Shape
+    plan: ParallelismPlan
+    mesh: Mesh                     # production mesh (data, model[, pod])
+    dmesh: Mesh                    # derived mesh (data, stage, tensor[, pod])
+    fn: Callable
+    args: Tuple[Any, ...]          # ShapeDtypeStructs with shardings
+    in_shardings: Any
+    out_shardings: Any
+    spec: Any
+    bundle: Any
+
+    def lower(self, donate: bool = True):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=(0,) if donate else ())
+        with self.dmesh:
+            return jitted.lower(*self.args)
+
+
+def _sds(shapes_tree, shardings_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes_tree, shardings_tree)
+
+
+def _fit_microbatches(plan: ParallelismPlan, global_batch: int,
+                      dp: int) -> ParallelismPlan:
+    """Clamp R so global_batch divides dp·R (multi-pod halves per-replica
+    batch; the 1F1B schedule is valid for any R >= 1)."""
+    r = min(plan.microbatches, max(global_batch // dp, 1))
+    while global_batch % (dp * r):
+        r -= 1
+    return plan.with_(microbatches=r) if r != plan.microbatches else plan
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
+               plan: Optional[ParallelismPlan] = None,
+               optimizer=None) -> Cell:
+    cfg = configs.get(arch)
+    spec = cfg.full_spec()
+    shape = configs.SHAPES[shape_name]
+    plan = plan or cfg.PLAN
+    ok, why = configs.supports(arch, shape_name)
+    if not ok:
+        raise ValueError(f"{arch} × {shape_name} skipped: {why}")
+    dmesh = split_model_axis(mesh, plan.pp, plan.tp)
+    daxes = data_axes(dmesh)
+    dp = 1
+    for a in daxes:
+        dp *= dmesh.devices.shape[dmesh.axis_names.index(a)]
+
+    if shape.kind == "train":
+        plan = _fit_microbatches(plan, shape.global_batch, dp)
+        opt = optimizer or by_name(*cfg.OPTIMIZER)
+        bundle = build_pipeline(spec, plan, dmesh, seq_len=shape.seq_len,
+                                global_batch=shape.global_batch,
+                                optimizer=opt)
+        state_shape = jax.eval_shape(bundle.init_state, jax.random.key(0))
+        state_sds = _sds(state_shape, bundle.state_shardings())
+        batch_sds = bundle.batch_specs()
+        in_sh = (bundle.state_shardings(), bundle.batch_shardings())
+        out_sh = (bundle.state_shardings(), None)
+        return Cell(arch, shape, plan, mesh, dmesh, bundle.train_step,
+                    (state_sds, batch_sds), in_sh, out_sh, spec, bundle)
+
+    sp = shape.kind == "long_decode"
+    prefill_len = shape.seq_len if shape.kind == "prefill" else 0
+    sb = build_serving(spec, plan, dmesh, cache_len=shape.seq_len,
+                       global_batch=shape.global_batch,
+                       prefill_len=prefill_len, sp=sp)
+    state_shape = jax.eval_shape(sb.init_state, jax.random.key(0))
+    state_sds = _sds(state_shape, sb.state_shardings())
+    state_sh = sb.state_shardings()
+
+    if shape.kind == "prefill":
+        dnames = daxes if len(daxes) > 1 else daxes[0]
+        batch_sh = {
+            k: NamedSharding(dmesh, P(*((None, dnames) +
+                                        (None,) * (len(v.shape) - 2))))
+            for k, v in sb.prefill_specs.items()}
+        batch_sds = {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                             sharding=batch_sh[k])
+                     for k, v in sb.prefill_specs.items()}
+        in_sh = (state_sh, batch_sh)
+        out_sh = (state_sh, None)
+        return Cell(arch, shape, plan, mesh, dmesh, sb.prefill_step,
+                    (state_sds, batch_sds), in_sh, out_sh, spec, sb)
+
+    # decode / long_decode: one new token per sequence
+    tok_sh = NamedSharding(dmesh, P())
+    tok_sds = jax.ShapeDtypeStruct(sb.token_spec.shape, sb.token_spec.dtype,
+                                   sharding=tok_sh)
+    in_sh = (state_sh, tok_sh)
+    out_sh = (state_sh, None)
+    return Cell(arch, shape, plan, mesh, dmesh, sb.decode_step,
+                (state_sds, tok_sds), in_sh, out_sh, spec, sb)
+
+
+def input_specs(arch: str, shape_name: str, mesh: Mesh, **kw):
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    cell = build_cell(arch, shape_name, mesh, **kw)
+    return cell.args

@@ -1,0 +1,127 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any jax import — jax locks the device
+count on first init, and the production meshes need 512 host devices
+(16×16 single pod; 2×16×16 multi-pod).
+
+Per cell this prints compiled.memory_analysis() (proves it fits) and
+compiled.cost_analysis() (FLOPs/bytes), derives the trip-count-aware
+roofline terms (launch/roofline.py), and dumps a JSON artifact under
+experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all            # full 40-cell sweep
+"""
+import argparse          # noqa: E402
+import json              # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro import configs                         # noqa: E402
+from repro.launch import roofline as RL           # noqa: E402
+from repro.launch.cell import build_cell          # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
+             plan=None, note: str = "", verbose: bool = True):
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    cell = build_cell(arch, shape, mesh, plan=plan)
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    print(f"[{arch} × {shape} @ {mesh_name}] memory_analysis:")
+    print(f"  {mem}")
+    cost = compiled.cost_analysis()
+    print(f"[{arch} × {shape} @ {mesh_name}] cost_analysis (stock, "
+          f"while-bodies-once): flops={cost.get('flops', 0):.3e} "
+          f"bytes={cost.get('bytes accessed', 0):.3e}")
+
+    mfpd = RL.model_flops_per_device(cell.spec, cell.shape, n_chips)
+    r = RL.from_compiled(
+        compiled, arch=arch, shape=shape, mesh_name=mesh_name,
+        plan=f"pp{cell.plan.pp}xtp{cell.plan.tp}x{cell.plan.stash_mode}"
+             f"xR{cell.plan.microbatches}"
+             + ("+zero1" if cell.plan.zero1 else ""),
+        model_flops_per_device=mfpd, note=note)
+    if verbose:
+        print("  " + RL.fmt_row(r))
+        print(f"  per-collective operand bytes: "
+              f"{ {k: f'{v:.3e}' for k, v in r.per_collective.items()} }")
+        print(f"  while trips: {r.while_trips} "
+              f"(unknown: {r.unknown_trip_whiles}); "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape}__{mesh_name}" + (f"__{note}" if note else "")
+    RL.dump(r, os.path.join(out_dir, f"{tag}.json"))
+    return r
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(configs.SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every runnable (arch × shape) cell")
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    ap.add_argument("--note", type=str, default="")
+    ap.add_argument("--grad-sync", type=str, default=None,
+                    choices=[None, "per_microbatch", "per_round"])
+    ap.add_argument("--stash-mode", type=str, default=None,
+                    choices=[None, "stash", "flush", "vertical", "2bw"])
+    ap.add_argument("--microbatches", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    def plan_for(arch):
+        from repro import configs as _c
+        plan = _c.get(arch).PLAN
+        if args.grad_sync:
+            plan = plan.with_(grad_sync=args.grad_sync)
+        if args.stash_mode:
+            plan = plan.with_(stash_mode=args.stash_mode)
+        if args.microbatches:
+            plan = plan.with_(microbatches=args.microbatches)
+        return plan if (args.grad_sync or args.stash_mode
+                        or args.microbatches) else None
+
+    if args.all:
+        failures = []
+        for arch, shape, ok, why in configs.cells():
+            if not ok:
+                print(f"[{arch} × {shape}] SKIP: {why}")
+                continue
+            try:
+                run_cell(arch, shape, multi_pod=args.multi_pod,
+                         out_dir=args.out, note=args.note,
+                         plan=plan_for(arch))
+            except Exception:
+                failures.append((arch, shape))
+                traceback.print_exc()
+        if failures:
+            print(f"FAILED cells: {failures}")
+            sys.exit(1)
+        print("all cells compiled OK")
+        return
+
+    assert args.arch and args.shape, "--arch/--shape or --all"
+    run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+             out_dir=args.out, note=args.note, plan=plan_for(args.arch))
+
+
+if __name__ == "__main__":
+    main()

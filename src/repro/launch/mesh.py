@@ -1,0 +1,27 @@
+"""Production mesh factories.
+
+Importing this module never touches jax device state; meshes are built
+lazily inside the functions so that ``XLA_FLAGS=--xla_force_host_platform_
+device_count=...`` set by the launcher (dryrun.py) is respected.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The target deployment mesh.
+
+    Single pod: 16x16 = 256 chips, axes ("data", "model").
+    Multi pod:  2x16x16 = 512 chips, axes ("pod", "data", "model").
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, data: int = 1, model: int = 1, pod: int | None = None):
+    """Small mesh for CPU-host testing (device count set via XLA_FLAGS)."""
+    if pod is not None:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,48 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Per-op attribution profile of a dry-run cell: top HBM-byte and
+collective-byte contributors (the §Perf 'profile' — no wall clock on CPU,
+so the lowered-IR attribution IS the profile).
+
+  python -m repro.launch.profile_cell --arch jamba-v0.1-52b --shape train_4k
+"""
+import argparse       # noqa: E402
+
+from repro.launch import hlo_analysis as H           # noqa: E402
+from repro.launch.cell import build_cell             # noqa: E402
+from repro.launch.mesh import make_production_mesh   # noqa: E402
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=18)
+    ap.add_argument("--dump", type=str, default=None,
+                    help="write the compiled HLO text here for grepping")
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cell = build_cell(args.arch, args.shape, mesh)
+    compiled = cell.lower().compile()
+    text = compiled.as_text()
+    if args.dump:
+        with open(args.dump, "w") as f:
+            f.write(text)
+    cost = H.analyze(text)
+    print(f"total: flops={cost.flops:.3e} hbm={cost.hbm_bytes:.3e}B "
+          f"coll={cost.coll_operand_bytes:.3e}B "
+          f"trips={cost.while_trips}")
+    print(f"\n== top HBM-byte signatures (of {cost.hbm_bytes:.3e}) ==")
+    for sig, b in cost.top(cost.bytes_by_sig, args.top):
+        print(f"  {b:12.3e}  {100 * b / cost.hbm_bytes:5.1f}%  {sig}")
+    print(f"\n== top collective signatures "
+          f"(of {cost.coll_operand_bytes:.3e}) ==")
+    for sig, b in cost.top(cost.coll_by_sig, args.top):
+        print(f"  {b:12.3e}  {100 * b / max(cost.coll_operand_bytes, 1):5.1f}%"
+              f"  {sig}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,201 @@
+"""Roofline terms from the compiled dry-run artifact (task §Roofline).
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+Sources: the per-device partitioned HLO (compiled.as_text()) analyzed with
+trip-count-aware hlo_analysis (the stock cost_analysis counts while bodies
+once — see hlo_analysis docstring), so the numbers below are already
+per-chip; dividing global totals by chips is the same thing.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional
+
+from repro.core.profiler import TPU_V5E, Hardware
+from repro.launch import hlo_analysis
+
+
+_TILE_SIG = None  # set below
+
+
+def kernel_adjusted_bytes(cost, spec=None) -> float:
+    """Memory bytes with MXU-tile intermediates removed.
+
+    The pure-jnp twins of the Pallas kernels (flash attention, WKV6,
+    selective scan) materialize their (q_tile × k_tile) score /
+    state-expansion intermediates at HLO fusion boundaries; the kernels
+    hold them in VMEM and stream only Q/K/V/O (+ per-chunk carries).
+    Adjusted term = measured − Σ(score/state-tile signatures).  The
+    streamed operand traffic stays counted because the q/k/v reads and
+    output writes appear as separate (kept) signatures.
+
+    Tile signatures (f32 only — the twins accumulate in f32):
+      attention score tiles  [b, h≤128, q≥512, k≥512]
+      scan-state expansions  [b, s≥512, c≥512, n≤64]   (selective scan's
+                             (B,S,Ci,N) dA/dBu — VMEM-resident per chunk
+                             in the kernel)
+    Plain [b, s, d_model] activations never match (3-dim).
+    """
+    import re as _re
+    drop = 0.0
+    for sig, b in cost.bytes_by_sig.items():
+        m = _re.search(r"f32\[([\d,]+)\]", sig)
+        if not m:
+            continue
+        dims = [int(d) for d in m.group(1).split(",")]
+        if len(dims) < 4:
+            continue
+        score_tile = (dims[1] <= 128 and dims[-1] >= 512
+                      and dims[-2] >= 512)
+        # (b, t≤chunk, Ci≥512, N≤64): the selective-scan expansion and
+        # every level of XLA's associative-scan halving cascade — the
+        # kernel's in-VMEM sequential recurrence has no cascade at all
+        state_tile = dims[-1] <= 64 and dims[-2] >= 512
+        if score_tile or state_tile:
+            drop += b
+    return max(cost.hbm_bytes - drop, 0.0)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    plan: str
+    # per-device totals for ONE step
+    hlo_flops: float
+    hlo_bytes: float
+    coll_operand_bytes: float
+    coll_wire_bytes: float
+    per_collective: Dict[str, float]
+    # terms (seconds)
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    # memory term with Pallas-kernel VMEM-resident tiles removed (the
+    # expected on-TPU number when kernels/ replace the jnp twins)
+    memory_adj_s: float
+    # usefulness
+    model_flops: float            # 6·N_active·D per device-step
+    useful_ratio: float           # model_flops / hlo_flops
+    # bookkeeping
+    cost_analysis: Dict[str, Any]
+    memory_analysis: Dict[str, Any]
+    while_trips: list
+    unknown_trip_whiles: int
+    note: str = ""
+
+    @property
+    def step_seconds(self) -> float:
+        """Bound = max of the three terms (perfect overlap assumption)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def step_seconds_adj(self) -> float:
+        return max(self.compute_s, self.memory_adj_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful compute time / bound — the score being hillclimbed."""
+        if self.step_seconds <= 0:
+            return 0.0
+        ideal = self.model_flops / TPU_V5E.flops_peak
+        return ideal / self.step_seconds
+
+    @property
+    def roofline_fraction_adj(self) -> float:
+        """Fraction with the kernel-adjusted memory term."""
+        if self.step_seconds_adj <= 0:
+            return 0.0
+        ideal = self.model_flops / TPU_V5E.flops_peak
+        return ideal / self.step_seconds_adj
+
+    def to_json(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["step_seconds"] = self.step_seconds
+        d["roofline_fraction"] = self.roofline_fraction
+        d["roofline_fraction_adj"] = self.roofline_fraction_adj
+        return d
+
+
+def mem_stats(compiled) -> Dict[str, Any]:
+    try:
+        m = compiled.memory_analysis()
+        return {k: getattr(m, k) for k in dir(m)
+                if k.endswith("_in_bytes") and not k.startswith("_")}
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def from_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                  plan: str, model_flops_per_device: float,
+                  hw: Hardware = TPU_V5E, hlo_text: Optional[str] = None,
+                  note: str = "") -> Roofline:
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    cost = hlo_analysis.analyze(text)
+    try:
+        ca = dict(compiled.cost_analysis() or {})
+        ca = {k: float(v) for k, v in ca.items()
+              if isinstance(v, (int, float)) and k in
+              ("flops", "bytes accessed", "transcendentals",
+               "optimal_seconds")}
+    except Exception as e:  # pragma: no cover
+        ca = {"error": str(e)}
+
+    compute_s = cost.flops / hw.flops_peak
+    memory_s = cost.hbm_bytes / hw.hbm_bw
+    memory_adj_s = kernel_adjusted_bytes(cost) / hw.hbm_bw
+    collective_s = cost.coll_operand_bytes / hw.link_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = (model_flops_per_device / cost.flops) if cost.flops else 0.0
+
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, plan=plan,
+        hlo_flops=cost.flops, hlo_bytes=cost.hbm_bytes,
+        coll_operand_bytes=cost.coll_operand_bytes,
+        coll_wire_bytes=cost.coll_wire_bytes,
+        per_collective=cost.per_collective,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, memory_adj_s=memory_adj_s,
+        model_flops=model_flops_per_device, useful_ratio=useful,
+        cost_analysis=ca, memory_analysis=mem_stats(compiled),
+        while_trips=cost.while_trips,
+        unknown_trip_whiles=cost.unknown_trip_whiles, note=note)
+
+
+def model_flops_per_device(spec, shape, n_chips: int) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference),
+    per chip per step."""
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        factor = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        factor = 2.0
+    else:  # decode: one new token per sequence
+        tokens = shape.global_batch
+        factor = 2.0
+    return factor * spec.active_param_count() * tokens / n_chips
+
+
+def dump(r: Roofline, path: str):
+    with open(path, "w") as f:
+        json.dump(r.to_json(), f, indent=2)
+
+
+def fmt_row(r: Roofline) -> str:
+    return (f"{r.arch:18s} {r.shape:12s} {r.mesh:9s} "
+            f"C={r.compute_s*1e3:9.2f}ms M={r.memory_s*1e3:9.2f}ms "
+            f"(adj {r.memory_adj_s*1e3:9.2f}ms) "
+            f"X={r.collective_s*1e3:9.2f}ms dom={r.dominant:10s} "
+            f"useful={r.useful_ratio:5.2f} frac={r.roofline_fraction:5.3f} "
+            f"(adj {r.roofline_fraction_adj:5.3f})")

@@ -1,0 +1,10 @@
+from repro.models.spec import (  # noqa: F401
+    GLOBAL_WINDOW,
+    BlockSpec,
+    EncoderSpec,
+    MambaSpec,
+    ModelSpec,
+    MoESpec,
+    RWKVSpec,
+    validate_stageability,
+)

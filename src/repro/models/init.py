@@ -1,0 +1,364 @@
+"""Parameter initialization + sharding specs.
+
+Layout: every per-layer leaf is stacked with a leading [pp] stage dim and
+sharded P("stage", ...); tensor-parallel dims are sharded over "tensor".
+Embedding/head/encoder live outside the pipeline:
+  embed  [vocab_padded, d]   sharded on d over ("stage","tensor")  (gather stays local)
+  head   [d, vocab_padded]   sharded on vocab over ("stage","tensor")
+Runs under ``jax.eval_shape`` for the allocation-free dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import spec as spec_lib
+from repro.models.nn import AttnStatic, MambaStatic, MoEStatic, RWKVStatic
+from repro.parallel.mesh import ParallelismPlan
+
+MODEL_SHARDS = 16  # stage * tensor on the production mesh
+
+
+def padded_vocab(vocab: int, multiple: int = 128) -> int:
+    return -(-vocab // multiple) * multiple
+
+
+# --------------------------------------------------------------------------
+# Static per-device layer configs derived from (spec, plan)
+# --------------------------------------------------------------------------
+
+def attn_static(spec: spec_lib.ModelSpec, tp: int, causal: bool = True) -> AttnStatic:
+    assert spec.n_heads % tp == 0, (spec.name, spec.n_heads, tp)
+    if spec.n_kv % tp == 0:
+        kv_local, kv_sharded, groups_per_dev = spec.n_kv // tp, True, 0
+    else:
+        assert tp % spec.n_kv == 0, (
+            f"{spec.name}: kv={spec.n_kv} and tp={tp} must divide one another")
+        kv_local, kv_sharded, groups_per_dev = 1, False, tp // spec.n_kv
+    return AttnStatic(
+        n_heads_local=spec.n_heads // tp,
+        n_kv_local=kv_local,
+        d_head=spec.d_head,
+        kv_sharded=kv_sharded,
+        kv_groups_per_device=groups_per_dev,
+        qk_norm=spec.qk_norm,
+        rope_2d=spec.rope_2d,
+        causal=causal,
+    )
+
+
+def moe_static(spec: spec_lib.ModelSpec, tp: int, tokens_per_mb: int,
+               capacity_factor: float = 1.25) -> MoEStatic:
+    m = spec.moe
+    assert m.n_experts % tp == 0, (spec.name, m.n_experts, tp)
+    cap = int(np.ceil(tokens_per_mb * m.top_k / m.n_experts * capacity_factor))
+    cap = max(cap, 4)
+    return MoEStatic(n_experts=m.n_experts, n_local=m.n_experts // tp,
+                     top_k=m.top_k, capacity=cap, n_shared=m.n_shared)
+
+
+def mamba_static(spec: spec_lib.ModelSpec, tp: int) -> MambaStatic:
+    ms = spec.mamba
+    d_inner = ms.expand * spec.d_model
+    assert d_inner % tp == 0
+    dt_rank = ms.dt_rank or -(-spec.d_model // 16)
+    return MambaStatic(d_inner_local=d_inner // tp, d_state=ms.d_state,
+                       d_conv=ms.d_conv, dt_rank=dt_rank)
+
+
+def rwkv_static(spec: spec_lib.ModelSpec, tp: int) -> RWKVStatic:
+    rs = spec.rwkv
+    n_heads = spec.d_model // rs.head_dim
+    assert n_heads % tp == 0
+    return RWKVStatic(n_heads_local=n_heads // tp, d_head=rs.head_dim)
+
+
+# --------------------------------------------------------------------------
+# Initializers (return (arrays, pspecs) leaf-by-leaf)
+# --------------------------------------------------------------------------
+
+def _norm_init(pp, d, kind, key, dtype):
+    p = {"scale": jnp.ones((pp, d), dtype)}
+    s = {"scale": P("stage", None)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((pp, d), dtype)
+        s["bias"] = P("stage", None)
+    return p, s
+
+
+def _dense(key, shape, dtype, scale=0.02):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def _attn_init(spec, pp, tp, key, dtype, *, cross=False, out_scale=0.02):
+    d, h, kv, dh = spec.d_model, spec.n_heads, spec.n_kv, spec.d_head
+    keys = jax.random.split(key, 8)
+    kv_spec = P("stage", None, "tensor", None) if kv % tp == 0 else P("stage", None, None, None)
+    p = {
+        "wq": _dense(keys[0], (pp, d, h, dh), dtype),
+        "wk": _dense(keys[1], (pp, d, kv, dh), dtype),
+        "wv": _dense(keys[2], (pp, d, kv, dh), dtype),
+        "wo": _dense(keys[3], (pp, h * dh, d), dtype, out_scale),
+    }
+    s = {
+        "wq": P("stage", None, "tensor", None),
+        "wk": kv_spec,
+        "wv": kv_spec,
+        "wo": P("stage", "tensor", None),
+    }
+    if spec.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((pp, dh), dtype)
+        p["k_norm"] = jnp.ones((pp, dh), dtype)
+        s["q_norm"] = s["k_norm"] = P("stage", None)
+    return p, s
+
+
+def _mlp_init(spec, pp, tp, key, dtype, d_ff=None, out_scale=0.02):
+    d = spec.d_model
+    ff = d_ff or spec.d_ff
+    keys = jax.random.split(key, 3)
+    p = {"w1": _dense(keys[0], (pp, d, ff), dtype),
+         "w2": _dense(keys[1], (pp, ff, d), dtype, out_scale)}
+    s = {"w1": P("stage", None, "tensor"), "w2": P("stage", "tensor", None)}
+    if spec.act == "silu":
+        p["w3"] = _dense(keys[2], (pp, d, ff), dtype)
+        s["w3"] = P("stage", None, "tensor")
+    return p, s
+
+
+def _moe_init(spec, pp, tp, key, dtype, out_scale=0.02):
+    d, m = spec.d_model, spec.moe
+    keys = jax.random.split(key, 5)
+    p = {
+        "router": _dense(keys[0], (pp, d, m.n_experts), dtype),
+        "w1": _dense(keys[1], (pp, m.n_experts, d, m.d_expert), dtype),
+        "w2": _dense(keys[2], (pp, m.n_experts, m.d_expert, d), dtype, out_scale),
+        "w3": _dense(keys[3], (pp, m.n_experts, d, m.d_expert), dtype),
+    }
+    s = {
+        "router": P("stage", None, None),
+        "w1": P("stage", "tensor", None, None),
+        "w2": P("stage", "tensor", None, None),
+        "w3": P("stage", "tensor", None, None),
+    }
+    if m.n_shared:
+        sp, ss = _mlp_init(spec, pp, tp, keys[4], dtype,
+                           d_ff=m.n_shared * m.d_shared, out_scale=out_scale)
+        p["shared"], s["shared"] = sp, ss
+    return p, s
+
+
+def _mamba_init(spec, pp, tp, key, dtype, out_scale=0.02):
+    d = spec.d_model
+    ms = spec.mamba
+    ci = ms.expand * d
+    dt_rank = ms.dt_rank or -(-d // 16)
+    keys = jax.random.split(key, 8)
+    a = jnp.tile(jnp.arange(1, ms.d_state + 1, dtype=jnp.float32), (pp, ci, 1))
+    dt_init = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(keys[6], (pp, ci), jnp.float32,
+                                   np.log(1e-3), np.log(1e-1)))))
+    p = {
+        "in_x": _dense(keys[0], (pp, d, ci), dtype),
+        "in_z": _dense(keys[1], (pp, d, ci), dtype),
+        "conv_w": _dense(keys[2], (pp, ci, ms.d_conv), dtype, 0.1),
+        "x_proj": _dense(keys[3], (pp, ci, dt_rank + 2 * ms.d_state), dtype),
+        "dt_proj": _dense(keys[4], (pp, dt_rank, ci), dtype, dt_rank ** -0.5),
+        "dt_bias": dt_init.astype(jnp.float32),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((pp, ci), jnp.float32),
+        "out_proj": _dense(keys[5], (pp, ci, d), dtype, out_scale),
+    }
+    s = {
+        "in_x": P("stage", None, "tensor"),
+        "in_z": P("stage", None, "tensor"),
+        "conv_w": P("stage", "tensor", None),
+        "x_proj": P("stage", "tensor", None),
+        "dt_proj": P("stage", None, "tensor"),
+        "dt_bias": P("stage", "tensor"),
+        "A_log": P("stage", "tensor", None),
+        "D": P("stage", "tensor"),
+        "out_proj": P("stage", "tensor", None),
+    }
+    return p, s
+
+
+def _rwkv_tmix_init(spec, pp, tp, key, dtype, out_scale=0.02):
+    d = spec.d_model
+    rs = spec.rwkv
+    keys = jax.random.split(key, 12)
+    maa = lambda k: 0.5 * jnp.ones((pp, d), dtype)
+    p = {
+        "maa_x": maa(0), "maa_w": maa(0), "maa_k": maa(0),
+        "maa_v": maa(0), "maa_r": maa(0), "maa_g": maa(0),
+        "tmix_w1": _dense(keys[0], (pp, d, 5 * rs.tmix_lora), dtype, 0.01),
+        "tmix_w2": _dense(keys[1], (pp, 5, rs.tmix_lora, d), dtype, 0.01),
+        "wr": _dense(keys[2], (pp, d, d), dtype),
+        "wk": _dense(keys[3], (pp, d, d), dtype),
+        "wv": _dense(keys[4], (pp, d, d), dtype),
+        "wg": _dense(keys[5], (pp, d, d), dtype),
+        "wo": _dense(keys[6], (pp, d, d), dtype, out_scale),
+        "w0": (-3.9 + 0.2 * jax.random.normal(keys[7], (pp, d), jnp.float32)
+               ).astype(jnp.float32),
+        "decay_w1": _dense(keys[8], (pp, d, rs.decay_lora), dtype, 0.01),
+        "decay_w2": _dense(keys[9], (pp, rs.decay_lora, d), dtype, 0.01),
+        "u": _dense(keys[10], (pp, d), dtype),
+        "gn_scale": jnp.ones((pp, d), dtype),
+        "gn_bias": jnp.zeros((pp, d), dtype),
+    }
+    rep = P("stage", None)
+    ten = P("stage", "tensor")
+    s = {
+        "maa_x": rep, "maa_w": rep, "maa_k": rep, "maa_v": rep,
+        "maa_r": rep, "maa_g": rep,
+        "tmix_w1": P("stage", None, None),
+        "tmix_w2": P("stage", None, None, None),
+        "wr": P("stage", None, "tensor"),
+        "wk": P("stage", None, "tensor"),
+        "wv": P("stage", None, "tensor"),
+        "wg": P("stage", None, "tensor"),
+        "wo": P("stage", "tensor", None),
+        "w0": ten,
+        "decay_w1": P("stage", None, None),
+        "decay_w2": P("stage", None, "tensor"),
+        "u": ten,
+        "gn_scale": ten,
+        "gn_bias": ten,
+    }
+    return p, s
+
+
+def _rwkv_cmix_init(spec, pp, tp, key, dtype, out_scale=0.02):
+    d = spec.d_model
+    ffc = spec.d_ff
+    keys = jax.random.split(key, 3)
+    p = {
+        "maa_k": 0.5 * jnp.ones((pp, d), dtype),
+        "maa_r": 0.5 * jnp.ones((pp, d), dtype),
+        "wk": _dense(keys[0], (pp, d, ffc), dtype),
+        "wv": _dense(keys[1], (pp, ffc, d), dtype, out_scale),
+        "wr_gate": _dense(keys[2], (pp, d, d), dtype),
+    }
+    s = {
+        "maa_k": P("stage", None), "maa_r": P("stage", None),
+        "wk": P("stage", None, "tensor"),
+        "wv": P("stage", "tensor", None),
+        "wr_gate": P("stage", None, None),
+    }
+    return p, s
+
+
+# --------------------------------------------------------------------------
+# Whole-model init
+# --------------------------------------------------------------------------
+
+def init_params(spec: spec_lib.ModelSpec, plan: ParallelismPlan, key,
+                dtype=jnp.bfloat16):
+    """Returns (params, pspecs). Usable under jax.eval_shape."""
+    pp, tp = plan.pp, plan.tp
+    lps = spec.layers_per_stage(pp)
+    program = spec.stage_program(pp)
+    out_scale = 0.02 / np.sqrt(2 * spec.n_layers)
+
+    params: Dict = {}
+    pspecs: Dict = {}
+    vpad = padded_vocab(spec.vocab)
+
+    key_e, key_h, key_s, key_enc = jax.random.split(key, 4)
+    params["embed"] = _dense(key_e, (vpad, spec.d_model), dtype, 1.0)
+    pspecs["embed"] = P(None, ("stage", "tensor"))
+    params["head"] = _dense(key_h, (spec.d_model, vpad), dtype)
+    pspecs["head"] = P(None, ("stage", "tensor"))
+    params["final_norm"] = {"scale": jnp.ones((spec.d_model,), dtype)}
+    pspecs["final_norm"] = {"scale": P(None)}
+    if spec.norm == "layernorm":
+        params["final_norm"]["bias"] = jnp.zeros((spec.d_model,), dtype)
+        pspecs["final_norm"]["bias"] = P(None)
+
+    stages_p: Dict = {}
+    stages_s: Dict = {}
+    for i, blk in enumerate(program):
+        kp = jax.random.fold_in(key_s, i)
+        lp: Dict = {}
+        ls: Dict = {}
+        if blk.mixer != "none":
+            lp["norm1"], ls["norm1"] = _norm_init(pp, spec.d_model, spec.norm, kp, dtype)
+        if blk.mixer == "attn":
+            lp["attn"], ls["attn"] = _attn_init(
+                spec, pp, tp, jax.random.fold_in(kp, 1), dtype, out_scale=out_scale)
+            if blk.cross_attn:
+                lp["xattn"], ls["xattn"] = _attn_init(
+                    spec, pp, tp, jax.random.fold_in(kp, 2), dtype,
+                    cross=True, out_scale=out_scale)
+                lp["norm_x"], ls["norm_x"] = _norm_init(
+                    pp, spec.d_model, spec.norm, kp, dtype)
+        elif blk.mixer == "mamba":
+            lp["mamba"], ls["mamba"] = _mamba_init(
+                spec, pp, tp, jax.random.fold_in(kp, 3), dtype, out_scale)
+        elif blk.mixer == "rwkv":
+            lp["tmix"], ls["tmix"] = _rwkv_tmix_init(
+                spec, pp, tp, jax.random.fold_in(kp, 4), dtype, out_scale)
+        if blk.ffn != "none":
+            lp["norm2"], ls["norm2"] = _norm_init(pp, spec.d_model, spec.norm, kp, dtype)
+        if blk.ffn == "dense":
+            lp["mlp"], ls["mlp"] = _mlp_init(
+                spec, pp, tp, jax.random.fold_in(kp, 5), dtype, out_scale=out_scale)
+        elif blk.ffn == "moe":
+            lp["moe"], ls["moe"] = _moe_init(
+                spec, pp, tp, jax.random.fold_in(kp, 6), dtype, out_scale)
+        elif blk.ffn == "rwkv_cmix":
+            lp["cmix"], ls["cmix"] = _rwkv_cmix_init(
+                spec, pp, tp, jax.random.fold_in(kp, 7), dtype, out_scale)
+        stages_p[f"layer_{i}"] = lp
+        stages_s[f"layer_{i}"] = ls
+    params["stages"] = stages_p
+    pspecs["stages"] = stages_s
+
+    # Per-(stage, position) traced scalars
+    windows, thetas = spec_lib.stage_varying_scalars(spec, pp)
+    params["layer_windows"] = jnp.asarray(windows, jnp.int32)       # [pp, lps]
+    params["layer_thetas"] = jnp.asarray(thetas, jnp.float32)
+    pspecs["layer_windows"] = P("stage", None)
+    pspecs["layer_thetas"] = P("stage", None)
+
+    if spec.encoder is not None:
+        params["encoder"], pspecs["encoder"] = _encoder_init(
+            spec, tp, key_enc, dtype)
+    return params, pspecs
+
+
+def _encoder_init(spec, tp, key, dtype):
+    e = spec.encoder
+    n = e.n_layers
+    keys = jax.random.split(key, 8)
+    dh = e.d_model // e.n_heads
+    p = {
+        "wq": _dense(keys[0], (n, e.d_model, e.n_heads, dh), dtype),
+        "wk": _dense(keys[1], (n, e.d_model, e.n_heads, dh), dtype),
+        "wv": _dense(keys[2], (n, e.d_model, e.n_heads, dh), dtype),
+        "wo": _dense(keys[3], (n, e.n_heads * dh, e.d_model), dtype),
+        "w1": _dense(keys[4], (n, e.d_model, e.d_ff), dtype),
+        "w2": _dense(keys[5], (n, e.d_ff, e.d_model), dtype),
+        "norm1": jnp.ones((n, e.d_model), dtype),
+        "norm2": jnp.ones((n, e.d_model), dtype),
+        "final_norm": jnp.ones((e.d_model,), dtype),
+        "pos": _dense(keys[6], (e.source_len, e.d_model), dtype),
+    }
+    s = {
+        "wq": P(None, None, "tensor", None),
+        "wk": P(None, None, "tensor", None),
+        "wv": P(None, None, "tensor", None),
+        "wo": P(None, "tensor", None),
+        "w1": P(None, None, "tensor"),
+        "w2": P(None, "tensor", None),
+        "norm1": P(None, None),
+        "norm2": P(None, None),
+        "final_norm": P(None),
+        "pos": P(None, None),
+    }
+    return p, s

@@ -1,0 +1,86 @@
+"""Embedding lookup and vocab-sharded head/loss — the pipeline-external ops.
+
+Embedding is sharded on d_model (gathers stay local); the head is sharded
+on vocab (logits never materialize unsharded).  These run at pjit level
+*outside* the stage shard_map: the head+loss runs once per pipeline tick on
+the microbatch exiting the output stage (see core/pipeline.py), which keeps
+every collective SPMD-uniform and avoids replicating head FLOPs per stage.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def embed_tokens(embed, tokens):
+    """embed: (Vpad, d) sharded on d; tokens: (..., S) int32 -> (..., S, d)."""
+    return jnp.take(embed, tokens, axis=0)
+
+
+def head_loss(head, final_norm_scale, h, labels, *, norm_kind: str = "rmsnorm",
+              norm_bias=None, valid_mask=None, vocab: Optional[int] = None):
+    """Cross-entropy over the vocab-sharded head.
+
+    h: (B, S, d) hidden exiting the pipeline; labels: (B, S) int32.
+    Returns (mean_loss, n_tokens).  Padded vocab ids are masked out.
+    """
+    from repro.models import nn  # local import to avoid cycles
+
+    if norm_kind == "rmsnorm":
+        h = nn.rmsnorm(h, final_norm_scale)
+    else:
+        h = nn.layernorm(h, final_norm_scale, norm_bias)
+    logits = (h @ head).astype(jnp.float32)           # (B, S, Vpad) sharded
+    if vocab is not None and vocab < logits.shape[-1]:
+        pad = logits.shape[-1] - vocab
+        neg = jnp.full((pad,), -1e30, jnp.float32)
+        logits = logits + jnp.concatenate([jnp.zeros((vocab,)), neg])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if valid_mask is None:
+        valid_mask = jnp.ones(labels.shape, jnp.float32)
+    n = jnp.maximum(valid_mask.sum(), 1.0)
+    return (nll * valid_mask).sum() / n, n
+
+
+def head_loss_and_grad(head, final_norm_scale, h, labels, **kw):
+    """Returns (loss, dh, dhead, dnorm_scale) — feeds the output stage's B."""
+    def f(head_, scale_, h_):
+        loss, _ = head_loss(head_, scale_, h_, labels, **kw)
+        return loss
+
+    loss, grads = jax.value_and_grad(f, argnums=(0, 1, 2))(
+        head, final_norm_scale, h)
+    dhead, dscale, dh = grads
+    return loss, dh, dhead, dscale
+
+
+def embed_bwd(embed_shape_like, tokens, d_embeds):
+    """Accumulate d(embedding) from d(embeds) via scatter-add on vocab.
+
+    tokens: (..., S); d_embeds: (..., S, d).  Output matches embed sharding
+    (scatter on vocab dim is local when embed is sharded on d).
+    """
+    flat_tok = tokens.reshape(-1)
+    flat_d = d_embeds.reshape(-1, d_embeds.shape[-1])
+    return jnp.zeros(embed_shape_like.shape, flat_d.dtype).at[flat_tok].add(flat_d)
+
+
+def sample_greedy(head, final_norm_scale, h, *, norm_kind: str = "rmsnorm",
+                  norm_bias=None, vocab: Optional[int] = None):
+    """Greedy next-token ids from the last position. h: (B, 1, d)."""
+    from repro.models import nn
+
+    if norm_kind == "rmsnorm":
+        h = nn.rmsnorm(h, final_norm_scale)
+    else:
+        h = nn.layernorm(h, final_norm_scale, norm_bias)
+    logits = (h[:, -1] @ head).astype(jnp.float32)
+    if vocab is not None and vocab < logits.shape[-1]:
+        pad = logits.shape[-1] - vocab
+        neg = jnp.full((pad,), -1e30, jnp.float32)
+        logits = logits + jnp.concatenate([jnp.zeros((vocab,)), neg])
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,242 @@
+"""Stage assembly: the function one pipeline stage executes.
+
+A stage runs ``layers_per_stage`` blocks (the validated stage program).
+``stage_fwd`` consumes the *local* (per-device) parameter shard — leading
+[1] stage dim already sliced by shard_map — and an optional recurrent/KV
+state pytree for serving.  The same code runs single-device (tp_axis=None)
+for smoke tests and the reference pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import nn
+from repro.models import spec as spec_lib
+from repro.models.init import (attn_static, mamba_static, moe_static,
+                               rwkv_static)
+from repro.parallel.mesh import ParallelismPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class StageStatics:
+    """Compile-time info shared by every stage (SPMD-uniform)."""
+
+    spec: spec_lib.ModelSpec
+    plan: ParallelismPlan
+    program: Tuple[spec_lib.BlockSpec, ...]
+    attn: Optional[nn.AttnStatic]
+    xattn: Optional[nn.AttnStatic]
+    moe: Optional[nn.MoEStatic]
+    mamba: Optional[nn.MambaStatic]
+    rwkv: Optional[nn.RWKVStatic]
+
+
+def make_statics(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
+                 tokens_per_mb: int) -> StageStatics:
+    program = spec.stage_program(plan.pp)
+    has_attn = any(b.mixer == "attn" for b in program)
+    has_x = any(b.cross_attn for b in program)
+    has_moe = any(b.ffn == "moe" for b in program)
+    has_mamba = any(b.mixer == "mamba" for b in program)
+    has_rwkv = any(b.mixer == "rwkv" for b in program)
+    return StageStatics(
+        spec=spec,
+        plan=plan,
+        program=program,
+        attn=attn_static(spec, plan.tp) if has_attn else None,
+        xattn=attn_static(spec, plan.tp, causal=False) if has_x else None,
+        moe=moe_static(spec, plan.tp, tokens_per_mb) if has_moe else None,
+        mamba=mamba_static(spec, plan.tp) if has_mamba else None,
+        rwkv=rwkv_static(spec, plan.tp) if has_rwkv else None,
+    )
+
+
+def _squeeze_stage(tree):
+    """Drop the leading local stage dim ([1, ...] -> [...])."""
+    return jax.tree.map(lambda a: a[0], tree)
+
+
+def _block_apply(st: StageStatics, blk: spec_lib.BlockSpec, lp, x, *,
+                 positions, window, theta, tp_axis, state, cache_pos,
+                 cross_x, seq_axis=None):
+    """One block: mixer + ffn with pre-norm residuals.
+
+    Returns (x, new_state, aux_loss).
+    """
+    aux = jnp.zeros((), jnp.float32)
+    new_state: Dict[str, Any] = {}
+    if blk.mixer == "attn":
+        h = nn.apply_norm(lp["norm1"], x, st.spec.norm)
+        kv = state.get("kv") if state else None
+        out, new_kv = nn.attention(
+            lp["attn"], h, st.attn, positions=positions, window=window,
+            theta=theta, tp_axis=tp_axis, kv_cache=kv, cache_pos=cache_pos,
+            seq_axis=seq_axis)
+        x = x + out
+        if new_kv is not None:
+            new_state["kv"] = new_kv
+        if blk.cross_attn:
+            h = nn.apply_norm(lp["norm_x"], x, st.spec.norm)
+            out, _ = nn.attention(
+                lp["xattn"], h, st.xattn, positions=positions,
+                window=jnp.int32(-1), theta=theta, tp_axis=tp_axis,
+                cross_x=cross_x)
+            x = x + out
+    elif blk.mixer == "mamba":
+        h = nn.apply_norm(lp["norm1"], x, st.spec.norm)
+        sstate = state.get("ssm") if state else None
+        out, new_ssm = nn.mamba_block(lp["mamba"], h, st.mamba, tp_axis, sstate)
+        x = x + out
+        if new_ssm is not None:
+            new_state["ssm"] = new_ssm
+    elif blk.mixer == "rwkv":
+        h = nn.apply_norm(lp["norm1"], x, st.spec.norm)
+        tstate = state.get("tmix") if state else None
+        out, new_t = nn.rwkv_time_mix(lp["tmix"], h, st.rwkv, tp_axis, tstate)
+        x = x + out
+        if new_t is not None:
+            new_state["tmix"] = new_t
+
+    if blk.ffn == "dense":
+        h = nn.apply_norm(lp["norm2"], x, st.spec.norm)
+        x = x + nn.mlp(lp["mlp"], h, st.spec.act, tp_axis)
+    elif blk.ffn == "moe":
+        h = nn.apply_norm(lp["norm2"], x, st.spec.norm)
+        out, a = nn.moe(lp["moe"], h, st.moe, st.spec.act, tp_axis)
+        x = x + out
+        aux = aux + a
+    elif blk.ffn == "rwkv_cmix":
+        h = nn.apply_norm(lp["norm2"], x, st.spec.norm)
+        cstate = state.get("cmix") if state else None
+        out, new_c = nn.rwkv_channel_mix(lp["cmix"], h, tp_axis, cstate)
+        x = x + out
+        if new_c is not None:
+            new_state["cmix"] = new_c
+    return x, new_state, aux
+
+
+def stage_fwd(stage_params, x, st: StageStatics, *, positions, windows,
+              thetas, tp_axis: Optional[str], state=None, cache_pos=None,
+              cross_x=None, seq_axis=None):
+    """Run one stage over its blocks.
+
+    stage_params: {'layer_i': ...} with leading [1] stage dim on leaves.
+    windows/thetas: traced [lps] vectors for this stage.
+    state: optional {'layer_i': {...}} recurrent state (serving).
+    seq_axis: None, an axis name/tuple applied to every block, or a
+    *list* with one entry per stage position (SP shards only full-length
+    caches — serving/engine.py).
+    Returns (x, new_state, aux_loss_sum).
+    """
+    aux_total = jnp.zeros((), jnp.float32)
+    new_states: Dict[str, Any] = {}
+
+    def run_block(i, blk, x):
+        lp = _squeeze_stage(stage_params[f"layer_{i}"])
+        lstate = state[f"layer_{i}"] if state is not None else None
+        sa = seq_axis[i] if isinstance(seq_axis, list) else seq_axis
+        return _block_apply(
+            st, blk, lp, x, positions=positions, window=windows[i],
+            theta=thetas[i], tp_axis=tp_axis, state=lstate,
+            cache_pos=cache_pos, cross_x=cross_x, seq_axis=sa)
+
+    for i, blk in enumerate(st.program):
+        fn = partial(run_block, i, blk)
+        if st.plan.remat and state is None:
+            fn = jax.checkpoint(fn)
+        x, ns, aux = fn(x)
+        aux_total = aux_total + aux
+        if state is not None:
+            new_states[f"layer_{i}"] = ns
+    return x, (new_states if state is not None else None), aux_total
+
+
+# --------------------------------------------------------------------------
+# Recurrent / KV state construction (serving)
+# --------------------------------------------------------------------------
+
+def init_stage_state(st: StageStatics, batch_local: int, cache_lens,
+                     dtype=jnp.bfloat16):
+    """Per-stage serving state with a leading [pp]-stackable layout.
+
+    cache_lens: [lps] static KV capacities (per position; uniform across
+    stages — union-max, see DESIGN.md).  Entries for non-attn blocks ignored.
+    Returned WITHOUT the leading stage dim (caller stacks / shards).
+    """
+    out: Dict[str, Any] = {}
+    for i, blk in enumerate(st.program):
+        s: Dict[str, Any] = {}
+        if blk.mixer == "attn":
+            kvshape = (batch_local, cache_lens[i], st.attn.n_kv_local, st.attn.d_head)
+            s["kv"] = (jnp.zeros(kvshape, dtype), jnp.zeros(kvshape, dtype))
+        elif blk.mixer == "mamba":
+            ms = st.mamba
+            s["ssm"] = (
+                jnp.zeros((batch_local, ms.d_conv - 1, ms.d_inner_local), dtype),
+                jnp.zeros((batch_local, ms.d_inner_local, ms.d_state), jnp.float32),
+            )
+        elif blk.mixer == "rwkv":
+            rs = st.rwkv
+            s["tmix"] = (
+                jnp.zeros((batch_local, st.spec.d_model), dtype),
+                jnp.zeros((batch_local, rs.n_heads_local, rs.d_head, rs.d_head),
+                          jnp.float32),
+            )
+        if blk.ffn == "rwkv_cmix":
+            s["cmix"] = jnp.zeros((batch_local, st.spec.d_model), dtype)
+        out[f"layer_{i}"] = s
+    return out
+
+
+# --------------------------------------------------------------------------
+# Full (non-pipelined) forward — baselines, smoke tests, reference
+# --------------------------------------------------------------------------
+
+def full_transformer(params, x, st: StageStatics, *, positions,
+                     tp_axis=None, cross_x=None):
+    """Run all pp stages sequentially on one device group."""
+    aux_total = jnp.zeros((), jnp.float32)
+    for s in range(st.plan.pp):
+        stage_p = jax.tree.map(lambda a: a[s:s + 1], params["stages"])
+        x, _, aux = stage_fwd(
+            stage_p, x, st, positions=positions,
+            windows=params["layer_windows"][s],
+            thetas=params["layer_thetas"][s],
+            tp_axis=tp_axis, cross_x=cross_x)
+        aux_total = aux_total + aux
+    return x, aux_total
+
+
+def encoder_fwd(enc_params, frames, spec: spec_lib.ModelSpec, tp_axis=None):
+    """Whisper-style encoder over stubbed conv-frontend frames.
+
+    frames: (B, T_src, d_enc).  Scan over stacked encoder layers.
+    """
+    e = spec.encoder
+    x = frames + enc_params["pos"][None, : frames.shape[1]]
+    est = nn.AttnStatic(
+        n_heads_local=e.n_heads, n_kv_local=e.n_heads, d_head=e.d_model // e.n_heads,
+        kv_sharded=True, kv_groups_per_device=0, qk_norm=False, rope_2d=False,
+        causal=False)
+    positions = jnp.broadcast_to(jnp.arange(frames.shape[1]), frames.shape[:2])
+
+    def layer(x, lp):
+        h = nn.layernorm(x, lp["norm1"], jnp.zeros_like(lp["norm1"]))
+        out, _ = nn.attention(
+            {"wq": lp["wq"], "wk": lp["wk"], "wv": lp["wv"], "wo": lp["wo"]},
+            h, est, positions=positions, window=jnp.int32(-1),
+            theta=jnp.float32(1e4), tp_axis=None)
+        x = x + out
+        h = nn.layernorm(x, lp["norm2"], jnp.zeros_like(lp["norm2"]))
+        x = x + jax.nn.gelu(h @ lp["w1"]) @ lp["w2"]
+        return x, None
+
+    scanned = {k: v for k, v in enc_params.items() if k not in ("pos", "final_norm")}
+    x, _ = jax.lax.scan(layer, x, scanned)  # pytree leaves [n_layers,...]
+    return nn.layernorm(x, enc_params["final_norm"],
+                        jnp.zeros_like(enc_params["final_norm"]))

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import SGDM, Adam, RMSProp, Optimizer  # noqa: F401
+from repro.optim.compression import onebit_compress_psum  # noqa: F401

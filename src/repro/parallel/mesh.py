@@ -1,0 +1,134 @@
+"""Logical/physical mesh utilities and the per-arch parallelism plan.
+
+The production mesh (launch/mesh.py) exposes axes ("pod",) "data", "model".
+PipeDream's pipeline runs over *stages*; tensor parallelism runs *within* a
+stage.  We therefore derive a mesh from the same device array with the
+"model" axis split into ("stage", "tensor"), pp * tp == model.
+
+Logical axis conventions used throughout the framework:
+  batch   -> ("pod", "data")     PipeDream stage replication (uniform)
+  stage   -> "stage"             pipeline stages (the paper's contribution)
+  heads / ffn / vocab / experts -> "tensor"
+  seq (long-context KV)         -> "tensor"  (sequence-parallel KV sharding)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+AXIS_POD = "pod"
+AXIS_DATA = "data"
+AXIS_STAGE = "stage"
+AXIS_TENSOR = "tensor"
+AXIS_MODEL = "model"
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelismPlan:
+    """Per-architecture distribution plan (declared in configs/<arch>.py)."""
+
+    pp: int                    # pipeline stages (PipeDream stages)
+    tp: int                    # tensor parallel degree within a stage
+    microbatches: int = 8      # R: PipeDream "minibatches" in flight per round
+    stash_mode: str = "stash"  # stash | flush | vertical | 2bw
+    zero1: bool = True         # shard optimizer state over the data axis
+    remat: bool = True         # per-layer activation checkpointing
+    grad_sync: str = "per_microbatch"  # per_microbatch (faithful) | per_round
+    # Serving-only knobs
+    decode_microbatches: int = 8
+
+    def __post_init__(self):
+        assert self.stash_mode in ("stash", "flush", "vertical", "2bw"), self.stash_mode
+        assert self.grad_sync in ("per_microbatch", "per_round"), self.grad_sync
+        assert self.pp >= 1 and self.tp >= 1 and self.microbatches >= 1
+
+    def with_(self, **kw) -> "ParallelismPlan":
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def stash_slots(self) -> int:
+        """Weight versions kept per stage (SPMD-uniform ring size).
+
+        In the 1F1B double-tick schedule the input stage has 2(S-1)+1
+        microbatches in flight between F(m) and B(m).  flush/2bw need fewer.
+        """
+        if self.stash_mode == "flush":
+            return 1
+        if self.stash_mode == "2bw":
+            return 2
+        return 2 * (self.pp - 1) + 1
+
+
+def split_model_axis(mesh: Mesh, pp: int, tp: int) -> Mesh:
+    """Derive a ("pod",) "data", "stage", "tensor" mesh from the production mesh."""
+    axes = mesh.axis_names
+    assert axes[-1] == AXIS_MODEL, f"expected trailing 'model' axis, got {axes}"
+    model = mesh.devices.shape[-1]
+    assert pp * tp == model, f"pp*tp={pp * tp} must equal model axis size {model}"
+    devices = mesh.devices.reshape(mesh.devices.shape[:-1] + (pp, tp))
+    new_axes = tuple(axes[:-1]) + (AXIS_STAGE, AXIS_TENSOR)
+    return Mesh(devices, new_axes)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All axes that carry batch replication (pod included when present)."""
+    return tuple(a for a in (AXIS_POD, AXIS_DATA) if a in mesh.axis_names)
+
+
+def model_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in (AXIS_STAGE, AXIS_TENSOR) if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, *names: str) -> int:
+    n = 1
+    for name in names:
+        if name in mesh.axis_names:
+            n *= mesh.devices.shape[mesh.axis_names.index(name)]
+    return n
+
+
+def sharding(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def local_batch(mesh: Mesh, global_batch: int) -> int:
+    dp = axis_size(mesh, *data_axes(mesh))
+    assert global_batch % dp == 0, (global_batch, dp)
+    return global_batch // dp
+
+
+def maybe_psum(x, axis: Optional[str]):
+    """psum that no-ops outside shard_map / when the axis is absent (tp=1)."""
+    if axis is None:
+        return x
+    return jax.lax.psum(x, axis)
+
+
+def maybe_axis_index(axis: Optional[str]):
+    if axis is None:
+        return 0
+    return jax.lax.axis_index(axis)
+
+
+def shard_divides(n: int, parts: int) -> bool:
+    return parts >= 1 and n % parts == 0
+
+
+def pick_tp_shard(n: int, tp: int) -> Tuple[int, bool]:
+    """Return (local_n, sharded?) — replicate when tp does not divide n.
+
+    Used for GQA KV heads when kv < tp: weights are replicated over the
+    tensor axis and each device slices the head group it owns.
+    """
+    if shard_divides(n, tp):
+        return n // tp, True
+    return n, False

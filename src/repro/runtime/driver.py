@@ -1,0 +1,183 @@
+"""Fault-tolerant training driver.
+
+Responsibilities at fleet scale (DESIGN.md §10):
+  * periodic per-stage checkpointing (paper §4) + restart from the last
+    round checkpointed by *all* stages;
+  * failure handling — any exception in a round triggers restore + replay
+    (data is deterministic in step, so replayed rounds are identical);
+  * elastic scaling — on a world-size change, re-run the partitioner for
+    the new machine count, re-group the stage-stacked parameters
+    (checkpoint.reshard_stages), and continue;
+  * straggler mitigation — measured per-stage tick times feed the
+    rectangular partitioner, which proposes a rebalanced (pp, tp) plan
+    (the paper's answer to skew: better partitioning, not work stealing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager, reshard_stages
+from repro.core import profiler as prof
+from repro.core.partitioner import partition_rectangular
+
+
+@dataclasses.dataclass
+class DriverConfig:
+    checkpoint_every: int = 10
+    max_restarts: int = 3
+    keep_last: int = 3
+
+
+class TrainDriver:
+    def __init__(self, bundle, loader, ckpt_dir: str,
+                 cfg: DriverConfig = DriverConfig(),
+                 failure_hook: Optional[Callable[[int], None]] = None):
+        self.bundle = bundle
+        self.loader = loader
+        self.cfg = cfg
+        self.ckpt = CheckpointManager(ckpt_dir)
+        self.failure_hook = failure_hook or (lambda step: None)
+        self._jit_step = jax.jit(
+            bundle.train_step,
+            in_shardings=(bundle.state_shardings(), bundle.batch_shardings()),
+            out_shardings=(bundle.state_shardings(), None),
+            donate_argnums=0)
+        self.metrics_log: List[Dict[str, float]] = []
+        self.stage_times: List[float] = []
+
+    # ---------------- main loop -------------------------------------------
+
+    def run(self, state, n_rounds: int, start_step: int = 0):
+        step = start_step
+        restarts = 0
+        while step < n_rounds:
+            try:
+                self.failure_hook(step)          # may raise (simulated fault)
+                batch = self.loader.get(step)
+                t0 = time.perf_counter()
+                state, metrics = self._jit_step(state, batch)
+                jax.block_until_ready(metrics["loss"])
+                self.stage_times.append(time.perf_counter() - t0)
+                self.metrics_log.append(
+                    {k: float(v) for k, v in metrics.items()})
+                step += 1
+                if step % self.cfg.checkpoint_every == 0:
+                    self.ckpt.save(step, state, self.bundle.plan.pp)
+            except Exception:
+                restarts += 1
+                if restarts > self.cfg.max_restarts:
+                    raise
+                state, step = self.restore_latest(state)
+        return state, step
+
+    def restore_latest(self, state_template):
+        rnd = self.ckpt.latest_complete_round()
+        if rnd is None:
+            # no complete checkpoint: restart from scratch (round 0)
+            st = jax.jit(self.bundle.init_state,
+                         out_shardings=self.bundle.state_shardings())(
+                jax.random.key(0))
+            return st, 0
+        host_template = jax.tree.map(
+            lambda s: np.zeros(s.shape, s.dtype),
+            jax.eval_shape(self.bundle.init_state, jax.random.key(0)))
+        restored = self.ckpt.restore(rnd, host_template)
+        sh = self.bundle.state_shardings()
+        restored = jax.tree.map(jax.device_put, restored, sh)
+        return restored, rnd
+
+
+# --------------------------------------------------------------------------
+# Elastic re-planning
+# --------------------------------------------------------------------------
+
+def elastic_replan(spec, old_plan, new_model_axis: int, hw=prof.TPU_V5E, *,
+                   minibatch_tokens: int, data_replicas: int):
+    """Choose (pp, tp) for a new model-axis size via the partitioner.
+
+    Tries every pp dividing both the axis and the layer count with a valid
+    stage program; scores each with the rectangular DP bottleneck time and
+    returns the best plan.
+    """
+    profiles = prof.profile_analytic(spec, hw,
+                                     minibatch_tokens=minibatch_tokens)
+    best = None
+    for pp in range(1, new_model_axis + 1):
+        if new_model_axis % pp or spec.n_layers % pp:
+            continue
+        try:
+            spec.stage_program(pp)
+        except AssertionError:
+            continue
+        tp = new_model_axis // pp
+        if spec.n_heads and spec.n_heads % tp:
+            continue
+        part = partition_rectangular(profiles, max(pp, 1), data_replicas, hw)
+        score = part.bottleneck_time
+        if best is None or score < best[0]:
+            best = (score, pp, tp)
+    assert best is not None, "no feasible plan"
+    _, pp, tp = best
+    return old_plan.with_(pp=pp, tp=tp)
+
+
+def reshard_state_for_plan(state_host, spec, old_plan, new_plan):
+    """Move a host-side checkpointed state to a new pipeline depth."""
+    if old_plan.pp == new_plan.pp:
+        return state_host
+    new_stages = reshard_stages(state_host["params"]["stages"],
+                                old_plan.pp, new_plan.pp)
+    import jax.numpy as jnp
+
+    from repro.models.spec import stage_varying_scalars
+
+    out = dict(state_host)
+    params = dict(state_host["params"])
+    params["stages"] = new_stages
+    # windows/thetas re-derive from the spec
+    w, t = stage_varying_scalars(spec, new_plan.pp)
+    params["layer_windows"] = jnp.asarray(w, jnp.int32)
+    params["layer_thetas"] = jnp.asarray(t, jnp.float32)
+    out["params"] = params
+    # optimizer/stash state: re-group the same way
+    out["opt_stages"] = {
+        slot: reshard_stages(sub, old_plan.pp, new_plan.pp)
+        for slot, sub in state_host["opt_stages"].items()}
+    out["stash"] = {"current": new_stages}
+    if new_plan.stash_mode != "flush":
+        out["stash"]["ring"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a[None], (new_plan.stash_slots,) + a.shape) + 0, new_stages)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Straggler mitigation: profile-guided rebalancing
+# --------------------------------------------------------------------------
+
+def rebalance_from_measurements(spec, plan, measured_stage_seconds,
+                                hw=prof.TPU_V5E, *, minibatch_tokens: int,
+                                data_replicas: int, slack: float = 1.25):
+    """If one stage is >slack× the median (straggler), propose a new plan.
+
+    Returns (new_plan, rebalanced: bool).  With homogeneous stacked stages
+    the lever is the (pp, tp) split — deeper tp shrinks the straggling
+    stage's work; the partitioner arbitrates using measured times scaled
+    into the analytic profile.
+    """
+    times = np.asarray(measured_stage_seconds, float)
+    med = float(np.median(times))
+    if med <= 0 or float(times.max()) <= slack * med:
+        return plan, False
+    new_plan = elastic_replan(spec, plan, plan.pp * plan.tp, hw,
+                              minibatch_tokens=minibatch_tokens,
+                              data_replicas=data_replicas)
+    if (new_plan.pp, new_plan.tp) == (plan.pp, plan.tp) and plan.pp > 1:
+        # fall back: halve pipeline depth, double tensor parallelism
+        new_plan = plan.with_(pp=plan.pp // 2, tp=plan.tp * 2)
+    return new_plan, True

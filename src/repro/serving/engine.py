@@ -1,0 +1,348 @@
+"""Pipelined serving: prefill and decode steps.
+
+Decode microbatches the request batch into R groups and pipelines them
+through the stages (fwd-only 1F schedule, ticks = R + S − 1) — the serving
+analogue of PipeDream's minibatch injection; with continuous batching the
+pipeline stays full.  Each stage holds the KV/SSM state for its own layers
+(cache sharded: batch over data, layers with their stage, heads over
+tensor).
+
+Long-context mode (``sp=True``, used by long_500k with global_batch=1):
+the KV cache is sharded over the *data* axis along sequence length and
+attention combines partial softmax stats across shards (SP decode,
+models/nn.py::_sdpa_decode_seq_sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+try:
+    from jax import shard_map  # type: ignore
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+from repro.models import lm_head
+from repro.models import spec as spec_lib
+from repro.models.init import init_params
+from repro.models.stage import encoder_fwd, init_stage_state, make_statics, stage_fwd
+from repro.parallel.mesh import AXIS_STAGE, AXIS_TENSOR, ParallelismPlan, data_axes
+
+
+def default_cache_lens(spec: spec_lib.ModelSpec, pp: int, cache_len: int
+                       ) -> List[int]:
+    """Per-position static KV capacities (union-max across stages).
+
+    Windowed layers only need ``window`` slots; a position gets the max
+    requirement over the stages that share it (DESIGN.md §8).
+    """
+    lps = spec.layers_per_stage(pp)
+    lens = []
+    for i in range(lps):
+        need = 0
+        for s in range(pp):
+            blk = spec.blocks[s * lps + i]
+            if blk.mixer != "attn":
+                continue
+            w = blk.window
+            need = max(need, cache_len if w <= 0 else min(w, cache_len))
+        lens.append(max(need, 8))
+    return lens
+
+
+@dataclasses.dataclass
+class ServeBundle:
+    spec: spec_lib.ModelSpec
+    plan: ParallelismPlan
+    mesh: Mesh
+    decode_step: Callable          # (state, tokens) -> (state, next_tokens)
+    prefill_step: Optional[Callable]
+    init_state: Callable           # (key) -> state
+    state_pspecs: Any
+    token_spec: jax.ShapeDtypeStruct
+    prefill_specs: Optional[Dict[str, jax.ShapeDtypeStruct]]
+
+    def state_shardings(self):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                            self.state_pspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+
+def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
+                  mesh: Mesh, *, cache_len: int, global_batch: int,
+                  prefill_len: int = 0, sp: bool = False,
+                  compute_dtype=jnp.bfloat16) -> ServeBundle:
+    S = plan.pp
+    daxes = data_axes(mesh)
+    dp = int(np.prod([mesh.devices.shape[mesh.axis_names.index(a)]
+                      for a in daxes]))
+    dnames = daxes if len(daxes) > 1 else daxes[0]
+    tp_axis = AXIS_TENSOR if plan.tp > 1 else None
+
+    if sp:
+        # SP: batch replicated over data; cache_len sharded over the data
+        # axes (both of them on the multi-pod mesh)
+        R = 1
+        gb = global_batch                       # rows per group (replicated)
+        seq_axis = daxes
+        sp_shards = dp
+        batch_dim_spec = None
+    else:
+        R = min(plan.decode_microbatches, max(global_batch // dp, 1))
+        while global_batch % (dp * R):
+            R -= 1
+        gb = global_batch // (dp * R)           # local rows per group
+        seq_axis = None
+        sp_shards = 1
+        batch_dim_spec = dnames
+
+    statics = make_statics(spec, plan,
+                           tokens_per_mb=gb * max(prefill_len, 1))
+    if prefill_len:
+        # Prefill writes a contiguous qlen slab: every attention cache must
+        # be full-length (windowed layers still *mask* to their window; the
+        # ring-buffer memory optimization only applies to decode-only use).
+        lens = [cache_len] * spec.layers_per_stage(S)
+    else:
+        lens = default_cache_lens(spec, S, cache_len)
+    # SP shards only full-length caches over the data axes; windowed ring
+    # buffers (len < cache_len) are small and stay replicated — their
+    # modulo write/read does not distribute.  The flag is static and
+    # stage-uniform because default_cache_lens already union-maxes the
+    # per-position requirement across stages.
+    sp_flags = [sp and l >= cache_len for l in lens]
+    if sp:
+        lens = [max(-(-l // sp_shards), 8) if f else l
+                for l, f in zip(lens, sp_flags)]
+    seq_axes = [seq_axis if f else None for f in sp_flags]
+
+    has_enc = spec.encoder is not None
+    enc_len = spec.encoder.source_len if has_enc else 1
+    d_enc = spec.encoder.d_model if has_enc else 1
+
+    # ---------------- state construction ---------------------------------
+    # rows_g: GLOBAL rows per microbatch group (replicated rows in SP mode).
+    rows_g = gb * (1 if sp else dp)
+    # Global cache dims: seq-sharded positions hold l_local per device, so
+    # the global dim is l_local * dp.
+    glens = [l * (dp if f else 1) for l, f in zip(lens, sp_flags)]
+
+    def _layer_of(path) -> int:
+        for k in path:
+            key = str(getattr(k, "key", ""))
+            if key.startswith("layer_"):
+                return int(key.split("_")[1])
+        raise KeyError(path)
+
+    def _is_kv(path) -> bool:
+        return any(getattr(k, "key", None) == "kv" for k in path)
+
+    def _cache_template():
+        """Global cache template, stacked (pp, R, rows_g, ...)."""
+        base = init_stage_state(statics, rows_g, glens, compute_dtype)
+
+        def stack(leaf):
+            return jnp.zeros((S, R) + leaf.shape, leaf.dtype)
+
+        return jax.tree.map(stack, base)
+
+    def _cache_pspec():
+        base = init_stage_state(statics, rows_g, glens, compute_dtype)
+
+        def pspec(path, leaf):
+            dims: list = [AXIS_STAGE, None]         # (pp, R, ...)
+            dims.append(batch_dim_spec)             # rows
+            dims += [None] * (leaf.ndim - 1)
+            if _is_kv(path) and sp_flags[_layer_of(path)]:
+                dims[3] = daxes                     # (rows, L, KV, Dh)
+            return P(*dims)
+
+        return jax.tree_util.tree_map_with_path(pspec, base)
+
+    fwd_perm = [(i, i + 1) for i in range(S - 1)]
+
+    # ---------------- one pipelined forward pass --------------------------
+    def _pipe_forward(params, cache, embeds_ring, pos, qlen, enc_ring):
+        """embeds_ring: (R, Bg_rows, qlen, d); returns (h_ring, cache')."""
+        win, th = params["layer_windows"], params["layer_thetas"]
+
+        def f_phase(tick, cache, recv_f, h_ring, weights, win, th, embeds,
+                    enc_ring, pos):
+            s = jax.lax.axis_index(AXIS_STAGE)
+            r = tick - s
+            valid = (r >= 0) & (r < R)
+            rsafe = jnp.clip(r, 0, R - 1)
+            x0 = jax.lax.dynamic_index_in_dim(embeds, rsafe, 0,
+                                              keepdims=False)
+            x_in = jnp.where(s == 0, x0, recv_f[0])
+            st_r = jax.tree.map(
+                lambda a: jax.lax.dynamic_index_in_dim(a[0], rsafe, 0,
+                                                       keepdims=False),
+                cache)
+            cross = None
+            if has_enc:
+                cross = jax.lax.dynamic_index_in_dim(enc_ring, rsafe, 0,
+                                                     keepdims=False)
+            positions = jnp.broadcast_to(
+                pos + jnp.arange(qlen, dtype=jnp.int32), (x_in.shape[0], qlen))
+            h, new_st, _ = stage_fwd(
+                weights, x_in, statics, positions=positions,
+                windows=win[0], thetas=th[0], tp_axis=tp_axis,
+                state=st_r, cache_pos=pos, cross_x=cross, seq_axis=seq_axes)
+
+            def wr(a, n):
+                old = jax.lax.dynamic_index_in_dim(a[0], rsafe, 0,
+                                                   keepdims=False)
+                new = jnp.where(valid, n.astype(a.dtype), old)
+                return jax.lax.dynamic_update_index_in_dim(a[0], new, rsafe,
+                                                           0)[None]
+
+            cache = jax.tree.map(wr, cache, new_st)
+            h_send = jax.lax.ppermute(h, AXIS_STAGE, fwd_perm) if S > 1 else h
+            old_h = jax.lax.dynamic_index_in_dim(h_ring, rsafe, 0,
+                                                 keepdims=False)
+            h_keep = jnp.where(valid & (s == S - 1), h, old_h)
+            h_ring = jax.lax.dynamic_update_index_in_dim(h_ring, h_keep,
+                                                         rsafe, 0)
+            return cache, h_send[None], h_ring
+
+        cache_pspec = _cache_pspec()
+        cache_pspec = jax.tree.map(lambda p: P(*p), cache_pspec,
+                                   is_leaf=lambda x: isinstance(x, P))
+        act_pspec = P(AXIS_STAGE, batch_dim_spec, None, None)
+        emb_pspec = P(None, batch_dim_spec, None, None)
+        hring_pspec = P(None, batch_dim_spec, None, None)
+        enc_pspec = (P(None, batch_dim_spec, None, None) if has_enc
+                     else P(None, None, None, None))
+        stage_pspec = _box["pspecs"]["stages"]
+        win_pspec = P(AXIS_STAGE, None)
+
+        f_sharded = shard_map(
+            f_phase, mesh=mesh,
+            in_specs=(P(), cache_pspec, act_pspec, hring_pspec, stage_pspec,
+                      win_pspec, win_pspec, emb_pspec, enc_pspec, P()),
+            out_specs=(cache_pspec, act_pspec, hring_pspec),
+            check_vma=False)
+
+        rows_g = gb * (1 if sp else dp)
+        recv = jnp.zeros((S, rows_g, qlen, spec.d_model), compute_dtype)
+        h_ring = jnp.zeros((R, rows_g, qlen, spec.d_model), compute_dtype)
+
+        def body(carry, tick):
+            cache, recv, h_ring = carry
+            cache, recv, h_ring = f_sharded(
+                tick, cache, recv, h_ring, params["stages"], win, th,
+                embeds_ring, enc_ring, pos)
+            return (cache, recv, h_ring), None
+
+        (cache, _, h_ring), _ = jax.lax.scan(
+            body, (cache, recv, h_ring),
+            jnp.arange(R + S - 1, dtype=jnp.int32))
+        return h_ring, cache
+
+    # ---------------- decode step ----------------------------------------
+    def decode_step(state, tokens):
+        """tokens: (B_global,) int32; returns (state, next (B_global,))."""
+        params, cache, pos = state["params"], state["cache"], state["pos"]
+        emb = lm_head.embed_tokens(params["embed"], tokens)[:, None]
+        rows_g = gb * (1 if sp else dp)
+        embeds_ring = emb.reshape(R, rows_g, 1, spec.d_model)
+        if has_enc:
+            enc_ring = state["enc_out"]
+        else:
+            enc_ring = jnp.zeros((1, 1, 1, 1), compute_dtype)
+        h_ring, cache = _pipe_forward(params, cache, embeds_ring, pos, 1,
+                                      enc_ring)
+        h = h_ring.reshape(R * rows_g, 1, spec.d_model)
+        nxt = lm_head.sample_greedy(
+            params["head"], params["final_norm"]["scale"], h,
+            norm_kind=spec.norm, norm_bias=params["final_norm"].get("bias"),
+            vocab=spec.vocab)
+        return ({**state, "cache": cache, "pos": pos + 1}, nxt)
+
+    # ---------------- prefill step ----------------------------------------
+    prefill_step = None
+    prefill_specs = None
+    if prefill_len:
+        def prefill_step(state, batch):
+            params, cache = state["params"], state["cache"]
+            tokens = batch["tokens"]                    # (R, rows, S_text)
+            emb = lm_head.embed_tokens(params["embed"], tokens)
+            if spec.frontend == "vision" and "patches" in batch:
+                emb = jnp.concatenate(
+                    [batch["patches"].astype(emb.dtype), emb], axis=2)
+            if has_enc:
+                fr = batch["frames"].reshape(-1, enc_len, d_enc)
+                enc_out = encoder_fwd(params["encoder"],
+                                      fr.astype(compute_dtype), spec)
+                enc_ring = enc_out.reshape(tokens.shape[0], -1, enc_len,
+                                           d_enc)
+            else:
+                enc_ring = jnp.zeros((1, 1, 1, 1), compute_dtype)
+            h_ring, cache = _pipe_forward(params, cache,
+                                          emb.astype(compute_dtype),
+                                          jnp.int32(0), emb.shape[2],
+                                          enc_ring)
+            rows_g = h_ring.shape[1]
+            h_last = h_ring[:, :, -1:].reshape(R * rows_g, 1, spec.d_model)
+            nxt = lm_head.sample_greedy(
+                params["head"], params["final_norm"]["scale"], h_last,
+                norm_kind=spec.norm,
+                norm_bias=params["final_norm"].get("bias"), vocab=spec.vocab)
+            new_state = {**state, "cache": cache,
+                         "pos": jnp.int32(emb.shape[2])}
+            if has_enc:
+                new_state["enc_out"] = enc_ring
+            return new_state, nxt
+
+        rows_g = gb * (1 if sp else dp)
+        text_len = prefill_len - (spec.n_patches
+                                  if spec.frontend == "vision" else 0)
+        prefill_specs = {"tokens": jax.ShapeDtypeStruct(
+            (R, rows_g, text_len), jnp.int32)}
+        if spec.frontend == "vision":
+            prefill_specs["patches"] = jax.ShapeDtypeStruct(
+                (R, rows_g, spec.n_patches, spec.d_model), compute_dtype)
+        if has_enc:
+            prefill_specs["frames"] = jax.ShapeDtypeStruct(
+                (R, rows_g, enc_len, d_enc), compute_dtype)
+
+    # ---------------- init + pspecs ---------------------------------------
+    _box: Dict[str, Any] = {}
+
+    def _shapes():
+        p, s = init_params(spec, plan, jax.random.key(0), compute_dtype)
+        _box["pspecs"] = s
+        return p
+
+    params_shape = jax.eval_shape(_shapes)
+    pspecs = _box["pspecs"]
+
+    def init_state(key):
+        params, _ = init_params(spec, plan, key, compute_dtype)
+        state = {"params": params, "cache": _cache_template(),
+                 "pos": jnp.zeros((), jnp.int32)}
+        if has_enc:
+            rows_g = gb * (1 if sp else dp)
+            state["enc_out"] = jnp.zeros((R, rows_g, enc_len, d_enc),
+                                         compute_dtype)
+        return state
+
+    cache_pspec = _cache_pspec()
+    state_pspecs = {"params": pspecs, "cache": cache_pspec, "pos": P()}
+    if has_enc:
+        state_pspecs["enc_out"] = P(None, batch_dim_spec, None, None)
+
+    token_spec = jax.ShapeDtypeStruct(
+        (global_batch if sp else global_batch,), jnp.int32)
+
+    return ServeBundle(spec=spec, plan=plan, mesh=mesh,
+                       decode_step=decode_step, prefill_step=prefill_step,
+                       init_state=init_state, state_pspecs=state_pspecs,
+                       token_spec=token_spec, prefill_specs=prefill_specs)

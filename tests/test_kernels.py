@@ -1,0 +1,183 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode, CPU).
+
+Sweeps shapes, dtypes, GQA ratios, window sizes, block sizes; plus the
+model-level dispatch equivalence (use_pallas on/off must not change the
+transformer output).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(0)
+
+
+def _qkv(b, sq, sk, h, kv, dh, dt, seed=0):
+    ks = jax.random.split(jax.random.fold_in(KEY, seed), 3)
+    return (jax.random.normal(ks[0], (b, sq, h, dh), dt),
+            jax.random.normal(ks[1], (b, sk, kv, dh), dt),
+            jax.random.normal(ks[2], (b, sk, kv, dh), dt))
+
+
+FLASH_CASES = [
+    # b, sq, sk, h, kv, dh, causal, window, dtype, bq, bk
+    (2, 256, 256, 4, 2, 64, True, -1, jnp.float32, 128, 128),
+    (1, 128, 128, 4, 4, 64, True, 32, jnp.float32, 64, 64),
+    (2, 100, 100, 2, 1, 32, True, -1, jnp.bfloat16, 64, 64),
+    (1, 256, 256, 8, 2, 128, False, -1, jnp.float32, 128, 128),
+    (1, 64, 192, 2, 2, 16, True, 48, jnp.float32, 32, 64),
+    (1, 192, 192, 2, 2, 64, True, 200, jnp.float32, 64, 64),  # w > bk span
+    (2, 64, 64, 4, 1, 8, True, 1, jnp.float32, 32, 32),       # self only
+]
+
+
+@pytest.mark.parametrize(
+    "b,sq,sk,h,kv,dh,causal,window,dt,bq,bk", FLASH_CASES)
+def test_flash_attention_matches_oracle(b, sq, sk, h, kv, dh, causal,
+                                        window, dt, bq, bk):
+    q, k, v = _qkv(b, sq, sk, h, kv, dh, dt, seed=sq * h + dh)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=bq, block_k=bk)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    atol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=atol, rtol=1e-2)
+
+
+def test_flash_traced_window():
+    q, k, v = _qkv(2, 128, 128, 4, 2, 32, jnp.float32, seed=7)
+    for w in (-1, 16, 64):
+        got = ops.flash_attention(q, k, v, window=jnp.int32(w),
+                                  block_q=64, block_k=64)
+        want = ref.attention_ref(q, k, v, window=w)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=1e-3)
+
+
+def test_flash_matches_blockwise_jnp_twin():
+    """The XLA twin used inside training graphs agrees with the kernel."""
+    from repro.models.nn import _sdpa_flash_jnp
+    q, k, v = _qkv(1, 256, 256, 4, 4, 64, jnp.float32, seed=11)
+    got = ops.flash_attention(q, k, v, causal=True, window=-1)
+    pos = jnp.arange(256)
+    twin = _sdpa_flash_jnp(q, k, v, pos, pos, jnp.int32(-1), True, block=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(twin),
+                               atol=2e-5, rtol=1e-3)
+
+
+WKV_CASES = [
+    # b, s, h, dh, chunk, dtype
+    (2, 64, 2, 16, 16, jnp.float32),
+    (1, 128, 4, 32, 32, jnp.float32),
+    (2, 100, 2, 8, 32, jnp.float32),      # ragged tail padding
+    (1, 64, 2, 64, 16, jnp.bfloat16),
+    (1, 32, 1, 4, 32, jnp.float32),       # single chunk
+]
+
+
+@pytest.mark.parametrize("b,s,h,dh,chunk,dt", WKV_CASES)
+def test_wkv6_matches_stepwise_oracle(b, s, h, dh, chunk, dt):
+    ks = jax.random.split(jax.random.fold_in(KEY, s * h + dh), 5)
+    r = jax.random.normal(ks[0], (b, s, h, dh), dt)
+    k = jax.random.normal(ks[1], (b, s, h, dh), dt) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, dh), dt)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, s, h, dh))) * 0.5 + 0.49
+    u = jax.random.normal(ks[4], (h, dh)) * 0.1
+    y, s_last = ops.wkv6(r, k, v, w.astype(dt), u, chunk=chunk)
+    yr, sr = ref.wkv6_ref(r, k, v, w.astype(dt), u)
+    atol = 5e-2 if dt == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               atol=atol, rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(s_last), np.asarray(sr),
+                               atol=atol, rtol=1e-2)
+
+
+def test_wkv6_matches_chunked_jnp_twin():
+    from repro.models.nn import wkv6_chunked
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (1, 96, 2, 16))
+    k = jax.random.normal(ks[1], (1, 96, 2, 16)) * 0.5
+    v = jax.random.normal(ks[2], (1, 96, 2, 16))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (1, 96, 2, 16))) * 0.5 + 0.49
+    u = jax.random.normal(ks[4], (2, 16)) * 0.1
+    y, s_last = ops.wkv6(r, k, v, w, u, chunk=32)
+    yt, st = wkv6_chunked(r, k, v, w, u, chunk=24)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yt),
+                               atol=1e-3, rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(s_last), np.asarray(st),
+                               atol=1e-3, rtol=1e-2)
+
+
+MAMBA_CASES = [
+    # b, s, ci, n, chunk, ci_block
+    (2, 64, 32, 8, 16, 16),
+    (1, 128, 64, 16, 32, 32),
+    (2, 100, 48, 4, 32, 16),        # ragged tail + ci_block fallback
+    (1, 48, 512, 16, 16, 256),
+]
+
+
+@pytest.mark.parametrize("b,s,ci,n,chunk,cib", MAMBA_CASES)
+def test_mamba_scan_matches_stepwise_oracle(b, s, ci, n, chunk, cib):
+    ks = jax.random.split(jax.random.fold_in(KEY, s * ci + n), 6)
+    u = jax.random.normal(ks[0], (b, s, ci))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, ci))) * 0.3
+    A = -jnp.exp(jax.random.normal(ks[2], (ci, n)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    D = jax.random.normal(ks[5], (ci,))
+    y, h = ops.mamba_scan(u, dt, A, B, C, D, chunk=chunk, ci_block=cib)
+    yr, hr = ref.mamba_scan_ref(u, dt, A, B, C, D)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_mamba_scan_matches_chunked_jnp_twin():
+    from repro.models.nn import selective_scan
+    ks = jax.random.split(KEY, 6)
+    u = jax.random.normal(ks[0], (1, 96, 64))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 96, 64))) * 0.3
+    A = -jnp.exp(jax.random.normal(ks[2], (64, 8)) * 0.3)
+    B = jax.random.normal(ks[3], (1, 96, 8))
+    C = jax.random.normal(ks[4], (1, 96, 8))
+    D = jax.random.normal(ks[5], (64,))
+    y, h = ops.mamba_scan(u, dt, A, B, C, D, chunk=32, ci_block=64)
+    yt, ht = selective_scan(u, dt, A, B, C, D, chunk=24)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yt),
+                               atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(ht),
+                               atol=2e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("arch", ["dense", "rwkv", "hybrid"])
+def test_model_dispatch_equivalence(arch):
+    """use_pallas() on/off must not change transformer outputs."""
+    import sys as _sys
+    import os as _os
+    _sys.path.insert(0, _os.path.dirname(__file__))
+    from spmd_pipeline_check import build_tiny_spec
+    from repro.models.init import init_params
+    from repro.models.stage import full_transformer, make_statics
+    from repro.parallel.mesh import ParallelismPlan
+
+    spec = build_tiny_spec(arch)
+    plan = ParallelismPlan(pp=1, tp=1, microbatches=1, remat=False)
+    params, _ = init_params(spec, plan, jax.random.key(3), jnp.float32)
+    st = make_statics(spec, plan, tokens_per_mb=64)
+    x = jax.random.normal(jax.random.key(4), (2, 16, spec.d_model))
+    pos = jnp.broadcast_to(jnp.arange(16), (2, 16))
+    try:
+        ops.enable(False)
+        y0, _ = full_transformer(params, x, st, positions=pos)
+        ops.enable(True)
+        y1, _ = full_transformer(params, x, st, positions=pos)
+    finally:
+        ops.enable(False)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               atol=2e-4, rtol=1e-3)

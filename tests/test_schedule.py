@@ -1,0 +1,113 @@
+"""1F1B schedule invariants (paper §3.3) — property-based."""
+import numpy as np
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.core.schedule import Schedule1F1B, paper_noam
+
+sizes = st.tuples(st.integers(1, 8), st.integers(1, 24))
+
+
+@given(sizes)
+def test_every_microbatch_scheduled_exactly_once(sr):
+    s, r = sr
+    sched = Schedule1F1B(s, r)
+    fwd, bwd = sched.tables()
+    for stage in range(s):
+        f = [m for m in fwd[:, stage] if m >= 0]
+        b = [m for m in bwd[:, stage] if m >= 0]
+        assert sorted(f) == list(range(r))
+        assert sorted(b) == list(range(r))
+
+
+@given(sizes)
+def test_forward_before_backward_and_downstream(sr):
+    s, r = sr
+    sched = Schedule1F1B(s, r)
+    fwd, bwd = sched.tables()
+    for stage in range(s):
+        for m in range(r):
+            tf = int(np.where(fwd[:, stage] == m)[0][0])
+            tb = int(np.where(bwd[:, stage] == m)[0][0])
+            # B(m) at this stage comes at/after the output stage's F(m)
+            tf_out = int(np.where(fwd[:, s - 1] == m)[0][0])
+            assert tb >= tf_out >= tf
+            # activations flow downstream one stage per tick
+            if stage + 1 < s:
+                tf_next = int(np.where(fwd[:, stage + 1] == m)[0][0])
+                assert tf_next == tf + 1
+            if stage > 0:
+                tb_prev = int(np.where(bwd[:, stage - 1] == m)[0][0])
+                assert tb_prev == tb + 1
+
+
+@given(sizes)
+def test_steady_state_no_idle(sr):
+    """Paper: in steady state no GPU is idle — both slots busy."""
+    s, r = sr
+    sched = Schedule1F1B(s, r)
+    fwd, bwd = sched.tables()
+    rng = sched.steady_state_ticks()
+    if rng is None:
+        return
+    lo, hi = rng
+    for tick in range(lo, hi + 1):
+        assert (fwd[tick] >= 0).all() and (bwd[tick] >= 0).all()
+
+
+@given(sizes)
+def test_max_in_flight_bound(sr):
+    """Microbatches alive between F and B at stage s: ≤ 2(S−1−s)+1 —
+    the weight-stash ring size (paper: NOAM versions at the input
+    stage)."""
+    s, r = sr
+    sched = Schedule1F1B(s, r)
+    fwd, bwd = sched.tables()
+    for stage in range(s):
+        live = set()
+        peak = 0
+        for tick in range(sched.n_ticks):
+            if fwd[tick, stage] >= 0:
+                live.add(int(fwd[tick, stage]))
+            peak = max(peak, len(live))
+            if bwd[tick, stage] >= 0:
+                live.discard(int(bwd[tick, stage]))
+        assert peak <= sched.max_in_flight(stage)
+        assert sched.max_in_flight(stage) <= sched.stash_slots
+
+
+@given(sizes)
+def test_stash_ring_slots_never_clobbered(sr):
+    """Ring slot m % V written at F(m) must survive until B(m)."""
+    s, r = sr
+    sched = Schedule1F1B(s, r)
+    v = sched.stash_slots
+    fwd, bwd = sched.tables()
+    for stage in range(s):
+        writer = {}
+        for tick in range(sched.n_ticks):
+            m = int(fwd[tick, stage])
+            if m >= 0:
+                slot = m % v
+                assert slot not in writer, "slot reused while still live"
+                writer[slot] = m
+            b = int(bwd[tick, stage])
+            if b >= 0:
+                assert writer.pop(b % v) == b
+
+
+@given(sizes)
+def test_bubble_fraction(sr):
+    s, r = sr
+    sched = Schedule1F1B(s, r)
+    fwd, bwd = sched.tables()
+    busy = int((fwd >= 0).sum() + (bwd >= 0).sum())
+    total = 2 * sched.n_ticks * s
+    assert abs(sched.bubble_fraction - (1 - busy / total)) < 1e-12
+
+
+def test_noam():
+    assert paper_noam(8, 7) == 2       # VGG16 "7-1" config
+    assert paper_noam(8, 2) == 4
+    assert paper_noam(4, 4) == 1       # pure data parallel
+    assert paper_noam(16, 9) == 2      # "9-5-1-1"

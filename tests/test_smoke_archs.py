@@ -1,0 +1,111 @@
+"""Per-arch smoke tests: reduced same-family config, one pipelined train
+round on CPU (single device, sequential reference executor — identical
+semantics to the SPMD pipeline, see tests/test_pipeline_spmd.py).
+
+Asserts: finite loss, all parameters updated, shapes preserved, no NaNs.
+The FULL configs are exercised only via the dry-run (task spec).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.reference import reference_init_state, reference_train_step
+from repro.optim import SGDM
+
+
+def _batch(spec, plan, key, seq_len=24, bmb=2):
+    r = plan.microbatches
+    n_patch = spec.n_patches if spec.frontend == "vision" else 0
+    text = seq_len - n_patch
+    ks = jax.random.split(key, 4)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (r, bmb, text), 0, spec.vocab,
+                                     jnp.int32),
+        "labels": jax.random.randint(ks[1], (r, bmb, text), 0, spec.vocab,
+                                     jnp.int32),
+    }
+    if spec.frontend == "vision":
+        batch["patches"] = 0.02 * jax.random.normal(
+            ks[2], (r, bmb, n_patch, spec.d_model), jnp.float32)
+    if spec.encoder is not None:
+        e = spec.encoder
+        batch["frames"] = 0.02 * jax.random.normal(
+            ks[3], (r, bmb, e.source_len, e.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_train_round(arch):
+    cfg = configs.get(arch)
+    spec, plan = cfg.smoke_spec(), cfg.SMOKE_PLAN
+    opt = SGDM(lr=0.01, momentum=0.9)
+    state = reference_init_state(spec, plan, opt, jax.random.key(0))
+    batch = _batch(spec, plan, jax.random.key(1))
+
+    new_state, metrics = reference_train_step(spec, plan, state, batch, opt)
+
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0, loss
+    # every parameter leaf finite and shape-stable; most visibly updated
+    # (leaves behind doubly-down-scaled init paths get ~1e-8..1e-13
+    # gradients that underflow an fp32 0.5/1.0 init after one SGD step —
+    # gradient LIVENESS is asserted exactly in test_gradient_liveness)
+    old_flat = jax.tree_util.tree_leaves_with_path(state["params"])
+    new_flat = jax.tree_util.tree_leaves_with_path(new_state["params"])
+    n_changed = 0
+    for (pa, old), (pb, new) in zip(old_flat, new_flat):
+        assert pa == pb and new.shape == old.shape, (pa, pb)
+        assert np.isfinite(np.asarray(new, np.float32)).all(), pa
+        if not np.array_equal(np.asarray(new), np.asarray(old)):
+            n_changed += 1
+    assert n_changed >= 0.6 * len(old_flat), (arch, n_changed,
+                                              len(old_flat))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_gradient_liveness(arch):
+    """No dead parameters: every stage leaf gets a nonzero gradient."""
+    import jax.numpy as jnp
+    from repro.models.init import init_params
+    from repro.models.stage import full_transformer, make_statics
+
+    cfg = configs.get(arch)
+    spec = cfg.smoke_spec()
+    plan = cfg.SMOKE_PLAN.with_(tp=1, pp=2)
+    params, _ = init_params(spec, plan, jax.random.key(0), jnp.float32)
+    st = make_statics(spec, plan, tokens_per_mb=48)
+    x = 0.1 * jax.random.normal(jax.random.key(1), (2, 24, spec.d_model))
+    pos = jnp.broadcast_to(jnp.arange(24), (2, 24))
+    cross = (0.02 * jax.random.normal(
+        jax.random.key(2),
+        (2, spec.encoder.source_len, spec.encoder.d_model))
+        if spec.encoder is not None else None)
+
+    def loss(stages):
+        p2 = dict(params)
+        p2["stages"] = stages
+        h, aux = full_transformer(p2, x, st, cross_x=cross, positions=pos)
+        return (h.astype(jnp.float32) ** 2).mean() + 0.01 * aux
+
+    g = jax.grad(loss)(params["stages"])
+    dead = [jax.tree_util.keystr(p)
+            for p, leaf in jax.tree_util.tree_leaves_with_path(g)
+            if float(jnp.abs(leaf).max()) == 0.0]
+    assert not dead, (arch, dead)
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_second_round_consumes_state(arch):
+    """Round 2 runs off round 1's state (stash ring layout survives)."""
+    cfg = configs.get(arch)
+    spec, plan = cfg.smoke_spec(), cfg.SMOKE_PLAN
+    opt = SGDM(lr=0.01, momentum=0.9)
+    state = reference_init_state(spec, plan, opt, jax.random.key(0))
+    b1 = _batch(spec, plan, jax.random.key(1))
+    b2 = _batch(spec, plan, jax.random.key(2))
+    state, m1 = reference_train_step(spec, plan, state, b1, opt)
+    state, m2 = reference_train_step(spec, plan, state, b2, opt)
+    assert int(state["step"]) == 2
+    assert np.isfinite(float(m2["loss"]))
