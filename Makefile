@@ -1,0 +1,11 @@
+# Convenience entry points matching the ROADMAP commands.
+.PHONY: tier1 tier1-full bench
+
+tier1:
+	scripts/tier1.sh
+
+tier1-full:
+	scripts/tier1.sh --full
+
+bench:
+	PYTHONPATH=src:. python benchmarks/partitioner_bench.py

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verify (ROADMAP): fast default selection, bounded time.
+#   scripts/tier1.sh            # fast set (pytest.ini deselects -m slow)
+#   scripts/tier1.sh --full     # everything, including the slow SPMD matrix
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+ARGS=(-x -q)
+if [[ "${1:-}" == "--full" ]]; then
+    shift
+    ARGS+=(-m "")
+fi
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest "${ARGS[@]}" "$@"

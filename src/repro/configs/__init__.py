@@ -6,6 +6,10 @@ Every config module exposes:
   PLAN          — production ParallelismPlan (pp·tp == 16 model shards)
   SMOKE_PLAN    — small-plan used by the smoke tests
   OPTIMIZER     — (name, lr) the end-to-end examples default to
+and optionally:
+  INTERLEAVED_PLAN — virtual-stage (Megatron-interleaved) synchronous
+                     alternate, for archs whose layer count divides
+                     pp × virtual_stages (see core/schedule.py)
 
 Shape semantics (task spec):
   train_4k     seq 4 096 × batch 256   -> pipelined train_step

@@ -68,9 +68,93 @@ def stage_time(profiles: Sequence[LayerProfile], i: int, j: int, m: int,
     return max(t_sum, sync) / m
 
 
-def partition(profiles: Sequence[LayerProfile], machines: int, hw: Hardware,
-              *, max_stages: Optional[int] = None) -> Partition:
-    """The paper's DP (general mode, per-stage replication)."""
+def _stage_time_table(profiles: Sequence[LayerProfile], machines: int,
+                      hw: Hardware, prefix) -> np.ndarray:
+    """T[i, j, m] = T(i→j, m) for all layer spans and machine counts.
+
+    Vectorized form of :func:`stage_time`: sums from the prefix arrays,
+    sync from the closed-form ps_factor·(m−1)·bytes/m/bw (0 at m=1).
+    Shape [n, n, M+1]; column m=0 unused.
+    """
+    n = len(profiles)
+    tp, wp = prefix
+    t_sum = tp[None, 1:] - tp[:-1, None]            # [i, j] layers i..j
+    w_sum = wp[None, 1:] - wp[:-1, None]
+    m = np.arange(machines + 1, dtype=np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        sync = (hw.ps_factor * (m - 1)[None, None, :]
+                * w_sum[:, :, None] * hw.param_bytes / np.maximum(m, 1)
+                / hw.sync_bw)
+    sync[:, :, :2] = 0.0                            # m <= 1: no sync
+    T = np.maximum(t_sum[:, :, None], sync) / np.maximum(m, 1)
+    T[:, :, 0] = np.inf
+    return T
+
+
+def partition(profiles: Sequence[LayerProfile], machines: int,
+              hw: Hardware) -> Partition:
+    """The paper's DP (general mode, per-stage replication).
+
+    The O(N²M²) recurrence with the inner machine-split loop vectorized
+    over m' in numpy; bit-identical to :func:`partition_scalar` (the
+    original pure-Python DP, kept as the benchmark/test oracle) —
+    including its first-strict-improvement-by-1e-15 tie-breaking.
+    """
+    n = len(profiles)
+    M = machines
+    prefix = _prefix_sums(profiles)
+    c = [comm_time_activations(p.a_bytes, hw) for p in profiles]
+    T = _stage_time_table(profiles, M, hw, prefix)
+
+    INF = float("inf")
+    A = np.full((n + 1, M + 1), INF)
+    # split[j][m] = (i, m') chosen, or None for single stage
+    split: List[List[Optional[Tuple[int, int]]]] = [
+        [None] * (M + 1) for _ in range(n + 1)]
+
+    A[1][1:] = T[0, 0, 1:]
+    A[1:, 1] = T[0, :, 1]
+
+    comm = 2.0 * np.asarray(c, np.float64)
+    for j in range(2, n + 1):
+        for m in range(2, M + 1):
+            best = float(T[0, j - 1, m])                        # Case 1
+            arg = None
+            # Case 2 over all (i, m') at once: one stage i..j-1 on m'
+            # machines after an optimal sub-pipeline over 1..i on m - m'.
+            cand = np.maximum(A[1:j, m - 1:0:-1],
+                              np.maximum(comm[0:j - 1, None],
+                                         T[1:j, j - 1, 1:m]))
+            flat = cand.ravel()
+            # row-major order == the scalar loop's (i asc, m' asc) visit
+            # order, so replaying only the improving entries reproduces
+            # its running-best tie-breaking exactly.
+            for k in np.flatnonzero(flat < best - 1e-15):
+                if flat[k] < best - 1e-15:
+                    best = float(flat[k])
+                    arg = (int(k) // (m - 1) + 1, int(k) % (m - 1) + 1)
+            A[j][m] = best
+            split[j][m] = arg
+
+    # Reconstruct
+    stages: List[Stage] = []
+    j, m = n, M
+    while j > 0:
+        arg = split[j][m]
+        if arg is None:
+            stages.append(Stage(0, j - 1, m))
+            break
+        i, mp = arg
+        stages.append(Stage(i, j - 1, mp))
+        j, m = i, m - mp
+    stages.reverse()
+    noam = paper_noam(machines, stages[0].replicas)
+    return Partition(tuple(stages), float(A[n][M]), noam)
+
+
+def partition_scalar(profiles: Sequence[LayerProfile], machines: int,
+                     hw: Hardware) -> Partition:
+    """Original pure-Python O(N²M²) DP — oracle for :func:`partition`."""
     n = len(profiles)
     M = machines
     prefix = _prefix_sums(profiles)
@@ -78,7 +162,6 @@ def partition(profiles: Sequence[LayerProfile], machines: int, hw: Hardware,
 
     INF = float("inf")
     A = np.full((n + 1, M + 1), INF)
-    # split[j][m] = (i, m') chosen, or None for single stage
     split: List[List[Optional[Tuple[int, int]]]] = [
         [None] * (M + 1) for _ in range(n + 1)]
 
@@ -101,7 +184,6 @@ def partition(profiles: Sequence[LayerProfile], machines: int, hw: Hardware,
             A[j][m] = best
             split[j][m] = arg
 
-    # Reconstruct
     stages: List[Stage] = []
     j, m = n, M
     while j > 0:
@@ -113,10 +195,6 @@ def partition(profiles: Sequence[LayerProfile], machines: int, hw: Hardware,
         stages.append(Stage(i, j - 1, mp))
         j, m = i, m - mp
     stages.reverse()
-    if max_stages is not None and len(stages) > max_stages:
-        # Re-solve with fewer machines per stage is out of scope of the
-        # paper's DP; callers wanting a cap use partition_rectangular.
-        pass
     noam = paper_noam(machines, stages[0].replicas)
     return Partition(tuple(stages), float(A[n][M]), noam)
 

@@ -1,36 +1,50 @@
 """PipeDream pipelined training as one jit'd SPMD step (paper §3.3–3.5).
 
-One ``train_step`` = one *round* of R microbatches through the 1F1B
-schedule.  The scan body is one double-tick:
+One ``train_step`` = one *round* of R microbatches through a pluggable
+:class:`~repro.core.schedule.PipelineSchedule`.  The scan body is one
+double-tick:
 
-  F shard_map   every stage forwards its scheduled microbatch with its
-                *latest* weights, writes that version into the stash ring
-                (weight stashing), saves the stage input (residual), and
-                ppermutes activations to the next stage.
-  head/loss     (pjit level, vocab-sharded over the whole model axis) the
-                microbatch exiting the output stage gets its loss and
-                d(loss)/d(hidden); the output stage starts its backward in
-                the same tick — Figure 8's F(m),B(m) adjacency.
-  B shard_map   every stage backwards its scheduled microbatch using the
-                *stashed* weights from its forward (jax.vjp re-runs the
-                stage forward: stage-granular remat), psums stage grads
-                over the replica axis (replicated stages, §3.2), applies
-                its update immediately (asynchronous per-stage updates),
-                and ppermutes input grads to the previous stage.
+  F shard_map   every stage gathers its row of the schedule's forward
+                table — (microbatch, local chunk, input source, stash
+                slot, weight-version slot, residual slot) — forwards
+                that chunk, records weights/residuals into the slots the
+                table names, and ppermutes activations downstream.
+  head/loss     (pjit level, vocab-sharded over the whole model axis)
+                the microbatch the schedule's exit table names gets its
+                loss and d(loss)/d(hidden); the owning stage starts its
+                backward in the same tick — Figure 8's F(m),B(m)
+                adjacency.
+  B shard_map   every stage gathers its backward-table row, re-runs the
+                chunk forward under jax.vjp with the *table-named*
+                weight version and residual (stage-granular remat),
+                psums/reduce-scatters stage grads over the replica axis
+                (replicated stages, §3.2), and either applies its update
+                immediately (asynchronous per-stage updates) or
+                accumulates for a round-end flush, then ppermutes input
+                grads upstream.
 
-Modes (plan.stash_mode):
-  stash     paper default: F uses latest, B uses stashed, update per mb.
-  vertical  vertical sync: F and B both use the version the input stage
-            had when the microbatch entered (slot index shift m -> m − s).
-  flush     GPipe / PipeDream-flush: single version, grads accumulated,
-            one synchronous update per round (baseline).
-  2bw       two versions + per-round accumulation (PipeDream-2BW-style
-            memory-optimized variant; beyond-paper).
+All microbatch/slot indices come from gathered schedule-table rows —
+there is no tick/stage index arithmetic in this module; adding a
+schedule means subclassing PipelineSchedule, not editing this file.
+The schedule registry (core/schedule.py) maps ``plan.schedule`` /
+``plan.stash_mode`` onto:
 
-Boundary ticks run the same program on masked data — the pipeline bubble
-costs real slots, exactly as on hardware.  Embedding updates apply once
-per round; head/final-norm update per tick (output-stage semantics).  See
-DESIGN.md §5/§7.
+  1f1b         paper default (policy 'stash': F latest, B stashed; or
+               'vertical': uniform delayed version), update per mb.
+  gpipe        flush family — 1F1B timing, grads accumulated, one
+               synchronous update per round ('flush' = 1 weight
+               version, '2bw' = PipeDream-2BW-style double buffer).
+  interleaved  Megatron-style virtual stages: each physical stage holds
+               ``plan.virtual_stages`` model chunks (stage-stacked
+               params carry S·v rows in storage order s·v+j -> chunk
+               j·S+s), shrinking the bubble for S >= 3.  Flush
+               semantics (accumulate).
+
+Weight-stash ring primitives and the ZeRO-1 sharded-optimizer update
+live in core/versioning.py.  Boundary ticks run the same program on
+masked data — the pipeline bubble costs real slots, exactly as on
+hardware.  Embedding updates apply once per round; head/final-norm
+update per tick (output-stage semantics).  See DESIGN.md §5/§7.
 """
 from __future__ import annotations
 
@@ -43,101 +57,26 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-try:  # jax >= 0.6 moved shard_map to the top level
-    from jax import shard_map  # type: ignore
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
-
-from repro.core.schedule import Schedule1F1B
+from repro.core import schedule as sched_lib
+from repro.core.schedule import (B_CHUNK, B_FROM_HEAD, B_MB, B_RESID_READ,
+                                 B_VERSION, F_CHUNK, F_FROM_EMBEDS, F_MB,
+                                 F_RESID_WRITE, F_STASH_WRITE, F_VERSION,
+                                 PipelineSchedule)
+from repro.core.versioning import (replicated_microbatch_update, tree_add,
+                                   tree_chunk, tree_chunk_add,
+                                   tree_ring_read, tree_ring_write,
+                                   tree_scale, tree_select, zero1_axes,
+                                   zero1_microbatch_update, zero1_opt_pspec)
 from repro.models import lm_head
 from repro.models import spec as spec_lib
-from repro.models.init import init_params, padded_vocab
+from repro.models.init import init_params
 from repro.models.stage import StageStatics, encoder_fwd, make_statics, stage_fwd
+from repro.parallel.compat import shard_map
 from repro.parallel.mesh import AXIS_STAGE, AXIS_TENSOR, ParallelismPlan, data_axes
-
-# --------------------------------------------------------------------------
-# Pytree ring-buffer helpers
-# --------------------------------------------------------------------------
-
-def tree_ring_read(tree, idx):
-    return jax.tree.map(
-        lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0, keepdims=False), tree)
-
-
-def tree_ring_write(tree, idx, val, valid):
-    def w(a, v):
-        cur = jax.lax.dynamic_index_in_dim(a, idx, 0, keepdims=False)
-        new = jnp.where(valid, v.astype(a.dtype), cur)
-        return jax.lax.dynamic_update_index_in_dim(a, new, idx, 0)
-    return jax.tree.map(w, tree, val)
-
-
-def tree_select(pred, a, b):
-    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
-
-
-def tree_scale(tree, s):
-    return jax.tree.map(lambda a: a * s.astype(a.dtype), tree)
-
-
-def tree_add(a, b):
-    return jax.tree.map(jnp.add, a, b)
 
 
 def _is_pspec(x):
     return isinstance(x, P)
-
-
-# --------------------------------------------------------------------------
-# ZeRO-1 (beyond-paper): shard optimizer state over the data axes.
-#
-# Per stage-parameter leaf we pick one dimension whose *local* (post-tensor-
-# sharding) size divides the data-parallel degree; gradients are
-# reduce-scattered along it, the optimizer update runs on the 1/dp shard,
-# and the updated weights are all-gathered back.  Elementwise optimizers
-# (SGDM / Adam / RMSProp) commute with the sharding, so results match the
-# replicated update exactly (up to fp reduction order).  Leaves with no
-# divisible dim fall back to the replicated psum path (axis = -1).
-# --------------------------------------------------------------------------
-
-def zero1_axes(stage_shapes, stage_pspecs, mesh, dp: int):
-    """Tree of ints: per-leaf shard dim for optimizer state (-1 = none)."""
-
-    def pick(sds, pspec):
-        if dp <= 1:
-            return -1
-        shape = sds.shape
-        for ax in range(1, len(shape)):  # dim 0 is the stacked stage dim
-            ent = pspec[ax] if ax < len(pspec) else None
-            names = () if ent is None else (
-                ent if isinstance(ent, tuple) else (ent,))
-            tp_div = 1
-            for nm in names:
-                tp_div *= mesh.devices.shape[mesh.axis_names.index(nm)]
-            if shape[ax] % tp_div:
-                continue
-            local = shape[ax] // tp_div
-            if local % dp == 0 and local >= dp:
-                return ax
-        return -1
-
-    return jax.tree.map(pick, stage_shapes, stage_pspecs, is_leaf=None)
-
-
-def zero1_opt_pspec(stage_pspecs, axes_tree, daxes):
-    """Stage pspecs with the data axes added on the chosen dim."""
-
-    def combine(pspec, ax):
-        if ax < 0:
-            return pspec
-        ents = list(pspec) + [None] * (ax + 1 - len(pspec))
-        ent = ents[ax]
-        names = () if ent is None else (
-            ent if isinstance(ent, tuple) else (ent,))
-        ents[ax] = tuple(names) + tuple(daxes)
-        return P(*ents)
-
-    return jax.tree.map(combine, stage_pspecs, axes_tree, is_leaf=_is_pspec)
 
 
 # --------------------------------------------------------------------------
@@ -150,7 +89,7 @@ class PipelineBundle:
     plan: ParallelismPlan
     mesh: Mesh
     statics: StageStatics
-    sched: Schedule1F1B
+    sched: PipelineSchedule
     train_step: Callable            # (state, batch) -> (state, metrics)
     init_state: Callable            # (key) -> state
     state_pspecs: Any
@@ -186,15 +125,29 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
     assert global_batch % (dp * R) == 0, (global_batch, dp, R)
     mb = global_batch // (dp * R)          # per-replica microbatch size
     bmb = global_batch // R                # global rows per microbatch
-    sched = Schedule1F1B(S, R)
-    V = plan.stash_slots
+
+    sched = sched_lib.make_schedule(plan)
+    sched.validate()
+    vs = sched.virtual_stages               # local chunks per stage
+    n_chunks = sched.n_chunks
+    V = sched.stash_slots                   # weight-version ring size
+    Vr = sched.resid_slots                  # residual ring size
+    use_ring = sched.uses_stash_ring
+    accumulate = sched.accumulate or plan.grad_sync == "per_round"
+    assert not (use_ring and vs > 1), (
+        "per-chunk weight stashing is not implemented; interleaved "
+        "schedules run flush (accumulate) semantics")
+    # Static schedule tables; gathered per (tick, stage) inside the
+    # shard_map bodies — they become tiny jaxpr constants.
+    tabs = sched.tables()
+    FT, BT = np.asarray(tabs.fwd), np.asarray(tabs.bwd)
+    EXIT_T, DEMB_T = np.asarray(tabs.exit_mb), np.asarray(tabs.demb_mb)
+    # The model is cut into n_chunks pieces; all model-side construction
+    # (init, statics, per-layer scalars) sees the chunk count as "pp".
+    mplan = plan.with_(pp=n_chunks, schedule="auto", virtual_stages=1) \
+        if vs > 1 else plan
+
     tp_axis = AXIS_TENSOR if plan.tp > 1 else None
-    accumulate = (plan.stash_mode in ("flush", "2bw")
-                  or plan.grad_sync == "per_round")
-    # Flush mode: weights never change mid-round, so the stash ring would
-    # hold V identical copies of the current weights — drop it entirely
-    # (saves one full stage-weight copy per device; see DESIGN.md §6).
-    use_ring = plan.stash_mode != "flush"
     # ZeRO-1: opt-state sharding over data applies in every mode; the
     # manual reduce-scatter/all-gather update is only needed on the
     # per-microbatch (non-accumulate) path — the round-end pjit update
@@ -206,7 +159,7 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
     n_patch = spec.n_patches if is_vlm else 0
     text_len = seq_len - n_patch
 
-    statics = make_statics(spec, plan, tokens_per_mb=mb * seq_len)
+    statics = make_statics(spec, mplan, tokens_per_mb=mb * seq_len)
     dnames = daxes if len(daxes) > 1 else daxes[0]
 
     enc_len = spec.encoder.source_len if has_enc else 1
@@ -220,34 +173,55 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                               tp_axis=tp_axis, cross_x=cross_x)
         return h, aux
 
-    fwd_perm = [(i, i + 1) for i in range(S - 1)]
-    bwd_perm = [(i + 1, i) for i in range(S - 1)]
+    if vs > 1:
+        # chunk transitions wrap from the last stage back to stage 0
+        fwd_perm = [(i, (i + 1) % S) for i in range(S)] if S > 1 else []
+        bwd_perm = [((i + 1) % S, i) for i in range(S)] if S > 1 else []
+    else:
+        fwd_perm = [(i, i + 1) for i in range(S - 1)]
+        bwd_perm = [(i + 1, i) for i in range(S - 1)]
+
+    def gather_row(table, tick):
+        """Row of a [T, S, C] schedule table for (tick, this stage)."""
+        s = jax.lax.axis_index(AXIS_STAGE)
+        rows = jax.lax.dynamic_index_in_dim(jnp.asarray(table), tick, 0,
+                                            keepdims=False)
+        return jax.lax.dynamic_index_in_dim(rows, s, 0, keepdims=False)
+
+    def local_chunk(weights, windows, thetas, chunk):
+        """This tick's chunk view of the stage-local stacked params."""
+        if vs == 1:
+            return weights, windows[0], thetas[0]
+        return (tree_chunk(weights, chunk),
+                jax.lax.dynamic_index_in_dim(windows, chunk, 0,
+                                             keepdims=False),
+                jax.lax.dynamic_index_in_dim(thetas, chunk, 0,
+                                             keepdims=False))
 
     # ======================= F phase (shard_map body) ===================
     def f_phase(tick, weights, stash, resid, recv_f, embeds, windows,
                 thetas, enc_ring):
-        s = jax.lax.axis_index(AXIS_STAGE)
-        f = tick - s
-        valid = (f >= 0) & (f < R)
+        row = gather_row(FT, tick)
+        f = row[F_MB]
+        valid = f >= 0
         fsafe = jnp.clip(f, 0, R - 1)
-        slot = fsafe % V
 
+        w_loc, win_loc, th_loc = local_chunk(weights, windows, thetas,
+                                             row[F_CHUNK])
         x0 = jax.lax.dynamic_index_in_dim(embeds, fsafe, 0, keepdims=False)
-        x_in = jnp.where(s == 0, x0, recv_f[0])
+        x_in = jnp.where(row[F_FROM_EMBEDS] > 0, x0, recv_f[0])
         if use_ring:
-            stash = tree_ring_write(stash, slot, weights, valid)
-        if plan.stash_mode == "vertical":
-            # Uniform input-stage version m − 2(S−1): stage s stashed it
-            # at F(m − 2s)  (version(F(m')) at stage s = m' − 2(S−1−s)).
-            vslot = jnp.clip(f - 2 * s, 0, R - 1) % V
-            w_f = tree_ring_read(stash, vslot)
+            stash = tree_ring_write(stash, row[F_STASH_WRITE], w_loc, valid)
+        if sched.fwd_from_stash:
+            w_f = tree_ring_read(stash, row[F_VERSION])
         else:
-            w_f = weights
+            w_f = w_loc
         cross = None
         if has_enc:
             cross = jax.lax.dynamic_index_in_dim(enc_ring, fsafe, 0,
                                                  keepdims=False)
-        h, aux = run_stage(w_f, x_in, windows[0], thetas[0], cross)
+        h, aux = run_stage(w_f, x_in, win_loc, th_loc, cross)
+        slot = row[F_RESID_WRITE]
         old = jax.lax.dynamic_index_in_dim(resid, slot, 0, keepdims=False)
         resid = jax.lax.dynamic_update_index_in_dim(
             resid, jnp.where(valid, x_in[None].astype(resid.dtype), old),
@@ -259,19 +233,17 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
     # ======================= B phase (shard_map body) ===================
     def b_phase(tick, step, weights, stash, opt_state, resid, recv_b,
                 g_exit, grad_acc, windows, thetas, enc_ring, denc_ring):
-        s = jax.lax.axis_index(AXIS_STAGE)
-        b = tick - 2 * (S - 1) + s
-        valid = (b >= 0) & (b < R)
+        row = gather_row(BT, tick)
+        b = row[B_MB]
+        valid = b >= 0
         bsafe = jnp.clip(b, 0, R - 1)
-        if plan.stash_mode == "vertical":
-            slot = jnp.clip(b - 2 * s, 0, R - 1) % V
-        else:
-            slot = bsafe % V
 
-        g_in = jnp.where(s == S - 1, g_exit, recv_b[0])
-        w_used = tree_ring_read(stash, slot) if use_ring else weights
-        x_saved = jax.lax.dynamic_index_in_dim(resid, slot, 0,
-                                               keepdims=False)[0]
+        w_loc, win_loc, th_loc = local_chunk(weights, windows, thetas,
+                                             row[B_CHUNK])
+        g_in = jnp.where(row[B_FROM_HEAD] > 0, g_exit, recv_b[0])
+        w_used = tree_ring_read(stash, row[B_VERSION]) if use_ring else w_loc
+        x_saved = jax.lax.dynamic_index_in_dim(
+            resid, row[B_RESID_READ], 0, keepdims=False)[0]
         # g_exit carries global-batch normalization (head loss is a mean
         # over all Bmb rows), so psum of per-replica partial dW is already
         # the exact global gradient; aux is averaged over replicas.
@@ -282,7 +254,7 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                                                  keepdims=False)
 
             def f_full(w, x, cx):
-                return run_stage(w, x, windows[0], thetas[0], cx)
+                return run_stage(w, x, win_loc, th_loc, cx)
 
             _, vjp = jax.vjp(f_full, w_used, x_saved, cross)
             dW, dx, dcx = vjp((g_in.astype(x_saved.dtype), aux_ct))
@@ -293,7 +265,7 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                 denc_ring[0], dcx, bsafe, 0)[None]
         else:
             def f_txt(w, x):
-                return run_stage(w, x, windows[0], thetas[0])
+                return run_stage(w, x, win_loc, th_loc)
 
             _, vjp = jax.vjp(f_txt, w_used, x_saved)
             dW, dx = vjp((g_in.astype(x_saved.dtype), aux_ct))
@@ -302,47 +274,19 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         dx = dx * valid.astype(dx.dtype)
 
         if accumulate:
-            grad_acc = tree_add(grad_acc, dW)
+            if vs == 1:
+                grad_acc = tree_add(grad_acc, dW)
+            else:
+                grad_acc = tree_chunk_add(grad_acc, dW, row[B_CHUNK])
             new_w, new_opt = weights, opt_state
         elif zero1_manual:
-            # ZeRO-1 update: reduce-scatter grads over the data axes,
-            # update the local 1/dp optimizer-state + weight shard, and
-            # all-gather the fresh weights (same bytes on the wire as the
-            # psum — an all-reduce IS RS+AG — but 1/dp optimizer memory
-            # and 1/dp optimizer FLOPs per device).
-            rank = jax.lax.axis_index(daxes)
-
-            def rs(g, ax):
-                if ax < 0:
-                    return jax.lax.psum(g, dnames)
-                return jax.lax.psum_scatter(g, daxes, scatter_dimension=ax,
-                                            tiled=True)
-
-            def shard(w, ax):
-                if ax < 0:
-                    return w
-                sz = w.shape[ax] // dp
-                return jax.lax.dynamic_slice_in_dim(w, rank * sz, sz, ax)
-
-            def gather(w, ax):
-                if ax < 0:
-                    return w
-                return jax.lax.all_gather(w, daxes, axis=ax, tiled=True)
-
-            dW_sh = jax.tree.map(rs, dW, z1_axes)
-            w_sh = jax.tree.map(shard, weights, z1_axes)
-            upd_w, upd_opt = optimizer.update(dW_sh, opt_state, w_sh, step)
-            upd_w = tree_select(valid, upd_w, w_sh)
-            new_opt = tree_select(valid, upd_opt, opt_state)
-            new_w = jax.tree.map(gather, upd_w, z1_axes)
+            new_w, new_opt = zero1_microbatch_update(
+                optimizer, dW, opt_state, weights, step, valid,
+                z1_axes=z1_axes, daxes=daxes, dnames=dnames, dp=dp)
         else:
-            # Replicated-stage sync (paper §3.2): per-microbatch psum over
-            # the data axis — on TPU, XLA schedules this async against the
-            # next tick's compute (wait-free backprop).
-            dW = jax.tree.map(lambda g: jax.lax.psum(g, dnames), dW)
-            upd_w, upd_opt = optimizer.update(dW, opt_state, weights, step)
-            new_w = tree_select(valid, upd_w, weights)
-            new_opt = tree_select(valid, upd_opt, opt_state)
+            new_w, new_opt = replicated_microbatch_update(
+                optimizer, dW, opt_state, weights, step, valid,
+                dnames=dnames)
 
         g_send = jax.lax.ppermute(dx, AXIS_STAGE, bwd_perm) if S > 1 else dx
         return new_w, new_opt, g_send[None], grad_acc, dx[None], denc_ring
@@ -351,7 +295,7 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
     _box = {}
 
     def _init_for_shapes():
-        p, s = init_params(spec, plan, jax.random.key(0), compute_dtype)
+        p, s = init_params(spec, mplan, jax.random.key(0), compute_dtype)
         _box["pspecs"] = s  # pspecs are static; capture via side channel
         return p
 
@@ -363,7 +307,7 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                                 is_leaf=_is_pspec)
                    if use_ring else {"_": P()})
     act_pspec = P(AXIS_STAGE, dnames, None, None)         # (pp,Bmb,S,d)
-    resid_pspec = P(None, AXIS_STAGE, dnames, None, None)  # (V,pp,Bmb,S,d)
+    resid_pspec = P(None, AXIS_STAGE, dnames, None, None)  # (Vr,pp,Bmb,S,d)
     emb_pspec = P(None, dnames, None, None)               # (R,Bmb,S,d)
     gexit_pspec = P(dnames, None, None)
     win_pspec = P(AXIS_STAGE, None)
@@ -447,7 +391,7 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
             "head_opt": state["opt_head"],
             "recv_f": zeros_act,
             "recv_b": zeros_act,
-            "resid": jnp.zeros((V, S, bmb, seq_len, spec.d_model),
+            "resid": jnp.zeros((Vr, S, bmb, seq_len, spec.d_model),
                                compute_dtype),
             "gacc": (jax.tree.map(
                 lambda a: jnp.zeros((dp,) + a.shape, jnp.float32),
@@ -479,8 +423,9 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
             carry["aux_sum"] = carry["aux_sum"] + aux.sum()
 
             # ---- head + loss for the exiting microbatch ----------------
-            m_exit = tick - (S - 1)
-            valid_e = (m_exit >= 0) & (m_exit < R)
+            m_exit = jax.lax.dynamic_index_in_dim(
+                jnp.asarray(EXIT_T), tick, 0, keepdims=False)
+            valid_e = m_exit >= 0
             msafe = jnp.clip(m_exit, 0, R - 1)
             h_exit = h_all[S - 1]
             lab = jax.lax.dynamic_index_in_dim(lab_full, msafe, 0,
@@ -527,9 +472,11 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
             carry["w"], carry["opt"], carry["recv_b"] = new_w, new_opt, recv_b
             carry["gacc"], carry["denc"] = gacc, denc
 
-            # stage 0's dx is d(embeddings) for its backward microbatch
-            b0 = tick - 2 * (S - 1)
-            valid_b0 = (b0 >= 0) & (b0 < R)
+            # stage 0's dx is d(embeddings) when its backward finishes a
+            # microbatch's first chunk (schedule demb table)
+            b0 = jax.lax.dynamic_index_in_dim(
+                jnp.asarray(DEMB_T), tick, 0, keepdims=False)
+            valid_b0 = b0 >= 0
             b0safe = jnp.clip(b0, 0, R - 1)
             prev = jax.lax.dynamic_index_in_dim(carry["d_embeds"], b0safe, 0,
                                                 keepdims=False)
@@ -597,7 +544,16 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
 
     # ======================= state init + pspecs ========================
     def init_state(key):
-        params, _ = init_params(spec, plan, key, compute_dtype)
+        params, _ = init_params(spec, mplan, key, compute_dtype)
+        if vs > 1:
+            # storage order: row s*v + j holds model chunk j*S + s, so
+            # the contiguous stage shard owns its interleaved chunks
+            perm = jnp.asarray(sched.storage_chunk_order())
+            params = dict(params)
+            params["stages"] = jax.tree.map(lambda a: a[perm],
+                                            params["stages"])
+            params["layer_windows"] = params["layer_windows"][perm]
+            params["layer_thetas"] = params["layer_thetas"][perm]
         stages = params["stages"]
         stash = {"current": stages}
         if use_ring:

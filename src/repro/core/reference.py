@@ -1,9 +1,14 @@
 """Sequential oracle for the pipelined train step.
 
-Executes the identical 1F1B double-tick schedule, weight stashing, and
+Executes the identical double-tick schedule, weight stashing, and
 per-microbatch updates with plain Python loops on one device — no
-shard_map, no collectives.  Bit-exact (fp32) against core/pipeline.py on
-a single data replica; used by the semantics tests.
+shard_map, no collectives — driven by the SAME
+:class:`~repro.core.schedule.PipelineSchedule` tables the SPMD executor
+gathers.  Bit-exact (fp32) against core/pipeline.py on a single data
+replica; used by the semantics tests.  Virtual stages are exercised by
+building the reference with pp = S·v (a chunk-level plan): flush
+semantics make the update schedule-independent, so the interleaved SPMD
+pipeline must match the chunked sequential flush oracle exactly.
 
 Also provides ``staleness_formula_step``: a *third*, independent
 implementation that applies the paper's §3.4 update rule directly
@@ -19,7 +24,9 @@ from typing import Any, Dict, List
 import jax
 import jax.numpy as jnp
 
-from repro.core.schedule import Schedule1F1B
+from repro.core.schedule import (B_FROM_HEAD, B_MB, B_RESID_READ, B_VERSION,
+                                 F_FROM_EMBEDS, F_MB, F_RESID_WRITE,
+                                 F_STASH_WRITE, F_VERSION, make_schedule)
 from repro.models import lm_head
 from repro.models.stage import make_statics, stage_fwd
 from repro.parallel.mesh import ParallelismPlan
@@ -30,13 +37,14 @@ def reference_init_state(spec, plan: ParallelismPlan, optimizer, key,
     """Single-device state matching core/pipeline.py::init_state."""
     from repro.models.init import init_params
 
+    sched = make_schedule(plan)
     params, _ = init_params(spec, plan, key, dtype)
     stages = params["stages"]
     stash = {"current": stages}
-    if plan.stash_mode != "flush":
+    if sched.uses_stash_ring:
         stash["ring"] = jax.tree.map(
             lambda a: jnp.broadcast_to(a[None],
-                                       (plan.stash_slots,) + a.shape) + 0,
+                                       (sched.stash_slots,) + a.shape) + 0,
             stages)
     state = {
         "params": params,
@@ -65,11 +73,14 @@ def reference_train_step(spec, plan: ParallelismPlan, state, batch,
                          optimizer, aux_weight: float = 0.01):
     """Mirror of core/pipeline.py train_step, sequential, 1 data replica."""
     S, R = plan.pp, plan.microbatches
-    V = plan.stash_slots
-    sched = Schedule1F1B(S, R)
-    accumulate = (plan.stash_mode in ("flush", "2bw")
-                  or plan.grad_sync == "per_round")
-    use_ring = plan.stash_mode != "flush"
+    sched = make_schedule(plan)
+    assert sched.virtual_stages == 1, (
+        "run interleaved plans against a chunk-level (pp = S*v, flush) "
+        "reference; the sequential oracle is schedule-timing-agnostic")
+    tabs = sched.tables()
+    V = sched.stash_slots
+    accumulate = sched.accumulate or plan.grad_sync == "per_round"
+    use_ring = sched.uses_stash_ring
     params = state["params"]
     tokens, labels = batch["tokens"], batch["labels"]   # (R, Bmb, S_text)
     step = state["step"]
@@ -125,7 +136,7 @@ def reference_train_step(spec, plan: ParallelismPlan, state, batch,
 
     recv_f = [None] * S
     recv_b = [None] * S
-    resid = [[None] * V for _ in range(S)]
+    resid = [[None] * sched.resid_slots for _ in range(S)]
     gacc = [None] * S
     d_embeds = [None] * R
     loss_sum = jnp.zeros((), jnp.float32)
@@ -136,22 +147,21 @@ def reference_train_step(spec, plan: ParallelismPlan, state, batch,
         new_recv_f = [None] * S
         h_exit = None
         for s in range(S):
-            f = sched.fwd_mb(tick, s)
+            row = tabs.fwd[tick, s]
+            f = int(row[F_MB])
             if f < 0:
                 continue
-            x_in = embeds[f] if s == 0 else recv_f[s]
-            slot = f % V
+            x_in = embeds[f] if row[F_FROM_EMBEDS] else recv_f[s]
             if use_ring:
-                stash[s][slot] = weights[s]
-            if plan.stash_mode == "vertical":
-                vslot = max(f - 2 * s, 0) % V
-                w_f = stash[s][vslot]
+                stash[s][int(row[F_STASH_WRITE])] = weights[s]
+            if sched.fwd_from_stash:
+                w_f = stash[s][int(row[F_VERSION])]
             else:
                 w_f = weights[s]
             h, aux = run_stage(w_f, x_in, s,
                                enc_ring[f] if has_enc else None)
             aux_sum = aux_sum + aux
-            resid[s][slot] = x_in
+            resid[s][int(row[F_RESID_WRITE])] = x_in
             if s + 1 < S:
                 new_recv_f[s + 1] = h
             else:
@@ -160,7 +170,7 @@ def reference_train_step(spec, plan: ParallelismPlan, state, batch,
 
         # ---------------- head / loss ------------------------------------
         g_exit = None
-        m_exit = tick - (S - 1)
+        m_exit = int(tabs.exit_mb[tick])
         if 0 <= m_exit < R:
             lab = labels[m_exit]
             vmask = (lab >= 0).astype(jnp.float32)
@@ -190,30 +200,29 @@ def reference_train_step(spec, plan: ParallelismPlan, state, batch,
         # ---------------- B phase -----------------------------------------
         new_recv_b = [None] * S
         for s in range(S):
-            b = sched.bwd_mb(tick, s)
+            row = tabs.bwd[tick, s]
+            b = int(row[B_MB])
             if b < 0:
                 continue
-            if plan.stash_mode == "vertical":
-                slot = max(b - 2 * s, 0) % V
-            else:
-                slot = b % V
-            g_in = g_exit if s == S - 1 else recv_b[s]
-            w_used = stash[s][slot] if use_ring else weights[s]
+            g_in = g_exit if row[B_FROM_HEAD] else recv_b[s]
+            w_used = (stash[s][int(row[B_VERSION])] if use_ring
+                      else weights[s])
+            x_saved = resid[s][int(row[B_RESID_READ])]
 
             if has_enc:
                 def f_enc(w, x, cx):
                     return run_stage(w, x, s, cx)
 
-                _, vjp = jax.vjp(f_enc, w_used, resid[s][slot], enc_ring[b])
-                dW, dx, dcx = vjp((g_in.astype(resid[s][slot].dtype),
+                _, vjp = jax.vjp(f_enc, w_used, x_saved, enc_ring[b])
+                dW, dx, dcx = vjp((g_in.astype(x_saved.dtype),
                                    jnp.float32(aux_weight)))
                 denc[b] = dcx if denc[b] is None else denc[b] + dcx
             else:
                 def f_txt(w, x):
                     return run_stage(w, x, s)
 
-                _, vjp = jax.vjp(f_txt, w_used, resid[s][slot])
-                dW, dx = vjp((g_in.astype(resid[s][slot].dtype),
+                _, vjp = jax.vjp(f_txt, w_used, x_saved)
+                dW, dx = vjp((g_in.astype(x_saved.dtype),
                               jnp.float32(aux_weight)))
             if accumulate:
                 gacc[s] = dW if gacc[s] is None else jax.tree.map(

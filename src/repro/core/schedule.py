@@ -1,33 +1,312 @@
-"""1F1B schedule (paper §3.3) as static tables.
+"""Pluggable pipeline schedules as device-resident static index tables.
 
-We use the "double-tick" formulation: one tick = one F-slot followed by one
-B-slot on every stage.  In steady state each stage alternates F and B — the
-paper's one-forward-one-backward policy — and the startup/drain phases fall
-out as ticks whose F- or B-slot is invalid (the pipeline bubble).
+A :class:`PipelineSchedule` describes *when* every (microbatch, chunk)
+forward/backward runs on every physical stage, and *where* its weights,
+residuals and weight versions live, as dense int32 tables indexed by
+``(tick, stage)``.  The SPMD executor (core/pipeline.py) and the
+sequential oracle (core/reference.py) both consume only these tables —
+no index arithmetic lives in the execution layer, so adding a schedule
+is one subclass here, not a pipeline.py surgery.
 
-Indices (S stages, R microbatches, stage s ∈ [0, S), tick τ):
-    F slot:  microbatch f = τ − s                  valid iff 0 ≤ f < R
-    B slot:  microbatch b = τ − 2(S−1) + s         valid iff 0 ≤ b < R
-The output stage (s = S−1) runs F(m) and B(m) in the same tick — exactly
-Figure 8.  Weight versions in flight at stage s: 2(S−1−s)+1, so the
-SPMD-uniform stash ring needs V = 2(S−1)+1 slots (paper: NOAM versions at
-the input stage; the factor-2 reflects equal F/B slot granularity).
+Tick model (double-tick): one tick = one F-slot followed by one B-slot
+on every physical stage.  Activations produced at tick t are consumed at
+tick t+1 by the neighbouring stage (ppermute latency of exactly one
+tick); the microbatch exiting the last chunk gets its head loss and
+starts its backward in the same tick (paper Figure 8 adjacency).  Every
+schedule here is constructed so that this single-buffer dataflow holds —
+``validate()`` proves it per instance.
+
+Schedules shipped:
+
+  Schedule1F1B            paper §3.3: F slot f = t − s, B slot
+                          b = t − 2(S−1) + s, per-microbatch updates.
+                          ``policy='stash'`` (paper default: F latest,
+                          B stashed) or ``policy='vertical'`` (F and B
+                          both use the delayed version, §3.4 vertical
+                          sync) are version-slot policies over the SAME
+                          timing tables.
+  ScheduleGPipe           the flush family (PipeDream-flush / GPipe /
+                          2BW): identical 1F1B timing — which is the
+                          throughput-optimal way to run a synchronous
+                          flush — but gradients accumulate and one
+                          update applies per round.  ``weight_versions``
+                          1 (flush) or 2 (PipeDream-2BW-style).
+  ScheduleInterleaved1F1B Megatron-style virtual stages: each physical
+                          stage holds ``v`` model chunks (chunk
+                          c = j·S + s lives on stage s as local chunk
+                          j), cutting the pipeline bubble from
+                          2(S−1)/(R+2(S−1)) to
+                          ((v+1)S−2)/(vR+(v+1)S−2) — strictly smaller
+                          for v ≥ 2 whenever S ≥ 3 (equal at S = 2,
+                          where startup and drain are already minimal in
+                          the double-tick model).
+
+Registry: ``SCHEDULES`` maps names to classes; ``make_schedule(plan)``
+builds the instance a :class:`~repro.parallel.mesh.ParallelismPlan`
+asks for (``plan.schedule='auto'`` derives the schedule from the legacy
+``stash_mode`` field, so existing configs keep working unchanged).
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
+from typing import Dict, Iterable, List, Tuple, Type
 
 import numpy as np
 
+# ---------------------------------------------------------------------------
+# Table column layout (int32).  F/B rows are gathered per (tick, stage).
+# ---------------------------------------------------------------------------
+
+#: forward-table columns
+F_MB, F_CHUNK, F_FROM_EMBEDS, F_STASH_WRITE, F_VERSION, F_RESID_WRITE = \
+    range(6)
+F_COLS = 6
+
+#: backward-table columns
+B_MB, B_CHUNK, B_FROM_HEAD, B_VERSION, B_RESID_READ = range(5)
+B_COLS = 5
+
 
 @dataclasses.dataclass(frozen=True)
-class Schedule1F1B:
+class ScheduleTables:
+    """Dense static tables; -1 marks bubble slots / unused columns.
+
+    fwd      [n_ticks, n_stages, F_COLS]
+    bwd      [n_ticks, n_stages, B_COLS]
+    exit_mb  [n_ticks]  microbatch leaving the last chunk this tick
+    demb_mb  [n_ticks]  microbatch whose d(embeddings) completes this tick
+    """
+
+    fwd: np.ndarray
+    bwd: np.ndarray
+    exit_mb: np.ndarray
+    demb_mb: np.ndarray
+
+
+def _interval_color(intervals: Iterable[Tuple[int, int]]) -> Tuple[List[int],
+                                                                   int]:
+    """Greedy slot assignment for [write, read] lifetimes.
+
+    Within one tick the F phase (writes) runs before the B phase (reads),
+    so a slot read at tick r can only be rewritten at tick > r.  Returns
+    (slot per interval in input order, number of slots).
+    """
+    ivs = list(intervals)
+    idx = sorted(range(len(ivs)), key=lambda k: ivs[k][0])
+    slots = [0] * len(ivs)
+    free: List[Tuple[int, int]] = []   # (read_tick, slot)
+    n_slots = 0
+    for k in idx:
+        w, r = ivs[k]
+        if free and free[0][0] < w:
+            _, s = heapq.heappop(free)
+        else:
+            s = n_slots
+            n_slots += 1
+        slots[k] = s
+        heapq.heappush(free, (r, s))
+    return slots, max(n_slots, 1)
+
+
+# ---------------------------------------------------------------------------
+# Base class
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSchedule:
+    """Static description of one pipelined round.
+
+    Subclasses set the class attributes below and implement
+    ``_build_tables``.  Instances are frozen and hashable — tables are
+    built once and cached.
+    """
+
     n_stages: int
     n_microbatches: int
 
+    #: registry name
+    name = "abstract"
+    #: grads accumulate across the round; one synchronous update at the end
+    accumulate = False
+    #: stage weights are stashed in a ring of ``stash_slots`` versions
+    uses_stash_ring = False
+    #: F reads weights from the ring (vertical sync) instead of latest
+    fwd_from_stash = False
+    #: virtual chunks per physical stage (Megatron interleaving)
+    virtual_stages = 1
+
     def __post_init__(self):
         assert self.n_stages >= 1 and self.n_microbatches >= 1
+
+    # ---- derived sizes ---------------------------------------------------
+
+    @property
+    def n_chunks(self) -> int:
+        """Model chunks = physical stages × virtual stages."""
+        return self.n_stages * self.virtual_stages
+
+    @property
+    def n_ticks(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def stash_slots(self) -> int:
+        """Weight versions kept per stage (1 = only the live weights)."""
+        raise NotImplementedError
+
+    @property
+    def resid_slots(self) -> int:
+        """Stage-input (residual) ring size.
+
+        Unlike ``stash_slots`` this is a *liveness* bound — every
+        residual written at F(m) must survive until B(m) — so it never
+        shrinks with the weight-version policy.
+        """
+        return 2 * (self.n_stages - 1) + 1
+
+    # ---- tables ----------------------------------------------------------
+
+    @classmethod
+    def from_plan(cls, plan) -> "PipelineSchedule":
+        """Build this schedule from a ParallelismPlan.
+
+        The registry dispatches here, so a registered schedule picks up
+        its own plan knobs without edits to :func:`make_schedule`.
+        """
+        return cls(plan.pp, plan.microbatches)
+
+    def _build_tables(self) -> ScheduleTables:
+        raise NotImplementedError
+
+    def tables(self) -> ScheduleTables:
+        # per-instance memo (frozen dataclass: route around __setattr__);
+        # an lru_cache on the method would pin every instance globally
+        tabs = self.__dict__.get("_tables")
+        if tabs is None:
+            tabs = self._build_tables()
+            for a in (tabs.fwd, tabs.bwd, tabs.exit_mb, tabs.demb_mb):
+                a.setflags(write=False)
+            object.__setattr__(self, "_tables", tabs)
+        return tabs
+
+    # ---- convenience accessors (reference executor, tests) ---------------
+
+    def fwd_mb(self, tick: int, stage: int) -> int:
+        """Microbatch this stage forwards at this tick (-1 if bubble)."""
+        return int(self.tables().fwd[tick, stage, F_MB])
+
+    def bwd_mb(self, tick: int, stage: int) -> int:
+        return int(self.tables().bwd[tick, stage, B_MB])
+
+    @property
+    def bubble_fraction(self) -> float:
+        """Fraction of (tick, stage, F/B-slot) triples idle over a round."""
+        tabs = self.tables()
+        busy = int((tabs.fwd[:, :, F_MB] >= 0).sum()
+                   + (tabs.bwd[:, :, B_MB] >= 0).sum())
+        total = 2 * self.n_ticks * self.n_stages
+        return 1.0 - busy / total
+
+    # ---- structural self-check -------------------------------------------
+
+    def validate(self) -> None:
+        """Prove the tables satisfy the executor's dataflow contract."""
+        S, R, v = self.n_stages, self.n_microbatches, self.virtual_stages
+        tabs = self.tables()
+        T = self.n_ticks
+        assert tabs.fwd.shape == (T, S, F_COLS), tabs.fwd.shape
+        assert tabs.bwd.shape == (T, S, B_COLS), tabs.bwd.shape
+        f_time: Dict[Tuple[int, int], int] = {}
+        b_time: Dict[Tuple[int, int], int] = {}
+        for t in range(T):
+            for s in range(S):
+                fr, br = tabs.fwd[t, s], tabs.bwd[t, s]
+                if fr[F_MB] >= 0:
+                    c = fr[F_CHUNK] * S + s
+                    key = (int(fr[F_MB]), int(c))
+                    assert key not in f_time, f"duplicate F{key}"
+                    f_time[key] = t
+                if br[B_MB] >= 0:
+                    c = br[B_CHUNK] * S + s
+                    key = (int(br[B_MB]), int(c))
+                    assert key not in b_time, f"duplicate B{key}"
+                    b_time[key] = t
+        L = S * v
+        assert len(f_time) == R * L and len(b_time) == R * L, (
+            len(f_time), len(b_time), R * L)
+        for m in range(R):
+            for c in range(L):
+                tf, tb = f_time[(m, c)], b_time[(m, c)]
+                if c > 0:   # forward hop: produced tick t consumed at t+1
+                    assert f_time[(m, c - 1)] == tf - 1, (m, c)
+                if c < L - 1:  # backward hop, reverse direction
+                    assert b_time[(m, c + 1)] == tb - 1, (m, c)
+            # head adjacency: the executor recomputes (and zero-masks)
+            # g_exit every tick, so B of the last chunk must run in the
+            # SAME tick as its forward — strictly, not "at or after"
+            assert b_time[(m, L - 1)] == f_time[(m, L - 1)], m
+        # exit/demb tables must agree with the fwd/bwd tables
+        for t in range(T):
+            fr = tabs.fwd[t, S - 1]
+            is_exit = fr[F_MB] >= 0 and fr[F_CHUNK] == v - 1
+            assert tabs.exit_mb[t] == (fr[F_MB] if is_exit else -1), t
+            br = tabs.bwd[t, 0]
+            is_demb = br[B_MB] >= 0 and br[B_CHUNK] == 0
+            assert tabs.demb_mb[t] == (br[B_MB] if is_demb else -1), t
+        # residual liveness: slot written at F(m,c) survives until B(m,c)
+        for s in range(S):
+            live: Dict[int, Tuple[int, int]] = {}
+            for t in range(T):
+                fr = tabs.fwd[t, s]
+                if fr[F_MB] >= 0:
+                    slot = int(fr[F_RESID_WRITE])
+                    assert 0 <= slot < self.resid_slots, slot
+                    live[slot] = (int(fr[F_MB]), int(fr[F_CHUNK]))
+                br = tabs.bwd[t, s]
+                if br[B_MB] >= 0:
+                    slot = int(br[B_RESID_READ])
+                    assert live.get(slot) == (int(br[B_MB]),
+                                              int(br[B_CHUNK])), (
+                        f"stage {s} tick {t}: B reads clobbered residual "
+                        f"slot {slot}: holds {live.get(slot)}, wants "
+                        f"{(int(br[B_MB]), int(br[B_CHUNK]))}")
+
+
+# ---------------------------------------------------------------------------
+# Schedule1F1B — paper §3.3, per-microbatch updates
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Schedule1F1B(PipelineSchedule):
+    """The paper's one-forward-one-backward schedule.
+
+    ``policy='stash'``: F uses the latest weights and records them into
+    ring slot m % V; B re-reads that slot (weight stashing, §3.3).
+    ``policy='vertical'``: F *and* B use the version the stage had when
+    microbatch m − 2s entered it — a uniform delayed version across
+    stages (§3.4 vertical sync ≡ delayed BSP).
+    """
+
+    policy: str = "stash"
+
+    name = "1f1b"
+    accumulate = False
+    uses_stash_ring = True
+
+    def __post_init__(self):
+        super().__post_init__()
+        assert self.policy in ("stash", "vertical"), self.policy
+
+    @classmethod
+    def from_plan(cls, plan) -> "Schedule1F1B":
+        policy = "vertical" if plan.stash_mode == "vertical" else "stash"
+        return cls(plan.pp, plan.microbatches, policy=policy)
+
+    @property
+    def fwd_from_stash(self) -> bool:  # type: ignore[override]
+        return self.policy == "vertical"
 
     @property
     def n_ticks(self) -> int:
@@ -35,44 +314,292 @@ class Schedule1F1B:
 
     @property
     def stash_slots(self) -> int:
+        """2(S−1)+1: microbatches in flight at the input stage (NOAM
+        at equal F/B slot granularity)."""
         return 2 * (self.n_stages - 1) + 1
-
-    def fwd_mb(self, tick: int, stage: int) -> int:
-        """Microbatch this stage forwards at this tick (-1 if bubble)."""
-        f = tick - stage
-        return f if 0 <= f < self.n_microbatches else -1
-
-    def bwd_mb(self, tick: int, stage: int) -> int:
-        b = tick - 2 * (self.n_stages - 1) + stage
-        return b if 0 <= b < self.n_microbatches else -1
 
     def max_in_flight(self, stage: int) -> int:
         """Microbatches between F(m) and B(m) at this stage (incl. current)."""
         return 2 * (self.n_stages - 1 - stage) + 1
-
-    def tables(self):
-        """(fwd[T, S], bwd[T, S]) int arrays, -1 marks bubble slots."""
-        t, s = self.n_ticks, self.n_stages
-        fwd = np.full((t, s), -1, np.int32)
-        bwd = np.full((t, s), -1, np.int32)
-        for tick in range(t):
-            for stage in range(s):
-                fwd[tick, stage] = self.fwd_mb(tick, stage)
-                bwd[tick, stage] = self.bwd_mb(tick, stage)
-        return fwd, bwd
-
-    @property
-    def bubble_fraction(self) -> float:
-        """Fraction of (tick, stage, slot) triples idle over a round."""
-        total = 2 * self.n_ticks * self.n_stages
-        busy = 2 * self.n_microbatches * self.n_stages
-        return 1.0 - busy / total
 
     def steady_state_ticks(self):
         """Tick range in which every stage has both slots busy."""
         lo = 2 * (self.n_stages - 1)
         hi = self.n_microbatches - 1
         return (lo, hi) if hi >= lo else None
+
+    def _build_tables(self) -> ScheduleTables:
+        S, R, V = self.n_stages, self.n_microbatches, self.stash_slots
+        T = self.n_ticks
+        fwd = np.full((T, S, F_COLS), -1, np.int32)
+        bwd = np.full((T, S, B_COLS), -1, np.int32)
+        vertical = self.policy == "vertical"
+        for t in range(T):
+            for s in range(S):
+                f = t - s
+                fs = min(max(f, 0), R - 1)
+                fwd[t, s, F_MB] = f if 0 <= f < R else -1
+                fwd[t, s, F_CHUNK] = 0
+                fwd[t, s, F_FROM_EMBEDS] = 1 if s == 0 else 0
+                fwd[t, s, F_STASH_WRITE] = fs % V
+                fwd[t, s, F_VERSION] = (
+                    min(max(f - 2 * s, 0), R - 1) % V if vertical else -1)
+                fwd[t, s, F_RESID_WRITE] = fs % V
+
+                b = t - 2 * (S - 1) + s
+                bs = min(max(b, 0), R - 1)
+                bwd[t, s, B_MB] = b if 0 <= b < R else -1
+                bwd[t, s, B_CHUNK] = 0
+                bwd[t, s, B_FROM_HEAD] = 1 if s == S - 1 else 0
+                bwd[t, s, B_VERSION] = (
+                    min(max(b - 2 * s, 0), R - 1) % V if vertical
+                    else bs % V)
+                bwd[t, s, B_RESID_READ] = bs % V
+        ticks = np.arange(T)
+        exit_mb = np.where((ticks - (S - 1) >= 0) & (ticks - (S - 1) < R),
+                           ticks - (S - 1), -1).astype(np.int32)
+        demb = np.where((ticks - 2 * (S - 1) >= 0)
+                        & (ticks - 2 * (S - 1) < R),
+                        ticks - 2 * (S - 1), -1).astype(np.int32)
+        return ScheduleTables(fwd, bwd, exit_mb, demb)
+
+
+# ---------------------------------------------------------------------------
+# ScheduleGPipe — flush family (PipeDream-flush / GPipe / 2BW)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleGPipe(Schedule1F1B):
+    """Synchronous flush: accumulate over the round, one update at the end.
+
+    Runs the 1F1B timing tables — for a synchronous round that timing is
+    strictly better than naive all-F-then-all-B GPipe (same bubble as
+    1F1B, bounded activation memory), and is exactly PipeDream-flush.
+    ``weight_versions=1`` keeps no ring at all (weights cannot change
+    mid-round); ``weight_versions=2`` keeps the PipeDream-2BW-style
+    double buffer (beyond-paper, for async round overlap experiments).
+    """
+
+    weight_versions: int = 1
+
+    name = "gpipe"
+    accumulate = True
+    policy: str = "stash"
+
+    def __post_init__(self):
+        super().__post_init__()
+        assert self.weight_versions in (1, 2), self.weight_versions
+
+    @classmethod
+    def from_plan(cls, plan) -> "ScheduleGPipe":
+        return cls(plan.pp, plan.microbatches,
+                   weight_versions=2 if plan.stash_mode == "2bw" else 1)
+
+    @property
+    def fwd_from_stash(self) -> bool:  # type: ignore[override]
+        return False
+
+    @property
+    def uses_stash_ring(self) -> bool:  # type: ignore[override]
+        return self.weight_versions > 1
+
+    @property
+    def stash_slots(self) -> int:
+        return self.weight_versions
+
+    def _build_tables(self) -> ScheduleTables:
+        tabs = super()._build_tables()
+        S, R = self.n_stages, self.n_microbatches
+        W, Vr = self.weight_versions, self.resid_slots
+        fwd, bwd = tabs.fwd.copy(), tabs.bwd.copy()
+        fs = np.clip(fwd[:, :, F_MB], 0, R - 1)
+        bs = np.clip(bwd[:, :, B_MB], 0, R - 1)
+        fwd[:, :, F_STASH_WRITE] = fs % W
+        fwd[:, :, F_VERSION] = -1
+        fwd[:, :, F_RESID_WRITE] = fs % Vr
+        bwd[:, :, B_VERSION] = bs % W
+        bwd[:, :, B_RESID_READ] = bs % Vr
+        return ScheduleTables(fwd, bwd, tabs.exit_mb, tabs.demb_mb)
+
+
+# ---------------------------------------------------------------------------
+# ScheduleInterleaved1F1B — Megatron-style virtual stages
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleInterleaved1F1B(PipelineSchedule):
+    """Interleaved (virtual-stage) 1F1B.
+
+    The model is cut into L = S·v chunks; chunk c = j·S + s runs on
+    physical stage s as its j-th local chunk (storage row s·v + j, see
+    ``storage_chunk_order``).  Microbatches advance in groups of S:
+    microbatch m = g·S + o forwards chunk (j, s) at tick
+
+        t_F = s + g·v·S + j·S + o
+
+    so every chunk hop — including the stage-(S−1) → stage-0 wrap
+    between chunks — lands exactly one tick downstream, and each stage's
+    F slot is saturated from tick s to s + vR − 1.  Backwards mirror the
+    pattern with the last-chunk backward sharing the tick of its forward
+    (head adjacency), giving
+
+        t_B = (vS − 1) + (S−1−s) + g·v·S + (v−1−j)·S + o
+
+    and n_ticks = vR + (v+1)S − 2 — the optimum for this engine: the
+    first exit cannot precede tick vS−1 and each stage must drain vR
+    backward slots.  Weight versioning is flush-family (accumulate,
+    single version): interleaving is a steady-state *throughput* device;
+    per-microbatch async updates would need per-chunk rings and are out
+    of scope (ROADMAP open item).
+
+    Requires R % S == 0 (microbatch groups) and n_layers % (S·v) == 0.
+    """
+
+    virtual_stages: int = 2
+
+    name = "interleaved"
+    accumulate = True
+    uses_stash_ring = False
+    fwd_from_stash = False
+
+    def __post_init__(self):
+        super().__post_init__()
+        assert self.virtual_stages >= 1, self.virtual_stages
+        assert self.n_microbatches % self.n_stages == 0, (
+            f"interleaved schedule needs microbatches ({self.n_microbatches})"
+            f" divisible by stages ({self.n_stages})")
+
+    @property
+    def n_ticks(self) -> int:
+        S, R, v = self.n_stages, self.n_microbatches, self.virtual_stages
+        return v * R + (v + 1) * S - 2
+
+    @property
+    def stash_slots(self) -> int:
+        return 1
+
+    @property
+    def resid_slots(self) -> int:
+        return self._layout()[1]
+
+    def storage_chunk_order(self) -> np.ndarray:
+        """chunk id held by each storage row p = s·v + j (length S·v).
+
+        The stage-stacked parameter arrays are sharded contiguously over
+        the "stage" mesh axis, so stage s owns rows [s·v, (s+1)·v); row
+        s·v + j must hold model chunk j·S + s.
+        """
+        S, v = self.n_stages, self.virtual_stages
+        return np.asarray([(p % v) * S + p // v for p in range(S * v)],
+                          np.int64)
+
+    @classmethod
+    def from_plan(cls, plan) -> "ScheduleInterleaved1F1B":
+        assert plan.stash_mode == "flush", (
+            "interleaved schedule runs flush (accumulate) semantics; set "
+            f"stash_mode='flush' (got {plan.stash_mode!r})")
+        return cls(plan.pp, plan.microbatches,
+                   virtual_stages=getattr(plan, "virtual_stages", 2))
+
+    def _timing(self):
+        S, R, v = self.n_stages, self.n_microbatches, self.virtual_stages
+        L = S * v
+        items = []       # (m, c, s, j, t_f, t_b)
+        for m in range(R):
+            g, o = divmod(m, S)
+            for c in range(L):
+                j, s = divmod(c, S)
+                t_f = s + g * v * S + j * S + o
+                t_b = (v * S - 1) + (S - 1 - s) + g * v * S \
+                    + (v - 1 - j) * S + o
+                items.append((m, c, s, j, t_f, t_b))
+        return items
+
+    def _layout(self):
+        """Residual-slot assignment via interval colouring, per stage
+        (memoized per instance, same pattern as tables())."""
+        cached = self.__dict__.get("_layout_memo")
+        if cached is not None:
+            return cached
+        items = self._timing()
+        per_stage: Dict[int, List[int]] = {}
+        for k, (m, c, s, j, t_f, t_b) in enumerate(items):
+            per_stage.setdefault(s, []).append(k)
+        slot_of = [0] * len(items)
+        n_slots = 1
+        for s, ks in per_stage.items():
+            slots, n = _interval_color(
+                [(items[k][4], items[k][5]) for k in ks])
+            for k, sl in zip(ks, slots):
+                slot_of[k] = sl
+            n_slots = max(n_slots, n)
+        object.__setattr__(self, "_layout_memo", (slot_of, n_slots))
+        return slot_of, n_slots
+
+    def _build_tables(self) -> ScheduleTables:
+        S, v = self.n_stages, self.virtual_stages
+        T, L = self.n_ticks, S * v
+        items = self._timing()
+        slot_of, _ = self._layout()
+        fwd = np.full((T, S, F_COLS), -1, np.int32)
+        bwd = np.full((T, S, B_COLS), -1, np.int32)
+        exit_mb = np.full((T,), -1, np.int32)
+        demb = np.full((T,), -1, np.int32)
+        for k, (m, c, s, j, t_f, t_b) in enumerate(items):
+            assert fwd[t_f, s, F_MB] < 0, ("F slot collision", t_f, s)
+            fwd[t_f, s, F_MB] = m
+            fwd[t_f, s, F_CHUNK] = j
+            fwd[t_f, s, F_FROM_EMBEDS] = 1 if c == 0 else 0
+            fwd[t_f, s, F_STASH_WRITE] = 0
+            fwd[t_f, s, F_VERSION] = -1
+            fwd[t_f, s, F_RESID_WRITE] = slot_of[k]
+            assert bwd[t_b, s, B_MB] < 0, ("B slot collision", t_b, s)
+            bwd[t_b, s, B_MB] = m
+            bwd[t_b, s, B_CHUNK] = j
+            bwd[t_b, s, B_FROM_HEAD] = 1 if c == L - 1 else 0
+            bwd[t_b, s, B_VERSION] = 0
+            bwd[t_b, s, B_RESID_READ] = slot_of[k]
+            if c == L - 1:
+                exit_mb[t_f] = m
+            if c == 0:
+                demb[t_b] = m
+        return ScheduleTables(fwd, bwd, exit_mb, demb)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+SCHEDULES: Dict[str, Type[PipelineSchedule]] = {
+    "1f1b": Schedule1F1B,
+    "gpipe": ScheduleGPipe,
+    "interleaved": ScheduleInterleaved1F1B,
+}
+
+
+def register_schedule(name: str, cls: Type[PipelineSchedule]) -> None:
+    """Add a schedule implementation to the registry."""
+    assert name not in SCHEDULES, f"schedule {name!r} already registered"
+    SCHEDULES[name] = cls
+
+
+def make_schedule(plan) -> PipelineSchedule:
+    """Build the schedule a ParallelismPlan asks for.
+
+    ``plan.schedule='auto'`` (the default) derives the schedule name
+    from the legacy ``stash_mode`` field: stash/vertical -> 1f1b,
+    flush/2bw -> gpipe.  The resolved class constructs itself from the
+    plan via its ``from_plan`` classmethod, so registered third-party
+    schedules receive the full plan (virtual_stages, stash_mode, ...)
+    without edits here.
+    """
+    name = getattr(plan, "schedule", "auto")
+    if name == "auto":
+        name = "gpipe" if plan.stash_mode in ("flush", "2bw") else "1f1b"
+    cls = SCHEDULES.get(name)
+    assert cls is not None, (
+        f"unknown schedule {name!r}; registered: {sorted(SCHEDULES)}")
+    return cls.from_plan(plan)
 
 
 def paper_noam(total_machines: int, input_stage_machines: int) -> int:

@@ -1,0 +1,174 @@
+"""Weight-version stash ring + ZeRO-1 update policies (paper §3.3/§3.5).
+
+Split out of core/pipeline.py so the executor holds only orchestration:
+this module owns
+
+  * pytree ring-buffer primitives (the weight stash and residual rings
+    are rings of stacked pytrees, indexed by schedule-table slots);
+  * ZeRO-1 optimizer-state sharding over the data axes — axis choice,
+    partition-spec derivation, and the manual reduce-scatter / update /
+    all-gather step used on the per-microbatch update path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# --------------------------------------------------------------------------
+# Pytree ring-buffer helpers
+# --------------------------------------------------------------------------
+
+
+def tree_ring_read(tree, idx):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0, keepdims=False),
+        tree)
+
+
+def tree_ring_write(tree, idx, val, valid):
+    def w(a, v):
+        cur = jax.lax.dynamic_index_in_dim(a, idx, 0, keepdims=False)
+        new = jnp.where(valid, v.astype(a.dtype), cur)
+        return jax.lax.dynamic_update_index_in_dim(a, new, idx, 0)
+    return jax.tree.map(w, tree, val)
+
+
+def tree_select(pred, a, b):
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda a: a * s.astype(a.dtype), tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_chunk(tree, idx):
+    """Select one local chunk row, keeping the leading [1] stage dim."""
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0, keepdims=True),
+        tree)
+
+
+def tree_chunk_add(acc, grad, idx, batch_dims: int = 1):
+    """acc[..., idx, :] += grad, with ``batch_dims`` leading dims on acc.
+
+    Accumulates a per-chunk gradient (leading [1] stage dim) into the
+    chunk-stacked accumulator at dynamic chunk index ``idx``.
+    """
+    def upd(a, g):
+        lead = a[tuple(0 for _ in range(batch_dims))]
+        cur = jax.lax.dynamic_index_in_dim(lead, idx, 0, keepdims=False)
+        new = jax.lax.dynamic_update_index_in_dim(
+            lead, cur + g[0].astype(a.dtype), idx, 0)
+        return new[tuple(None for _ in range(batch_dims))]
+    return jax.tree.map(upd, acc, grad)
+
+
+def _is_pspec(x):
+    return isinstance(x, P)
+
+
+# --------------------------------------------------------------------------
+# ZeRO-1 (beyond-paper): shard optimizer state over the data axes.
+#
+# Per stage-parameter leaf we pick one dimension whose *local* (post-tensor-
+# sharding) size divides the data-parallel degree; gradients are
+# reduce-scattered along it, the optimizer update runs on the 1/dp shard,
+# and the updated weights are all-gathered back.  Elementwise optimizers
+# (SGDM / Adam / RMSProp) commute with the sharding, so results match the
+# replicated update exactly (up to fp reduction order).  Leaves with no
+# divisible dim fall back to the replicated psum path (axis = -1).
+# --------------------------------------------------------------------------
+
+
+def zero1_axes(stage_shapes, stage_pspecs, mesh, dp: int):
+    """Tree of ints: per-leaf shard dim for optimizer state (-1 = none)."""
+
+    def pick(sds, pspec):
+        if dp <= 1:
+            return -1
+        shape = sds.shape
+        for ax in range(1, len(shape)):  # dim 0 is the stacked stage dim
+            ent = pspec[ax] if ax < len(pspec) else None
+            names = () if ent is None else (
+                ent if isinstance(ent, tuple) else (ent,))
+            tp_div = 1
+            for nm in names:
+                tp_div *= mesh.devices.shape[mesh.axis_names.index(nm)]
+            if shape[ax] % tp_div:
+                continue
+            local = shape[ax] // tp_div
+            if local % dp == 0 and local >= dp:
+                return ax
+        return -1
+
+    return jax.tree.map(pick, stage_shapes, stage_pspecs, is_leaf=None)
+
+
+def zero1_opt_pspec(stage_pspecs, axes_tree, daxes):
+    """Stage pspecs with the data axes added on the chosen dim."""
+
+    def combine(pspec, ax):
+        if ax < 0:
+            return pspec
+        ents = list(pspec) + [None] * (ax + 1 - len(pspec))
+        ent = ents[ax]
+        names = () if ent is None else (
+            ent if isinstance(ent, tuple) else (ent,))
+        ents[ax] = tuple(names) + tuple(daxes)
+        return P(*ents)
+
+    return jax.tree.map(combine, stage_pspecs, axes_tree, is_leaf=_is_pspec)
+
+
+def zero1_microbatch_update(optimizer, dW, opt_state, weights, step, valid,
+                            *, z1_axes, daxes, dnames, dp: int):
+    """One ZeRO-1 per-microbatch update inside the B shard_map body.
+
+    Reduce-scatter grads over the data axes, update the local 1/dp
+    optimizer-state + weight shard, all-gather the fresh weights.  Same
+    bytes on the wire as the psum path (an all-reduce IS RS+AG) but 1/dp
+    optimizer memory and FLOPs per device.
+    """
+    rank = jax.lax.axis_index(daxes)
+
+    def rs(g, ax):
+        if ax < 0:
+            return jax.lax.psum(g, dnames)
+        return jax.lax.psum_scatter(g, daxes, scatter_dimension=ax,
+                                    tiled=True)
+
+    def shard(w, ax):
+        if ax < 0:
+            return w
+        sz = w.shape[ax] // dp
+        return jax.lax.dynamic_slice_in_dim(w, rank * sz, sz, ax)
+
+    def gather(w, ax):
+        if ax < 0:
+            return w
+        return jax.lax.all_gather(w, daxes, axis=ax, tiled=True)
+
+    dW_sh = jax.tree.map(rs, dW, z1_axes)
+    w_sh = jax.tree.map(shard, weights, z1_axes)
+    upd_w, upd_opt = optimizer.update(dW_sh, opt_state, w_sh, step)
+    upd_w = tree_select(valid, upd_w, w_sh)
+    new_opt = tree_select(valid, upd_opt, opt_state)
+    new_w = jax.tree.map(gather, upd_w, z1_axes)
+    return new_w, new_opt
+
+
+def replicated_microbatch_update(optimizer, dW, opt_state, weights, step,
+                                 valid, *, dnames):
+    """Replicated-stage sync (paper §3.2): per-microbatch psum over the
+    data axis — on TPU, XLA schedules this async against the next tick's
+    compute (wait-free backprop)."""
+    dW = jax.tree.map(lambda g: jax.lax.psum(g, dnames), dW)
+    upd_w, upd_opt = optimizer.update(dW, opt_state, weights, step)
+    new_w = tree_select(valid, upd_w, weights)
+    new_opt = tree_select(valid, upd_opt, opt_state)
+    return new_w, new_opt

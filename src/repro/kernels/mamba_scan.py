@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.parallel.compat import tpu_compiler_params
+
 
 def _mamba_kernel(u_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref,
                   hout_ref, h_scr, *, chunk: int, nc: int):
@@ -109,7 +111,7 @@ def mamba_scan(u, dt, A, B, C, D, *, chunk: int = 128,
             jax.ShapeDtypeStruct((b * nci, ci_block, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((ci_block, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(u, dt,

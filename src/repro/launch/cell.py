@@ -53,10 +53,16 @@ def _sds(shapes_tree, shardings_tree):
 def _fit_microbatches(plan: ParallelismPlan, global_batch: int,
                       dp: int) -> ParallelismPlan:
     """Clamp R so global_batch divides dp·R (multi-pod halves per-replica
-    batch; the 1F1B schedule is valid for any R >= 1)."""
+    batch; the 1F1B schedule is valid for any R >= 1, the interleaved
+    schedule additionally needs R divisible by the stage count)."""
+    def ok(r):
+        if global_batch % (dp * r):
+            return False
+        return plan.schedule != "interleaved" or r % plan.pp == 0
     r = min(plan.microbatches, max(global_batch // dp, 1))
-    while global_batch % (dp * r):
+    while r > 1 and not ok(r):
         r -= 1
+    assert ok(r), (plan, global_batch, dp)
     return plan.with_(microbatches=r) if r != plan.microbatches else plan
 
 

@@ -45,7 +45,8 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
     mem = compiled.memory_analysis()
     print(f"[{arch} × {shape} @ {mesh_name}] memory_analysis:")
     print(f"  {mem}")
-    cost = compiled.cost_analysis()
+    from repro.parallel.compat import cost_analysis
+    cost = cost_analysis(compiled)
     print(f"[{arch} × {shape} @ {mesh_name}] cost_analysis (stock, "
           f"while-bodies-once): flops={cost.get('flops', 0):.3e} "
           f"bytes={cost.get('bytes accessed', 0):.3e}")
@@ -55,6 +56,8 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
         compiled, arch=arch, shape=shape, mesh_name=mesh_name,
         plan=f"pp{cell.plan.pp}xtp{cell.plan.tp}x{cell.plan.stash_mode}"
              f"xR{cell.plan.microbatches}"
+             + (f"+iv{cell.plan.virtual_stages}"
+                if cell.plan.virtual_stages > 1 else "")
              + ("+zero1" if cell.plan.zero1 else ""),
         model_flops_per_device=mfpd, note=note)
     if verbose:
@@ -84,8 +87,14 @@ def main(argv=None):
                     choices=[None, "per_microbatch", "per_round"])
     ap.add_argument("--stash-mode", type=str, default=None,
                     choices=[None, "stash", "flush", "vertical", "2bw"])
+    ap.add_argument("--schedule", type=str, default=None,
+                    choices=[None, "1f1b", "gpipe", "interleaved"])
+    ap.add_argument("--virtual-stages", type=int, default=None)
     ap.add_argument("--microbatches", type=int, default=None)
     args = ap.parse_args(argv)
+    if args.virtual_stages and args.virtual_stages > 1 \
+            and args.schedule != "interleaved":
+        ap.error("--virtual-stages > 1 requires --schedule interleaved")
 
     def plan_for(arch):
         from repro import configs as _c
@@ -94,9 +103,14 @@ def main(argv=None):
             plan = plan.with_(grad_sync=args.grad_sync)
         if args.stash_mode:
             plan = plan.with_(stash_mode=args.stash_mode)
+        if args.schedule:
+            plan = plan.with_(schedule=args.schedule)
+            if args.schedule == "interleaved":
+                plan = plan.with_(stash_mode="flush",
+                                  virtual_stages=args.virtual_stages or 2)
         if args.microbatches:
             plan = plan.with_(microbatches=args.microbatches)
-        return plan if (args.grad_sync or args.stash_mode
+        return plan if (args.grad_sync or args.stash_mode or args.schedule
                         or args.microbatches) else None
 
     if args.all:

@@ -141,7 +141,8 @@ def from_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
     text = hlo_text if hlo_text is not None else compiled.as_text()
     cost = hlo_analysis.analyze(text)
     try:
-        ca = dict(compiled.cost_analysis() or {})
+        from repro.parallel.compat import cost_analysis as _ca
+        ca = _ca(compiled)
         ca = {k: float(v) for k, v in ca.items()
               if isinstance(v, (int, float)) and k in
               ("flops", "bytes accessed", "transcendentals",

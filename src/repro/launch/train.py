@@ -47,6 +47,16 @@ def build(args):
         mesh = make_production_mesh(multi_pod=args.multi_pod)
         shape = configs.SHAPES["train_4k"]
         seq_len, global_batch = shape.seq_len, shape.global_batch
+    if args.virtual_stages and args.virtual_stages > 1 \
+            and args.schedule != "interleaved":
+        raise SystemExit(
+            "--virtual-stages > 1 requires --schedule interleaved")
+    if args.schedule:
+        kw = {"schedule": args.schedule}
+        if args.schedule == "interleaved":
+            kw["stash_mode"] = "flush"
+            kw["virtual_stages"] = args.virtual_stages or 2
+        plan = plan.with_(**kw)
     if spec.frontend == "vision":
         seq_len = max(seq_len, spec.n_patches + 16)
     dmesh = split_model_axis(mesh, plan.pp, plan.tp)
@@ -68,6 +78,11 @@ def main(argv=None):
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--schedule", type=str, default=None,
+                    choices=[None, "1f1b", "gpipe", "interleaved"],
+                    help="override the plan's pipeline schedule")
+    ap.add_argument("--virtual-stages", type=int, default=None,
+                    help="model chunks per stage (interleaved schedule)")
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--optimizer", type=str, default=None)
     ap.add_argument("--lr", type=float, default=None)

@@ -36,6 +36,11 @@ class ParallelismPlan:
     tp: int                    # tensor parallel degree within a stage
     microbatches: int = 8      # R: PipeDream "minibatches" in flight per round
     stash_mode: str = "stash"  # stash | flush | vertical | 2bw
+    schedule: str = "auto"     # auto | registry name (1f1b, gpipe,
+                               # interleaved, ...); auto derives from
+                               # stash_mode (see core.schedule.make_schedule)
+    virtual_stages: int = 1    # model chunks per physical stage
+                               # (interleaved schedule only)
     zero1: bool = True         # shard optimizer state over the data axis
     remat: bool = True         # per-layer activation checkpointing
     grad_sync: str = "per_microbatch"  # per_microbatch (faithful) | per_round
@@ -46,22 +51,28 @@ class ParallelismPlan:
         assert self.stash_mode in ("stash", "flush", "vertical", "2bw"), self.stash_mode
         assert self.grad_sync in ("per_microbatch", "per_round"), self.grad_sync
         assert self.pp >= 1 and self.tp >= 1 and self.microbatches >= 1
+        assert self.virtual_stages >= 1, self.virtual_stages
+        if self.virtual_stages > 1:
+            assert self.schedule == "interleaved", (
+                "virtual_stages > 1 requires schedule='interleaved'")
 
     def with_(self, **kw) -> "ParallelismPlan":
         return dataclasses.replace(self, **kw)
+
+    def make_schedule(self):
+        """The PipelineSchedule instance this plan describes."""
+        from repro.core.schedule import make_schedule
+        return make_schedule(self)
 
     @property
     def stash_slots(self) -> int:
         """Weight versions kept per stage (SPMD-uniform ring size).
 
-        In the 1F1B double-tick schedule the input stage has 2(S-1)+1
-        microbatches in flight between F(m) and B(m).  flush/2bw need fewer.
+        Delegates to the schedule subsystem: 1F1B keeps 2(S-1)+1
+        in-flight versions at the input stage; flush keeps none
+        beyond the live weights; 2bw keeps a double buffer.
         """
-        if self.stash_mode == "flush":
-            return 1
-        if self.stash_mode == "2bw":
-            return 2
-        return 2 * (self.pp - 1) + 1
+        return self.make_schedule().stash_slots
 
 
 def split_model_axis(mesh: Mesh, pp: int, tp: int) -> Mesh:

@@ -107,11 +107,14 @@ def elastic_replan(spec, old_plan, new_model_axis: int, hw=prof.TPU_V5E, *,
     profiles = prof.profile_analytic(spec, hw,
                                      minibatch_tokens=minibatch_tokens)
     best = None
+    vstages = getattr(old_plan, "virtual_stages", 1)
     for pp in range(1, new_model_axis + 1):
-        if new_model_axis % pp or spec.n_layers % pp:
+        if new_model_axis % pp or spec.n_layers % (pp * vstages):
             continue
+        if vstages > 1 and old_plan.microbatches % pp:
+            continue  # interleaved schedule needs R divisible by stages
         try:
-            spec.stage_program(pp)
+            spec.stage_program(pp * vstages)
         except AssertionError:
             continue
         tp = new_model_axis // pp
@@ -127,9 +130,20 @@ def elastic_replan(spec, old_plan, new_model_axis: int, hw=prof.TPU_V5E, *,
 
 
 def reshard_state_for_plan(state_host, spec, old_plan, new_plan):
-    """Move a host-side checkpointed state to a new pipeline depth."""
-    if old_plan.pp == new_plan.pp:
+    """Move a host-side checkpointed state to a new pipeline depth.
+
+    Ring sizes and whether a stash ring exists at all come from the
+    target plan's schedule (core/schedule.py) — a flush/interleaved
+    target drops the ring, a 1F1B target rebuilds it at the new
+    2(S−1)+1 size from the current weights (the restart is a sync
+    point, so seeding every version with the live weights is exact).
+    """
+    if old_plan.virtual_stages == new_plan.virtual_stages \
+            and old_plan.pp == new_plan.pp:
         return state_host
+    assert old_plan.virtual_stages == 1 and new_plan.virtual_stages == 1, (
+        "elastic reshard from/to an interleaved plan is an open item "
+        "(storage-order chunk regrouping); see ROADMAP")
     new_stages = reshard_stages(state_host["params"]["stages"],
                                 old_plan.pp, new_plan.pp)
     import jax.numpy as jnp
@@ -149,10 +163,11 @@ def reshard_state_for_plan(state_host, spec, old_plan, new_plan):
         slot: reshard_stages(sub, old_plan.pp, new_plan.pp)
         for slot, sub in state_host["opt_stages"].items()}
     out["stash"] = {"current": new_stages}
-    if new_plan.stash_mode != "flush":
+    new_sched = new_plan.make_schedule()
+    if new_sched.uses_stash_ring:
         out["stash"]["ring"] = jax.tree.map(
             lambda a: jnp.broadcast_to(
-                a[None], (new_plan.stash_slots,) + a.shape) + 0, new_stages)
+                a[None], (new_sched.stash_slots,) + a.shape) + 0, new_stages)
     return out
 
 

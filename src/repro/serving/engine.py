@@ -23,10 +23,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-try:
-    from jax import shard_map  # type: ignore
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.parallel.compat import shard_map
 
 from repro.models import lm_head
 from repro.models import spec as spec_lib
@@ -79,6 +76,9 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                   prefill_len: int = 0, sp: bool = False,
                   compute_dtype=jnp.bfloat16) -> ServeBundle:
     S = plan.pp
+    assert plan.virtual_stages == 1, (
+        "serving runs one chunk per stage; interleaved prefill/decode "
+        "is a ROADMAP open item")
     daxes = data_axes(mesh)
     dp = int(np.prod([mesh.devices.shape[mesh.axis_names.index(a)]
                       for a in daxes]))

@@ -1,8 +1,15 @@
 """SPMD pipeline vs sequential reference — run in a subprocess with
 XLA_FLAGS=--xla_force_host_platform_device_count=<N>.
 
-Usage: python tests/spmd_pipeline_check.py <data> <pp> <tp> <mode> [arch] [zero1]
+Usage: python tests/spmd_pipeline_check.py <data> <pp> <tp> <mode> [arch]
+           [zero1] [schedule] [virtual_stages] [steps]
 Exits nonzero (assertion) on mismatch; prints MATCH lines on success.
+
+For ``schedule=interleaved`` the pipeline runs S physical stages with v
+chunks each; the reference runs the SAME model as a sequential pp = S*v
+flush pipeline (flush semantics are schedule-timing-independent), with
+the pipeline's storage-order (s*v + j -> chunk j*S + s) parameters
+permuted back to chunk order before comparison.
 """
 import os
 import sys
@@ -12,6 +19,9 @@ if __name__ == "__main__":
     mode = sys.argv[4] if len(sys.argv) > 4 else "stash"
     arch = sys.argv[5] if len(sys.argv) > 5 else "dense"
     zero1 = bool(int(sys.argv[6])) if len(sys.argv) > 6 else False
+    schedule = sys.argv[7] if len(sys.argv) > 7 else "auto"
+    vstages = int(sys.argv[8]) if len(sys.argv) > 8 else 1
+    steps = int(sys.argv[9]) if len(sys.argv) > 9 else 1
     os.environ.setdefault(
         "XLA_FLAGS",
         f"--xla_force_host_platform_device_count={data * pp * tp}")
@@ -28,6 +38,13 @@ def build_tiny_spec(arch: str):
                                    rope_theta=1e4 * (1 + i % 2))
                        for i in range(4))
         return S.ModelSpec(name="tiny", d_model=32, n_layers=4, n_heads=4,
+                           n_kv=2, d_head=8, d_ff=64, vocab=64,
+                           blocks=blocks, qk_norm=True)
+    if arch == "dense8":
+        blocks = tuple(S.BlockSpec(window=(-1 if i % 2 else 8),
+                                   rope_theta=1e4 * (1 + i % 2))
+                       for i in range(8))
+        return S.ModelSpec(name="tiny8", d_model=32, n_layers=8, n_heads=4,
                            n_kv=2, d_head=8, d_ff=64, vocab=64,
                            blocks=blocks, qk_norm=True)
     if arch == "moe":
@@ -58,7 +75,23 @@ def build_tiny_spec(arch: str):
     raise ValueError(arch)
 
 
-def main(data, pp, tp, mode, arch, zero1=False):
+def _unpermute(state, perm):
+    """Storage-order pipeline state -> chunk-order (reference) state."""
+    inv = np.argsort(perm)
+    out = dict(state)
+    params = dict(state["params"])
+    params["stages"] = jax.tree.map(lambda a: a[inv], params["stages"])
+    params["layer_windows"] = params["layer_windows"][inv]
+    params["layer_thetas"] = params["layer_thetas"][inv]
+    out["params"] = params
+    out["opt_stages"] = {k: jax.tree.map(lambda a: a[inv], sub)
+                         for k, sub in state["opt_stages"].items()}
+    out["stash"] = {"current": params["stages"]}
+    return out
+
+
+def main(data, pp, tp, mode, arch, zero1=False, schedule="auto", vstages=1,
+         steps=1):
     from repro.core.pipeline import build_pipeline
     from repro.core.reference import reference_train_step
     from repro.optim import SGDM
@@ -68,7 +101,8 @@ def main(data, pp, tp, mode, arch, zero1=False):
     spec = build_tiny_spec(arch)
     R = 4
     plan = ParallelismPlan(pp=pp, tp=tp, microbatches=R, stash_mode=mode,
-                           remat=True, zero1=zero1)
+                           remat=True, zero1=zero1, schedule=schedule,
+                           virtual_stages=vstages)
     mesh = make_host_mesh(data=data, model=pp * tp)
     dmesh = split_model_axis(mesh, pp, tp)
 
@@ -93,40 +127,55 @@ def main(data, pp, tp, mode, arch, zero1=False):
     step = jax.jit(bundle.train_step,
                    in_shardings=(bundle.state_shardings(), bsh),
                    out_shardings=(bundle.state_shardings(), None))
-    new_state, metrics = step(state, batch_dev)
-    print("pipeline loss:", float(metrics["loss"]),
-          "aux:", float(metrics["aux"]))
 
-    # reference on host
+    # reference: for interleaved, a chunk-level sequential flush pipeline
+    if vstages > 1:
+        ref_plan = plan.with_(pp=pp * vstages, schedule="auto",
+                              virtual_stages=1)
+        perm = bundle.sched.storage_chunk_order()
+    else:
+        ref_plan = plan
+        perm = None
     ref_state = jax.device_get(state)
     ref_state = jax.tree.map(jnp.asarray, ref_state)
-    ref_new, ref_metrics = reference_train_step(
-        spec, plan, ref_state, batch, opt, aux_weight=0.01 / 1.0)
-    print("reference loss:", float(ref_metrics["loss"]),
-          "aux:", float(ref_metrics["aux"]))
+    if perm is not None:
+        ref_state = _unpermute(ref_state, perm)
 
-    # tp>1 changes fp32 reduction order (psum of partial products);
-    # tp=1 configs match near-bitwise.
-    atol = 2e-4 if arch in ("rwkv", "hybrid") else 5e-5
-    if tp > 1:
-        atol = max(atol, 5e-4)
-    np.testing.assert_allclose(float(metrics["loss"]),
-                               float(ref_metrics["loss"]), atol=atol,
-                               rtol=1e-4)
+    for i in range(steps):
+        new_state, metrics = step(state, batch_dev)
+        ref_state, ref_metrics = reference_train_step(
+            spec, ref_plan, ref_state, batch, opt, aux_weight=0.01 / 1.0)
+        print(f"step {i}: pipeline loss {float(metrics['loss']):.6f} "
+              f"aux {float(metrics['aux']):.6f} | reference loss "
+              f"{float(ref_metrics['loss']):.6f} "
+              f"aux {float(ref_metrics['aux']):.6f}")
 
-    got = jax.device_get(new_state["params"])
-    want = jax.device_get(ref_new["params"])
-    flat_g, tdef = jax.tree.flatten(got)
+        # tp>1 changes fp32 reduction order (psum of partial products);
+        # tp=1 configs match near-bitwise.
+        atol = 2e-4 if arch in ("rwkv", "hybrid") else 5e-5
+        if tp > 1:
+            atol = max(atol, 5e-4)
+        np.testing.assert_allclose(float(metrics["loss"]),
+                                   float(ref_metrics["loss"]), atol=atol,
+                                   rtol=1e-4)
+        state = new_state
+
+    got_state = jax.device_get(new_state)
+    got_state = jax.tree.map(jnp.asarray, got_state)
+    if perm is not None:
+        got_state = _unpermute(got_state, perm)
+    got = got_state["params"]
+    want = jax.device_get(ref_state["params"])
     flat_w, _ = jax.tree.flatten(want)
-    paths = jax.tree.flatten_with_path(got)[0]
+    paths = jax.tree_util.tree_flatten_with_path(got)[0]
     for (path, g), w in zip(paths, flat_w):
         name = jax.tree_util.keystr(path)
         np.testing.assert_allclose(
             np.asarray(g, np.float32), np.asarray(w, np.float32),
             atol=atol, rtol=2e-3, err_msg=f"param mismatch at {name}")
     print(f"MATCH data={data} pp={pp} tp={tp} mode={mode} arch={arch} "
-          f"zero1={zero1}")
+          f"zero1={zero1} schedule={schedule} v={vstages} steps={steps}")
 
 
 if __name__ == "__main__":
-    main(data, pp, tp, mode, arch, zero1)
+    main(data, pp, tp, mode, arch, zero1, schedule, vstages, steps)

@@ -77,6 +77,7 @@ def _driver_setup(tmp_path, failure_hook=None, steps_between_ckpt=2):
     return bundle, driver, state
 
 
+@pytest.mark.slow
 def test_driver_restart_replays_identically(tmp_path):
     """Kill the run at step 5, restart from the last checkpoint, and the
     final state must equal an uninterrupted run (deterministic data)."""

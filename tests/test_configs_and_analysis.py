@@ -63,7 +63,8 @@ def test_hlo_analysis_counts_scan_trip_counts():
     assert cost.while_trips == [7]
     assert cost.unknown_trip_whiles == 0
     # stock cost_analysis counts the body once — ours must be 7x that
-    stock = c.cost_analysis()["flops"]
+    from repro.parallel.compat import cost_analysis
+    stock = cost_analysis(c)["flops"]
     assert cost.flops == pytest.approx(7 * stock)
 
 
@@ -75,7 +76,8 @@ def test_hlo_analysis_matches_stock_on_whileless_module():
         jax.ShapeDtypeStruct((64, 32), jnp.float32),
         jax.ShapeDtypeStruct((32, 96), jnp.float32)).compile()
     cost = H.analyze(c.as_text())
-    assert cost.flops == pytest.approx(c.cost_analysis()["flops"], rel=0.05)
+    from repro.parallel.compat import cost_analysis
+    assert cost.flops == pytest.approx(cost_analysis(c)["flops"], rel=0.05)
 
 
 def test_shape_bytes():

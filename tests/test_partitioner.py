@@ -1,14 +1,23 @@
 """Partitioning DP (paper §3.2): optimality vs brute force + paper-style
-configs from realistic profiles."""
+configs from realistic profiles + numpy-vectorized DP == scalar oracle.
+
+Hypothesis-based property tests run when the package is installed (see
+requirements-dev.txt); fixed-seed random sweeps cover the same ground
+otherwise so the module never fails collection."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import profiler as prof
 from repro.core.partitioner import (Partition, partition,
                                     partition_brute_force,
-                                    partition_rectangular)
+                                    partition_rectangular, partition_scalar)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 def _mk_profiles(ts, acts, ws):
@@ -16,12 +25,7 @@ def _mk_profiles(ts, acts, ws):
             for i, (t, a, w) in enumerate(zip(ts, acts, ws))]
 
 
-@given(st.lists(st.tuples(st.floats(0.01, 10), st.floats(1, 1e6),
-                          st.floats(1, 1e7)),
-                min_size=2, max_size=6),
-       st.integers(2, 4), st.floats(1e4, 1e8))
-@settings(max_examples=30)
-def test_dp_matches_brute_force(layers, machines, bw):
+def _check_dp_against_brute_force(layers, machines, bw):
     hw = prof.Hardware("t", flops_peak=1e12, hbm_bw=1e11, link_bw=bw)
     ts, acts, ws = zip(*layers)
     profiles = _mk_profiles(ts, acts, ws)
@@ -34,6 +38,47 @@ def test_dp_matches_brute_force(layers, machines, bw):
     assert sum(s.replicas for s in got.stages) == machines
     for a, b in zip(got.stages, got.stages[1:]):
         assert b.start == a.end + 1
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.tuples(st.floats(0.01, 10), st.floats(1, 1e6),
+                              st.floats(1, 1e7)),
+                    min_size=2, max_size=6),
+           st.integers(2, 4), st.floats(1e4, 1e8))
+    @settings(max_examples=30)
+    def test_dp_matches_brute_force(layers, machines, bw):
+        _check_dp_against_brute_force(layers, machines, bw)
+
+
+def test_dp_matches_brute_force_seeded():
+    rng = np.random.default_rng(7)
+    for _ in range(30):
+        n = int(rng.integers(2, 7))
+        layers = [(float(rng.uniform(0.01, 10)), float(rng.uniform(1, 1e6)),
+                   float(rng.uniform(1, 1e7))) for _ in range(n)]
+        _check_dp_against_brute_force(layers, int(rng.integers(2, 5)),
+                                      float(rng.uniform(1e4, 1e8)))
+
+
+def test_vectorized_dp_identical_to_scalar():
+    """The numpy-vectorized DP must reproduce the original pure-Python
+    recurrence EXACTLY — same bottleneck float, same stage boundaries,
+    same replica counts, same tie-breaking."""
+    rng = np.random.default_rng(0)
+    for hw in (prof.CLUSTER_A, prof.CLUSTER_B, prof.TPU_V5E):
+        for _ in range(12):
+            n = int(rng.integers(2, 15))
+            machines = int(rng.integers(2, 9))
+            profiles = [prof.LayerProfile(
+                f"l{i}", float(rng.uniform(1e-3, 1e-2)),
+                float(rng.uniform(2e-3, 2e-2)),
+                float(rng.uniform(1e4, 1e7)), float(rng.uniform(1e4, 1e7)))
+                for i in range(n)]
+            fast = partition(profiles, machines, hw)
+            slow = partition_scalar(profiles, machines, hw)
+            assert fast.stages == slow.stages, (fast, slow)
+            assert fast.bottleneck_time == slow.bottleneck_time
+            assert fast.noam == slow.noam
 
 
 def _vgg16_like(minibatch=32):

@@ -1,30 +1,81 @@
-"""1F1B schedule invariants (paper §3.3) — property-based."""
+"""Schedule-table invariants (paper §3.3) for every registered schedule.
+
+Each schedule's tables must prove, per (S, R, v) grid point:
+  * every (microbatch, chunk) is forwarded and backwarded exactly once
+    per owning stage, and B(m) never precedes the last-chunk F(m);
+  * activations/gradients are consumed exactly one tick after they are
+    produced (the executor's single-buffer dataflow contract);
+  * residual-ring liveness: the slot written at F survives to its B
+    read within the declared ``resid_slots`` budget;
+  * stash-ring liveness for 1F1B (slot m % V never clobbered while a
+    microbatch is in flight);
+  * ``bubble_fraction`` matches the slot-level simulator
+    (benchmarks/simulator.simulate_schedule), and interleaving shrinks
+    it for v >= 2 whenever S >= 3 (at S = 2 startup+drain are already
+    minimal in the double-tick model and the fraction ties).
+
+Property-based variants run when hypothesis is installed (it is in
+requirements-dev.txt); the grid tests carry the whole load otherwise.
+"""
+import os
+import sys
+
 import numpy as np
-from hypothesis import given
-from hypothesis import strategies as st
+import pytest
 
-from repro.core.schedule import Schedule1F1B, paper_noam
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-sizes = st.tuples(st.integers(1, 8), st.integers(1, 24))
+from benchmarks.simulator import simulate_schedule  # noqa: E402
+from repro.core.schedule import (B_MB, F_MB, SCHEDULES, Schedule1F1B,  # noqa: E402
+                                 ScheduleGPipe, ScheduleInterleaved1F1B,
+                                 make_schedule, paper_noam,
+                                 register_schedule)
+from repro.parallel.mesh import ParallelismPlan  # noqa: E402
+
+GRID_PLAIN = [(1, 1), (1, 6), (2, 4), (3, 5), (4, 8), (5, 13), (8, 24)]
+GRID_INTER = [(1, 4, 2), (2, 4, 2), (2, 8, 3), (3, 6, 2), (3, 12, 4),
+              (4, 8, 2), (4, 16, 3), (5, 10, 2)]
 
 
-@given(sizes)
-def test_every_microbatch_scheduled_exactly_once(sr):
-    s, r = sr
+def all_schedules(s, r, v=1):
+    out = [Schedule1F1B(s, r, policy="stash"),
+           Schedule1F1B(s, r, policy="vertical"),
+           ScheduleGPipe(s, r, weight_versions=1),
+           ScheduleGPipe(s, r, weight_versions=2)]
+    if r % s == 0:
+        out.append(ScheduleInterleaved1F1B(s, r, virtual_stages=v))
+    return out
+
+
+@pytest.mark.parametrize("s,r", GRID_PLAIN)
+def test_structural_invariants_plain(s, r):
+    """validate() checks exactly-once, hop timing, residual liveness."""
+    for sched in all_schedules(s, r):
+        sched.validate()
+
+
+@pytest.mark.parametrize("s,r,v", GRID_INTER)
+def test_structural_invariants_interleaved(s, r, v):
+    ScheduleInterleaved1F1B(s, r, virtual_stages=v).validate()
+
+
+@pytest.mark.parametrize("s,r", GRID_PLAIN)
+def test_every_microbatch_scheduled_exactly_once(s, r):
+    for sched in all_schedules(s, r, v=2):
+        tabs = sched.tables()
+        want = sorted(range(r)) * sched.virtual_stages
+        for stage in range(s):
+            f = sorted(m for m in tabs.fwd[:, stage, F_MB] if m >= 0)
+            b = sorted(m for m in tabs.bwd[:, stage, B_MB] if m >= 0)
+            assert f == sorted(want)
+            assert b == sorted(want)
+
+
+@pytest.mark.parametrize("s,r", GRID_PLAIN)
+def test_forward_before_backward_and_downstream(s, r):
     sched = Schedule1F1B(s, r)
-    fwd, bwd = sched.tables()
-    for stage in range(s):
-        f = [m for m in fwd[:, stage] if m >= 0]
-        b = [m for m in bwd[:, stage] if m >= 0]
-        assert sorted(f) == list(range(r))
-        assert sorted(b) == list(range(r))
-
-
-@given(sizes)
-def test_forward_before_backward_and_downstream(sr):
-    s, r = sr
-    sched = Schedule1F1B(s, r)
-    fwd, bwd = sched.tables()
+    tabs = sched.tables()
+    fwd, bwd = tabs.fwd[:, :, F_MB], tabs.bwd[:, :, B_MB]
     for stage in range(s):
         for m in range(r):
             tf = int(np.where(fwd[:, stage] == m)[0][0])
@@ -41,69 +92,135 @@ def test_forward_before_backward_and_downstream(sr):
                 assert tb_prev == tb + 1
 
 
-@given(sizes)
-def test_steady_state_no_idle(sr):
+@pytest.mark.parametrize("s,r", GRID_PLAIN)
+def test_steady_state_no_idle(s, r):
     """Paper: in steady state no GPU is idle — both slots busy."""
-    s, r = sr
     sched = Schedule1F1B(s, r)
-    fwd, bwd = sched.tables()
+    tabs = sched.tables()
     rng = sched.steady_state_ticks()
     if rng is None:
         return
     lo, hi = rng
     for tick in range(lo, hi + 1):
-        assert (fwd[tick] >= 0).all() and (bwd[tick] >= 0).all()
+        assert (tabs.fwd[tick, :, F_MB] >= 0).all()
+        assert (tabs.bwd[tick, :, B_MB] >= 0).all()
 
 
-@given(sizes)
-def test_max_in_flight_bound(sr):
+@pytest.mark.parametrize("s,r", GRID_PLAIN)
+def test_max_in_flight_bound(s, r):
     """Microbatches alive between F and B at stage s: ≤ 2(S−1−s)+1 —
     the weight-stash ring size (paper: NOAM versions at the input
     stage)."""
-    s, r = sr
     sched = Schedule1F1B(s, r)
-    fwd, bwd = sched.tables()
+    tabs = sched.tables()
     for stage in range(s):
         live = set()
         peak = 0
         for tick in range(sched.n_ticks):
-            if fwd[tick, stage] >= 0:
-                live.add(int(fwd[tick, stage]))
+            if tabs.fwd[tick, stage, F_MB] >= 0:
+                live.add(int(tabs.fwd[tick, stage, F_MB]))
             peak = max(peak, len(live))
-            if bwd[tick, stage] >= 0:
-                live.discard(int(bwd[tick, stage]))
+            if tabs.bwd[tick, stage, B_MB] >= 0:
+                live.discard(int(tabs.bwd[tick, stage, B_MB]))
         assert peak <= sched.max_in_flight(stage)
         assert sched.max_in_flight(stage) <= sched.stash_slots
 
 
-@given(sizes)
-def test_stash_ring_slots_never_clobbered(sr):
-    """Ring slot m % V written at F(m) must survive until B(m)."""
-    s, r = sr
+@pytest.mark.parametrize("s,r", GRID_PLAIN)
+def test_stash_ring_slots_never_clobbered(s, r):
+    """Ring slot written at F(m) must survive until B(m)."""
     sched = Schedule1F1B(s, r)
     v = sched.stash_slots
-    fwd, bwd = sched.tables()
+    tabs = sched.tables()
     for stage in range(s):
         writer = {}
         for tick in range(sched.n_ticks):
-            m = int(fwd[tick, stage])
+            m = int(tabs.fwd[tick, stage, F_MB])
             if m >= 0:
                 slot = m % v
                 assert slot not in writer, "slot reused while still live"
                 writer[slot] = m
-            b = int(bwd[tick, stage])
+            b = int(tabs.bwd[tick, stage, B_MB])
             if b >= 0:
                 assert writer.pop(b % v) == b
 
 
-@given(sizes)
-def test_bubble_fraction(sr):
-    s, r = sr
-    sched = Schedule1F1B(s, r)
-    fwd, bwd = sched.tables()
-    busy = int((fwd >= 0).sum() + (bwd >= 0).sum())
-    total = 2 * sched.n_ticks * s
-    assert abs(sched.bubble_fraction - (1 - busy / total)) < 1e-12
+@pytest.mark.parametrize("s,r", GRID_PLAIN)
+def test_bubble_fraction_matches_simulator(s, r):
+    for sched in all_schedules(s, r, v=2):
+        sim = simulate_schedule(sched)
+        busy = int((sched.tables().fwd[:, :, F_MB] >= 0).sum()
+                   + (sched.tables().bwd[:, :, B_MB] >= 0).sum())
+        total = 2 * sched.n_ticks * s
+        assert abs(sched.bubble_fraction - (1 - busy / total)) < 1e-12
+        assert abs(sim.bubble_fraction - sched.bubble_fraction) < 1e-12
+        # per-stage slot count: v chunk-F + v chunk-B per microbatch
+        assert sim.per_stage_busy == [2 * r * sched.virtual_stages] * s
+
+
+@pytest.mark.parametrize("s,r,v", GRID_INTER)
+def test_interleaving_shrinks_bubble(s, r, v):
+    """Bubble strictly below plain 1F1B for v >= 2 (S >= 3; ties at
+    S <= 2 where the double-tick startup+drain is already minimal —
+    (v−1)(S−2) > 0 is the exact improvement condition)."""
+    inter = ScheduleInterleaved1F1B(s, r, virtual_stages=v)
+    plain = Schedule1F1B(s, r)
+    if v >= 2 and s >= 3:
+        assert inter.bubble_fraction < plain.bubble_fraction
+    elif s == 2:
+        assert inter.bubble_fraction <= plain.bubble_fraction + 1e-12
+    # s == 1: interleaving a single stage only adds chunk-chain drain
+    if s >= 2:
+        # wall-clock: interleaved round never slower per microbatch
+        tsim_i = simulate_schedule(inter)
+        tsim_p = simulate_schedule(plain)
+        assert tsim_i.per_microbatch <= tsim_p.per_microbatch + 1e-12
+
+
+def test_registry_and_plan_mapping():
+    assert set(SCHEDULES) >= {"1f1b", "gpipe", "interleaved"}
+    mk = ParallelismPlan
+    assert isinstance(make_schedule(mk(pp=2, tp=1)), Schedule1F1B)
+    assert make_schedule(mk(pp=2, tp=1, stash_mode="vertical")).policy \
+        == "vertical"
+    g = make_schedule(mk(pp=2, tp=1, stash_mode="flush"))
+    assert isinstance(g, ScheduleGPipe) and g.stash_slots == 1
+    g2 = make_schedule(mk(pp=2, tp=1, stash_mode="2bw"))
+    assert g2.stash_slots == 2 and g2.uses_stash_ring
+    it = make_schedule(mk(pp=2, tp=1, microbatches=4, stash_mode="flush",
+                          schedule="interleaved", virtual_stages=2))
+    assert isinstance(it, ScheduleInterleaved1F1B) and it.n_chunks == 4
+    # plan-level stash_slots delegates to the schedule
+    assert mk(pp=3, tp=1).stash_slots == 5
+    assert mk(pp=3, tp=1, stash_mode="flush").stash_slots == 1
+
+    class Custom(Schedule1F1B):
+        name = "custom-test"
+
+    register_schedule("custom-test", Custom)
+    try:
+        assert SCHEDULES["custom-test"] is Custom
+    finally:
+        del SCHEDULES["custom-test"]
+
+
+def test_gpipe_residual_ring_full_size():
+    """The flush family must keep the full 2(S−1)+1 residual ring even
+    with a single weight version — a 1-slot residual ring clobbers the
+    input stage's saved activations before its backward reads them
+    (seed bug, fixed by separating resid_slots from stash_slots)."""
+    g = ScheduleGPipe(4, 8, weight_versions=1)
+    assert g.stash_slots == 1
+    assert g.resid_slots == 7
+    g.validate()   # includes the residual-liveness proof
+
+
+def test_interleaved_storage_order():
+    sch = ScheduleInterleaved1F1B(3, 6, virtual_stages=2)
+    order = sch.storage_chunk_order()
+    # storage row s*v + j holds chunk j*S + s
+    assert list(order) == [0, 3, 1, 4, 2, 5]
+    assert sorted(order) == list(range(6))
 
 
 def test_noam():
@@ -111,3 +228,35 @@ def test_noam():
     assert paper_noam(8, 2) == 4
     assert paper_noam(4, 4) == 1       # pure data parallel
     assert paper_noam(16, 9) == 2      # "9-5-1-1"
+
+
+# ---------------------------------------------------------------------------
+# Property-based variants (hypothesis optional)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:       # grid tests above carry the invariants
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    sizes = st.tuples(st.integers(1, 8), st.integers(1, 24))
+    inter_sizes = st.tuples(st.integers(1, 5), st.integers(1, 4),
+                            st.integers(1, 4))
+
+    @given(sizes)
+    def test_prop_plain_schedules_validate(sr):
+        s, r = sr
+        for sched in all_schedules(s, r):
+            sched.validate()
+
+    @given(inter_sizes)
+    def test_prop_interleaved_validates(srv):
+        s, groups, v = srv
+        sched = ScheduleInterleaved1F1B(s, groups * s, virtual_stages=v)
+        sched.validate()
+        plain = Schedule1F1B(s, groups * s)
+        if v >= 2 and s >= 3:
+            assert sched.bubble_fraction < plain.bubble_fraction

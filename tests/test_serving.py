@@ -38,7 +38,13 @@ def _greedy_teacher(spec, params, tokens, n_new, plan):
     return np.stack(outs)          # (n_new+1, B)
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+# >60s cases carry the slow marker (fast set keeps one per family)
+SLOW_SERVE = {"jamba_v01_52b", "qwen3_14b", "rwkv6_1b6"}
+
+
+@pytest.mark.parametrize(
+    "arch", [a if a not in SLOW_SERVE
+             else pytest.param(a, marks=pytest.mark.slow) for a in ARCHS])
 def test_prefill_decode_matches_teacher_forcing(arch):
     cfg = configs.get(arch)
     spec = cfg.smoke_spec()
@@ -68,6 +74,7 @@ def test_prefill_decode_matches_teacher_forcing(arch):
     np.testing.assert_array_equal(got, want)
 
 
+@pytest.mark.slow
 def test_windowed_ring_cache_matches_full_cache():
     """SWA decode with a window-sized ring buffer == full-length cache."""
     cfg = configs.get("h2o_danube3_4b")

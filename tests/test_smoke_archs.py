@@ -36,7 +36,19 @@ def _batch(spec, plan, key, seq_len=24, bmb=2):
     return batch
 
 
-@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+
+# Fast tier-1 representatives (one per major family); the rest carry the
+# ``slow`` marker and run via `pytest -m slow` / scripts/tier1.sh --full.
+FAST_ARCHS = ("qwen3_14b", "olmoe_1b_7b", "rwkv6_1b6")
+
+
+def _arch_params():
+    return [arch if arch in FAST_ARCHS
+            else pytest.param(arch, marks=pytest.mark.slow)
+            for arch in configs.ARCH_IDS]
+
+
+@pytest.mark.parametrize("arch", _arch_params())
 def test_smoke_train_round(arch):
     cfg = configs.get(arch)
     spec, plan = cfg.smoke_spec(), cfg.SMOKE_PLAN
@@ -64,7 +76,7 @@ def test_smoke_train_round(arch):
                                               len(old_flat))
 
 
-@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+@pytest.mark.parametrize("arch", _arch_params())
 def test_gradient_liveness(arch):
     """No dead parameters: every stage leaf gets a nonzero gradient."""
     import jax.numpy as jnp
@@ -96,7 +108,7 @@ def test_gradient_liveness(arch):
     assert not dead, (arch, dead)
 
 
-@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+@pytest.mark.parametrize("arch", _arch_params())
 def test_smoke_second_round_consumes_state(arch):
     """Round 2 runs off round 1's state (stash ring layout survives)."""
     cfg = configs.get(arch)
