@@ -1,5 +1,5 @@
 # Convenience entry points matching the ROADMAP commands.
-.PHONY: tier1 tier1-full bench
+.PHONY: tier1 tier1-full bench plan-smoke
 
 tier1:
 	scripts/tier1.sh
@@ -9,3 +9,6 @@ tier1-full:
 
 bench:
 	PYTHONPATH=src:. python benchmarks/partitioner_bench.py
+
+plan-smoke:
+	python scripts/plan_smoke.py

@@ -26,11 +26,13 @@ import dataclasses
 import heapq
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.core.partitioner import Partition, Stage
 from repro.core.profiler import (Hardware, LayerProfile,
                                  comm_time_activations,
                                  comm_time_weight_sync)
-from repro.core.schedule import PipelineSchedule
+from repro.core.schedule import PipelineSchedule, weighted_round_time
 
 
 # --------------------------------------------------------------------------
@@ -47,9 +49,10 @@ class ScheduleSimResult:
 
     n_ticks: int
     n_microbatches: int
-    round_time: float             # wall-clock of one round, all R mbs
+    round_time: float             # time-weighted wall-clock of one round
     ideal_time: float             # R × per-stage work (zero-bubble bound)
-    bubble_fraction: float        # measured idle-slot fraction
+    bubble_fraction: float        # idle-slot fraction (count-weighted)
+    weighted_bubble_fraction: float  # idle *time* fraction over the round
     per_stage_busy: List[int]     # busy (F+B) slots per physical stage
     steady_ticks: int             # ticks with every stage fully busy
 
@@ -59,16 +62,22 @@ class ScheduleSimResult:
         return self.round_time / self.n_microbatches
 
 
-def simulate_schedule(sched: PipelineSchedule, *, t_fwd: float = 1.0,
-                      t_bwd: float = 2.0) -> ScheduleSimResult:
+def simulate_schedule(sched: PipelineSchedule, *, t_fwd=1.0,
+                      t_bwd=2.0) -> ScheduleSimResult:
     """Walk a schedule's tables tick by tick and measure its bubble.
 
-    Each tick costs (t_fwd + t_bwd)/v — one F chunk-slot plus one B
-    chunk-slot; a chunk is 1/v of a stage.  The measured idle fraction
-    must equal ``sched.bubble_fraction`` (tests assert it), and the
-    DP/simulator cross-check uses ``round_time`` to rank schedules: for
-    v >= 2 and S >= 3 the interleaved round is strictly shorter than
-    plain 1F1B's for the same (S, R).
+    ``t_fwd``/``t_bwd`` are full-stage seconds per direction — scalars,
+    or per-physical-stage arrays for heterogeneous partitions (the
+    planner's case).  ``round_time`` is time-weighted: a ramp-up/drain
+    tick in which only one direction runs is charged only for that
+    direction, and each synchronized phase costs its slowest active
+    stage (core.schedule.weighted_round_time).  ``bubble_fraction``
+    stays the slot-count measure and must equal
+    ``sched.bubble_fraction`` exactly (table-invariant tests);
+    ``weighted_bubble_fraction`` is the idle-time analogue.  The
+    planner ranks schedules by ``round_time``: for v >= 2 (S >= 2) the
+    interleaved round is strictly shorter than plain 1F1B's for the
+    same (S, R).
     """
     tabs = sched.tables()
     S, R, v = sched.n_stages, sched.n_microbatches, sched.virtual_stages
@@ -79,13 +88,16 @@ def simulate_schedule(sched: PipelineSchedule, *, t_fwd: float = 1.0,
     busy = sum(per_stage)
     total = 2 * sched.n_ticks * S
     steady = int((fwd_busy.all(axis=1) & bwd_busy.all(axis=1)).sum())
-    tick_cost = (t_fwd + t_bwd) / v
+    round_time, weighted_bubble = weighted_round_time(sched, t_fwd, t_bwd)
+    stage_pass = (np.broadcast_to(np.asarray(t_fwd, float), (S,))
+                  + np.broadcast_to(np.asarray(t_bwd, float), (S,)))
     return ScheduleSimResult(
         n_ticks=sched.n_ticks,
         n_microbatches=R,
-        round_time=sched.n_ticks * tick_cost,
-        ideal_time=R * (t_fwd + t_bwd),
+        round_time=round_time,
+        ideal_time=R * float(stage_pass.max()),
         bubble_fraction=1.0 - busy / total,
+        weighted_bubble_fraction=weighted_bubble,
         per_stage_busy=per_stage,
         steady_ticks=steady,
     )

@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Fast plan_search smoke: qwen3 + olmoe under the real v5e HBM budget.
+
+CI gate (scripts/tier1.sh / `make plan-smoke`): runs the schedule-aware
+planner on the two reference configs at the production shape and FAILS if
+
+  * the chosen plan's MemoryModel exceeds the hardware HBM budget (a
+    planner that picks a plan that cannot fit is broken), or
+  * the hand-written config plan itself no longer fits its budget (a
+    config regression), or
+  * the planner stops preferring interleaved where the simulator says
+    the round is shorter (S >= 3, v >= 2 on an otherwise-equal split).
+
+Pure analytic path — no jax, finishes in well under a second.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import configs                                  # noqa: E402
+from repro.core import profiler as prof                    # noqa: E402
+from repro.core.partitioner import plan_search             # noqa: E402
+
+ARCHS = ("qwen3_14b", "olmoe_1b_7b")
+SHAPE = configs.SHAPES["train_4k"]
+HW = prof.TPU_V5E
+DATA = 16                       # production mesh: 16 data × 16 model
+
+
+def main() -> int:
+    failures = []
+    for arch in ARCHS:
+        cfg = configs.get(arch)
+        spec, plan = cfg.full_spec(), cfg.PLAN
+        mb_tokens = SHAPE.seq_len * max(
+            SHAPE.global_batch // DATA // plan.microbatches, 1)
+        cands = plan_search(spec, plan, plan.pp * plan.tp, HW,
+                            minibatch_tokens=mb_tokens, data_replicas=DATA,
+                            return_all=True)
+        best = next((c for c in cands if c.feasible), None)
+        print(f"== {arch} (budget {HW.hbm_bytes / 1e9:.0f} GB, "
+              f"{len(cands)} candidates)")
+        for c in cands[:4]:
+            print(f"   {c.describe()}")
+        if best is None:
+            failures.append(f"{arch}: no candidate fits the HBM budget")
+            continue
+        if not best.memory.fits(HW.hbm_bytes):
+            failures.append(f"{arch}: chosen plan over budget: "
+                            f"{best.describe()}")
+        print(f"   chosen: {best.describe()}")
+        # the config's own hand-written plan must also fit
+        mm = plan.make_schedule().memory_model(
+            spec, plan, HW, microbatch_tokens=mb_tokens, data_replicas=DATA)
+        if not mm.fits(HW.hbm_bytes):
+            failures.append(f"{arch}: config PLAN over budget: {mm}")
+        # schedule-aware objective sanity: at S >= 3 the best interleaved
+        # candidate beats the best plain 1f1b one when both exist
+        deep_i = [c for c in cands
+                  if c.plan.schedule == "interleaved" and c.plan.pp >= 3]
+        deep_p = [c for c in cands
+                  if c.plan.schedule == "1f1b"
+                  and any(c.plan.pp == i.plan.pp for i in deep_i)]
+        if deep_i and deep_p and (min(c.round_time for c in deep_i)
+                                  >= min(c.round_time for c in deep_p)):
+            failures.append(f"{arch}: interleaved no longer beats 1f1b at "
+                            f"S >= 3")
+    if failures:
+        print("\nPLAN SMOKE FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nplan smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,6 +2,8 @@
 # Tier-1 verify (ROADMAP): fast default selection, bounded time.
 #   scripts/tier1.sh            # fast set (pytest.ini deselects -m slow)
 #   scripts/tier1.sh --full     # everything, including the slow SPMD matrix
+# Both variants first run the plan_search smoke (scripts/plan_smoke.py):
+# the chosen plan for qwen3 + olmoe must fit the config's HBM budget.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -10,4 +12,5 @@ if [[ "${1:-}" == "--full" ]]; then
     shift
     ARGS+=(-m "")
 fi
+python scripts/plan_smoke.py
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest "${ARGS[@]}" "$@"

@@ -22,8 +22,10 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.profiler import (Hardware, LayerProfile,
-                                 comm_time_activations, comm_time_weight_sync)
-from repro.core.schedule import paper_noam
+                                 comm_time_activations, comm_time_tp_allreduce,
+                                 comm_time_weight_sync, profile_analytic)
+from repro.core.schedule import (MemoryModel, make_schedule, paper_noam,
+                                 weighted_round_time)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -276,3 +278,178 @@ def uniform_layer_split(n_layers: int, n_stages: int) -> List[Tuple[int, int]]:
     assert n_layers % n_stages == 0
     lps = n_layers // n_stages
     return [(s * lps, (s + 1) * lps - 1) for s in range(n_stages)]
+
+
+# --------------------------------------------------------------------------
+# Schedule-aware, memory-aware plan search
+# --------------------------------------------------------------------------
+#
+# The paper's DP minimizes the steady-state bottleneck; with schedules
+# pluggable (core/schedule.py) that objective is blind to the two things
+# that differ per schedule: the bubble and the HBM footprint.  plan_search
+# sweeps (pp, tp, schedule, virtual_stages) over feasible candidates,
+# scores each by the simulated time-weighted round_time of its schedule
+# tables over the rectangular-DP partition, and rejects any candidate
+# whose MemoryModel exceeds the device HBM budget — the PipeDream-2BW /
+# BaPipe "joint planner" move.
+
+@dataclasses.dataclass(frozen=True)
+class PlanChoice:
+    """One scored (pp, tp, schedule, v) candidate."""
+
+    plan: object                   # ParallelismPlan
+    partition: Partition           # rectangular split into pp·v chunks
+    round_time: float              # simulated wall-clock of one round [s]
+    bubble_fraction: float         # time-weighted idle fraction
+    memory: MemoryModel
+    hbm_bytes: float               # budget the candidate was checked against
+    feasible: bool                 # memory.total_bytes <= hbm_bytes
+
+    @property
+    def per_microbatch(self) -> float:
+        return self.round_time / self.plan.microbatches
+
+    def describe(self) -> str:
+        ok = "fits" if self.feasible else "OVER BUDGET"
+        return (f"pp={self.plan.pp} tp={self.plan.tp} "
+                f"sched={self.plan.schedule}/{self.plan.stash_mode}"
+                f"{f' v={self.plan.virtual_stages}' if self.plan.virtual_stages > 1 else ''}"
+                f" round={self.round_time * 1e3:.3f} ms"
+                f" bubble={self.bubble_fraction:.3f}"
+                f" hbm={self.memory.total_bytes / 1e9:.2f}"
+                f"/{self.hbm_bytes / 1e9:.1f} GB [{ok}]")
+
+
+def _candidate_plan(base_plan, pp: int, tp: int, name: str, v: int):
+    """base_plan rewritten to one (pp, tp, schedule, v) candidate."""
+    kw = dict(pp=pp, tp=tp, schedule=name, virtual_stages=1)
+    if name == "1f1b":
+        if base_plan.stash_mode not in ("stash", "vertical"):
+            kw["stash_mode"] = "stash"
+    elif name == "gpipe":
+        if base_plan.stash_mode not in ("flush", "2bw"):
+            kw["stash_mode"] = "flush"
+    elif name == "interleaved":
+        kw["stash_mode"] = "flush"
+        kw["virtual_stages"] = v
+    return base_plan.with_(**kw)
+
+
+def stage_phase_times(profiles: Sequence[LayerProfile], part: Partition,
+                      pp: int, tp: int, hw: Hardware, *,
+                      data_replicas: int = 1):
+    """Per-physical-stage (t_fwd, t_bwd) seconds for a chunked partition.
+
+    ``part`` splits the profiles into pp·v chunks (layer order); chunk c
+    runs on stage c % pp (the interleaved placement; v=1 reduces to the
+    identity).  Compute divides by tp, each layer pays the tp all-reduce
+    both directions, and the wait-free weight sync floors the stage's
+    total (the paper's max(compute, sync) overlap model).
+    """
+    tf = np.zeros(pp)
+    tb = np.zeros(pp)
+    w = np.zeros(pp)
+    for c, st in enumerate(part.stages):
+        s = c % pp
+        span = profiles[st.start:st.end + 1]
+        ar = sum(comm_time_tp_allreduce(p.a_bytes, tp, hw) for p in span)
+        tf[s] += sum(p.t_fwd for p in span) / tp + ar
+        tb[s] += sum(p.t_bwd for p in span) / tp + ar
+        w[s] += sum(p.w_params for p in span) / tp
+    for s in range(pp):
+        sync = comm_time_weight_sync(w[s], data_replicas, hw)
+        tot = tf[s] + tb[s]
+        if sync > tot > 0:
+            tf[s] *= sync / tot
+            tb[s] *= sync / tot
+    return tf, tb
+
+
+def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
+                minibatch_tokens: int, data_replicas: int = 1,
+                profiles: Optional[Sequence[LayerProfile]] = None,
+                schedules: Optional[Sequence[str]] = None,
+                max_virtual_stages: int = 4,
+                hbm_bytes: Optional[float] = None,
+                return_all: bool = False):
+    """Jointly pick (pp, tp, schedule, virtual_stages) for a model axis.
+
+    Enumerates every pp dividing ``model_axis`` whose chunk count
+    divides the layer stack (and whose tp divides the heads), builds the
+    candidate's schedule tables, and scores it by the simulated
+    time-weighted round_time of those tables over the rectangular-DP
+    partition.  Candidates whose :class:`~repro.core.schedule.MemoryModel`
+    exceeds the HBM budget (``hw.hbm_bytes`` unless overridden) are
+    rejected outright — a plan that does not fit is not a plan.
+
+    Pass measured-calibrated ``profiles``
+    (profiler.scale_profiles_to_measurements) to make the search respond
+    to live straggler measurements.  Tie-breaking is deterministic:
+    round_time, then keeping the base plan's schedule, then lower HBM,
+    then shallower pipe.
+
+    Returns the best :class:`PlanChoice` (``return_all=True``: the full
+    ranked candidate list instead, infeasible ones included).
+    """
+    if profiles is None:
+        profiles = profile_analytic(spec, hw,
+                                    minibatch_tokens=minibatch_tokens)
+    budget = float(hw.hbm_bytes if hbm_bytes is None else hbm_bytes)
+    R = base_plan.microbatches
+    names = tuple(schedules) if schedules else ("1f1b", "gpipe",
+                                                "interleaved")
+    base_name = make_schedule(base_plan).name
+    cands: List[PlanChoice] = []
+    parts: dict = {}        # n_chunks -> Partition (schedule-independent)
+    phases: dict = {}       # (pp, v, tp) -> (t_fwd, t_bwd)
+    for pp in range(1, model_axis + 1):
+        if model_axis % pp:
+            continue
+        tp = model_axis // pp
+        if spec.n_heads and spec.n_heads % tp:
+            continue
+        for name in names:
+            vs = ((1,) if name != "interleaved"
+                  else tuple(range(2, max_virtual_stages + 1)))
+            for v in vs:
+                n_chunks = pp * v
+                if spec.n_layers % n_chunks:
+                    continue
+                if name == "interleaved" and R % pp:
+                    continue
+                try:
+                    spec.stage_program(n_chunks)
+                except AssertionError:
+                    continue
+                plan = _candidate_plan(base_plan, pp, tp, name, v)
+                sched = plan.make_schedule()
+                mm = sched.memory_model(spec, plan, hw,
+                                        microbatch_tokens=minibatch_tokens,
+                                        data_replicas=data_replicas)
+                part = parts.get(n_chunks)
+                if part is None:
+                    part = parts[n_chunks] = partition_rectangular(
+                        profiles, n_chunks, data_replicas, hw)
+                key = (pp, v, tp)
+                if key not in phases:
+                    phases[key] = stage_phase_times(
+                        profiles, part, pp, tp, hw,
+                        data_replicas=data_replicas)
+                tf, tb = phases[key]
+                rt, bubble = weighted_round_time(sched, tf, tb)
+                cands.append(PlanChoice(plan, part, rt, bubble, mm, budget,
+                                        feasible=mm.fits(budget)))
+    assert cands, f"no structurally valid plan for model_axis={model_axis}"
+
+    def rank(c: PlanChoice):
+        return (c.round_time, c.plan.schedule != base_name,
+                c.memory.total_bytes, c.plan.pp, c.plan.virtual_stages)
+
+    cands.sort(key=rank)
+    if return_all:
+        return cands
+    feasible = [c for c in cands if c.feasible]
+    assert feasible, (
+        f"no plan fits the {budget / 1e9:.1f} GB HBM budget; closest: "
+        f"{min(cands, key=lambda c: c.memory.total_bytes).describe()}")
+    return feasible[0]

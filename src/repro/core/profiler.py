@@ -35,14 +35,19 @@ class Hardware:
     param_bytes: float = 4.0   # fp32 on the paper's GPU clusters
     ps_factor: float = 4.0     # paper §3.2: PS traffic = 4(m−1)|w|/m;
     #                            TPU all-reduce (ring) = 2(m−1)|w|/m
+    hbm_bytes: float = 16e9    # device memory budget; the planner rejects
+    #                            plans whose MemoryModel exceeds it
 
     @property
     def sync_bw(self) -> float:
         return self.net_bw or self.link_bw
 
 
+#: activation element size assumed by the analytic memory/comm models
+ACT_BYTES = 2.0   # bf16
+
 TPU_V5E = Hardware("tpu-v5e", flops_peak=197e12, hbm_bw=819e9, link_bw=50e9,
-                   param_bytes=2.0, ps_factor=2.0)
+                   param_bytes=2.0, ps_factor=2.0, hbm_bytes=16e9)
 
 
 def _host_chain(nic_bw: float, host_bw: float = 3e9) -> float:
@@ -61,10 +66,12 @@ def _host_chain(nic_bw: float, host_bw: float = 3e9) -> float:
 # row — see benchmarks/table1.py.
 CLUSTER_A = Hardware("titanx-6.25gbe", flops_peak=6.7e12, hbm_bw=336e9,
                      link_bw=25e9 / 8, mfu=0.35,
-                     net_bw=_host_chain(25e9 / 8 / 4), ps_factor=2.0)
+                     net_bw=_host_chain(25e9 / 8 / 4), ps_factor=2.0,
+                     hbm_bytes=12e9)
 CLUSTER_B = Hardware("v100-10gbe", flops_peak=15.7e12, hbm_bw=900e9,
                      link_bw=10e9 / 8, mfu=0.45,
-                     net_bw=_host_chain(10e9 / 8), ps_factor=2.0)
+                     net_bw=_host_chain(10e9 / 8), ps_factor=2.0,
+                     hbm_bytes=16e9)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,7 +151,7 @@ def profile_analytic(spec: spec_lib.ModelSpec, hw: Hardware, *,
     """Per-layer profiles for the partitioner (embed/head folded into ends)."""
     out: List[LayerProfile] = []
     d = spec.d_model
-    act_bytes = minibatch_tokens * d * 2
+    act_bytes = minibatch_tokens * d * ACT_BYTES
     eff = spec_lib  # noqa: F841  (keep namespace; efficiency via hw.mfu)
 
     embed_t = 0.0  # gather-dominated; negligible FLOPs
@@ -209,3 +216,85 @@ def comm_time_weight_sync(w_params: float, m: int, hw: Hardware) -> float:
         return 0.0
     return (hw.ps_factor * (m - 1) * w_params * hw.param_bytes
             / m / hw.sync_bw)
+
+
+def comm_time_tp_allreduce(a_bytes: float, tp: int, hw: Hardware) -> float:
+    """Per-layer tensor-parallel all-reduce time (one direction).
+
+    Megatron-style row/column sharding all-reduces the layer's activation
+    once per block per pass: ring cost 2(tp−1)·a_bytes/tp over the ICI
+    link.  0 at tp=1 — this is what makes tensor parallelism non-free in
+    the planner, so deep pipelines (less tp, more bubble) can win when
+    activations are large relative to compute.
+    """
+    if tp <= 1:
+        return 0.0
+    return 2.0 * (tp - 1) * a_bytes / tp / hw.link_bw
+
+
+# --------------------------------------------------------------------------
+# Measured-profile calibration (straggler rebalancing)
+# --------------------------------------------------------------------------
+
+def profile_stage_spans(n_profiles: int, n_stages: int) -> List[range]:
+    """Profile-index span of each physical stage under the uniform stack.
+
+    Profiles are [embed, block_0..block_{L-1}, head]; embed rides with
+    stage 0 and head with the last stage (the executor folds them into
+    the end stages the same way).  ``n_stages`` here means *physical*
+    stages: with virtual stages, chunk j·S + s belongs to stage s, so a
+    stage's layer set is the union of its chunks — computed by the
+    caller via chunk spans with ``n_stages = S·v`` and ``c % S``.
+    """
+    n_layers = n_profiles - 2
+    assert n_layers % n_stages == 0, (n_layers, n_stages)
+    lps = n_layers // n_stages
+    spans = []
+    for s in range(n_stages):
+        lo = 1 + s * lps
+        hi = 1 + (s + 1) * lps
+        if s == 0:
+            lo = 0                      # embed
+        if s == n_stages - 1:
+            hi = n_profiles             # head
+        spans.append(range(lo, hi))
+    return spans
+
+
+def scale_profiles_to_measurements(profiles: Sequence[LayerProfile],
+                                   measured_stage_seconds: Sequence[float],
+                                   *, n_stages: int, virtual_stages: int = 1
+                                   ) -> List[LayerProfile]:
+    """Fold measured per-stage times back into the analytic profile.
+
+    Each layer's t_fwd/t_bwd is scaled by the measured/predicted ratio of
+    the stage that currently runs it (chunk c of the uniform S·v split
+    belongs to physical stage c % S).  Ratios are normalized by their
+    median so only the *relative* skew transfers — absolute wall-clock
+    from a different machine class must not swamp the analytic comm
+    terms.  This is the fix for the replanner ignoring its own
+    measurements: the DP then sees the straggler's layers as genuinely
+    slower and rebalances around them.
+    """
+    times = np.asarray(measured_stage_seconds, float)
+    assert len(times) == n_stages, (len(times), n_stages)
+    n_chunks = n_stages * virtual_stages
+    chunk_spans = profile_stage_spans(len(profiles), n_chunks)
+    predicted = np.zeros(n_stages)
+    layer_stage = np.zeros(len(profiles), np.int64)
+    for c, span in enumerate(chunk_spans):
+        s = c % n_stages
+        predicted[s] += sum(profiles[i].t_total for i in span)
+        for i in span:
+            layer_stage[i] = s
+    assert (predicted > 0).all(), "degenerate profile: zero-time stage"
+    ratio = times / predicted
+    med = float(np.median(ratio))
+    assert med > 0, "measured stage times must be positive"
+    ratio = ratio / med
+    out = []
+    for i, p in enumerate(profiles):
+        r = float(ratio[layer_stage[i]])
+        out.append(dataclasses.replace(p, t_fwd=p.t_fwd * r,
+                                       t_bwd=p.t_bwd * r))
+    return out

@@ -85,6 +85,47 @@ class ScheduleTables:
     demb_mb: np.ndarray
 
 
+@dataclasses.dataclass(frozen=True)
+class MemoryModel:
+    """Analytic per-device HBM footprint of one schedule × plan.
+
+    All quantities are bytes on the worst (most loaded) device of the
+    (stage, tensor) submesh; data replicas hold copies so the budget is
+    per chip.  Cross-checked against the dry-run's
+    ``compiled.memory_analysis()`` in launch/dryrun.py.
+    """
+
+    schedule: str
+    weight_bytes: float        # live stage weights (+ embed/head shard)
+    stash_bytes: float         # weight-version ring: stash_slots × stage blocks
+    resid_bytes: float         # residual ring: resid_slots × microbatch input
+    workspace_bytes: float     # in-flight fwd/bwd activations (remat-aware)
+    grad_bytes: float          # gradient accumulator (flush family only)
+    optimizer_bytes: float     # Adam moments (ZeRO-1 sharded when plan.zero1)
+
+    @property
+    def total_bytes(self) -> float:
+        return (self.weight_bytes + self.stash_bytes + self.resid_bytes
+                + self.workspace_bytes + self.grad_bytes
+                + self.optimizer_bytes)
+
+    def fits(self, hbm_bytes: float) -> bool:
+        return self.total_bytes <= hbm_bytes
+
+    def headroom(self, hbm_bytes: float) -> float:
+        return hbm_bytes - self.total_bytes
+
+    def __str__(self):
+        gb = 1 / 1e9
+        return (f"{self.schedule}: total {self.total_bytes * gb:.2f} GB "
+                f"(weights {self.weight_bytes * gb:.2f} "
+                f"stash {self.stash_bytes * gb:.2f} "
+                f"resid {self.resid_bytes * gb:.2f} "
+                f"work {self.workspace_bytes * gb:.2f} "
+                f"grad {self.grad_bytes * gb:.2f} "
+                f"opt {self.optimizer_bytes * gb:.2f})")
+
+
 def _interval_color(intervals: Iterable[Tuple[int, int]]) -> Tuple[List[int],
                                                                    int]:
     """Greedy slot assignment for [write, read] lifetimes.
@@ -209,6 +250,78 @@ class PipelineSchedule:
         total = 2 * self.n_ticks * self.n_stages
         return 1.0 - busy / total
 
+    # ---- memory model ----------------------------------------------------
+
+    def memory_model(self, spec, plan, hw, *, microbatch_tokens: int,
+                     data_replicas: int = 1) -> MemoryModel:
+        """Analytic worst-device HBM footprint of this schedule.
+
+        Generic accounting: live weights + residual ring + activation
+        workspace + optimizer.  Subclasses override to state their
+        weight-ring / gradient-accumulator terms explicitly (1F1B: stash
+        ring of ``stash_slots`` versions; flush/2bw: ``weight_versions``
+        ring + round-long grad accumulator; interleaved: per-chunk
+        params + the deeper interval-coloured residual ring).
+        """
+        return self._memory_model(
+            spec, plan, hw, microbatch_tokens=microbatch_tokens,
+            data_replicas=data_replicas,
+            weight_ring_slots=self.stash_slots if self.uses_stash_ring
+            else 0,
+            grad_accum=self.accumulate)
+
+    def _memory_model(self, spec, plan, hw, *, microbatch_tokens: int,
+                      data_replicas: int, weight_ring_slots: int,
+                      grad_accum: bool) -> MemoryModel:
+        """Shared accounting, parameterized by the schedule's ring terms.
+
+        Matches the executor's state layout (core/pipeline.py): a stash
+        ring holds ``weight_ring_slots`` full block copies *besides*
+        ``stash['current']``; the residual ring holds ``resid_slots``
+        stage-input activations; flush-family schedules keep one grad
+        accumulator alive across the round; Adam moments are fp32 and
+        ZeRO-1-sharded over the data axis when the plan says so.
+        """
+        from repro.core.profiler import ACT_BYTES
+        from repro.models.spec import _block_params
+
+        S, v = self.n_stages, self.virtual_stages
+        assert plan.pp == S and plan.virtual_stages == v, (
+            "memory_model called with a plan that does not describe this "
+            f"schedule: plan (pp={plan.pp}, v={plan.virtual_stages}) vs "
+            f"schedule (S={S}, v={v})")
+        L = self.n_chunks
+        assert spec.n_layers % L == 0, (spec.n_layers, L)
+        lps = spec.n_layers // L
+        tp = plan.tp
+        # per-physical-stage block params: stage s owns chunks j·S + s
+        stage_params = [0.0] * S
+        for c in range(L):
+            stage_params[c % S] += sum(
+                _block_params(spec, spec.blocks[i])
+                for i in range(c * lps, (c + 1) * lps))
+        blocks = max(stage_params) / tp
+        # embed + head + final norm shard over ("stage", "tensor")
+        shared = (spec.vocab * spec.d_model
+                  * (1 if spec.tie_embeddings else 2) + spec.d_model)
+        shared /= S * tp
+        pb = hw.param_bytes
+        act = microbatch_tokens * spec.d_model * ACT_BYTES
+        # remat keeps ~O(1) layer activations live during the recomputed
+        # backward; without it the whole chunk's activations stay resident
+        workspace = (4.0 if plan.remat else 2.0 * lps + 2.0) * act
+        opt = 2.0 * (blocks + shared) * 4.0          # Adam m, v in fp32
+        if plan.zero1:
+            opt /= max(int(data_replicas), 1)
+        return MemoryModel(
+            schedule=self.name,
+            weight_bytes=(blocks + shared) * pb,
+            stash_bytes=weight_ring_slots * blocks * pb,
+            resid_bytes=self.resid_slots * act,
+            workspace_bytes=workspace,
+            grad_bytes=blocks * pb if grad_accum else 0.0,
+            optimizer_bytes=opt)
+
     # ---- structural self-check -------------------------------------------
 
     def validate(self) -> None:
@@ -322,6 +435,20 @@ class Schedule1F1B(PipelineSchedule):
         """Microbatches between F(m) and B(m) at this stage (incl. current)."""
         return 2 * (self.n_stages - 1 - stage) + 1
 
+    def memory_model(self, spec, plan, hw, *, microbatch_tokens: int,
+                     data_replicas: int = 1) -> MemoryModel:
+        """Stash family: V = 2(S−1)+1 weight versions + residual ring.
+
+        Both policies keep the same ring — ``vertical`` only changes
+        which slot F reads, not how many slots exist.  Per-microbatch
+        updates apply immediately, so there is no round-long gradient
+        accumulator (transient grads ride in the workspace term).
+        """
+        return self._memory_model(
+            spec, plan, hw, microbatch_tokens=microbatch_tokens,
+            data_replicas=data_replicas,
+            weight_ring_slots=self.stash_slots, grad_accum=False)
+
     def steady_state_ticks(self):
         """Tick range in which every stage has both slots busy."""
         lo = 2 * (self.n_stages - 1)
@@ -407,6 +534,23 @@ class ScheduleGPipe(Schedule1F1B):
     def stash_slots(self) -> int:
         return self.weight_versions
 
+    def memory_model(self, spec, plan, hw, *, microbatch_tokens: int,
+                     data_replicas: int = 1) -> MemoryModel:
+        """Flush family: ``weight_versions`` ring + R-bounded residuals.
+
+        weight_versions=1 keeps no ring at all (weights cannot change
+        mid-round); 2BW keeps the double buffer.  Because the flush
+        timing is 1F1B's, in-flight activations are bounded by
+        ``resid_slots`` = 2(S−1)+1 — not the naive GPipe R — and the
+        accumulated gradient stays live for the whole round.
+        """
+        return self._memory_model(
+            spec, plan, hw, microbatch_tokens=microbatch_tokens,
+            data_replicas=data_replicas,
+            weight_ring_slots=(self.weight_versions
+                               if self.uses_stash_ring else 0),
+            grad_accum=True)
+
     def _build_tables(self) -> ScheduleTables:
         tabs = super()._build_tables()
         S, R = self.n_stages, self.n_microbatches
@@ -481,6 +625,22 @@ class ScheduleInterleaved1F1B(PipelineSchedule):
     @property
     def resid_slots(self) -> int:
         return self._layout()[1]
+
+    def memory_model(self, spec, plan, hw, *, microbatch_tokens: int,
+                     data_replicas: int = 1) -> MemoryModel:
+        """Interleaved: per-chunk params, deeper residual ring.
+
+        Each stage holds its v chunks' parameters (same per-stage total
+        as the plain split of the same model over S stages — the win is
+        bubble, not weights) but the residual ring deepens to the
+        interval-coloured ``resid_slots`` (≈ v·S-scale), and flush
+        semantics keep a single weight version plus the round-long grad
+        accumulator.
+        """
+        return self._memory_model(
+            spec, plan, hw, microbatch_tokens=microbatch_tokens,
+            data_replicas=data_replicas,
+            weight_ring_slots=0, grad_accum=True)
 
     def storage_chunk_order(self) -> np.ndarray:
         """chunk id held by each storage row p = s·v + j (length S·v).
@@ -564,6 +724,43 @@ class ScheduleInterleaved1F1B(PipelineSchedule):
             if c == 0:
                 demb[t_b] = m
         return ScheduleTables(fwd, bwd, exit_mb, demb)
+
+
+# ---------------------------------------------------------------------------
+# Time-weighted round walk (shared by benchmarks/simulator and plan_search)
+# ---------------------------------------------------------------------------
+
+def weighted_round_time(sched: PipelineSchedule, t_fwd=1.0, t_bwd=2.0
+                        ) -> Tuple[float, float]:
+    """Wall-clock of one round with per-direction (and per-stage) costs.
+
+    The SPMD engine runs each tick as a synchronized F phase then B
+    phase across all stages, so a tick's F phase costs the *slowest
+    active* stage's forward (0 when no stage forwards — ramp-up/drain
+    ticks are charged only for the direction that actually runs), and a
+    chunk slot costs 1/v of its stage's full pass.  ``t_fwd``/``t_bwd``
+    are scalars or per-physical-stage arrays of full-stage (all-chunk)
+    seconds.
+
+    Returns ``(round_time, weighted_bubble_fraction)`` where the bubble
+    is idle *time* over ``n_stages × round_time`` — unlike the
+    slot-count :attr:`PipelineSchedule.bubble_fraction`, which weights F
+    and B slots equally and charges half-empty ticks in full.
+    """
+    tabs = sched.tables()
+    S, v = sched.n_stages, sched.virtual_stages
+    tf = np.broadcast_to(np.asarray(t_fwd, float), (S,))
+    tb = np.broadcast_to(np.asarray(t_bwd, float), (S,))
+    fbusy = tabs.fwd[:, :, F_MB] >= 0
+    bbusy = tabs.bwd[:, :, B_MB] >= 0
+    f_phase = np.where(fbusy, tf[None, :], 0.0).max(axis=1) / v
+    b_phase = np.where(bbusy, tb[None, :], 0.0).max(axis=1) / v
+    round_time = float(f_phase.sum() + b_phase.sum())
+    if round_time <= 0.0:
+        return 0.0, 0.0
+    busy_time = float((fbusy * (tf[None, :] / v)).sum()
+                      + (bbusy * (tb[None, :] / v)).sum())
+    return round_time, 1.0 - busy_time / (S * round_time)
 
 
 # ---------------------------------------------------------------------------

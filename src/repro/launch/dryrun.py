@@ -25,17 +25,40 @@ import traceback         # noqa: E402
 import jax               # noqa: E402
 
 from repro import configs                         # noqa: E402
+from repro.core import profiler as prof           # noqa: E402
 from repro.launch import roofline as RL           # noqa: E402
 from repro.launch.cell import build_cell          # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 
 
+def _data_replicas(mesh, plan) -> int:
+    return mesh.devices.size // (plan.pp * plan.tp)
+
+
 def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
-             plan=None, note: str = "", verbose: bool = True):
+             plan=None, note: str = "", verbose: bool = True,
+             do_plan_search: bool = False, hw=prof.TPU_V5E):
     mesh_name = "2x16x16" if multi_pod else "16x16"
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
+    if do_plan_search and configs.SHAPES[shape].kind != "train":
+        # the objective (grad accumulator, optimizer bytes, train round
+        # time) is train-only; serving cells keep their config plan
+        print(f"[{arch} × {shape} @ {mesh_name}] plan_search: skipped "
+              f"(train shapes only)")
+        do_plan_search = False
+    if do_plan_search:
+        from repro.runtime.driver import plan_search_report
+        cfg = configs.get(arch)
+        spec, base = cfg.full_spec(), plan or cfg.PLAN
+        sh = configs.SHAPES[shape]
+        choice = plan_search_report(
+            spec, base, hw, seq_len=sh.seq_len,
+            global_batch=sh.global_batch,
+            data_replicas=_data_replicas(mesh, base),
+            prefix=f"[{arch} × {shape} @ {mesh_name}] ")
+        plan = choice.plan
     cell = build_cell(arch, shape, mesh, plan=plan)
     lowered = cell.lower()
     t_lower = time.time() - t0
@@ -45,6 +68,20 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
     mem = compiled.memory_analysis()
     print(f"[{arch} × {shape} @ {mesh_name}] memory_analysis:")
     print(f"  {mem}")
+    if cell.shape.kind == "train":
+        # analytic cross-check of the schedule's footprint vs XLA's
+        dp = _data_replicas(mesh, cell.plan)
+        mm = cell.bundle.sched.memory_model(
+            cell.spec, cell.plan, hw,
+            microbatch_tokens=cell.bundle.microbatch_size
+            * cell.bundle.seq_len,
+            data_replicas=dp)
+        from repro.core.schedule import weighted_round_time
+        _, bubble = weighted_round_time(cell.bundle.sched)
+        print(f"  schedule memory_model (analytic): {mm}")
+        print(f"  predicted weighted bubble: {bubble:.3f} "
+              f"(budget {hw.hbm_bytes / 1e9:.1f} GB -> "
+              f"{'fits' if mm.fits(hw.hbm_bytes) else 'OVER'})")
     from repro.parallel.compat import cost_analysis
     cost = cost_analysis(compiled)
     print(f"[{arch} × {shape} @ {mesh_name}] cost_analysis (stock, "
@@ -91,6 +128,10 @@ def main(argv=None):
                     choices=[None, "1f1b", "gpipe", "interleaved"])
     ap.add_argument("--virtual-stages", type=int, default=None)
     ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--plan-search", action="store_true",
+                    help="let plan_search pick (pp, tp, schedule, "
+                         "virtual_stages) under the HBM budget instead of "
+                         "the config's hand-written plan")
     args = ap.parse_args(argv)
     if args.virtual_stages and args.virtual_stages > 1 \
             and args.schedule != "interleaved":
@@ -122,7 +163,8 @@ def main(argv=None):
             try:
                 run_cell(arch, shape, multi_pod=args.multi_pod,
                          out_dir=args.out, note=args.note,
-                         plan=plan_for(arch))
+                         plan=plan_for(arch),
+                         do_plan_search=args.plan_search)
             except Exception:
                 failures.append((arch, shape))
                 traceback.print_exc()
@@ -134,7 +176,8 @@ def main(argv=None):
 
     assert args.arch and args.shape, "--arch/--shape or --all"
     run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
-             out_dir=args.out, note=args.note, plan=plan_for(args.arch))
+             out_dir=args.out, note=args.note, plan=plan_for(args.arch),
+             do_plan_search=args.plan_search)
 
 
 if __name__ == "__main__":

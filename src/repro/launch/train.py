@@ -38,13 +38,10 @@ def build(args):
     if args.smoke:
         spec = cfg.smoke_spec()
         plan = cfg.SMOKE_PLAN.with_(microbatches=args.microbatches)
-        mesh = make_host_mesh(data=args.data,
-                              model=plan.pp * plan.tp)
         seq_len, global_batch = args.seq_len, args.global_batch
     else:
         spec = cfg.full_spec()
         plan = cfg.PLAN
-        mesh = make_production_mesh(multi_pod=args.multi_pod)
         shape = configs.SHAPES["train_4k"]
         seq_len, global_batch = shape.seq_len, shape.global_batch
     if args.virtual_stages and args.virtual_stages > 1 \
@@ -59,6 +56,20 @@ def build(args):
         plan = plan.with_(**kw)
     if spec.frontend == "vision":
         seq_len = max(seq_len, spec.n_patches + 16)
+    if args.plan_search:
+        from repro.runtime.driver import plan_search_report
+        if args.smoke:
+            dp = args.data
+        else:
+            dp = make_production_mesh(multi_pod=args.multi_pod) \
+                .devices.size // (plan.pp * plan.tp)
+        plan = plan_search_report(spec, plan, seq_len=seq_len,
+                                  global_batch=global_batch,
+                                  data_replicas=dp).plan
+    if args.smoke:
+        mesh = make_host_mesh(data=args.data, model=plan.pp * plan.tp)
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
     dmesh = split_model_axis(mesh, plan.pp, plan.tp)
     name, lr = cfg.OPTIMIZER
     opt = by_name(args.optimizer or name, args.lr or lr)
@@ -83,6 +94,9 @@ def main(argv=None):
                     help="override the plan's pipeline schedule")
     ap.add_argument("--virtual-stages", type=int, default=None,
                     help="model chunks per stage (interleaved schedule)")
+    ap.add_argument("--plan-search", action="store_true",
+                    help="let plan_search pick (pp, tp, schedule, "
+                         "virtual_stages) under the HBM budget")
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--optimizer", type=str, default=None)
     ap.add_argument("--lr", type=float, default=None)
@@ -93,6 +107,12 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     spec, bundle = build(args)
+    from repro.core.schedule import weighted_round_time
+    plan = bundle.plan
+    _, bubble = weighted_round_time(bundle.sched)
+    print(f"plan: pp={plan.pp} tp={plan.tp} schedule={bundle.sched.name}"
+          + (f" v={plan.virtual_stages}" if plan.virtual_stages > 1 else "")
+          + f" R={plan.microbatches} predicted_bubble={bubble:.3f}")
     src = SyntheticLM(spec.vocab, bundle.seq_len
                       - (spec.n_patches if spec.frontend == "vision" else 0))
     extra = vlm_patch_stub(spec.d_model) if spec.frontend == "vision" else None

@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager, reshard_stages
 from repro.core import profiler as prof
-from repro.core.partitioner import partition_rectangular
+from repro.core.partitioner import PlanChoice, plan_search
 
 
 @dataclasses.dataclass
@@ -68,6 +68,10 @@ class TrainDriver:
                 step += 1
                 if step % self.cfg.checkpoint_every == 0:
                     self.ckpt.save(step, state, self.bundle.plan.pp)
+                    # durable progress: a complete checkpoint resets the
+                    # failure budget, so max_restarts bounds *consecutive*
+                    # failures, not sporadic ones over a long run
+                    restarts = 0
             except Exception:
                 restarts += 1
                 if restarts > self.cfg.max_restarts:
@@ -97,55 +101,125 @@ class TrainDriver:
 # --------------------------------------------------------------------------
 
 def elastic_replan(spec, old_plan, new_model_axis: int, hw=prof.TPU_V5E, *,
-                   minibatch_tokens: int, data_replicas: int):
-    """Choose (pp, tp) for a new model-axis size via the partitioner.
+                   minibatch_tokens: int, data_replicas: int,
+                   measured_stage_seconds=None, schedules=None,
+                   hbm_bytes=None) -> Any:
+    """Choose (pp, tp, schedule, virtual_stages) for a new model axis.
 
-    Tries every pp dividing both the axis and the layer count with a valid
-    stage program; scores each with the rectangular DP bottleneck time and
-    returns the best plan.
+    Backed by :func:`~repro.core.partitioner.plan_search`: every
+    candidate is scored by the simulated time-weighted round_time of its
+    schedule tables and rejected when its MemoryModel exceeds the HBM
+    budget — so a shrink event can re-pick the schedule too (e.g.
+    stash → interleaved to trade the now-unaffordable version ring for
+    bubble; the restart is a sync point, so the switch is semantically
+    clean and ``reshard_state_for_plan`` regroups the chunks).
+
+    ``measured_stage_seconds`` (per physical stage of ``old_plan``)
+    calibrates the analytic profile before the search — see
+    :func:`rebalance_from_measurements`.
     """
+    choice = plan_choice(spec, old_plan, new_model_axis, hw,
+                         minibatch_tokens=minibatch_tokens,
+                         data_replicas=data_replicas,
+                         measured_stage_seconds=measured_stage_seconds,
+                         schedules=schedules, hbm_bytes=hbm_bytes)
+    return choice.plan
+
+
+def plan_choice(spec, old_plan, new_model_axis: int, hw=prof.TPU_V5E, *,
+                minibatch_tokens: int, data_replicas: int,
+                measured_stage_seconds=None, schedules=None,
+                hbm_bytes=None) -> PlanChoice:
+    """elastic_replan returning the full scored PlanChoice (round_time,
+    bubble, MemoryModel) — what launch/train and launch/dryrun surface."""
     profiles = prof.profile_analytic(spec, hw,
                                      minibatch_tokens=minibatch_tokens)
-    best = None
-    vstages = getattr(old_plan, "virtual_stages", 1)
-    for pp in range(1, new_model_axis + 1):
-        if new_model_axis % pp or spec.n_layers % (pp * vstages):
-            continue
-        if vstages > 1 and old_plan.microbatches % pp:
-            continue  # interleaved schedule needs R divisible by stages
-        try:
-            spec.stage_program(pp * vstages)
-        except AssertionError:
-            continue
-        tp = new_model_axis // pp
-        if spec.n_heads and spec.n_heads % tp:
-            continue
-        part = partition_rectangular(profiles, max(pp, 1), data_replicas, hw)
-        score = part.bottleneck_time
-        if best is None or score < best[0]:
-            best = (score, pp, tp)
-    assert best is not None, "no feasible plan"
-    _, pp, tp = best
-    return old_plan.with_(pp=pp, tp=tp)
+    if measured_stage_seconds is not None:
+        profiles = prof.scale_profiles_to_measurements(
+            profiles, measured_stage_seconds, n_stages=old_plan.pp,
+            virtual_stages=old_plan.virtual_stages)
+    return plan_search(spec, old_plan, new_model_axis, hw,
+                       minibatch_tokens=minibatch_tokens,
+                       data_replicas=data_replicas, profiles=profiles,
+                       schedules=schedules, hbm_bytes=hbm_bytes)
+
+
+def plan_search_report(spec, base_plan, hw=prof.TPU_V5E, *, seq_len: int,
+                       global_batch: int, data_replicas: int,
+                       prefix: str = "") -> PlanChoice:
+    """Shared launch-entry-point surface: search, print, return.
+
+    Used by launch/train.py and launch/dryrun.py so the microbatch-token
+    derivation and the printed summary stay in sync between them.
+    """
+    mb_tokens = seq_len * max(global_batch // max(data_replicas, 1)
+                              // base_plan.microbatches, 1)
+    choice = plan_choice(spec, base_plan, base_plan.pp * base_plan.tp, hw,
+                         minibatch_tokens=mb_tokens,
+                         data_replicas=data_replicas)
+    print(f"{prefix}plan_search: {choice.describe()}")
+    print(f"{prefix}  predicted {choice.memory}")
+    return choice
+
+
+def _storage_perms(plan):
+    """(to_layer_major, from_layer_major) row-gather indices, or None.
+
+    Interleaved storage row p = s·v + j holds model chunk j·S + s
+    (schedule.storage_chunk_order); layer-major order is what
+    ``reshard_stages`` regroups over.
+    """
+    if plan.virtual_stages == 1:
+        return None
+    order = np.asarray(plan.make_schedule().storage_chunk_order())
+    return np.argsort(order), order
+
+
+def _regroup_chunks(tree, old_plan, new_plan):
+    """Stage-stacked leaves [old_chunks, ...] -> [new_chunks, ...].
+
+    Goes through canonical layer-major chunk order: un-permute the
+    interleaved storage order if the source is interleaved, regroup the
+    stage boundaries, re-permute for an interleaved target.
+    """
+    old_chunks = old_plan.pp * old_plan.virtual_stages
+    new_chunks = new_plan.pp * new_plan.virtual_stages
+    src = _storage_perms(old_plan)
+    if src is not None:
+        tree = jax.tree.map(lambda a: a[src[0]], tree)
+    tree = reshard_stages(tree, old_chunks, new_chunks)
+    dst = _storage_perms(new_plan)
+    if dst is not None:
+        tree = jax.tree.map(lambda a: a[dst[1]], tree)
+    return tree
 
 
 def reshard_state_for_plan(state_host, spec, old_plan, new_plan):
-    """Move a host-side checkpointed state to a new pipeline depth.
+    """Move a host-side checkpointed state to a new pipeline layout.
 
-    Ring sizes and whether a stash ring exists at all come from the
-    target plan's schedule (core/schedule.py) — a flush/interleaved
-    target drops the ring, a 1F1B target rebuilds it at the new
-    2(S−1)+1 size from the current weights (the restart is a sync
-    point, so seeding every version with the live weights is exact).
+    Handles any (pp, virtual_stages) -> (pp', virtual_stages') move —
+    parameters are keyed by global layer, so an interleaved source or
+    target is a storage-order permutation around the same layer-major
+    regroup.  Ring sizes and whether a stash ring exists at all come
+    from the target plan's schedule (core/schedule.py) — a
+    flush/interleaved target drops the ring, a 1F1B target rebuilds it
+    at the new 2(S−1)+1 size from the current weights (the restart is a
+    sync point, so seeding every version with the live weights is
+    exact).
     """
-    if old_plan.virtual_stages == new_plan.virtual_stages \
-            and old_plan.pp == new_plan.pp:
+    old_sched = old_plan.make_schedule()
+    new_sched = new_plan.make_schedule()
+    same_layout = (old_plan.virtual_stages == new_plan.virtual_stages
+                   and old_plan.pp == new_plan.pp)
+    if same_layout and old_sched.uses_stash_ring == new_sched.uses_stash_ring \
+            and old_sched.stash_slots == new_sched.stash_slots:
         return state_host
-    assert old_plan.virtual_stages == 1 and new_plan.virtual_stages == 1, (
-        "elastic reshard from/to an interleaved plan is an open item "
-        "(storage-order chunk regrouping); see ROADMAP")
-    new_stages = reshard_stages(state_host["params"]["stages"],
-                                old_plan.pp, new_plan.pp)
+    # a schedule-only change at the same (pp, v) still falls through: the
+    # state tree's stash ring must be dropped/rebuilt to the new schedule
+    new_chunks = new_plan.pp * new_plan.virtual_stages
+    new_stages = (state_host["params"]["stages"] if same_layout
+                  else _regroup_chunks(state_host["params"]["stages"],
+                                       old_plan, new_plan))
     import jax.numpy as jnp
 
     from repro.models.spec import stage_varying_scalars
@@ -153,17 +227,22 @@ def reshard_state_for_plan(state_host, spec, old_plan, new_plan):
     out = dict(state_host)
     params = dict(state_host["params"])
     params["stages"] = new_stages
-    # windows/thetas re-derive from the spec
-    w, t = stage_varying_scalars(spec, new_plan.pp)
-    params["layer_windows"] = jnp.asarray(w, jnp.int32)
-    params["layer_thetas"] = jnp.asarray(t, jnp.float32)
+    # windows/thetas re-derive from the spec (rows follow storage order)
+    w, t = stage_varying_scalars(spec, new_chunks)
+    w = jnp.asarray(w, jnp.int32)
+    t = jnp.asarray(t, jnp.float32)
+    dst = _storage_perms(new_plan)
+    if dst is not None:
+        w, t = w[dst[1]], t[dst[1]]
+    params["layer_windows"] = w
+    params["layer_thetas"] = t
     out["params"] = params
     # optimizer/stash state: re-group the same way
     out["opt_stages"] = {
-        slot: reshard_stages(sub, old_plan.pp, new_plan.pp)
+        slot: (sub if same_layout
+               else _regroup_chunks(sub, old_plan, new_plan))
         for slot, sub in state_host["opt_stages"].items()}
     out["stash"] = {"current": new_stages}
-    new_sched = new_plan.make_schedule()
     if new_sched.uses_stash_ring:
         out["stash"]["ring"] = jax.tree.map(
             lambda a: jnp.broadcast_to(
@@ -177,13 +256,17 @@ def reshard_state_for_plan(state_host, spec, old_plan, new_plan):
 
 def rebalance_from_measurements(spec, plan, measured_stage_seconds,
                                 hw=prof.TPU_V5E, *, minibatch_tokens: int,
-                                data_replicas: int, slack: float = 1.25):
+                                data_replicas: int, slack: float = 1.25,
+                                schedules=None, hbm_bytes=None):
     """If one stage is >slack× the median (straggler), propose a new plan.
 
-    Returns (new_plan, rebalanced: bool).  With homogeneous stacked stages
-    the lever is the (pp, tp) split — deeper tp shrinks the straggling
-    stage's work; the partitioner arbitrates using measured times scaled
-    into the analytic profile.
+    Returns (new_plan, rebalanced: bool).  The measured per-stage times
+    are scaled into the analytic profile
+    (profiler.scale_profiles_to_measurements) *before* the search — the
+    replanner used to call the purely analytic profile and therefore
+    proposed the same plan regardless of what was measured; now the DP
+    sees the straggler's layers as genuinely slower, so deeper tp (or a
+    different schedule) can shrink the straggling stage's work.
     """
     times = np.asarray(measured_stage_seconds, float)
     med = float(np.median(times))
@@ -191,8 +274,40 @@ def rebalance_from_measurements(spec, plan, measured_stage_seconds,
         return plan, False
     new_plan = elastic_replan(spec, plan, plan.pp * plan.tp, hw,
                               minibatch_tokens=minibatch_tokens,
-                              data_replicas=data_replicas)
-    if (new_plan.pp, new_plan.tp) == (plan.pp, plan.tp) and plan.pp > 1:
-        # fall back: halve pipeline depth, double tensor parallelism
-        new_plan = plan.with_(pp=plan.pp // 2, tp=plan.tp * 2)
+                              data_replicas=data_replicas,
+                              measured_stage_seconds=measured_stage_seconds,
+                              schedules=schedules, hbm_bytes=hbm_bytes)
+    same = ((new_plan.pp, new_plan.tp, new_plan.virtual_stages)
+            == (plan.pp, plan.tp, plan.virtual_stages)
+            and new_plan.make_schedule().name == plan.make_schedule().name)
+    if same and plan.pp > 1:
+        # fall back: halve pipeline depth, double tensor parallelism —
+        # but only if that plan would survive plan_search's own checks
+        fb = plan.with_(pp=plan.pp // 2, tp=plan.tp * 2)
+        if _plan_is_buildable(spec, fb, hw,
+                              minibatch_tokens=minibatch_tokens,
+                              data_replicas=data_replicas,
+                              hbm_bytes=hbm_bytes):
+            new_plan = fb
     return new_plan, True
+
+
+def _plan_is_buildable(spec, plan, hw, *, minibatch_tokens: int,
+                       data_replicas: int, hbm_bytes=None) -> bool:
+    """Structural + HBM feasibility, mirroring plan_search's filters."""
+    n_chunks = plan.pp * plan.virtual_stages
+    if spec.n_layers % n_chunks:
+        return False
+    if spec.n_heads and spec.n_heads % plan.tp:
+        return False
+    if plan.virtual_stages > 1 and plan.microbatches % plan.pp:
+        return False
+    try:
+        spec.stage_program(n_chunks)
+    except AssertionError:
+        return False
+    mm = plan.make_schedule().memory_model(
+        spec, plan, hw, microbatch_tokens=minibatch_tokens,
+        data_replicas=data_replicas)
+    budget = hw.hbm_bytes if hbm_bytes is None else hbm_bytes
+    return mm.fits(budget)

@@ -130,3 +130,86 @@ def test_reshard_stages_preserves_global_layers():
     a = np.asarray(stages["layer_1"]["mlp"]["w1"][1])
     b = np.asarray(re4["layer_0"]["mlp"]["w1"][3])
     np.testing.assert_array_equal(a, b)
+
+
+def test_restart_budget_resets_on_checkpoint(tmp_path):
+    """max_restarts bounds CONSECUTIVE failures, not sporadic ones: three
+    spread-out faults with successful checkpoints between them must not
+    abort a run whose budget is two (the counter resets on each complete
+    checkpoint — seed bug: it never reset, so any long run died)."""
+    faults = {2, 5, 9}
+
+    def hook(step):
+        if step in faults:
+            faults.discard(step)
+            raise RuntimeError("sporadic failure")
+
+    bundle, driver, state = _driver_setup(tmp_path, failure_hook=hook,
+                                          steps_between_ckpt=2)
+    driver.cfg.max_restarts = 2
+    state, step = driver.run(state, 12)
+    assert step == 12
+    assert not faults          # every fault actually fired once
+
+
+def test_reshard_state_interleaved_roundtrip():
+    """stash pp=2 -> interleaved pp=2 v=2 -> back: every global layer's
+    params/opt survive the storage-order chunk regrouping (the restart
+    sync point makes the schedule switch exact)."""
+    from repro.core.schedule import ScheduleInterleaved1F1B
+    from repro.runtime.driver import reshard_state_for_plan
+
+    spec, plan, state = _tiny_state(pp=2)
+    inter = plan.with_(pp=2, tp=1, schedule="interleaved",
+                       stash_mode="flush", virtual_stages=2)
+    host = jax.device_get(state)
+    fwd = reshard_state_for_plan(host, spec, plan, inter)
+    # storage row p = s*v + j holds model chunk j*S + s: with 4 chunks of
+    # 1 layer each, rows hold global layers [0, 2, 1, 3]
+    order = ScheduleInterleaved1F1B(2, 2, virtual_stages=2) \
+        .storage_chunk_order()
+    assert list(order) == [0, 2, 1, 3]
+    src = np.asarray(host["params"]["stages"]["layer_1"]["mlp"]["w1"][0])
+    dst = np.asarray(fwd["params"]["stages"]["layer_0"]["mlp"]["w1"][2])
+    np.testing.assert_array_equal(src, dst)   # global layer 1 -> row 2
+    # interleaved target is flush-family: the stash ring is dropped
+    assert "ring" not in fwd["stash"]
+    back = reshard_state_for_plan(fwd, spec, inter, plan)
+    for key in ("params", "opt_stages"):
+        for (pa, a), (pb, b) in zip(
+                jax.tree_util.tree_leaves_with_path(host[key]),
+                jax.tree_util.tree_leaves_with_path(back[key])):
+            assert pa == pb
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the 1F1B target rebuilds its ring seeded with the live weights
+    assert "ring" in back["stash"]
+    ring = back["stash"]["ring"]["layer_0"]["mlp"]["w1"]
+    assert ring.shape[0] == plan.make_schedule().stash_slots
+    np.testing.assert_array_equal(
+        np.asarray(ring[0]),
+        np.asarray(back["params"]["stages"]["layer_0"]["mlp"]["w1"]))
+
+
+def test_reshard_schedule_only_change_rebuilds_ring():
+    """plan_search can flip the schedule at the SAME (pp, v) — e.g.
+    stash -> flush to shed the version ring under a tight HBM budget.
+    The reshard must drop/rebuild the ring even though no layer moves
+    (review catch: the old early-return kept the ring, mismatching the
+    new bundle's state template)."""
+    from repro.runtime.driver import reshard_state_for_plan
+
+    spec, plan, state = _tiny_state(pp=2)          # stash family: has ring
+    host = jax.device_get(state)
+    assert "ring" in host["stash"]
+    flush = plan.with_(stash_mode="flush")
+    out = reshard_state_for_plan(host, spec, plan, flush)
+    assert "ring" not in out["stash"]
+    np.testing.assert_array_equal(
+        np.asarray(out["params"]["stages"]["layer_0"]["mlp"]["w1"]),
+        np.asarray(host["params"]["stages"]["layer_0"]["mlp"]["w1"]))
+    back = reshard_state_for_plan(out, spec, flush, plan)
+    ring = back["stash"]["ring"]["layer_0"]["mlp"]["w1"]
+    assert ring.shape[0] == plan.make_schedule().stash_slots
+    # identical ring layout (stash <-> vertical share it): true no-op
+    vert = plan.with_(stash_mode="vertical")
+    assert reshard_state_for_plan(host, spec, plan, vert) is host

@@ -1,0 +1,330 @@
+"""Schedule-aware, memory-aware planner (PipeDream-2BW/BaPipe-style).
+
+Covers the ISSUE-2 acceptance criteria:
+  * memory_model golden values for all three schedules vs hand-computed
+    ring sizes;
+  * the time-weighted simulator round_time (ramp ticks charged only for
+    the direction that runs; per-stage heterogeneous costs);
+  * plan_search rejects over-HBM-budget candidates and prefers
+    interleaved at S >= 3 / v >= 2 on the same (S, R);
+  * rebalance_from_measurements provably responds to
+    measured_stage_seconds — the plan flips only when measurements are
+    injected (the replanner used to ignore them entirely).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import profiler as prof
+from repro.core.partitioner import plan_search
+from repro.core.schedule import (Schedule1F1B, ScheduleGPipe,
+                                 ScheduleInterleaved1F1B,
+                                 weighted_round_time)
+from repro.models import spec as S
+from repro.models.spec import _block_params
+from repro.parallel.mesh import ParallelismPlan
+from repro.runtime.driver import (elastic_replan,
+                                  rebalance_from_measurements)
+
+
+def mk_spec(n_layers=8, heads=4, d_model=256, d_ff=1024, vocab=1024):
+    blocks = tuple(S.BlockSpec(mixer="attn", ffn="dense")
+                   for _ in range(n_layers))
+    return S.ModelSpec(name="t", d_model=d_model, n_layers=n_layers,
+                       n_heads=heads, n_kv=heads,
+                       d_head=max(d_model // heads, 8), d_ff=d_ff,
+                       vocab=vocab, blocks=blocks, norm="rmsnorm",
+                       act="silu")
+
+
+HW = dataclasses.replace(prof.TPU_V5E, hbm_bytes=1e18)
+MB_TOKENS = 512
+
+
+def _hand_terms(spec, plan):
+    """The hand-computed building blocks the goldens are stated in."""
+    n_chunks = plan.pp * plan.virtual_stages
+    lps = spec.n_layers // n_chunks
+    p_blk = _block_params(spec, spec.blocks[0])
+    blocks = plan.virtual_stages * lps * p_blk / plan.tp   # per stage
+    shared = (2 * spec.vocab * spec.d_model + spec.d_model) \
+        / (plan.pp * plan.tp)
+    act = MB_TOKENS * spec.d_model * prof.ACT_BYTES
+    return blocks, shared, act
+
+
+# ---------------------------------------------------------------------------
+# memory_model goldens
+# ---------------------------------------------------------------------------
+
+def test_memory_model_1f1b_golden():
+    """Stash family: V = 2(S-1)+1 weight versions + same-depth residual
+    ring; no round-long grad accumulator."""
+    spec = mk_spec()
+    plan = ParallelismPlan(pp=4, tp=1, microbatches=8, stash_mode="stash")
+    sched = plan.make_schedule()
+    assert isinstance(sched, Schedule1F1B)
+    mm = sched.memory_model(spec, plan, HW, microbatch_tokens=MB_TOKENS)
+    blocks, shared, act = _hand_terms(spec, plan)
+    pb = HW.param_bytes
+    assert mm.weight_bytes == pytest.approx((blocks + shared) * pb)
+    assert mm.stash_bytes == pytest.approx(7 * blocks * pb)       # 2(S-1)+1
+    assert mm.resid_bytes == pytest.approx(7 * act)
+    assert mm.grad_bytes == 0.0
+    # vertical sync shares the exact same ring
+    vplan = plan.with_(stash_mode="vertical")
+    vm = vplan.make_schedule().memory_model(spec, vplan, HW,
+                                            microbatch_tokens=MB_TOKENS)
+    assert vm.stash_bytes == mm.stash_bytes
+    assert vm.total_bytes == mm.total_bytes
+
+
+def test_memory_model_gpipe_golden():
+    """Flush: no ring at weight_versions=1 but a round-long grad
+    accumulator; 2BW keeps exactly the double buffer.  In-flight
+    residuals are 1F1B-timing-bounded (2(S-1)+1), not the naive R."""
+    spec = mk_spec()
+    plan = ParallelismPlan(pp=4, tp=1, microbatches=32, stash_mode="flush")
+    sched = plan.make_schedule()
+    assert isinstance(sched, ScheduleGPipe)
+    mm = sched.memory_model(spec, plan, HW, microbatch_tokens=MB_TOKENS)
+    blocks, shared, act = _hand_terms(spec, plan)
+    pb = HW.param_bytes
+    assert mm.stash_bytes == 0.0
+    assert mm.grad_bytes == pytest.approx(blocks * pb)
+    assert mm.resid_bytes == pytest.approx(7 * act)   # NOT 32 × act
+    plan2 = plan.with_(stash_mode="2bw")
+    m2 = plan2.make_schedule().memory_model(spec, plan2, HW,
+                                            microbatch_tokens=MB_TOKENS)
+    assert m2.stash_bytes == pytest.approx(2 * blocks * pb)
+
+
+def test_memory_model_interleaved_golden():
+    """Interleaved: same per-stage weight total as the plain S-way split
+    (chunks are extra *cuts*, not extra copies), flush-family grad
+    accumulator, and a strictly deeper residual ring."""
+    spec = mk_spec(n_layers=12)
+    plan = ParallelismPlan(pp=3, tp=1, microbatches=6, stash_mode="flush",
+                           schedule="interleaved", virtual_stages=2)
+    sched = plan.make_schedule()
+    assert isinstance(sched, ScheduleInterleaved1F1B)
+    mm = sched.memory_model(spec, plan, HW, microbatch_tokens=MB_TOKENS)
+    blocks, shared, act = _hand_terms(spec, plan)
+    pb = HW.param_bytes
+    assert mm.weight_bytes == pytest.approx((blocks + shared) * pb)
+    plain = ParallelismPlan(pp=3, tp=1, microbatches=6, stash_mode="flush")
+    pm = plain.make_schedule().memory_model(spec, plain, HW,
+                                            microbatch_tokens=MB_TOKENS)
+    assert mm.weight_bytes == pytest.approx(pm.weight_bytes)
+    assert mm.stash_bytes == 0.0
+    assert mm.grad_bytes == pytest.approx(blocks * pb)
+    # the interval-coloured ring is deeper than the plain 2(S-1)+1
+    assert sched.resid_slots > 2 * (plan.pp - 1) + 1
+    assert mm.resid_bytes == pytest.approx(sched.resid_slots * act)
+    assert mm.resid_bytes > pm.resid_bytes
+
+
+def test_memory_model_zero1_and_tp_sharding():
+    spec = mk_spec()
+    plan = ParallelismPlan(pp=2, tp=2, microbatches=4, stash_mode="flush",
+                           zero1=True)
+    sched = plan.make_schedule()
+    m1 = sched.memory_model(spec, plan, HW, microbatch_tokens=MB_TOKENS,
+                            data_replicas=1)
+    m8 = sched.memory_model(spec, plan, HW, microbatch_tokens=MB_TOKENS,
+                            data_replicas=8)
+    assert m8.optimizer_bytes == pytest.approx(m1.optimizer_bytes / 8)
+    noz = plan.with_(zero1=False)
+    mn = noz.make_schedule().memory_model(spec, noz, HW,
+                                          microbatch_tokens=MB_TOKENS,
+                                          data_replicas=8)
+    assert mn.optimizer_bytes == pytest.approx(m1.optimizer_bytes)
+    # doubling tp halves the per-device block weights
+    wide = ParallelismPlan(pp=2, tp=4, microbatches=4, stash_mode="flush")
+    mw = wide.make_schedule().memory_model(spec, wide, HW,
+                                           microbatch_tokens=MB_TOKENS)
+    b2, _, _ = _hand_terms(spec, plan)
+    b4, _, _ = _hand_terms(spec, wide)
+    assert b4 == pytest.approx(b2 / 2)
+    assert mw.grad_bytes == pytest.approx(m1.grad_bytes / 2)
+
+
+def test_memory_model_rejects_mismatched_plan():
+    spec = mk_spec()
+    plan = ParallelismPlan(pp=4, tp=1, microbatches=8)
+    sched = Schedule1F1B(2, 8)    # S=2 schedule, pp=4 plan
+    with pytest.raises(AssertionError):
+        sched.memory_model(spec, plan, HW, microbatch_tokens=MB_TOKENS)
+
+
+# ---------------------------------------------------------------------------
+# time-weighted round_time
+# ---------------------------------------------------------------------------
+
+def test_weighted_round_time_1f1b_closed_form():
+    """Ramp/drain ticks run only one direction: F is busy somewhere for
+    R+S-1 ticks and likewise B, so the round costs (R+S-1)(t_f+t_b) —
+    not n_ticks(t_f+t_b) = (R+2S-2)(t_f+t_b)."""
+    for s, r in [(1, 4), (2, 4), (4, 8), (5, 13)]:
+        sched = Schedule1F1B(s, r)
+        rt, bub = weighted_round_time(sched, 1.0, 2.0)
+        assert rt == pytest.approx((r + s - 1) * 3.0)
+        assert bub == pytest.approx(1.0 - r / (r + s - 1))
+        # the slot-count bubble over-charges relative to the weighted one
+        assert bub <= sched.bubble_fraction + 1e-12
+
+
+def test_weighted_round_time_per_stage_straggler():
+    sched = Schedule1F1B(4, 8)
+    base, _ = weighted_round_time(sched, [1.0] * 4, [2.0] * 4)
+    slow, _ = weighted_round_time(sched, [1.0, 1.0, 2.0, 1.0],
+                                  [2.0, 2.0, 4.0, 1.0])
+    assert base == pytest.approx((8 + 3) * 3.0)
+    assert slow > base
+    # a stage that is busy every steady tick bounds the round from below
+    assert slow >= 8 * 6.0    # R × straggler (F+B) work
+
+
+def test_simulator_reports_both_bubbles():
+    from benchmarks.simulator import simulate_schedule
+    sched = ScheduleInterleaved1F1B(4, 8, virtual_stages=2)
+    sim = simulate_schedule(sched)
+    assert sim.bubble_fraction == pytest.approx(sched.bubble_fraction)
+    assert sim.weighted_bubble_fraction < sim.bubble_fraction
+    rt, bub = weighted_round_time(sched)
+    assert sim.round_time == pytest.approx(rt)
+    assert sim.weighted_bubble_fraction == pytest.approx(bub)
+
+
+# ---------------------------------------------------------------------------
+# plan_search
+# ---------------------------------------------------------------------------
+
+def test_plan_search_prefers_interleaved_at_depth():
+    """Acceptance: S >= 3, v >= 2 -> interleaved beats plain 1F1B on the
+    same (S, R).  heads=3 pins tp=1, so pp=4 is the only split."""
+    spec = mk_spec(n_layers=8, heads=3, d_model=192)
+    base = ParallelismPlan(pp=4, tp=1, microbatches=8, stash_mode="stash")
+    cands = plan_search(spec, base, 4, HW, minibatch_tokens=MB_TOKENS,
+                        data_replicas=1, return_all=True)
+    assert all(c.plan.pp == 4 for c in cands)
+    best = cands[0]
+    assert best.plan.schedule == "interleaved"
+    assert best.plan.virtual_stages >= 2
+    plain = [c for c in cands if c.plan.schedule == "1f1b"]
+    assert plain and best.round_time < min(c.round_time for c in plain)
+    # chosen plan is actually constructible
+    best.plan.make_schedule().validate()
+
+
+def test_plan_search_enforces_hbm_budget():
+    """The fastest candidate must lose to a feasible one when it does
+    not fit; an impossible budget raises instead of returning garbage."""
+    spec = mk_spec(n_layers=8, heads=16, d_model=2048, d_ff=8192,
+                   vocab=32000)
+    base = ParallelismPlan(pp=4, tp=1, microbatches=8, stash_mode="stash")
+    roomy = plan_search(spec, base, 4, HW, minibatch_tokens=4096,
+                        data_replicas=1, schedules=("1f1b",))
+    assert roomy.plan.pp == 4          # fastest round wins unconstrained
+    assert roomy.feasible
+    # 1f1b@pp4 needs ~3.7 GB (7-slot stash ring); 2.3 GB only fits pp=1
+    tight = plan_search(spec, base, 4, HW, minibatch_tokens=4096,
+                        data_replicas=1, schedules=("1f1b",),
+                        hbm_bytes=2.3e9)
+    assert tight.plan.pp == 1
+    assert tight.memory.total_bytes <= 2.3e9
+    assert tight.round_time > roomy.round_time   # paid time for memory
+    with pytest.raises(AssertionError):
+        plan_search(spec, base, 4, HW, minibatch_tokens=4096,
+                    data_replicas=1, schedules=("1f1b",), hbm_bytes=1e8)
+
+
+def test_plan_search_candidates_respect_structure():
+    spec = mk_spec(n_layers=8, heads=4)
+    base = ParallelismPlan(pp=4, tp=1, microbatches=8, stash_mode="stash")
+    cands = plan_search(spec, base, 4, HW, minibatch_tokens=MB_TOKENS,
+                        data_replicas=1, return_all=True)
+    for c in cands:
+        plan = c.plan
+        assert plan.pp * plan.tp == 4
+        assert spec.n_layers % (plan.pp * plan.virtual_stages) == 0
+        assert spec.n_heads % plan.tp == 0
+        if plan.schedule == "interleaved":
+            assert plan.microbatches % plan.pp == 0
+            assert plan.stash_mode == "flush"
+        plan.make_schedule().validate()
+    # ranked by round_time (ties broken deterministically)
+    rts = [c.round_time for c in cands]
+    assert rts == sorted(rts)
+
+
+# ---------------------------------------------------------------------------
+# measured-profile rebalance (the replanner bugfix)
+# ---------------------------------------------------------------------------
+
+def test_scale_profiles_to_measurements():
+    spec = mk_spec()
+    profiles = prof.profile_analytic(spec, HW, minibatch_tokens=MB_TOKENS)
+    spans = prof.profile_stage_spans(len(profiles), 4)
+    predicted = [sum(profiles[i].t_total for i in span) for span in spans]
+    # measurements proportional to the prediction carry no information:
+    # the scaled profile is the original (median-normalized ratios)
+    even = prof.scale_profiles_to_measurements(
+        profiles, [3.0 * p for p in predicted], n_stages=4)
+    for a, b in zip(profiles, even):
+        assert b.t_total == pytest.approx(a.t_total)
+    # a 2× straggler on stage 3 scales exactly its layers (incl. head)
+    meas = list(predicted)
+    meas[3] *= 2.0
+    skew = prof.scale_profiles_to_measurements(profiles, meas, n_stages=4)
+    assert skew[1].t_total == pytest.approx(profiles[1].t_total)
+    assert skew[-1].t_total == pytest.approx(2 * profiles[-1].t_total)
+    assert skew[-2].t_total == pytest.approx(2 * profiles[-2].t_total)
+
+
+def test_rebalance_responds_to_measurements():
+    """Acceptance: the plan flips ONLY when measurements are injected.
+
+    On a fat-link cluster the analytic profile keeps the deep pure
+    pipeline; a 2× straggler makes its layers genuinely slower, and the
+    search flips to pp=2 × tp=2 — deeper tensor parallelism shrinks the
+    straggling stage's work, which is exactly what the docstring always
+    promised and the old code never did (it ignored
+    measured_stage_seconds and re-ran the same analytic search)."""
+    spec = mk_spec()
+    hw = dataclasses.replace(prof.TPU_V5E, link_bw=1e11, hbm_bytes=1e18)
+    plan = ParallelismPlan(pp=4, tp=1, microbatches=8, stash_mode="stash")
+    kw = dict(minibatch_tokens=4096, data_replicas=1)
+    analytic = elastic_replan(spec, plan, 4, hw, **kw)
+    assert (analytic.pp, analytic.tp) == (4, 1)
+    measured = elastic_replan(spec, plan, 4, hw,
+                              measured_stage_seconds=[1.0, 1.0, 1.0, 2.0],
+                              **kw)
+    assert (measured.pp, measured.tp) == (2, 2)
+    # the full rebalance entry point: no-op on even times, flips on skew
+    p, changed = rebalance_from_measurements(spec, plan,
+                                             [1.0, 1.0, 1.0, 1.0], hw, **kw)
+    assert not changed and p == plan
+    p, changed = rebalance_from_measurements(spec, plan,
+                                             [1.0, 1.0, 1.0, 2.0], hw, **kw)
+    assert changed
+    assert (p.pp, p.tp) == (2, 2)
+
+
+def test_rebalance_can_switch_schedule():
+    """On a thin link the straggler does not justify more tp (all-reduce
+    too expensive) — the search instead re-picks the schedule at the
+    same (pp, tp), trading the stash ring for interleaved bubble; the
+    legacy halve-pp fallback must NOT clobber a schedule-only change."""
+    spec = mk_spec()
+    hw = dataclasses.replace(prof.TPU_V5E, link_bw=2e9, hbm_bytes=1e18)
+    plan = ParallelismPlan(pp=4, tp=1, microbatches=8, stash_mode="stash")
+    kw = dict(minibatch_tokens=4096, data_replicas=1)
+    analytic = elastic_replan(spec, plan, 4, hw, **kw)
+    assert analytic.schedule == "1f1b"
+    p, changed = rebalance_from_measurements(spec, plan,
+                                             [1.0, 1.0, 1.0, 2.0], hw, **kw)
+    assert changed
+    assert (p.pp, p.tp) == (4, 1)
+    assert p.schedule == "interleaved" and p.virtual_stages >= 2
