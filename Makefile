@@ -1,5 +1,5 @@
 # Convenience entry points matching the ROADMAP commands.
-.PHONY: tier1 tier1-full bench plan-smoke
+.PHONY: tier1 tier1-full bench plan-smoke docs-check
 
 tier1:
 	scripts/tier1.sh
@@ -12,3 +12,6 @@ bench:
 
 plan-smoke:
 	python scripts/plan_smoke.py
+
+docs-check:
+	python scripts/docs_check.py

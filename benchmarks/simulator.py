@@ -77,7 +77,10 @@ def simulate_schedule(sched: PipelineSchedule, *, t_fwd=1.0,
     ``weighted_bubble_fraction`` is the idle-time analogue.  The
     planner ranks schedules by ``round_time``: for v >= 2 (S >= 2) the
     interleaved round is strictly shorter than plain 1F1B's for the
-    same (S, R).
+    same (S, R).  ``interleaved`` and ``interleaved_async`` share
+    timing tables, so they tie here exactly — the planner separates
+    them on the memory model (per-chunk version rings vs the round-long
+    grad accumulator), not on time.
     """
     tabs = sched.tables()
     S, R, v = sched.n_stages, sched.n_microbatches, sched.virtual_stages

@@ -1,0 +1,163 @@
+#!/usr/bin/env python
+"""docs-check: every code reference in docs/*.md must resolve.
+
+CI gate (scripts/tier1.sh / `make docs-check`) against documentation
+rot: scans `docs/*.md` and `README.md` for
+
+  * symbol references — ``path/to/file.py::Symbol`` (optionally
+    ``::Class.method``): the file must exist and the symbol must be
+    defined in it (``def``/``class``, a module-level assignment, a
+    dataclass field, or a quoted registry key);
+  * bare path references — `` `path/to/file.py` `` (also .sh/.md/.ini):
+    the file must exist.
+
+Paths resolve relative to the repo root, with `src/repro/` tried as a
+fallback prefix so docs can say ``core/schedule.py`` the way the code
+comments do.  Renamed or deleted symbols fail fast, pointing at the doc
+line that went stale.
+
+Exit status: 0 clean, 1 with a listing of every unresolved reference.
+"""
+import ast
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SYM_RE = re.compile(r"([A-Za-z0-9_./-]+\.(?:py|sh))::([A-Za-z0-9_.]+)")
+PATH_RE = re.compile(r"`([A-Za-z0-9_./-]+\.(?:py|sh|md|ini))`")
+
+
+def resolve(path: str):
+    """Repo-relative path, trying the src/repro/ prefix as a fallback."""
+    for cand in (path, os.path.join("src", "repro", path)):
+        full = os.path.join(ROOT, cand)
+        if os.path.isfile(full):
+            return full
+    return None
+
+
+def _names(nodes):
+    """Def/class names and assignment targets of one statement list."""
+    out = set()
+    for node in nodes:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            out.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                elts = t.elts if isinstance(t, ast.Tuple) else [t]
+                out.update(e.id for e in elts if isinstance(e, ast.Name))
+        elif isinstance(node, ast.AnnAssign) and \
+                isinstance(node.target, ast.Name):
+            out.add(node.target.id)
+    return out
+
+
+def _module_scopes(source: str):
+    """(module names, {class: (members, bases)}, dict-literal keys)."""
+    tree = ast.parse(source)
+    classes = {}
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef):
+            bases = {b.id for b in node.bases if isinstance(b, ast.Name)}
+            classes[node.name] = (_names(node.body), bases)
+    dict_keys = {k.value for node in ast.walk(tree)
+                 if isinstance(node, ast.Dict) for k in node.keys
+                 if isinstance(k, ast.Constant) and isinstance(k.value, str)}
+    return _names(tree.body), classes, dict_keys
+
+
+def _class_member(classes, cls: str, member: str) -> bool:
+    """Member defined on the class or (module-locally) inherited."""
+    seen = set()
+    stack = [cls]
+    while stack:
+        c = stack.pop()
+        if c in seen or c not in classes:
+            continue
+        seen.add(c)
+        members, bases = classes[c]
+        if member in members:
+            return True
+        stack.extend(bases)
+    return False
+
+
+def symbol_defined(source: str, symbol: str) -> bool:
+    """True when the reference resolves to a real definition.
+
+    Scoping comes from the AST, so function-local variables never
+    satisfy a reference.  ``Class.member`` requires the member to be
+    defined on that class (or a base class in the same module) — a
+    method renamed on the class fails even if the name survives
+    elsewhere in the file.  Bare symbols accept a module-level
+    def/class/assignment, a member of any class, or a dict-literal key
+    (registry names like ``SCHEDULES["interleaved_async"]``) — NOT an
+    arbitrary quoted string, so a renamed key is not shielded by stale
+    mentions in error messages.
+    """
+    top, classes, dict_keys = _module_scopes(source)
+    parts = symbol.split(".")
+    if len(parts) == 2:
+        return _class_member(classes, parts[0], parts[1])
+    return (symbol in top or symbol in dict_keys
+            or any(symbol in members for members, _ in classes.values()))
+
+
+def check_file(md_path: str):
+    failures = []
+    rel = os.path.relpath(md_path, ROOT)
+    with open(md_path) as f:
+        lines = f.read().splitlines()
+    for ln, line in enumerate(lines, 1):
+        seen_spans = []
+        for m in SYM_RE.finditer(line):
+            seen_spans.append(m.span(1))
+            path, sym = m.group(1), m.group(2)
+            full = resolve(path)
+            if full is None:
+                failures.append(f"{rel}:{ln}: no such file: {path}")
+                continue
+            if full.endswith(".py"):
+                with open(full) as src:
+                    if not symbol_defined(src.read(), sym):
+                        failures.append(
+                            f"{rel}:{ln}: {path} has no symbol {sym!r}")
+        for m in PATH_RE.finditer(line):
+            if any(a <= m.start(1) < b for a, b in seen_spans):
+                continue        # already checked as a ::symbol ref
+            if resolve(m.group(1)) is None:
+                failures.append(
+                    f"{rel}:{ln}: no such file: {m.group(1)}")
+    return failures
+
+
+def main() -> int:
+    docs_dir = os.path.join(ROOT, "docs")
+    targets = [os.path.join(ROOT, "README.md")]
+    if os.path.isdir(docs_dir):
+        targets += sorted(os.path.join(docs_dir, f)
+                          for f in os.listdir(docs_dir)
+                          if f.endswith(".md"))
+    targets = [t for t in targets if os.path.isfile(t)]
+    assert targets, "docs-check found nothing to check"
+    failures = []
+    n_refs = 0
+    for t in targets:
+        with open(t) as f:
+            text = f.read()
+        n_refs += len(SYM_RE.findall(text)) + len(PATH_RE.findall(text))
+        failures.extend(check_file(t))
+    if failures:
+        print("DOCS CHECK FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"docs check OK ({len(targets)} files, {n_refs} references)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,8 +2,11 @@
 # Tier-1 verify (ROADMAP): fast default selection, bounded time.
 #   scripts/tier1.sh            # fast set (pytest.ini deselects -m slow)
 #   scripts/tier1.sh --full     # everything, including the slow SPMD matrix
-# Both variants first run the plan_search smoke (scripts/plan_smoke.py):
-# the chosen plan for qwen3 + olmoe must fit the config's HBM budget.
+# Both variants first run the plan_search smoke (scripts/plan_smoke.py)
+# — the chosen plan for qwen3 + olmoe must fit the config's HBM budget —
+# and the docs-check gate (scripts/docs_check.py): every
+# `path.py::symbol` reference in docs/*.md + README.md must resolve
+# against the source tree, so renamed symbols fail fast.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -13,4 +16,5 @@ if [[ "${1:-}" == "--full" ]]; then
     ARGS+=(-m "")
 fi
 python scripts/plan_smoke.py
+python scripts/docs_check.py
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest "${ARGS[@]}" "$@"

@@ -24,7 +24,8 @@ import numpy as np
 from repro.core.profiler import (Hardware, LayerProfile,
                                  comm_time_activations, comm_time_tp_allreduce,
                                  comm_time_weight_sync, profile_analytic)
-from repro.core.schedule import (MemoryModel, make_schedule, paper_noam,
+from repro.core.schedule import (SCHEDULES, MemoryModel, make_schedule,
+                                 paper_noam, plan_kwargs_for_schedule,
                                  weighted_round_time)
 
 
@@ -321,18 +322,15 @@ class PlanChoice:
 
 
 def _candidate_plan(base_plan, pp: int, tp: int, name: str, v: int):
-    """base_plan rewritten to one (pp, tp, schedule, v) candidate."""
-    kw = dict(pp=pp, tp=tp, schedule=name, virtual_stages=1)
-    if name == "1f1b":
-        if base_plan.stash_mode not in ("stash", "vertical"):
-            kw["stash_mode"] = "stash"
-    elif name == "gpipe":
-        if base_plan.stash_mode not in ("flush", "2bw"):
-            kw["stash_mode"] = "flush"
-    elif name == "interleaved":
-        kw["stash_mode"] = "flush"
-        kw["virtual_stages"] = v
-    return base_plan.with_(**kw)
+    """base_plan rewritten to one (pp, tp, schedule, v) candidate.
+
+    The schedule -> (stash_mode, virtual_stages) policy lives on the
+    registry classes (core.schedule.plan_kwargs_for_schedule), so a
+    newly registered schedule is picked up here without edits.
+    """
+    kw = plan_kwargs_for_schedule(name, virtual_stages=v,
+                                  stash_mode=base_plan.stash_mode)
+    return base_plan.with_(pp=pp, tp=tp, **kw)
 
 
 def stage_phase_times(profiles: Sequence[LayerProfile], part: Partition,
@@ -397,7 +395,8 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
     budget = float(hw.hbm_bytes if hbm_bytes is None else hbm_bytes)
     R = base_plan.microbatches
     names = tuple(schedules) if schedules else ("1f1b", "gpipe",
-                                                "interleaved")
+                                                "interleaved",
+                                                "interleaved_async")
     base_name = make_schedule(base_plan).name
     cands: List[PlanChoice] = []
     parts: dict = {}        # n_chunks -> Partition (schedule-independent)
@@ -409,13 +408,18 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
         if spec.n_heads and spec.n_heads % tp:
             continue
         for name in names:
-            vs = ((1,) if name != "interleaved"
-                  else tuple(range(2, max_virtual_stages + 1)))
+            cls = SCHEDULES.get(name)
+            assert cls is not None, (
+                f"unknown schedule {name!r}; registered: "
+                f"{sorted(SCHEDULES)}")
+            vs = (tuple(range(2, max_virtual_stages + 1))
+                  if cls.takes_virtual_stages else (1,))
             for v in vs:
                 n_chunks = pp * v
                 if spec.n_layers % n_chunks:
                     continue
-                if name == "interleaved" and R % pp:
+                # interleaved family: microbatch groups need R % S == 0
+                if cls.takes_virtual_stages and R % pp:
                     continue
                 try:
                     spec.stage_program(n_chunks)

@@ -39,6 +39,13 @@ The schedule registry (core/schedule.py) maps ``plan.schedule`` /
                params carry S·v rows in storage order s·v+j -> chunk
                j·S+s), shrinking the bubble for S >= 3.  Flush
                semantics (accumulate).
+  interleaved_async
+               the same interleaved timing with per-microbatch updates:
+               each chunk keeps its own weight-version ring, stored
+               chunk-major ([V, S·v, ...] — slot, then storage row), F
+               records the chunk's live weights into (slot, chunk) and
+               B re-reads exactly that version, then updates only that
+               chunk's weight/optimizer rows.
 
 Weight-stash ring primitives and the ZeRO-1 sharded-optimizer update
 live in core/versioning.py.  Boundary ticks run the same program on
@@ -64,6 +71,8 @@ from repro.core.schedule import (B_CHUNK, B_FROM_HEAD, B_MB, B_RESID_READ,
                                  PipelineSchedule)
 from repro.core.versioning import (replicated_microbatch_update, tree_add,
                                    tree_chunk, tree_chunk_add,
+                                   tree_chunk_ring_read,
+                                   tree_chunk_ring_write, tree_chunk_write,
                                    tree_ring_read, tree_ring_write,
                                    tree_scale, tree_select, zero1_axes,
                                    zero1_microbatch_update, zero1_opt_pspec)
@@ -134,9 +143,11 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
     Vr = sched.resid_slots                  # residual ring size
     use_ring = sched.uses_stash_ring
     accumulate = sched.accumulate or plan.grad_sync == "per_round"
-    assert not (use_ring and vs > 1), (
-        "per-chunk weight stashing is not implemented; interleaved "
-        "schedules run flush (accumulate) semantics")
+    # vs > 1 with a ring is the async interleaved schedule: the stash is
+    # chunk-major ([V, S·v, ...]) and F/B index it by the table's
+    # (version-slot, chunk) column pair.  No schedule forwards *from*
+    # the stash at virtual stages (vertical sync is vs == 1 only).
+    assert not (sched.fwd_from_stash and vs > 1), sched.name
     # Static schedule tables; gathered per (tick, stage) inside the
     # shard_map bodies — they become tiny jaxpr constants.
     tabs = sched.tables()
@@ -211,7 +222,11 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         x0 = jax.lax.dynamic_index_in_dim(embeds, fsafe, 0, keepdims=False)
         x_in = jnp.where(row[F_FROM_EMBEDS] > 0, x0, recv_f[0])
         if use_ring:
-            stash = tree_ring_write(stash, row[F_STASH_WRITE], w_loc, valid)
+            stash = (tree_ring_write(stash, row[F_STASH_WRITE], w_loc,
+                                     valid)
+                     if vs == 1 else
+                     tree_chunk_ring_write(stash, row[F_STASH_WRITE],
+                                           row[F_CHUNK], w_loc, valid))
         if sched.fwd_from_stash:
             w_f = tree_ring_read(stash, row[F_VERSION])
         else:
@@ -241,7 +256,12 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         w_loc, win_loc, th_loc = local_chunk(weights, windows, thetas,
                                              row[B_CHUNK])
         g_in = jnp.where(row[B_FROM_HEAD] > 0, g_exit, recv_b[0])
-        w_used = tree_ring_read(stash, row[B_VERSION]) if use_ring else w_loc
+        if use_ring:
+            w_used = (tree_ring_read(stash, row[B_VERSION]) if vs == 1
+                      else tree_chunk_ring_read(stash, row[B_VERSION],
+                                                row[B_CHUNK]))
+        else:
+            w_used = w_loc
         x_saved = jax.lax.dynamic_index_in_dim(
             resid, row[B_RESID_READ], 0, keepdims=False)[0]
         # g_exit carries global-batch normalization (head loss is a mean
@@ -279,14 +299,28 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
             else:
                 grad_acc = tree_chunk_add(grad_acc, dW, row[B_CHUNK])
             new_w, new_opt = weights, opt_state
-        elif zero1_manual:
-            new_w, new_opt = zero1_microbatch_update(
-                optimizer, dW, opt_state, weights, step, valid,
-                z1_axes=z1_axes, daxes=daxes, dnames=dnames, dp=dp)
         else:
-            new_w, new_opt = replicated_microbatch_update(
-                optimizer, dW, opt_state, weights, step, valid,
-                dnames=dnames)
+            # per-microbatch update of exactly the chunk this B row
+            # names: vs == 1 updates the whole stage block in place;
+            # vs > 1 (async interleaved) reads the chunk's weight and
+            # optimizer rows, updates them, and writes them back — the
+            # stage's other chunks are untouched this tick.
+            upd_o = (tree_chunk(opt_state, row[B_CHUNK]) if vs > 1
+                     else opt_state)
+            upd_w = w_loc if vs > 1 else weights
+            if zero1_manual:
+                upd_w, upd_o = zero1_microbatch_update(
+                    optimizer, dW, upd_o, upd_w, step, valid,
+                    z1_axes=z1_axes, daxes=daxes, dnames=dnames, dp=dp)
+            else:
+                upd_w, upd_o = replicated_microbatch_update(
+                    optimizer, dW, upd_o, upd_w, step, valid,
+                    dnames=dnames)
+            if vs > 1:
+                new_w = tree_chunk_write(weights, row[B_CHUNK], upd_w)
+                new_opt = tree_chunk_write(opt_state, row[B_CHUNK], upd_o)
+            else:
+                new_w, new_opt = upd_w, upd_o
 
         g_send = jax.lax.ppermute(dx, AXIS_STAGE, bwd_perm) if S > 1 else dx
         return new_w, new_opt, g_send[None], grad_acc, dx[None], denc_ring

@@ -5,10 +5,14 @@ per-microbatch updates with plain Python loops on one device — no
 shard_map, no collectives — driven by the SAME
 :class:`~repro.core.schedule.PipelineSchedule` tables the SPMD executor
 gathers.  Bit-exact (fp32) against core/pipeline.py on a single data
-replica; used by the semantics tests.  Virtual stages are exercised by
-building the reference with pp = S·v (a chunk-level plan): flush
-semantics make the update schedule-independent, so the interleaved SPMD
-pipeline must match the chunked sequential flush oracle exactly.
+replica; used by the semantics tests.  Flush-interleaved plans can be
+exercised two ways: by building the reference with pp = S·v (a
+chunk-level plan — flush semantics make the update schedule-independent,
+so the interleaved SPMD pipeline must match the chunked sequential flush
+oracle exactly), or by passing the interleaved plan itself — the oracle
+walks virtual stages natively, including the async interleaved
+schedule's per-chunk weight-version rings and per-microbatch updates
+(state rows in the executor's storage order p = s·v + j).
 
 Also provides ``staleness_formula_step``: a *third*, independent
 implementation that applies the paper's §3.4 update rule directly
@@ -24,9 +28,10 @@ from typing import Any, Dict, List
 import jax
 import jax.numpy as jnp
 
-from repro.core.schedule import (B_FROM_HEAD, B_MB, B_RESID_READ, B_VERSION,
-                                 F_FROM_EMBEDS, F_MB, F_RESID_WRITE,
-                                 F_STASH_WRITE, F_VERSION, make_schedule)
+from repro.core.schedule import (B_CHUNK, B_FROM_HEAD, B_MB, B_RESID_READ,
+                                 B_VERSION, F_CHUNK, F_FROM_EMBEDS, F_MB,
+                                 F_RESID_WRITE, F_STASH_WRITE, F_VERSION,
+                                 make_schedule)
 from repro.models import lm_head
 from repro.models.stage import make_statics, stage_fwd
 from repro.parallel.mesh import ParallelismPlan
@@ -34,11 +39,27 @@ from repro.parallel.mesh import ParallelismPlan
 
 def reference_init_state(spec, plan: ParallelismPlan, optimizer, key,
                          dtype=jnp.float32):
-    """Single-device state matching core/pipeline.py::init_state."""
+    """Single-device state matching core/pipeline.py::init_state.
+
+    For virtual-stage plans the stage-stacked rows follow the
+    executor's storage order (row s·v + j holds chunk j·S + s).
+    """
+    import numpy as np
+
     from repro.models.init import init_params
 
     sched = make_schedule(plan)
-    params, _ = init_params(spec, plan, key, dtype)
+    mplan = (plan.with_(pp=sched.n_chunks, schedule="auto",
+                        virtual_stages=1)
+             if sched.virtual_stages > 1 else plan)
+    params, _ = init_params(spec, mplan, key, dtype)
+    if sched.virtual_stages > 1:
+        perm = np.asarray(sched.storage_chunk_order())
+        params = dict(params)
+        params["stages"] = jax.tree.map(lambda a: a[perm],
+                                        params["stages"])
+        params["layer_windows"] = params["layer_windows"][perm]
+        params["layer_thetas"] = params["layer_thetas"][perm]
     stages = params["stages"]
     stash = {"current": stages}
     if sched.uses_stash_ring:
@@ -71,12 +92,18 @@ def _stage_unslice(full, s, part):
 
 def reference_train_step(spec, plan: ParallelismPlan, state, batch,
                          optimizer, aux_weight: float = 0.01):
-    """Mirror of core/pipeline.py train_step, sequential, 1 data replica."""
+    """Mirror of core/pipeline.py train_step, sequential, 1 data replica.
+
+    Virtual-stage plans run natively: storage row p = s·v + j holds
+    chunk c = j·S + s, chunk hops wrap stage S−1 → 0, and per-chunk
+    stash rings back the async interleaved schedule's per-microbatch
+    updates.  ``state`` rows must be in storage order (what
+    :func:`reference_init_state` and the SPMD ``init_state`` produce).
+    """
     S, R = plan.pp, plan.microbatches
     sched = make_schedule(plan)
-    assert sched.virtual_stages == 1, (
-        "run interleaved plans against a chunk-level (pp = S*v, flush) "
-        "reference; the sequential oracle is schedule-timing-agnostic")
+    v = sched.virtual_stages
+    L = sched.n_chunks                  # storage rows (S·v)
     tabs = sched.tables()
     V = sched.stash_slots
     accumulate = sched.accumulate or plan.grad_sync == "per_round"
@@ -89,9 +116,12 @@ def reference_train_step(spec, plan: ParallelismPlan, state, batch,
     n_patch = spec.n_patches if is_vlm else 0
     bmb = tokens.shape[1]
     seq_len = tokens.shape[2] + n_patch
-    # The reference sees full (unsharded) parameters: tp=1 view of the plan.
-    statics = make_statics(spec, plan.with_(tp=1),
-                           tokens_per_mb=bmb * seq_len)
+    # The reference sees full (unsharded) parameters: tp=1 view of the
+    # plan, at chunk granularity for virtual stages (like the SPMD
+    # executor's mplan).
+    splan = (plan.with_(tp=1, pp=L, schedule="auto", virtual_stages=1)
+             if v > 1 else plan.with_(tp=1))
+    statics = make_statics(spec, splan, tokens_per_mb=bmb * seq_len)
 
     text_embeds = lm_head.embed_tokens(params["embed"], tokens)
     if is_vlm:
@@ -117,30 +147,33 @@ def reference_train_step(spec, plan: ParallelismPlan, state, batch,
     pos = jnp.broadcast_to(jnp.arange(seq_len, dtype=jnp.int32),
                            (bmb, seq_len))
 
-    def run_stage(w_stage, x, s, cross=None):
+    def run_stage(w_stage, x, p, cross=None):
         h, _, aux = stage_fwd(w_stage, x, statics, positions=pos,
-                              windows=params["layer_windows"][s],
-                              thetas=params["layer_thetas"][s],
+                              windows=params["layer_windows"][p],
+                              thetas=params["layer_thetas"][p],
                               tp_axis=None, cross_x=cross)
         return h, aux
 
-    # per-stage python state; ring leaves are [V, pp, ...]
-    weights = [_stage_slice(state["stash"]["current"], s) for s in range(S)]
+    # per-storage-row python state; ring leaves are [V, L, ...] — the
+    # chunk-major layout the SPMD executor shards over stages
+    weights = [_stage_slice(state["stash"]["current"], p) for p in range(L)]
     stash: List[List[Any]] = [
-        [jax.tree.map(lambda a: a[v, s:s + 1], state["stash"]["ring"])
-         for v in range(V)] for s in range(S)] if use_ring else \
-        [[None] * V for _ in range(S)]
-    opt = [_opt_slice(state["opt_stages"], s) for s in range(S)]
+        [jax.tree.map(lambda a: a[slot, p:p + 1], state["stash"]["ring"])
+         for slot in range(V)] for p in range(L)] if use_ring else \
+        [[None] * V for _ in range(L)]
+    opt = [_opt_slice(state["opt_stages"], p) for p in range(L)]
     head, fnorm = params["head"], params["final_norm"]
     head_opt = state["opt_head"]
 
     recv_f = [None] * S
     recv_b = [None] * S
     resid = [[None] * sched.resid_slots for _ in range(S)]
-    gacc = [None] * S
+    gacc = [None] * L
     d_embeds = [None] * R
     loss_sum = jnp.zeros((), jnp.float32)
     aux_sum = jnp.zeros((), jnp.float32)
+    dhead_acc = None
+    dfnorm_acc = None
 
     for tick in range(sched.n_ticks):
         # ---------------- F phase (all stages, pre-update weights) -------
@@ -151,21 +184,23 @@ def reference_train_step(spec, plan: ParallelismPlan, state, batch,
             f = int(row[F_MB])
             if f < 0:
                 continue
+            c = int(row[F_CHUNK]) * S + s           # model chunk
+            p = s * v + int(row[F_CHUNK])           # storage row
             x_in = embeds[f] if row[F_FROM_EMBEDS] else recv_f[s]
             if use_ring:
-                stash[s][int(row[F_STASH_WRITE])] = weights[s]
+                stash[p][int(row[F_STASH_WRITE])] = weights[p]
             if sched.fwd_from_stash:
-                w_f = stash[s][int(row[F_VERSION])]
+                w_f = stash[p][int(row[F_VERSION])]
             else:
-                w_f = weights[s]
-            h, aux = run_stage(w_f, x_in, s,
+                w_f = weights[p]
+            h, aux = run_stage(w_f, x_in, p,
                                enc_ring[f] if has_enc else None)
             aux_sum = aux_sum + aux
             resid[s][int(row[F_RESID_WRITE])] = x_in
-            if s + 1 < S:
-                new_recv_f[s + 1] = h
-            else:
+            if c == L - 1:
                 h_exit = h
+            else:                 # chunk hop; wraps stage S−1 -> 0
+                new_recv_f[(s + 1) % S] = h
         recv_f = new_recv_f
 
         # ---------------- head / loss ------------------------------------
@@ -193,8 +228,9 @@ def reference_train_step(spec, plan: ParallelismPlan, state, batch,
                     {"h": head, "f": fnorm}, step)
                 head, fnorm = hf_new["h"], hf_new["f"]
             else:
-                dhead_acc = dhead if tick == S - 1 else dhead_acc + dhead
-                dfnorm_acc = dfnorm if tick == S - 1 else jax.tree.map(
+                dhead_acc = dhead if dhead_acc is None \
+                    else dhead_acc + dhead
+                dfnorm_acc = dfnorm if dfnorm_acc is None else jax.tree.map(
                     jnp.add, dfnorm_acc, dfnorm)
 
         # ---------------- B phase -----------------------------------------
@@ -204,14 +240,16 @@ def reference_train_step(spec, plan: ParallelismPlan, state, batch,
             b = int(row[B_MB])
             if b < 0:
                 continue
+            c = int(row[B_CHUNK]) * S + s
+            p = s * v + int(row[B_CHUNK])
             g_in = g_exit if row[B_FROM_HEAD] else recv_b[s]
-            w_used = (stash[s][int(row[B_VERSION])] if use_ring
-                      else weights[s])
+            w_used = (stash[p][int(row[B_VERSION])] if use_ring
+                      else weights[p])
             x_saved = resid[s][int(row[B_RESID_READ])]
 
             if has_enc:
                 def f_enc(w, x, cx):
-                    return run_stage(w, x, s, cx)
+                    return run_stage(w, x, p, cx)
 
                 _, vjp = jax.vjp(f_enc, w_used, x_saved, enc_ring[b])
                 dW, dx, dcx = vjp((g_in.astype(x_saved.dtype),
@@ -219,28 +257,28 @@ def reference_train_step(spec, plan: ParallelismPlan, state, batch,
                 denc[b] = dcx if denc[b] is None else denc[b] + dcx
             else:
                 def f_txt(w, x):
-                    return run_stage(w, x, s)
+                    return run_stage(w, x, p)
 
                 _, vjp = jax.vjp(f_txt, w_used, x_saved)
                 dW, dx = vjp((g_in.astype(x_saved.dtype),
                               jnp.float32(aux_weight)))
             if accumulate:
-                gacc[s] = dW if gacc[s] is None else jax.tree.map(
-                    jnp.add, gacc[s], dW)
+                gacc[p] = dW if gacc[p] is None else jax.tree.map(
+                    jnp.add, gacc[p], dW)
             else:
-                new_w, new_opt = optimizer.update(dW, opt[s], weights[s], step)
-                weights[s], opt[s] = new_w, new_opt
-            if s > 0:
-                new_recv_b[s - 1] = dx
-            else:
+                new_w, new_opt = optimizer.update(dW, opt[p], weights[p], step)
+                weights[p], opt[p] = new_w, new_opt
+            if c == 0:
                 d_embeds[b] = dx
+            else:                 # gradient hop; wraps stage 0 -> S−1
+                new_recv_b[(s - 1) % S] = dx
         recv_b = new_recv_b
 
     # ---------------- round end -------------------------------------------
     if accumulate:
-        for s in range(S):
-            g = jax.tree.map(lambda a: a / R, gacc[s])
-            weights[s], opt[s] = optimizer.update(g, opt[s], weights[s], step)
+        for p in range(L):
+            g = jax.tree.map(lambda a: a / R, gacc[p])
+            weights[p], opt[p] = optimizer.update(g, opt[p], weights[p], step)
         hf_new, head_opt = optimizer.update(
             {"h": dhead_acc / R,
              "f": jax.tree.map(lambda a: a / R, dfnorm_acc)},
@@ -263,18 +301,18 @@ def reference_train_step(spec, plan: ParallelismPlan, state, batch,
 
     # reassemble state
     stages_full = state["stash"]["current"]
-    for s in range(S):
-        stages_full = _stage_unslice(stages_full, s, weights[s])
+    for p in range(L):
+        stages_full = _stage_unslice(stages_full, p, weights[p])
     if use_ring:
         ring_full = state["stash"]["ring"]
-        for s in range(S):
-            for v in range(V):
+        for p in range(L):
+            for slot in range(V):
                 ring_full = jax.tree.map(
-                    lambda a, p: a.at[v, s:s + 1].set(p.astype(a.dtype)),
-                    ring_full, stash[s][v])
+                    lambda a, q: a.at[slot, p:p + 1].set(q.astype(a.dtype)),
+                    ring_full, stash[p][slot])
     opt_full = state["opt_stages"]
-    for s in range(S):
-        opt_full = _opt_unslice(opt_full, s, opt[s])
+    for p in range(L):
+        opt_full = _opt_unslice(opt_full, p, opt[p])
 
     new_params = dict(params)
     new_params["embed"] = emb2

@@ -39,7 +39,16 @@ Schedules shipped:
                           ((v+1)S−2)/(vR+(v+1)S−2) — strictly smaller
                           for v ≥ 2 whenever S ≥ 3 (equal at S = 2,
                           where startup and drain are already minimal in
-                          the double-tick model).
+                          the double-tick model).  Flush (accumulate)
+                          semantics.
+  ScheduleInterleavedAsync1F1B
+                          the same interleaved timing with
+                          per-microbatch updates: paper §3.3 weight
+                          stashing generalized to virtual stages via
+                          per-chunk weight-version rings, stored
+                          chunk-major ([versions, S·v chunk rows, ...])
+                          so each stage shard owns its chunks' rings
+                          contiguously.
 
 Registry: ``SCHEDULES`` maps names to classes; ``make_schedule(plan)``
 builds the instance a :class:`~repro.parallel.mesh.ParallelismPlan`
@@ -177,6 +186,12 @@ class PipelineSchedule:
     fwd_from_stash = False
     #: virtual chunks per physical stage (Megatron interleaving)
     virtual_stages = 1
+    #: plan.stash_mode values this schedule accepts (first = default,
+    #: used by :func:`plan_kwargs_for_schedule` to normalize a plan)
+    plan_stash_modes: Tuple[str, ...] = ("stash", "vertical")
+    #: schedule consumes plan.virtual_stages (> 1) and needs microbatch
+    #: groups (R % pp == 0) — the interleaved family
+    takes_virtual_stages = False
 
     def __post_init__(self):
         assert self.n_stages >= 1 and self.n_microbatches >= 1
@@ -407,6 +422,7 @@ class Schedule1F1B(PipelineSchedule):
     name = "1f1b"
     accumulate = False
     uses_stash_ring = True
+    plan_stash_modes = ("stash", "vertical")
 
     def __post_init__(self):
         super().__post_init__()
@@ -511,6 +527,7 @@ class ScheduleGPipe(Schedule1F1B):
 
     name = "gpipe"
     accumulate = True
+    plan_stash_modes = ("flush", "2bw")
     policy: str = "stash"
 
     def __post_init__(self):
@@ -591,10 +608,11 @@ class ScheduleInterleaved1F1B(PipelineSchedule):
 
     and n_ticks = vR + (v+1)S − 2 — the optimum for this engine: the
     first exit cannot precede tick vS−1 and each stage must drain vR
-    backward slots.  Weight versioning is flush-family (accumulate,
-    single version): interleaving is a steady-state *throughput* device;
-    per-microbatch async updates would need per-chunk rings and are out
-    of scope (ROADMAP open item).
+    backward slots.  THIS class runs flush-family versioning
+    (accumulate, single weight version); per-microbatch asynchronous
+    updates over the same timing are
+    :class:`ScheduleInterleavedAsync1F1B`, which adds the per-chunk
+    weight-version rings.
 
     Requires R % S == 0 (microbatch groups) and n_layers % (S·v) == 0.
     """
@@ -605,6 +623,8 @@ class ScheduleInterleaved1F1B(PipelineSchedule):
     accumulate = True
     uses_stash_ring = False
     fwd_from_stash = False
+    plan_stash_modes = ("flush",)
+    takes_virtual_stages = True
 
     def __post_init__(self):
         super().__post_init__()
@@ -656,8 +676,10 @@ class ScheduleInterleaved1F1B(PipelineSchedule):
     @classmethod
     def from_plan(cls, plan) -> "ScheduleInterleaved1F1B":
         assert plan.stash_mode == "flush", (
-            "interleaved schedule runs flush (accumulate) semantics; set "
-            f"stash_mode='flush' (got {plan.stash_mode!r})")
+            "schedule='interleaved' is the flush (accumulate) variant and "
+            "needs stash_mode='flush'; for per-microbatch async updates "
+            "use schedule='interleaved_async' (per-chunk weight-version "
+            f"rings, stash_mode='stash'); got {plan.stash_mode!r}")
         return cls(plan.pp, plan.microbatches,
                    virtual_stages=getattr(plan, "virtual_stages", 2))
 
@@ -727,6 +749,123 @@ class ScheduleInterleaved1F1B(PipelineSchedule):
 
 
 # ---------------------------------------------------------------------------
+# ScheduleInterleavedAsync1F1B — per-chunk weight-version rings
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleInterleavedAsync1F1B(ScheduleInterleaved1F1B):
+    """Interleaved 1F1B with per-microbatch updates and per-chunk rings.
+
+    Same timing tables as :class:`ScheduleInterleaved1F1B` (the bubble
+    win is a pure timing property), but the paper's §3.3 weight-stashing
+    semantics generalized to virtual stages: every model chunk keeps its
+    OWN stash ring, so F(m, chunk c) records chunk c's current weights
+    into ring slot (c, m % V) and B(m, chunk c) re-reads exactly that
+    version while the per-microbatch update advances the live weights in
+    between.  The executor stores the rings chunk-major — one
+    ``[V, S·v, ...]`` array whose row p = s·v + j is chunk j·S + s (see
+    ``storage_chunk_order``), so the stage shard owns its chunks' rings
+    contiguously and the table's version-slot columns index straight
+    into it.
+
+    Ring depth: chunk c is in flight for t_B − t_F = 2(S·v − 1 − c)
+    ticks, and the m-th and (m+V)-th forwards of any chunk are at least
+    2·v·S ticks apart when V = 2S (one microbatch-group period per S
+    slots).  2S slots therefore cover the worst chunk (c = 0) for every
+    v ≥ 2; v = 1 degenerates to plain 1F1B timing where the classic
+    2(S−1)+1 suffices.  R caps the ring — m % V never revisits a slot
+    within a round when V = R.
+    """
+
+    name = "interleaved_async"
+    accumulate = False
+    uses_stash_ring = True
+    fwd_from_stash = False
+    plan_stash_modes = ("stash",)
+
+    @property
+    def stash_slots(self) -> int:
+        """Per-chunk weight versions: min(2S, R) (v ≥ 2; 2S−1 at v=1).
+
+        Proof obligation (checked by ``validate``): the slot written at
+        F(m, c) survives until B(m, c), i.e. the NEXT write of slot
+        m % V — at F(m+V, c) — lands strictly after
+        t_B(m, c) = t_F(m, c) + 2(vS − 1 − c).  At V = 2S, m+V is
+        exactly two microbatch groups later at the same group offset,
+        so t_F(m+V, c) − t_F(m, c) = 2vS > 2(vS − 1 − c) for every
+        chunk.  At v = 1 the timing is plain 1F1B's (t_F = s + m), the
+        spacing is V itself, and the classic V = 2S−1 > 2(S − 1 − c)
+        suffices.  V = R trivially covers a round (m % R never
+        revisits a slot), hence the min.
+        """
+        S, R, v = self.n_stages, self.n_microbatches, self.virtual_stages
+        base = 2 * S if v > 1 else 2 * S - 1
+        return max(1, min(base, R))
+
+    @classmethod
+    def from_plan(cls, plan) -> "ScheduleInterleavedAsync1F1B":
+        assert plan.stash_mode == "stash", (
+            "schedule='interleaved_async' implements the paper's stash "
+            "policy per chunk; set stash_mode='stash' (got "
+            f"{plan.stash_mode!r})")
+        return cls(plan.pp, plan.microbatches,
+                   virtual_stages=getattr(plan, "virtual_stages", 2))
+
+    def memory_model(self, spec, plan, hw, *, microbatch_tokens: int,
+                     data_replicas: int = 1) -> MemoryModel:
+        """Async interleaved: ring = per-chunk versions × chunk weights.
+
+        Each of the stage's v chunks keeps ``stash_slots`` versions of
+        its own block weights, so the ring totals
+        stash_slots × (full stage weights) — the price of per-microbatch
+        updates at virtual stages.  No round-long gradient accumulator
+        (updates apply at each B; transient grads ride the workspace
+        term), and the residual ring is the interleaved timing's
+        interval-coloured depth, shared with the flush variant.
+        """
+        return self._memory_model(
+            spec, plan, hw, microbatch_tokens=microbatch_tokens,
+            data_replicas=data_replicas,
+            weight_ring_slots=self.stash_slots, grad_accum=False)
+
+    def _build_tables(self) -> ScheduleTables:
+        tabs = super()._build_tables()
+        R, V = self.n_microbatches, self.stash_slots
+        fwd, bwd = tabs.fwd.copy(), tabs.bwd.copy()
+        fs = np.clip(fwd[:, :, F_MB], 0, R - 1)
+        bs = np.clip(bwd[:, :, B_MB], 0, R - 1)
+        # slot within the row's OWN chunk ring — the executor indexes
+        # the chunk-major ring by (this column, the chunk column)
+        fwd[:, :, F_STASH_WRITE] = fs % V
+        fwd[:, :, F_VERSION] = -1            # F uses the latest weights
+        bwd[:, :, B_VERSION] = bs % V
+        return ScheduleTables(fwd, bwd, tabs.exit_mb, tabs.demb_mb)
+
+    def validate(self) -> None:
+        """Structural contract + per-chunk stash-ring liveness."""
+        super().validate()
+        S, v = self.n_stages, self.virtual_stages
+        tabs = self.tables()
+        for s in range(S):
+            live: Dict[Tuple[int, int], int] = {}   # (chunk, slot) -> mb
+            for t in range(self.n_ticks):
+                fr = tabs.fwd[t, s]
+                if fr[F_MB] >= 0:
+                    key = (int(fr[F_CHUNK]), int(fr[F_STASH_WRITE]))
+                    assert key not in live, (
+                        f"stage {s} tick {t}: F clobbers live version "
+                        f"slot {key} (holds mb {live[key]})")
+                    live[key] = int(fr[F_MB])
+                br = tabs.bwd[t, s]
+                if br[B_MB] >= 0:
+                    key = (int(br[B_CHUNK]), int(br[B_VERSION]))
+                    assert live.pop(key, None) == int(br[B_MB]), (
+                        f"stage {s} tick {t}: B reads wrong version "
+                        f"slot {key}")
+            assert not live, f"stage {s}: versions never read: {live}"
+
+
+# ---------------------------------------------------------------------------
 # Time-weighted round walk (shared by benchmarks/simulator and plan_search)
 # ---------------------------------------------------------------------------
 
@@ -771,6 +910,7 @@ SCHEDULES: Dict[str, Type[PipelineSchedule]] = {
     "1f1b": Schedule1F1B,
     "gpipe": ScheduleGPipe,
     "interleaved": ScheduleInterleaved1F1B,
+    "interleaved_async": ScheduleInterleavedAsync1F1B,
 }
 
 
@@ -778,6 +918,45 @@ def register_schedule(name: str, cls: Type[PipelineSchedule]) -> None:
     """Add a schedule implementation to the registry."""
     assert name not in SCHEDULES, f"schedule {name!r} already registered"
     SCHEDULES[name] = cls
+
+
+def plan_kwargs_for_schedule(name: str, *, virtual_stages=None,
+                             stash_mode=None) -> Dict[str, object]:
+    """``ParallelismPlan.with_()`` kwargs that put a plan onto ``name``.
+
+    The single source of the schedule -> plan policy (consumed by
+    ``plan_search`` candidates and the launch CLIs, so registering a
+    schedule needs no edits there): keeps ``stash_mode`` when the class
+    accepts it (``plan_stash_modes``), normalizes to the class default
+    otherwise, and resolves ``virtual_stages`` — default 2 for the
+    interleaved family (``takes_virtual_stages``), forced to 1 for
+    single-chunk schedules.
+    """
+    cls = SCHEDULES.get(name)
+    assert cls is not None, (
+        f"unknown schedule {name!r}; registered: {sorted(SCHEDULES)}")
+    kw: Dict[str, object] = {"schedule": name}
+    if stash_mode not in cls.plan_stash_modes:
+        kw["stash_mode"] = cls.plan_stash_modes[0]
+    kw["virtual_stages"] = ((virtual_stages or 2)
+                            if cls.takes_virtual_stages else 1)
+    return kw
+
+
+def virtual_stages_error(schedule_name, virtual_stages) -> str | None:
+    """None when the combination is valid, else the CLI error message.
+
+    Shared by the launch entry points (launch/train.py,
+    launch/dryrun.py) so the --virtual-stages/--schedule compatibility
+    rule and its diagnostic cannot drift between them.
+    """
+    if not virtual_stages or virtual_stages <= 1:
+        return None
+    cls = SCHEDULES.get(schedule_name) if schedule_name else None
+    if cls is not None and cls.takes_virtual_stages:
+        return None
+    return ("--virtual-stages > 1 requires --schedule in "
+            f"{sorted(n for n, c in SCHEDULES.items() if c.takes_virtual_stages)}")
 
 
 def make_schedule(plan) -> PipelineSchedule:

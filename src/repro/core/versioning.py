@@ -4,7 +4,11 @@ Split out of core/pipeline.py so the executor holds only orchestration:
 this module owns
 
   * pytree ring-buffer primitives (the weight stash and residual rings
-    are rings of stacked pytrees, indexed by schedule-table slots);
+    are rings of stacked pytrees, indexed by schedule-table slots) —
+    both the stage-global [V, ...] layout (1F1B / 2BW) and the
+    chunk-major two-level [V, chunks, ...] layout keyed by
+    (version slot, local chunk) that the async interleaved schedule's
+    per-chunk rings use;
   * ZeRO-1 optimizer-state sharding over the data axes — axis choice,
     partition-spec derivation, and the manual reduce-scatter / update /
     all-gather step used on the per-microbatch update path.
@@ -51,6 +55,38 @@ def tree_chunk(tree, idx):
     return jax.tree.map(
         lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0, keepdims=True),
         tree)
+
+
+def tree_chunk_write(tree, idx, val):
+    """Write one local chunk row (val keeps its leading [1] chunk dim)."""
+    return jax.tree.map(
+        lambda a, p: jax.lax.dynamic_update_index_in_dim(
+            a, p[0].astype(a.dtype), idx, 0),
+        tree, val)
+
+
+def tree_chunk_ring_read(ring, slot, chunk):
+    """Chunk-major version ring [V, v, ...] -> chunk view [1, ...].
+
+    The async-interleaved schedule keys its weight stash by
+    (version slot, local chunk); this is the B-side read of the version
+    F recorded for that (microbatch, chunk).
+    """
+    def r(a):
+        row = jax.lax.dynamic_index_in_dim(a, slot, 0, keepdims=False)
+        return jax.lax.dynamic_index_in_dim(row, chunk, 0, keepdims=True)
+    return jax.tree.map(r, ring)
+
+
+def tree_chunk_ring_write(ring, slot, chunk, val, valid):
+    """Record a chunk's current weights into its ring slot (F side)."""
+    def w(a, p):
+        row = jax.lax.dynamic_index_in_dim(a, slot, 0, keepdims=False)
+        cur = jax.lax.dynamic_index_in_dim(row, chunk, 0, keepdims=False)
+        new = jnp.where(valid, p[0].astype(a.dtype), cur)
+        row = jax.lax.dynamic_update_index_in_dim(row, new, chunk, 0)
+        return jax.lax.dynamic_update_index_in_dim(a, row, slot, 0)
+    return jax.tree.map(w, ring, val)
 
 
 def tree_chunk_add(acc, grad, idx, batch_dims: int = 1):

@@ -124,8 +124,10 @@ def main(argv=None):
                     choices=[None, "per_microbatch", "per_round"])
     ap.add_argument("--stash-mode", type=str, default=None,
                     choices=[None, "stash", "flush", "vertical", "2bw"])
+    from repro.core.schedule import (SCHEDULES, plan_kwargs_for_schedule,
+                                     virtual_stages_error)
     ap.add_argument("--schedule", type=str, default=None,
-                    choices=[None, "1f1b", "gpipe", "interleaved"])
+                    choices=[None, *sorted(SCHEDULES)])
     ap.add_argument("--virtual-stages", type=int, default=None)
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--plan-search", action="store_true",
@@ -133,9 +135,14 @@ def main(argv=None):
                          "virtual_stages) under the HBM budget instead of "
                          "the config's hand-written plan")
     args = ap.parse_args(argv)
-    if args.virtual_stages and args.virtual_stages > 1 \
-            and args.schedule != "interleaved":
-        ap.error("--virtual-stages > 1 requires --schedule interleaved")
+    err = virtual_stages_error(args.schedule, args.virtual_stages)
+    if err:
+        ap.error(err)
+    if args.schedule and args.stash_mode and \
+            args.stash_mode not in SCHEDULES[args.schedule].plan_stash_modes:
+        ap.error(f"--stash-mode {args.stash_mode} is incompatible with "
+                 f"--schedule {args.schedule} (accepts "
+                 f"{list(SCHEDULES[args.schedule].plan_stash_modes)})")
 
     def plan_for(arch):
         from repro import configs as _c
@@ -145,10 +152,9 @@ def main(argv=None):
         if args.stash_mode:
             plan = plan.with_(stash_mode=args.stash_mode)
         if args.schedule:
-            plan = plan.with_(schedule=args.schedule)
-            if args.schedule == "interleaved":
-                plan = plan.with_(stash_mode="flush",
-                                  virtual_stages=args.virtual_stages or 2)
+            plan = plan.with_(**plan_kwargs_for_schedule(
+                args.schedule, virtual_stages=args.virtual_stages,
+                stash_mode=plan.stash_mode))
         if args.microbatches:
             plan = plan.with_(microbatches=args.microbatches)
         return plan if (args.grad_sync or args.stash_mode or args.schedule

@@ -44,16 +44,15 @@ def build(args):
         plan = cfg.PLAN
         shape = configs.SHAPES["train_4k"]
         seq_len, global_batch = shape.seq_len, shape.global_batch
-    if args.virtual_stages and args.virtual_stages > 1 \
-            and args.schedule != "interleaved":
-        raise SystemExit(
-            "--virtual-stages > 1 requires --schedule interleaved")
+    from repro.core.schedule import (plan_kwargs_for_schedule,
+                                     virtual_stages_error)
+    err = virtual_stages_error(args.schedule, args.virtual_stages)
+    if err:
+        raise SystemExit(err)
     if args.schedule:
-        kw = {"schedule": args.schedule}
-        if args.schedule == "interleaved":
-            kw["stash_mode"] = "flush"
-            kw["virtual_stages"] = args.virtual_stages or 2
-        plan = plan.with_(**kw)
+        plan = plan.with_(**plan_kwargs_for_schedule(
+            args.schedule, virtual_stages=args.virtual_stages,
+            stash_mode=plan.stash_mode))
     if spec.frontend == "vision":
         seq_len = max(seq_len, spec.n_patches + 16)
     if args.plan_search:
@@ -89,8 +88,9 @@ def main(argv=None):
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--microbatches", type=int, default=2)
+    from repro.core.schedule import SCHEDULES
     ap.add_argument("--schedule", type=str, default=None,
-                    choices=[None, "1f1b", "gpipe", "interleaved"],
+                    choices=[None, *sorted(SCHEDULES)],
                     help="override the plan's pipeline schedule")
     ap.add_argument("--virtual-stages", type=int, default=None,
                     help="model chunks per stage (interleaved schedule)")

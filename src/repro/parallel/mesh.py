@@ -37,10 +37,11 @@ class ParallelismPlan:
     microbatches: int = 8      # R: PipeDream "minibatches" in flight per round
     stash_mode: str = "stash"  # stash | flush | vertical | 2bw
     schedule: str = "auto"     # auto | registry name (1f1b, gpipe,
-                               # interleaved, ...); auto derives from
-                               # stash_mode (see core.schedule.make_schedule)
+                               # interleaved, interleaved_async, ...);
+                               # auto derives from stash_mode (see
+                               # core.schedule.make_schedule)
     virtual_stages: int = 1    # model chunks per physical stage
-                               # (interleaved schedule only)
+                               # (interleaved schedule family only)
     zero1: bool = True         # shard optimizer state over the data axis
     remat: bool = True         # per-layer activation checkpointing
     grad_sync: str = "per_microbatch"  # per_microbatch (faithful) | per_round
@@ -53,8 +54,14 @@ class ParallelismPlan:
         assert self.pp >= 1 and self.tp >= 1 and self.microbatches >= 1
         assert self.virtual_stages >= 1, self.virtual_stages
         if self.virtual_stages > 1:
-            assert self.schedule == "interleaved", (
-                "virtual_stages > 1 requires schedule='interleaved'")
+            # registry-driven, so third-party interleaved-family
+            # schedules (takes_virtual_stages=True) need no edits here
+            from repro.core.schedule import SCHEDULES
+            cls = SCHEDULES.get(self.schedule)
+            assert cls is not None and cls.takes_virtual_stages, (
+                "virtual_stages > 1 requires an interleaved-family "
+                f"schedule (got schedule={self.schedule!r}); registered: "
+                f"{sorted(n for n, c in SCHEDULES.items() if c.takes_virtual_stages)}")
 
     def with_(self, **kw) -> "ParallelismPlan":
         return dataclasses.replace(self, **kw)

@@ -203,9 +203,11 @@ def reshard_state_for_plan(state_host, spec, old_plan, new_plan):
     regroup.  Ring sizes and whether a stash ring exists at all come
     from the target plan's schedule (core/schedule.py) — a
     flush/interleaved target drops the ring, a 1F1B target rebuilds it
-    at the new 2(S−1)+1 size from the current weights (the restart is a
-    sync point, so seeding every version with the live weights is
-    exact).
+    at the new 2(S−1)+1 size from the current weights, and an
+    async-interleaved target rebuilds the chunk-major per-chunk ring
+    ([stash_slots, pp'·v', ...] over the regrouped storage rows) the
+    same way (the restart is a sync point, so seeding every version
+    with the live weights is exact).
     """
     old_sched = old_plan.make_schedule()
     new_sched = new_plan.make_schedule()

@@ -77,8 +77,11 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                   compute_dtype=jnp.bfloat16) -> ServeBundle:
     S = plan.pp
     assert plan.virtual_stages == 1, (
-        "serving runs one chunk per stage; interleaved prefill/decode "
-        "is a ROADMAP open item")
+        "serving runs one chunk per stage.  Training-side interleaving is "
+        "fully supported (schedule='interleaved' for flush semantics, "
+        "'interleaved_async' for per-microbatch updates with per-chunk "
+        "weight-version rings — see docs/schedules.md); interleaving the "
+        "prefill/decode schedules here is a ROADMAP open item")
     daxes = data_axes(mesh)
     dp = int(np.prod([mesh.devices.shape[mesh.axis_names.index(a)]
                       for a in daxes]))

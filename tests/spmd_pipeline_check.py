@@ -10,6 +10,12 @@ chunks each; the reference runs the SAME model as a sequential pp = S*v
 flush pipeline (flush semantics are schedule-timing-independent), with
 the pipeline's storage-order (s*v + j -> chunk j*S + s) parameters
 permuted back to chunk order before comparison.
+
+For ``schedule=interleaved_async`` (per-microbatch updates, per-chunk
+weight-version rings) the update order is timing-dependent, so the
+sequential oracle walks the SAME async-interleaved schedule tables
+natively — state stays in storage order on both sides and is compared
+directly.
 """
 import os
 import sys
@@ -128,8 +134,10 @@ def main(data, pp, tp, mode, arch, zero1=False, schedule="auto", vstages=1,
                    in_shardings=(bundle.state_shardings(), bsh),
                    out_shardings=(bundle.state_shardings(), None))
 
-    # reference: for interleaved, a chunk-level sequential flush pipeline
-    if vstages > 1:
+    # reference: flush-interleaved runs against a chunk-level sequential
+    # flush pipeline (chunk order); async-interleaved runs the oracle on
+    # the same schedule tables natively (storage order, no permutation)
+    if vstages > 1 and schedule != "interleaved_async":
         ref_plan = plan.with_(pp=pp * vstages, schedule="auto",
                               virtual_stages=1)
         perm = bundle.sched.storage_chunk_order()

@@ -190,6 +190,40 @@ def test_reshard_state_interleaved_roundtrip():
         np.asarray(back["params"]["stages"]["layer_0"]["mlp"]["w1"]))
 
 
+def test_reshard_to_async_interleaved_builds_chunk_major_ring():
+    """1F1B stash -> async interleaved: the chunks regroup into storage
+    order exactly as for flush-interleaved, and the target's per-chunk
+    ring comes up chunk-major ([stash_slots, S·v, ...]) with every
+    version seeded from the regrouped live weights."""
+    from repro.runtime.driver import reshard_state_for_plan
+
+    spec, plan, state = _tiny_state(pp=2)          # 1f1b stash, has ring
+    host = jax.device_get(state)
+    asyn = plan.with_(pp=2, tp=1, schedule="interleaved_async",
+                      stash_mode="stash", virtual_stages=2)
+    out = reshard_state_for_plan(host, spec, plan, asyn)
+    sched = asyn.make_schedule()
+    # same storage regrouping as flush-interleaved: global layer 1 -> row 2
+    src = np.asarray(host["params"]["stages"]["layer_1"]["mlp"]["w1"][0])
+    dst = np.asarray(out["params"]["stages"]["layer_0"]["mlp"]["w1"][2])
+    np.testing.assert_array_equal(src, dst)
+    ring = out["stash"]["ring"]["layer_0"]["mlp"]["w1"]
+    assert ring.shape[0] == sched.stash_slots
+    assert ring.shape[1] == 4                      # S·v chunk rows
+    for slot in range(sched.stash_slots):
+        np.testing.assert_array_equal(
+            np.asarray(ring[slot]),
+            np.asarray(out["params"]["stages"]["layer_0"]["mlp"]["w1"]))
+    # round-trip back to plain 1F1B restores every layer's params/opt
+    back = reshard_state_for_plan(out, spec, asyn, plan)
+    for key in ("params", "opt_stages"):
+        for (pa, a), (pb, b) in zip(
+                jax.tree_util.tree_leaves_with_path(host[key]),
+                jax.tree_util.tree_leaves_with_path(back[key])):
+            assert pa == pb
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_reshard_schedule_only_change_rebuilds_ring():
     """plan_search can flip the schedule at the SAME (pp, v) — e.g.
     stash -> flush to shed the version ring under a tight HBM budget.

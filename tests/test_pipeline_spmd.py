@@ -22,6 +22,9 @@ FAST_MATRIX = [
     (1, 2, 1, "stash", "dense", 0, "auto", 1, 1),
     (2, 2, 1, "flush", "dense", 0, "auto", 1, 1),      # PipeDream-flush
     (1, 2, 1, "flush", "dense", 0, "interleaved", 2, 2),  # virtual stages
+    # per-chunk version rings, per-microbatch updates (vs the native
+    # async sequential oracle, storage order)
+    (1, 2, 1, "stash", "dense", 0, "interleaved_async", 2, 1),
 ]
 
 SLOW_MATRIX = [
@@ -35,6 +38,11 @@ SLOW_MATRIX = [
     (1, 2, 2, "flush", "dense", 0, "interleaved", 2, 1),   # interleave + TP
     (1, 2, 1, "flush", "dense8", 0, "interleaved", 4, 1),  # v=4, 8 chunks
     (1, 4, 1, "flush", "dense8", 0, "interleaved", 2, 1),  # S=4, v=2
+    # async interleaved: ring rotation across rounds, v=4, TP, ZeRO-1
+    (1, 4, 1, "stash", "dense8", 0, "interleaved_async", 2, 2),
+    (1, 2, 1, "stash", "dense8", 0, "interleaved_async", 4, 1),
+    (1, 2, 2, "stash", "dense", 0, "interleaved_async", 2, 1),
+    (2, 2, 1, "stash", "dense", 1, "interleaved_async", 2, 1),
 ]
 
 

@@ -20,6 +20,7 @@ from repro.core import profiler as prof
 from repro.core.partitioner import plan_search
 from repro.core.schedule import (Schedule1F1B, ScheduleGPipe,
                                  ScheduleInterleaved1F1B,
+                                 ScheduleInterleavedAsync1F1B,
                                  weighted_round_time)
 from repro.models import spec as S
 from repro.models.spec import _block_params
@@ -123,6 +124,34 @@ def test_memory_model_interleaved_golden():
     assert sched.resid_slots > 2 * (plan.pp - 1) + 1
     assert mm.resid_bytes == pytest.approx(sched.resid_slots * act)
     assert mm.resid_bytes > pm.resid_bytes
+
+
+def test_memory_model_interleaved_async_golden():
+    """Async interleaved: the per-chunk version ring costs
+    min(2S, R) × stage weights (each of the v chunks keeps its own
+    versions of its 1/v share), there is no round-long grad
+    accumulator, and everything timing-derived (weights, residual ring)
+    is shared bit-for-bit with flush-interleaved."""
+    spec = mk_spec(n_layers=12)
+    plan = ParallelismPlan(pp=3, tp=1, microbatches=6, stash_mode="stash",
+                           schedule="interleaved_async", virtual_stages=2)
+    sched = plan.make_schedule()
+    assert isinstance(sched, ScheduleInterleavedAsync1F1B)
+    mm = sched.memory_model(spec, plan, HW, microbatch_tokens=MB_TOKENS)
+    blocks, shared, act = _hand_terms(spec, plan)
+    pb = HW.param_bytes
+    assert sched.stash_slots == 6                  # min(2·3, 6)
+    assert mm.stash_bytes == pytest.approx(6 * blocks * pb)
+    assert mm.grad_bytes == 0.0
+    flush = ParallelismPlan(pp=3, tp=1, microbatches=6, stash_mode="flush",
+                            schedule="interleaved", virtual_stages=2)
+    fm = flush.make_schedule().memory_model(spec, flush, HW,
+                                            microbatch_tokens=MB_TOKENS)
+    assert mm.weight_bytes == pytest.approx(fm.weight_bytes)
+    assert mm.resid_bytes == pytest.approx(fm.resid_bytes)
+    # per-microbatch updates at virtual stages are paid for in HBM: the
+    # ring strictly outweighs the accumulator it replaces
+    assert mm.total_bytes > fm.total_bytes
 
 
 def test_memory_model_zero1_and_tp_sharding():
@@ -240,6 +269,39 @@ def test_plan_search_enforces_hbm_budget():
                     data_replicas=1, schedules=("1f1b",), hbm_bytes=1e8)
 
 
+def test_plan_search_prices_async_interleaved_golden():
+    """plan_search prices the per-chunk version ring and accepts
+    async-interleaved under the HBM budget: with an async base plan the
+    (equal-round_time) tie-break keeps it over flush-interleaved, and a
+    budget that admits the flush accumulator but not the async ring
+    rejects the async candidate and falls back to flush-interleaved."""
+    spec = mk_spec(n_layers=8, heads=3, d_model=192)
+    base = ParallelismPlan(pp=4, tp=1, microbatches=8, stash_mode="stash",
+                           schedule="interleaved_async", virtual_stages=2)
+    cands = plan_search(spec, base, 4, HW, minibatch_tokens=MB_TOKENS,
+                        data_replicas=1, return_all=True)
+    best = cands[0]
+    assert best.plan.schedule == "interleaved_async"
+    assert best.plan.virtual_stages == 2 and best.feasible
+    best.plan.make_schedule().validate()
+    flush = [c for c in cands if c.plan.schedule == "interleaved"
+             and c.plan.pp == best.plan.pp
+             and c.plan.virtual_stages == best.plan.virtual_stages]
+    assert len(flush) == 1
+    # identical timing tables -> identical simulated round; the async
+    # pick is the keep-the-base-schedule tie-break, and it pays for the
+    # per-microbatch semantics in HBM
+    assert flush[0].round_time == pytest.approx(best.round_time)
+    assert best.memory.total_bytes > flush[0].memory.total_bytes
+    # budget between the two: the ring no longer fits, the accumulator
+    # does -> plan_search must reject async and pick flush-interleaved
+    budget = (best.memory.total_bytes + flush[0].memory.total_bytes) / 2
+    tight = plan_search(spec, base, 4, HW, minibatch_tokens=MB_TOKENS,
+                        data_replicas=1, hbm_bytes=budget)
+    assert tight.plan.schedule == "interleaved"
+    assert tight.feasible and tight.memory.total_bytes <= budget
+
+
 def test_plan_search_candidates_respect_structure():
     spec = mk_spec(n_layers=8, heads=4)
     base = ParallelismPlan(pp=4, tp=1, microbatches=8, stash_mode="stash")
@@ -253,6 +315,9 @@ def test_plan_search_candidates_respect_structure():
         if plan.schedule == "interleaved":
             assert plan.microbatches % plan.pp == 0
             assert plan.stash_mode == "flush"
+        if plan.schedule == "interleaved_async":
+            assert plan.microbatches % plan.pp == 0
+            assert plan.stash_mode == "stash"
         plan.make_schedule().validate()
     # ranked by round_time (ties broken deterministically)
     rts = [c.round_time for c in cands]

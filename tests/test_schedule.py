@@ -26,8 +26,10 @@ import pytest
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.simulator import simulate_schedule  # noqa: E402
-from repro.core.schedule import (B_MB, F_MB, SCHEDULES, Schedule1F1B,  # noqa: E402
+from repro.core.schedule import (B_CHUNK, B_MB, B_VERSION, F_CHUNK, F_MB,  # noqa: E402
+                                 F_STASH_WRITE, SCHEDULES, Schedule1F1B,
                                  ScheduleGPipe, ScheduleInterleaved1F1B,
+                                 ScheduleInterleavedAsync1F1B,
                                  make_schedule, paper_noam,
                                  register_schedule)
 from repro.parallel.mesh import ParallelismPlan  # noqa: E402
@@ -44,6 +46,7 @@ def all_schedules(s, r, v=1):
            ScheduleGPipe(s, r, weight_versions=2)]
     if r % s == 0:
         out.append(ScheduleInterleaved1F1B(s, r, virtual_stages=v))
+        out.append(ScheduleInterleavedAsync1F1B(s, r, virtual_stages=v))
     return out
 
 
@@ -177,6 +180,57 @@ def test_interleaving_shrinks_bubble(s, r, v):
         assert tsim_i.per_microbatch <= tsim_p.per_microbatch + 1e-12
 
 
+# ---------------------------------------------------------------------------
+# Async interleaved: per-chunk weight-version rings
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,r,v", GRID_INTER)
+def test_async_interleaved_shares_interleaved_timing(s, r, v):
+    """The async variant changes *versioning*, never timing: (tick,
+    stage) microbatch/chunk occupancy, exit/demb tables, bubble and the
+    residual ring are identical to flush-interleaved."""
+    a = ScheduleInterleavedAsync1F1B(s, r, virtual_stages=v)
+    f = ScheduleInterleaved1F1B(s, r, virtual_stages=v)
+    ta, tf = a.tables(), f.tables()
+    for col in (F_MB, F_CHUNK):
+        np.testing.assert_array_equal(ta.fwd[:, :, col], tf.fwd[:, :, col])
+    for col in (B_MB, B_CHUNK):
+        np.testing.assert_array_equal(ta.bwd[:, :, col], tf.bwd[:, :, col])
+    np.testing.assert_array_equal(ta.exit_mb, tf.exit_mb)
+    np.testing.assert_array_equal(ta.demb_mb, tf.demb_mb)
+    assert a.n_ticks == f.n_ticks
+    assert a.bubble_fraction == f.bubble_fraction
+    assert a.resid_slots == f.resid_slots
+    # ... but the semantics flip: per-microbatch updates over a ring
+    assert not a.accumulate and a.uses_stash_ring and not a.fwd_from_stash
+    assert f.accumulate and not f.uses_stash_ring
+
+
+@pytest.mark.parametrize("s,r,v", GRID_INTER + [(2, 4, 1), (4, 8, 1)])
+def test_async_per_chunk_ring_never_clobbered(s, r, v):
+    """Every chunk's ring slot written at F(m) survives until B(m), and
+    slots rotate as m % V per chunk (V = min(2S, R); 2S−1 at v = 1,
+    where the timing degenerates to plain 1F1B's)."""
+    sched = ScheduleInterleavedAsync1F1B(s, r, virtual_stages=v)
+    V = sched.stash_slots
+    assert V == max(1, min(2 * s if v > 1 else 2 * s - 1, r))
+    tabs = sched.tables()
+    for stage in range(s):
+        live = {}
+        for tick in range(sched.n_ticks):
+            fr = tabs.fwd[tick, stage]
+            if fr[F_MB] >= 0:
+                key = (int(fr[F_CHUNK]), int(fr[F_STASH_WRITE]))
+                assert int(fr[F_STASH_WRITE]) == int(fr[F_MB]) % V
+                assert key not in live, "slot reused while still live"
+                live[key] = int(fr[F_MB])
+            br = tabs.bwd[tick, stage]
+            if br[B_MB] >= 0:
+                key = (int(br[B_CHUNK]), int(br[B_VERSION]))
+                assert live.pop(key) == int(br[B_MB])
+        assert not live     # every stashed version was read exactly once
+
+
 def test_registry_and_plan_mapping():
     assert set(SCHEDULES) >= {"1f1b", "gpipe", "interleaved"}
     mk = ParallelismPlan
@@ -190,9 +244,19 @@ def test_registry_and_plan_mapping():
     it = make_schedule(mk(pp=2, tp=1, microbatches=4, stash_mode="flush",
                           schedule="interleaved", virtual_stages=2))
     assert isinstance(it, ScheduleInterleaved1F1B) and it.n_chunks == 4
+    ia = make_schedule(mk(pp=2, tp=1, microbatches=4, stash_mode="stash",
+                          schedule="interleaved_async", virtual_stages=2))
+    assert isinstance(ia, ScheduleInterleavedAsync1F1B)
+    assert ia.uses_stash_ring and not ia.accumulate
+    assert ia.stash_slots == 4                     # min(2S, R)
+    with pytest.raises(AssertionError):            # async needs 'stash'
+        make_schedule(mk(pp=2, tp=1, microbatches=4, stash_mode="flush",
+                         schedule="interleaved_async", virtual_stages=2))
     # plan-level stash_slots delegates to the schedule
     assert mk(pp=3, tp=1).stash_slots == 5
     assert mk(pp=3, tp=1, stash_mode="flush").stash_slots == 1
+    assert mk(pp=3, tp=1, microbatches=12, schedule="interleaved_async",
+              virtual_stages=2).stash_slots == 6   # min(2S, R)
 
     class Custom(Schedule1F1B):
         name = "custom-test"
@@ -260,3 +324,28 @@ if HAVE_HYPOTHESIS:
         plain = Schedule1F1B(s, groups * s)
         if v >= 2 and s >= 3:
             assert sched.bubble_fraction < plain.bubble_fraction
+
+    @given(inter_sizes)
+    def test_prop_async_ring_rotation(srv):
+        """Per-chunk ring invariants over the whole (S, R, v) space:
+        validate() proves slot liveness, and each chunk's write sequence
+        rotates m % V with no slot revisited inside one ring turn."""
+        s, groups, v = srv
+        r = groups * s
+        sched = ScheduleInterleavedAsync1F1B(s, r, virtual_stages=v)
+        sched.validate()    # includes the per-chunk ring liveness proof
+        V = sched.stash_slots
+        tabs = sched.tables()
+        writes = {}         # (stage, chunk) -> [(t, mb, slot)] in t order
+        for t in range(sched.n_ticks):
+            for stage in range(s):
+                fr = tabs.fwd[t, stage]
+                if fr[F_MB] >= 0:
+                    writes.setdefault((stage, int(fr[F_CHUNK])), []).append(
+                        (int(fr[F_MB]), int(fr[F_STASH_WRITE])))
+        assert len(writes) == s * v
+        for seq in writes.values():
+            assert [m for m, _ in seq] == list(range(r))   # m ascending
+            assert all(slot == m % V for m, slot in seq)
+            for k in range(len(seq) - V):                  # full turn apart
+                assert seq[k][1] == seq[k + V][1]
