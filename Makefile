@@ -1,5 +1,5 @@
 # Convenience entry points matching the ROADMAP commands.
-.PHONY: tier1 tier1-full bench plan-smoke docs-check
+.PHONY: tier1 tier1-full bench bench-serving plan-smoke serve-smoke docs-check
 
 tier1:
 	scripts/tier1.sh
@@ -10,8 +10,14 @@ tier1-full:
 bench:
 	PYTHONPATH=src:. python benchmarks/partitioner_bench.py
 
+bench-serving:
+	PYTHONPATH=src:. python benchmarks/serving_bench.py
+
 plan-smoke:
 	python scripts/plan_smoke.py
+
+serve-smoke:
+	python scripts/serve_smoke.py
 
 docs-check:
 	python scripts/docs_check.py

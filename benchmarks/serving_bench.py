@@ -1,0 +1,116 @@
+"""Serving-schedule benchmark: prefill TTFT and decode tokens/sec.
+
+Walks the forward-only serving tables (``serve_1f`` vs
+``serve_interleaved``) for the reference configs at the production
+serving shapes, entirely analytically — per-layer seconds from
+``core/profiler.py::profile_analytic`` over the rectangular-DP
+partition, the same machinery ``plan_search`` scores candidates with —
+so the bench runs in milliseconds on CPU and tracks exactly what the
+planner optimizes:
+
+  * prefill TTFT  — ``core/schedule.py::serve_ttft`` (weighted ramp
+    ticks: the worst request's time-to-first-token);
+  * decode rate   — global tokens per second of the steady decode loop
+    (one forward-only round = one token per sequence).
+
+Emits the ``BENCH_serving.json`` trajectory artifact (flat list of row
+dicts) and prints ``name,us_per_call,derived`` CSV rows like the other
+benchmarks.  Run via ``make bench-serving``:
+
+  PYTHONPATH=src:. python benchmarks/serving_bench.py [--out BENCH_serving.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro import configs
+from repro.core import profiler as prof
+from repro.core.partitioner import partition_rectangular, stage_phase_times
+from repro.core.schedule import (fit_serving_microbatches,
+                                 make_serving_schedule,
+                                 plan_kwargs_for_schedule, serve_ttft,
+                                 serving_cache_bytes, weighted_round_time)
+
+ARCHS = ("qwen3_14b", "olmoe_1b_7b", "rwkv6_1b6")
+HW = prof.TPU_V5E
+DATA = 16                       # production mesh: 16 data × 16 model
+
+
+def bench_arch(arch: str, schedules=("serve_1f", "serve_interleaved")):
+    cfg = configs.get(arch)
+    spec, base = cfg.full_spec(), cfg.PLAN
+    rows = []
+    for shape_name, workload in (("prefill_32k", "prefill"),
+                                 ("decode_32k", "decode")):
+        shape = configs.SHAPES[shape_name]
+        R = fit_serving_microbatches(base.decode_microbatches,
+                                     shape.global_batch, DATA)
+        rows_dev = max(shape.global_batch // DATA // R, 1)
+        qlen = shape.seq_len if workload == "prefill" else 1
+        mb_tokens = rows_dev * qlen
+        profiles = prof.profile_analytic(
+            spec, HW, minibatch_tokens=mb_tokens,
+            kv_len=shape.seq_len if workload == "decode" else None)
+        for name in schedules:
+            plan = base.with_(**plan_kwargs_for_schedule(
+                name, stash_mode=base.stash_mode))
+            if spec.n_layers % (plan.pp * plan.virtual_stages):
+                continue        # chunk count must divide the stack
+            sched = make_serving_schedule(plan, R)
+            part = partition_rectangular(profiles, sched.n_chunks, DATA, HW)
+            tf, _ = stage_phase_times(profiles, part, plan.pp, plan.tp, HW,
+                                      data_replicas=DATA)
+            round_s, bubble = weighted_round_time(sched, tf, 0.0)
+            ttft_s = serve_ttft(sched, tf)
+            cache = serving_cache_bytes(
+                spec, plan, sched, cache_len=shape.seq_len,
+                global_batch=shape.global_batch,
+                sp=shape.kind == "long_decode", data_replicas=DATA,
+                prefill=workload == "prefill")
+            row = {
+                "arch": arch, "shape": shape_name, "workload": workload,
+                "schedule": sched.name, "pp": plan.pp, "tp": plan.tp,
+                "virtual_stages": sched.virtual_stages,
+                "microbatches": R,
+                "ttft_ms": ttft_s * 1e3,
+                "round_ms": round_s * 1e3,
+                "tokens_per_sec": (shape.global_batch / round_s
+                                   if workload == "decode" else
+                                   shape.global_batch / max(ttft_s, 1e-12)),
+                "bubble": bubble,
+                "kv_cache_gb": cache / 1e9,
+            }
+            rows.append(row)
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", type=str, default="BENCH_serving.json")
+    args = ap.parse_args(argv)
+    rows = []
+    for arch in ARCHS:
+        rows.extend(bench_arch(arch))
+    print("name,us_per_call,derived")
+    for r in rows:
+        metric = (r["ttft_ms"] if r["workload"] == "prefill"
+                  else r["round_ms"])
+        print(f"{r['arch']}.{r['shape']}.{r['schedule']},"
+              f"{metric * 1e3:.1f},"
+              f"tok/s={r['tokens_per_sec']:.1f} bubble={r['bubble']:.3f} "
+              f"kv={r['kv_cache_gb']:.2f}GB")
+    # sanity: interleaving must not lose TTFT where both schedules ran
+    for arch in ARCHS:
+        pre = {r["schedule"]: r for r in rows
+               if r["arch"] == arch and r["workload"] == "prefill"}
+        if {"serve_1f", "serve_interleaved"} <= set(pre):
+            assert (pre["serve_interleaved"]["ttft_ms"]
+                    <= pre["serve_1f"]["ttft_ms"] + 1e-9), arch
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {len(rows)} rows -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,8 @@
 #   scripts/tier1.sh --full     # everything, including the slow SPMD matrix
 # Both variants first run the plan_search smoke (scripts/plan_smoke.py)
 # — the chosen plan for qwen3 + olmoe must fit the config's HBM budget —
+# the serve smoke (scripts/serve_smoke.py): both serving schedules
+# through EngineSession.prefill + 4 decode steps, bit-identical —
 # and the docs-check gate (scripts/docs_check.py): every
 # `path.py::symbol` reference in docs/*.md + README.md must resolve
 # against the source tree, so renamed symbols fail fast.
@@ -16,5 +18,6 @@ if [[ "${1:-}" == "--full" ]]; then
     ARGS+=(-m "")
 fi
 python scripts/plan_smoke.py
+python scripts/serve_smoke.py
 python scripts/docs_check.py
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest "${ARGS[@]}" "$@"

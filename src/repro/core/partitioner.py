@@ -24,8 +24,10 @@ import numpy as np
 from repro.core.profiler import (Hardware, LayerProfile,
                                  comm_time_activations, comm_time_tp_allreduce,
                                  comm_time_weight_sync, profile_analytic)
-from repro.core.schedule import (SCHEDULES, MemoryModel, make_schedule,
-                                 paper_noam, plan_kwargs_for_schedule,
+from repro.core.schedule import (SCHEDULES, MemoryModel,
+                                 fit_serving_microbatches, make_schedule,
+                                 make_serving_schedule, paper_noam,
+                                 plan_kwargs_for_schedule, serve_ttft,
                                  weighted_round_time)
 
 
@@ -296,7 +298,13 @@ def uniform_layer_split(n_layers: int, n_stages: int) -> List[Tuple[int, int]]:
 
 @dataclasses.dataclass(frozen=True)
 class PlanChoice:
-    """One scored (pp, tp, schedule, v) candidate."""
+    """One scored (pp, tp, schedule, v) candidate.
+
+    ``round_time`` is the ranking score for the candidate's workload:
+    the simulated train round for ``workload='train'``, the per-token
+    decode round for ``'decode'``, and the weighted time-to-first-token
+    (ramp ticks) for ``'prefill'``.
+    """
 
     plan: object                   # ParallelismPlan
     partition: Partition           # rectangular split into pp·v chunks
@@ -305,6 +313,7 @@ class PlanChoice:
     memory: MemoryModel
     hbm_bytes: float               # budget the candidate was checked against
     feasible: bool                 # memory.total_bytes <= hbm_bytes
+    workload: str = "train"        # train | prefill | decode
 
     @property
     def per_microbatch(self) -> float:
@@ -312,10 +321,11 @@ class PlanChoice:
 
     def describe(self) -> str:
         ok = "fits" if self.feasible else "OVER BUDGET"
+        score = "ttft" if self.workload == "prefill" else "round"
         return (f"pp={self.plan.pp} tp={self.plan.tp} "
                 f"sched={self.plan.schedule}/{self.plan.stash_mode}"
                 f"{f' v={self.plan.virtual_stages}' if self.plan.virtual_stages > 1 else ''}"
-                f" round={self.round_time * 1e3:.3f} ms"
+                f" {score}={self.round_time * 1e3:.3f} ms"
                 f" bubble={self.bubble_fraction:.3f}"
                 f" hbm={self.memory.total_bytes / 1e9:.2f}"
                 f"/{self.hbm_bytes / 1e9:.1f} GB [{ok}]")
@@ -369,7 +379,11 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
                 schedules: Optional[Sequence[str]] = None,
                 max_virtual_stages: int = 4,
                 hbm_bytes: Optional[float] = None,
-                return_all: bool = False):
+                return_all: bool = False,
+                workload: str = "train",
+                cache_len: Optional[int] = None,
+                global_batch: Optional[int] = None,
+                sp: bool = False):
     """Jointly pick (pp, tp, schedule, virtual_stages) for a model axis.
 
     Enumerates every pp dividing ``model_axis`` whose chunk count
@@ -380,6 +394,27 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
     exceeds the HBM budget (``hw.hbm_bytes`` unless overridden) are
     rejected outright — a plan that does not fit is not a plan.
 
+    ``workload`` selects the execution mode being planned:
+
+    * ``"train"`` — the training registry schedules, scored by the
+      simulated round_time (the default, unchanged behaviour);
+    * ``"decode"`` — the serving schedules (``serve_1f``,
+      ``serve_interleaved``), scored by the per-token round time of the
+      forward-only tables, with the attention span pinned to
+      ``cache_len`` in the analytic profile;
+    * ``"prefill"`` — the serving schedules scored by
+      :func:`~repro.core.schedule.serve_ttft` (weighted ramp ticks —
+      the worst request's time-to-first-token).
+
+    Serving workloads require ``cache_len=`` and ``global_batch=`` (and
+    honor ``sp=``): the MemoryModel then carries the KV/SSM cache term,
+    so a decode plan is budgeted exactly like a training plan —
+    including rejection when the cache does not fit.  The microbatch
+    count is the one the engine will actually run
+    (:func:`~repro.core.schedule.fit_serving_microbatches`: batch-fitted
+    against ``data_replicas``, 1 under ``sp``), so ramp, workspace and
+    TTFT describe the executed tables, not the config's nominal R.
+
     Pass measured-calibrated ``profiles``
     (profiler.scale_profiles_to_measurements) to make the search respond
     to live straggler measurements.  Tie-breaking is deterministic:
@@ -389,15 +424,32 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
     Returns the best :class:`PlanChoice` (``return_all=True``: the full
     ranked candidate list instead, infeasible ones included).
     """
+    assert workload in ("train", "prefill", "decode"), workload
+    serving = workload != "train"
+    if serving:
+        assert cache_len is not None and global_batch is not None, (
+            f"plan_search(workload={workload!r}) needs cache_len= and "
+            "global_batch= to size the KV/SSM cache term")
     if profiles is None:
-        profiles = profile_analytic(spec, hw,
-                                    minibatch_tokens=minibatch_tokens)
+        profiles = profile_analytic(
+            spec, hw, minibatch_tokens=minibatch_tokens,
+            kv_len=cache_len if workload == "decode" else None)
     budget = float(hw.hbm_bytes if hbm_bytes is None else hbm_bytes)
-    R = base_plan.microbatches
-    names = tuple(schedules) if schedules else ("1f1b", "gpipe",
-                                                "interleaved",
-                                                "interleaved_async")
-    base_name = make_schedule(base_plan).name
+    if serving:
+        # price the R the engine will actually run: batch-fitted, and 1
+        # under sequence-parallel decode (rows replicate) — not the
+        # config's nominal decode_microbatches
+        R = fit_serving_microbatches(base_plan.decode_microbatches,
+                                     global_batch, max(data_replicas, 1),
+                                     sp=sp)
+        base_plan = base_plan.with_(decode_microbatches=R)
+    else:
+        R = base_plan.microbatches
+    names = tuple(schedules) if schedules else (
+        ("serve_1f", "serve_interleaved") if serving
+        else ("1f1b", "gpipe", "interleaved", "interleaved_async"))
+    base_name = (make_serving_schedule(base_plan).name if serving
+                 else make_schedule(base_plan).name)
     cands: List[PlanChoice] = []
     parts: dict = {}        # n_chunks -> Partition (schedule-independent)
     phases: dict = {}       # (pp, v, tp) -> (t_fwd, t_bwd)
@@ -412,14 +464,19 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
             assert cls is not None, (
                 f"unknown schedule {name!r}; registered: "
                 f"{sorted(SCHEDULES)}")
+            assert cls.is_serving == serving, (
+                f"schedule {name!r} does not run the {workload!r} "
+                "workload")
             vs = (tuple(range(2, max_virtual_stages + 1))
                   if cls.takes_virtual_stages else (1,))
             for v in vs:
                 n_chunks = pp * v
                 if spec.n_layers % n_chunks:
                     continue
-                # interleaved family: microbatch groups need R % S == 0
-                if cls.takes_virtual_stages and R % pp:
+                # training interleaved family: microbatch groups need
+                # R % S == 0 (the serving family lifts this — fwd-only)
+                if cls.takes_virtual_stages \
+                        and cls.needs_group_microbatches and R % pp:
                     continue
                 try:
                     spec.stage_program(n_chunks)
@@ -427,9 +484,18 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
                     continue
                 plan = _candidate_plan(base_plan, pp, tp, name, v)
                 sched = plan.make_schedule()
-                mm = sched.memory_model(spec, plan, hw,
-                                        microbatch_tokens=minibatch_tokens,
-                                        data_replicas=data_replicas)
+                if serving:
+                    mm = sched.memory_model(
+                        spec, plan, hw,
+                        microbatch_tokens=minibatch_tokens,
+                        data_replicas=data_replicas, cache_len=cache_len,
+                        global_batch=global_batch, sp=sp,
+                        prefill=(workload == "prefill"))
+                else:
+                    mm = sched.memory_model(
+                        spec, plan, hw,
+                        microbatch_tokens=minibatch_tokens,
+                        data_replicas=data_replicas)
                 part = parts.get(n_chunks)
                 if part is None:
                     part = parts[n_chunks] = partition_rectangular(
@@ -441,8 +507,11 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
                         data_replicas=data_replicas)
                 tf, tb = phases[key]
                 rt, bubble = weighted_round_time(sched, tf, tb)
+                if workload == "prefill":
+                    rt = serve_ttft(sched, tf)
                 cands.append(PlanChoice(plan, part, rt, bubble, mm, budget,
-                                        feasible=mm.fits(budget)))
+                                        feasible=mm.fits(budget),
+                                        workload=workload))
     assert cands, f"no structurally valid plan for model_axis={model_axis}"
 
     def rank(c: PlanChoice):

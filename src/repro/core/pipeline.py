@@ -136,6 +136,10 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
     bmb = global_batch // R                # global rows per microbatch
 
     sched = sched_lib.make_schedule(plan)
+    assert not sched.is_serving, (
+        f"schedule {sched.name!r} is forward-only (serving): it has no "
+        "backward slots to train with — drive it through "
+        "serving/engine.py::build_serving instead")
     sched.validate()
     vs = sched.virtual_stages               # local chunks per stage
     n_chunks = sched.n_chunks

@@ -146,9 +146,15 @@ def model_flops_train(spec: spec_lib.ModelSpec, tokens: int) -> float:
 
 
 def profile_analytic(spec: spec_lib.ModelSpec, hw: Hardware, *,
-                     minibatch_tokens: int, bwd_factor: float = 2.0
-                     ) -> List[LayerProfile]:
-    """Per-layer profiles for the partitioner (embed/head folded into ends)."""
+                     minibatch_tokens: int, bwd_factor: float = 2.0,
+                     kv_len: Optional[int] = None) -> List[LayerProfile]:
+    """Per-layer profiles for the partitioner (embed/head folded into ends).
+
+    ``kv_len`` sets the attention span independently of the query token
+    count — the decode-workload case (1 query token per row against a
+    ``cache_len``-deep KV cache); ``None`` keeps the training/prefill
+    self-attention span (= ``minibatch_tokens``).
+    """
     out: List[LayerProfile] = []
     d = spec.d_model
     act_bytes = minibatch_tokens * d * ACT_BYTES
@@ -158,7 +164,7 @@ def profile_analytic(spec: spec_lib.ModelSpec, hw: Hardware, *,
     out.append(LayerProfile("embed", embed_t, embed_t,
                             act_bytes, spec.vocab * d))
     for i, blk in enumerate(spec.blocks):
-        f = block_flops_fwd(spec, blk, minibatch_tokens)
+        f = block_flops_fwd(spec, blk, minibatch_tokens, kv_len)
         t_f = f / (hw.flops_peak * hw.mfu)
         out.append(LayerProfile(
             f"block_{i}", t_f, bwd_factor * t_f, act_bytes,

@@ -49,11 +49,27 @@ Schedules shipped:
                           chunk-major ([versions, S·v chunk rows, ...])
                           so each stage shard owns its chunks' rings
                           contiguously.
+  ScheduleServe1F         forward-only serving round (prefill or one
+                          decode step): stage s forwards microbatch
+                          t − s, R + S − 1 ticks, no backward slots.
+  ScheduleServeInterleaved
+                          forward-only interleaved serving: the same
+                          virtual-stage chunk placement as training
+                          (chunk c = j·S + s on stage s), cutting the
+                          prefill ramp from (S−1) full-stage passes to
+                          (S−1)/v — lower time-to-first-token for the
+                          last request in the batch at S ≥ 2, v ≥ 2.
+                          No backward ⇒ no microbatch-group constraint:
+                          any R ≥ 1 is valid (sp decode runs R = 1).
 
 Registry: ``SCHEDULES`` maps names to classes; ``make_schedule(plan)``
 builds the instance a :class:`~repro.parallel.mesh.ParallelismPlan`
 asks for (``plan.schedule='auto'`` derives the schedule from the legacy
 ``stash_mode`` field, so existing configs keep working unchanged).
+``make_serving_schedule(plan, R)`` is the forward-only analogue: a plan
+carrying a training schedule (or 'auto') maps onto ``serve_1f`` /
+``serve_interleaved`` by its ``virtual_stages``, and an unknown name is
+a registry-lookup error, not an assert.
 """
 from __future__ import annotations
 
@@ -111,12 +127,15 @@ class MemoryModel:
     workspace_bytes: float     # in-flight fwd/bwd activations (remat-aware)
     grad_bytes: float          # gradient accumulator (flush family only)
     optimizer_bytes: float     # Adam moments (ZeRO-1 sharded when plan.zero1)
+    cache_bytes: float = 0.0   # serving KV/SSM cache (worst stage, sharded
+    #                            rows over dp — or positions under sp — and
+    #                            KV heads over tp); 0 for training schedules
 
     @property
     def total_bytes(self) -> float:
         return (self.weight_bytes + self.stash_bytes + self.resid_bytes
                 + self.workspace_bytes + self.grad_bytes
-                + self.optimizer_bytes)
+                + self.optimizer_bytes + self.cache_bytes)
 
     def fits(self, hbm_bytes: float) -> bool:
         return self.total_bytes <= hbm_bytes
@@ -126,13 +145,15 @@ class MemoryModel:
 
     def __str__(self):
         gb = 1 / 1e9
+        cache = (f" cache {self.cache_bytes * gb:.2f}"
+                 if self.cache_bytes else "")
         return (f"{self.schedule}: total {self.total_bytes * gb:.2f} GB "
                 f"(weights {self.weight_bytes * gb:.2f} "
                 f"stash {self.stash_bytes * gb:.2f} "
                 f"resid {self.resid_bytes * gb:.2f} "
                 f"work {self.workspace_bytes * gb:.2f} "
                 f"grad {self.grad_bytes * gb:.2f} "
-                f"opt {self.optimizer_bytes * gb:.2f})")
+                f"opt {self.optimizer_bytes * gb:.2f}{cache})")
 
 
 def _interval_color(intervals: Iterable[Tuple[int, int]]) -> Tuple[List[int],
@@ -158,6 +179,38 @@ def _interval_color(intervals: Iterable[Tuple[int, int]]) -> Tuple[List[int],
         slots[k] = s
         heapq.heappush(free, (r, s))
     return slots, max(n_slots, 1)
+
+
+def stage_weight_params(spec, plan, sched) -> Tuple[float, float]:
+    """Worst-stage per-device parameter counts ``(blocks, shared)``.
+
+    ``blocks``: the most loaded physical stage's block parameters (stage
+    s owns chunks j·S + s of the S·v-way cut), divided by tp.
+    ``shared``: the embed + head + final-norm shard over the full
+    (stage, tensor) submesh.  Shared by the training and serving memory
+    models — the weight layout is schedule-independent.
+    """
+    from repro.models.spec import _block_params
+
+    S, v = sched.n_stages, sched.virtual_stages
+    assert plan.pp == S and plan.virtual_stages == v, (
+        "memory_model called with a plan that does not describe this "
+        f"schedule: plan (pp={plan.pp}, v={plan.virtual_stages}) vs "
+        f"schedule (S={S}, v={v})")
+    L = sched.n_chunks
+    assert spec.n_layers % L == 0, (spec.n_layers, L)
+    lps = spec.n_layers // L
+    tp = plan.tp
+    stage_params = [0.0] * S
+    for c in range(L):
+        stage_params[c % S] += sum(
+            _block_params(spec, spec.blocks[i])
+            for i in range(c * lps, (c + 1) * lps))
+    blocks = max(stage_params) / tp
+    shared = (spec.vocab * spec.d_model
+              * (1 if spec.tie_embeddings else 2) + spec.d_model)
+    shared /= S * tp
+    return blocks, shared
 
 
 # ---------------------------------------------------------------------------
@@ -189,9 +242,14 @@ class PipelineSchedule:
     #: plan.stash_mode values this schedule accepts (first = default,
     #: used by :func:`plan_kwargs_for_schedule` to normalize a plan)
     plan_stash_modes: Tuple[str, ...] = ("stash", "vertical")
-    #: schedule consumes plan.virtual_stages (> 1) and needs microbatch
-    #: groups (R % pp == 0) — the interleaved family
+    #: schedule consumes plan.virtual_stages (> 1) — the interleaved family
     takes_virtual_stages = False
+    #: virtual stages require microbatch groups (R % pp == 0); the
+    #: forward-only serving family lifts this (no backward to interleave)
+    needs_group_microbatches = True
+    #: forward-only inference schedule (no B slots; memory_model takes the
+    #: serving cache terms) — see :class:`ServingSchedule`
+    is_serving = False
 
     def __post_init__(self):
         assert self.n_stages >= 1 and self.n_microbatches >= 1
@@ -298,28 +356,9 @@ class PipelineSchedule:
         ZeRO-1-sharded over the data axis when the plan says so.
         """
         from repro.core.profiler import ACT_BYTES
-        from repro.models.spec import _block_params
 
-        S, v = self.n_stages, self.virtual_stages
-        assert plan.pp == S and plan.virtual_stages == v, (
-            "memory_model called with a plan that does not describe this "
-            f"schedule: plan (pp={plan.pp}, v={plan.virtual_stages}) vs "
-            f"schedule (S={S}, v={v})")
-        L = self.n_chunks
-        assert spec.n_layers % L == 0, (spec.n_layers, L)
-        lps = spec.n_layers // L
-        tp = plan.tp
-        # per-physical-stage block params: stage s owns chunks j·S + s
-        stage_params = [0.0] * S
-        for c in range(L):
-            stage_params[c % S] += sum(
-                _block_params(spec, spec.blocks[i])
-                for i in range(c * lps, (c + 1) * lps))
-        blocks = max(stage_params) / tp
-        # embed + head + final norm shard over ("stage", "tensor")
-        shared = (spec.vocab * spec.d_model
-                  * (1 if spec.tie_embeddings else 2) + spec.d_model)
-        shared /= S * tp
+        lps = spec.n_layers // self.n_chunks
+        blocks, shared = stage_weight_params(spec, plan, self)
         pb = hw.param_bytes
         act = microbatch_tokens * spec.d_model * ACT_BYTES
         # remat keeps ~O(1) layer activations live during the recomputed
@@ -866,6 +905,366 @@ class ScheduleInterleavedAsync1F1B(ScheduleInterleaved1F1B):
 
 
 # ---------------------------------------------------------------------------
+# Serving schedules — forward-only rounds over the same tables
+# ---------------------------------------------------------------------------
+
+def default_cache_lens(spec, pp: int, cache_len: int) -> List[int]:
+    """Per-position static KV capacities (union-max across stages).
+
+    Windowed layers only need ``window`` slots; a position gets the max
+    requirement over the stages (chunks — pass the chunk count for a
+    virtual-stage split) that share it, so the capacities are
+    SPMD-uniform.  Lives here because both the serving engine
+    (serving/engine.py) and the serving memory model consume it.
+    """
+    lps = spec.layers_per_stage(pp)
+    lens = []
+    for i in range(lps):
+        need = 0
+        for s in range(pp):
+            blk = spec.blocks[s * lps + i]
+            if blk.mixer != "attn":
+                continue
+            w = blk.window
+            need = max(need, cache_len if w <= 0 else min(w, cache_len))
+        lens.append(max(need, 8))
+    return lens
+
+
+def serving_cache_bytes(spec, plan, sched, *, cache_len: int,
+                        global_batch: int, sp: bool = False,
+                        prefill: bool = False,
+                        data_replicas: int = 1) -> float:
+    """Worst-stage per-device KV/SSM/WKV cache bytes of one serve state.
+
+    Mirrors the engine's cache template (serving/engine.py): stage s
+    holds its chunks' recurrent state for every row it serves.  Rows
+    shard over the data axes (``global_batch / dp`` rows per device);
+    under sequence-parallel decode (``sp``) rows replicate and the
+    full-length KV *positions* shard instead (windowed ring buffers stay
+    replicated); KV heads shard over tp when divisible (GQA groups
+    replicate otherwise, matching models/init.py::attn_static).  Prefill
+    forces full-length caches (the contiguous qlen slab write).
+    """
+    from repro.core.profiler import ACT_BYTES
+
+    S, v = sched.n_stages, sched.virtual_stages
+    L = S * v
+    assert spec.n_layers % L == 0, (spec.n_layers, L)
+    lps = spec.n_layers // L
+    dp = max(int(data_replicas), 1)
+    tp = plan.tp
+    if sp:
+        rows = float(global_batch)               # replicated over data
+    else:
+        rows = global_batch / dp                 # sharded rows
+    if prefill:
+        lens = [cache_len] * lps
+    else:
+        lens = default_cache_lens(spec, L, cache_len)
+    sp_flags = [sp and ln >= cache_len for ln in lens]
+    if sp:
+        lens = [max(-(-ln // dp), 8) if f else ln
+                for ln, f in zip(lens, sp_flags)]
+    kv_local = (spec.n_kv // tp if spec.n_kv and spec.n_kv % tp == 0
+                else spec.n_kv)
+    stage_bytes = [0.0] * S
+    for c in range(L):
+        s = c % S
+        for i in range(lps):
+            blk = spec.blocks[c * lps + i]
+            b = 0.0
+            if blk.mixer == "attn":
+                b += 2.0 * rows * lens[i] * kv_local * spec.d_head \
+                    * ACT_BYTES
+            elif blk.mixer == "mamba":
+                ms = spec.mamba
+                d_inner = ms.expand * spec.d_model // tp
+                b += rows * (ms.d_conv - 1) * d_inner * ACT_BYTES
+                b += rows * d_inner * ms.d_state * 4.0        # fp32 scan
+            elif blk.mixer == "rwkv":
+                rs = spec.rwkv
+                heads = spec.d_model // rs.head_dim // tp
+                b += rows * spec.d_model * ACT_BYTES
+                b += rows * heads * rs.head_dim * rs.head_dim * 4.0
+            if blk.ffn == "rwkv_cmix":
+                b += rows * spec.d_model * ACT_BYTES
+            stage_bytes[s] += b
+    return max(stage_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingSchedule(PipelineSchedule):
+    """Forward-only pipelined round: prefill, or one decode step.
+
+    Timing is the mixed-radix decomposition of the training interleaved
+    forward — microbatch m = g·S + o forwards chunk c = j·S + s at
+
+        t_F = s + g·v·S + j·S + o
+
+    — with NO backward slots, which removes the microbatch-group
+    constraint: (g, j, o) decompose any t − s uniquely for o < S,
+    j < v, so partial last groups are just bubbles and any R ≥ 1 is
+    valid (sequence-parallel decode runs R = 1).  v = 1 reduces to the
+    classic fwd-only 1F pipe (stage s forwards microbatch t − s,
+    n_ticks = R + S − 1).  ``validate()`` proves the forward-only
+    contract: exactly-once F per (microbatch, chunk), one-tick hop
+    adjacency across every chunk boundary (wraps included), embeds
+    consumed exactly at chunk 0, an empty backward table, and exit-table
+    agreement.
+
+    ``memory_model`` replaces the training rings with the serving cache
+    term: live weights + KV/SSM cache (:func:`serving_cache_bytes`) +
+    the engine's in-flight rings (embeds + hidden, R slots each).
+    """
+
+    name = "abstract_serve"
+    accumulate = False
+    uses_stash_ring = False
+    fwd_from_stash = False
+    plan_stash_modes = ("stash", "vertical", "flush", "2bw")
+    needs_group_microbatches = False
+    is_serving = True
+
+    @property
+    def n_ticks(self) -> int:
+        S, R, v = self.n_stages, self.n_microbatches, self.virtual_stages
+        g, o = divmod(R - 1, S)
+        return (S - 1) + g * v * S + (v - 1) * S + o + 1
+
+    @property
+    def stash_slots(self) -> int:
+        return 1                     # live weights only; nothing stashed
+
+    @property
+    def resid_slots(self) -> int:
+        return 1                     # no backward ⇒ no residual ring
+
+    def _build_tables(self) -> ScheduleTables:
+        S, R, v = self.n_stages, self.n_microbatches, self.virtual_stages
+        T = self.n_ticks
+        fwd = np.full((T, S, F_COLS), -1, np.int32)
+        bwd = np.full((T, S, B_COLS), -1, np.int32)
+        exit_mb = np.full((T,), -1, np.int32)
+        demb = np.full((T,), -1, np.int32)
+        for m in range(R):
+            g, o = divmod(m, S)
+            for j in range(v):
+                for s in range(S):
+                    c = j * S + s
+                    t = s + g * v * S + j * S + o
+                    assert fwd[t, s, F_MB] < 0, ("F slot collision", t, s)
+                    fwd[t, s, F_MB] = m
+                    fwd[t, s, F_CHUNK] = j
+                    fwd[t, s, F_FROM_EMBEDS] = 1 if c == 0 else 0
+                    fwd[t, s, F_STASH_WRITE] = 0
+                    fwd[t, s, F_VERSION] = -1
+                    fwd[t, s, F_RESID_WRITE] = 0
+                    if c == S * v - 1:
+                        exit_mb[t] = m
+        return ScheduleTables(fwd, bwd, exit_mb, demb)
+
+    def validate(self) -> None:
+        """Forward-only dataflow contract (see class docstring)."""
+        S, R, v = self.n_stages, self.n_microbatches, self.virtual_stages
+        tabs = self.tables()
+        T, L = self.n_ticks, S * v
+        assert tabs.fwd.shape == (T, S, F_COLS), tabs.fwd.shape
+        assert tabs.bwd.shape == (T, S, B_COLS), tabs.bwd.shape
+        assert (tabs.bwd[:, :, B_MB] < 0).all(), "serving is forward-only"
+        assert (tabs.demb_mb < 0).all(), "no d(embeddings) when serving"
+        f_time: Dict[Tuple[int, int], int] = {}
+        for t in range(T):
+            for s in range(S):
+                fr = tabs.fwd[t, s]
+                if fr[F_MB] < 0:
+                    continue
+                c = int(fr[F_CHUNK]) * S + s
+                key = (int(fr[F_MB]), c)
+                assert key not in f_time, f"duplicate F{key}"
+                assert (fr[F_FROM_EMBEDS] == 1) == (c == 0), (t, s)
+                f_time[key] = t
+        assert len(f_time) == R * L, (len(f_time), R * L)
+        for m in range(R):
+            for c in range(1, L):   # one-tick hops, wrap included
+                assert f_time[(m, c)] == f_time[(m, c - 1)] + 1, (m, c)
+        for t in range(T):
+            fr = tabs.fwd[t, S - 1]
+            is_exit = fr[F_MB] >= 0 and fr[F_CHUNK] == v - 1
+            assert tabs.exit_mb[t] == (fr[F_MB] if is_exit else -1), t
+        assert int((tabs.exit_mb >= 0).sum()) == R
+        assert tabs.exit_mb[T - 1] >= 0, "round must end on the last exit"
+
+    def memory_model(self, spec, plan, hw, *, microbatch_tokens: int,
+                     data_replicas: int = 1, cache_len: int = None,
+                     global_batch: int = None, sp: bool = False,
+                     prefill: bool = False) -> MemoryModel:
+        """Serving footprint: weights + KV/SSM cache + in-flight rings.
+
+        No version ring, residual ring, gradient accumulator or
+        optimizer state — the serving state is {params, cache, pos}.
+        The workspace term matches the engine's rings: the R-slot embeds
+        ring, the R-slot exiting-hidden ring, and one activation in
+        flight per stage (each slot is one microbatch × qlen of hidden
+        state — ``microbatch_tokens`` rows·qlen per device).
+        """
+        assert cache_len is not None and global_batch is not None, (
+            "serving memory_model needs cache_len= and global_batch= "
+            "(the KV/SSM cache term is sized from them)")
+        from repro.core.profiler import ACT_BYTES
+
+        blocks, shared = stage_weight_params(spec, plan, self)
+        act = microbatch_tokens * spec.d_model * ACT_BYTES
+        cache = serving_cache_bytes(
+            spec, plan, self, cache_len=cache_len,
+            global_batch=global_batch, sp=sp, prefill=prefill,
+            data_replicas=data_replicas)
+        return MemoryModel(
+            schedule=self.name,
+            weight_bytes=(blocks + shared) * hw.param_bytes,
+            stash_bytes=0.0,
+            resid_bytes=0.0,
+            workspace_bytes=(2.0 * self.n_microbatches + 2.0) * act,
+            grad_bytes=0.0,
+            optimizer_bytes=0.0,
+            cache_bytes=cache)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleServe1F(ServingSchedule):
+    """Forward-only 1F serving pipe: stage s forwards microbatch t − s.
+
+    The table form of the old hand-rolled serving loop: R + S − 1
+    ticks, one chunk per stage.
+    """
+
+    name = "serve_1f"
+
+    @classmethod
+    def from_plan(cls, plan) -> "ScheduleServe1F":
+        return cls(plan.pp, plan.decode_microbatches)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleServeInterleaved(ServingSchedule):
+    """Forward-only interleaved serving: v chunks per physical stage.
+
+    Same chunk placement and storage order as the training interleaved
+    family (chunk c = j·S + s lives on stage s as local chunk j, storage
+    row s·v + j — :meth:`storage_chunk_order` is shared with
+    :class:`ScheduleInterleaved1F1B`, so
+    ``reshard_state_for_plan`` round-trips train → serve checkpoints
+    unchanged).  A chunk slot costs 1/v of a stage pass, so the batch
+    prefill completes in R + (S−1)/v stage-passes instead of 1F's
+    R + (S−1): the ramp — and with it the worst request's
+    time-to-first-token — shrinks by v (see :func:`serve_ttft`).
+    """
+
+    virtual_stages: int = 2
+
+    name = "serve_interleaved"
+    takes_virtual_stages = True
+
+    def __post_init__(self):
+        super().__post_init__()
+        assert self.virtual_stages >= 1, self.virtual_stages
+
+    # same storage permutation as training interleaving — the whole point
+    storage_chunk_order = ScheduleInterleaved1F1B.storage_chunk_order
+
+    @classmethod
+    def from_plan(cls, plan) -> "ScheduleServeInterleaved":
+        # the plan's chunking verbatim — never silently forced to 2, so
+        # the schedule always describes its plan (memory_model asserts
+        # exactly that); v = 1 degenerates to the serve_1f timing
+        return cls(plan.pp, plan.decode_microbatches,
+                   virtual_stages=getattr(plan, "virtual_stages", 1) or 1)
+
+
+def serve_ttft(sched: PipelineSchedule, t_fwd=1.0) -> float:
+    """Weighted time-to-first-token of a prefill round.
+
+    The F-phase walk (ramp ticks charged like
+    :func:`weighted_round_time`: each tick costs its slowest active
+    stage's forward, a chunk slot costs 1/v of a stage pass) through the
+    tick where the LAST microbatch's first token exits — i.e. the
+    worst request's TTFT when the whole batch prefills together.  For a
+    forward-only schedule this is the entire round; the closed forms
+    (full microbatch groups, S | R) are (R + S − 1)·t for ``serve_1f``
+    and (v·R + S − 1)·t/v for ``serve_interleaved`` — strictly smaller
+    for v ≥ 2 whenever S ≥ 2.  Partial last groups (R % S ≠ 0) pad the
+    interleaved ramp but never past the 1F time.
+    """
+    tabs = sched.tables()
+    S, v = sched.n_stages, sched.virtual_stages
+    tf = np.broadcast_to(np.asarray(t_fwd, float), (S,))
+    fbusy = tabs.fwd[:, :, F_MB] >= 0
+    f_phase = np.where(fbusy, tf[None, :], 0.0).max(axis=1) / v
+    exits = np.flatnonzero(tabs.exit_mb >= 0)
+    assert exits.size, "schedule has no exit ticks"
+    return float(f_phase[: int(exits[-1]) + 1].sum())
+
+
+def fit_serving_microbatches(decode_microbatches: int, global_batch: int,
+                             dp: int, *, sp: bool = False) -> int:
+    """The decode microbatch count the engine will actually run.
+
+    Largest R ≤ ``decode_microbatches`` with dp·R | global_batch
+    (sequence-parallel decode forces R = 1: rows replicate).  Shared by
+    the engine (serving/engine.py::fit_decode_microbatches) and
+    ``plan_search``'s serving workloads, so the planner prices the same
+    tables the engine executes — not the config's nominal R.
+    """
+    if sp:
+        return 1
+    if decode_microbatches < 1:
+        raise ValueError(
+            f"decode_microbatches={decode_microbatches} must be >= 1")
+    if dp < 1 or global_batch % dp:
+        raise ValueError(
+            f"global_batch={global_batch} is not divisible by the "
+            f"data-parallel degree dp={dp}; no microbatch count can tile "
+            "it — pick a batch divisible by dp or reshape the mesh")
+    R = min(decode_microbatches, max(global_batch // dp, 1))
+    while global_batch % (dp * R):
+        R -= 1
+    return R
+
+
+def make_serving_schedule(plan, n_microbatches: int = None
+                          ) -> "ServingSchedule":
+    """The forward-only schedule a plan asks for, from the registry.
+
+    A plan whose ``schedule`` names a serving schedule gets exactly
+    that; a training-schedule (or ``'auto'``) plan maps onto the
+    serving analogue of its chunking — ``serve_interleaved`` when
+    ``virtual_stages > 1``, else ``serve_1f``.  ``n_microbatches``
+    overrides ``plan.decode_microbatches`` (the engine passes its
+    batch-fitted R).  Unknown or non-serving resolutions raise a
+    registry-lookup error naming the registered serving schedules.
+    """
+    name = getattr(plan, "schedule", "auto")
+    cls = SCHEDULES.get(name)
+    # only 'auto' and *registered training* schedules map onto their
+    # serving analogue — an unknown name is an error, never a silent
+    # serve_1f fallback
+    if name == "auto" or (cls is not None and not cls.is_serving):
+        name = ("serve_interleaved" if plan.virtual_stages > 1
+                else "serve_1f")
+        cls = SCHEDULES.get(name)
+    if cls is None or not cls.is_serving:
+        raise KeyError(
+            f"no serving schedule {name!r} in the registry; registered "
+            f"serving schedules: "
+            f"{sorted(n for n, c in SCHEDULES.items() if c.is_serving)}")
+    R = (n_microbatches if n_microbatches is not None
+         else plan.decode_microbatches)
+    if cls.takes_virtual_stages:
+        return cls(plan.pp, R, virtual_stages=plan.virtual_stages)
+    return cls(plan.pp, R)
+
+
+# ---------------------------------------------------------------------------
 # Time-weighted round walk (shared by benchmarks/simulator and plan_search)
 # ---------------------------------------------------------------------------
 
@@ -911,6 +1310,8 @@ SCHEDULES: Dict[str, Type[PipelineSchedule]] = {
     "gpipe": ScheduleGPipe,
     "interleaved": ScheduleInterleaved1F1B,
     "interleaved_async": ScheduleInterleavedAsync1F1B,
+    "serve_1f": ScheduleServe1F,
+    "serve_interleaved": ScheduleServeInterleaved,
 }
 
 

@@ -53,12 +53,18 @@ def _sds(shapes_tree, shardings_tree):
 def _fit_microbatches(plan: ParallelismPlan, global_batch: int,
                       dp: int) -> ParallelismPlan:
     """Clamp R so global_batch divides dp·R (multi-pod halves per-replica
-    batch; the 1F1B schedule is valid for any R >= 1, the interleaved
-    schedule additionally needs R divisible by the stage count)."""
+    batch; the 1F1B schedule is valid for any R >= 1, the training
+    interleaved family additionally needs R divisible by the stage
+    count — registry-driven, so new schedules state their own rule)."""
+    from repro.core.schedule import SCHEDULES
+    cls = SCHEDULES.get(plan.schedule)
+    needs_groups = (cls is not None and cls.takes_virtual_stages
+                    and cls.needs_group_microbatches)
+
     def ok(r):
         if global_batch % (dp * r):
             return False
-        return plan.schedule != "interleaved" or r % plan.pp == 0
+        return not needs_groups or r % plan.pp == 0
     r = min(plan.microbatches, max(global_batch // dp, 1))
     while r > 1 and not ok(r):
         r -= 1
@@ -96,37 +102,41 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
         return Cell(arch, shape, plan, mesh, dmesh, bundle.train_step,
                     (state_sds, batch_sds), in_sh, out_sh, spec, bundle)
 
+    # serving cells ride the schedule-table engine: build_serving returns
+    # an EngineSession whose pure step fns lower exactly like train_step
+    # (virtual-stage plans run the serve_interleaved schedule)
     sp = shape.kind == "long_decode"
     prefill_len = shape.seq_len if shape.kind == "prefill" else 0
-    sb = build_serving(spec, plan, dmesh, cache_len=shape.seq_len,
-                       global_batch=shape.global_batch,
-                       prefill_len=prefill_len, sp=sp)
-    state_shape = jax.eval_shape(sb.init_state, jax.random.key(0))
-    state_sds = _sds(state_shape, sb.state_shardings())
-    state_sh = sb.state_shardings()
+    session = build_serving(spec, plan, dmesh, cache_len=shape.seq_len,
+                            global_batch=shape.global_batch,
+                            prefill_len=prefill_len, sp=sp)
+    state_shape = jax.eval_shape(session.init_state, jax.random.key(0))
+    state_sds = _sds(state_shape, session.state_shardings())
+    state_sh = session.state_shardings()
 
     if shape.kind == "prefill":
         dnames = daxes if len(daxes) > 1 else daxes[0]
         batch_sh = {
             k: NamedSharding(dmesh, P(*((None, dnames) +
                                         (None,) * (len(v.shape) - 2))))
-            for k, v in sb.prefill_specs.items()}
+            for k, v in session.prefill_specs.items()}
         batch_sds = {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
                                              sharding=batch_sh[k])
-                     for k, v in sb.prefill_specs.items()}
+                     for k, v in session.prefill_specs.items()}
         in_sh = (state_sh, batch_sh)
         out_sh = (state_sh, None)
-        return Cell(arch, shape, plan, mesh, dmesh, sb.prefill_step,
-                    (state_sds, batch_sds), in_sh, out_sh, spec, sb)
+        return Cell(arch, shape, plan, mesh, dmesh, session.prefill_step,
+                    (state_sds, batch_sds), in_sh, out_sh, spec, session)
 
     # decode / long_decode: one new token per sequence
     tok_sh = NamedSharding(dmesh, P())
-    tok_sds = jax.ShapeDtypeStruct(sb.token_spec.shape, sb.token_spec.dtype,
+    tok_sds = jax.ShapeDtypeStruct(session.token_spec.shape,
+                                   session.token_spec.dtype,
                                    sharding=tok_sh)
     in_sh = (state_sh, tok_sh)
     out_sh = (state_sh, None)
-    return Cell(arch, shape, plan, mesh, dmesh, sb.decode_step,
-                (state_sds, tok_sds), in_sh, out_sh, spec, sb)
+    return Cell(arch, shape, plan, mesh, dmesh, session.decode_step,
+                (state_sds, tok_sds), in_sh, out_sh, spec, session)
 
 
 def input_specs(arch: str, shape_name: str, mesh: Mesh, **kw):

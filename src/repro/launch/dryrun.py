@@ -42,23 +42,25 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
-    if do_plan_search and configs.SHAPES[shape].kind != "train":
-        # the objective (grad accumulator, optimizer bytes, train round
-        # time) is train-only; serving cells keep their config plan
-        print(f"[{arch} × {shape} @ {mesh_name}] plan_search: skipped "
-              f"(train shapes only)")
-        do_plan_search = False
     if do_plan_search:
         from repro.runtime.driver import plan_search_report
         cfg = configs.get(arch)
         spec, base = cfg.full_spec(), plan or cfg.PLAN
         sh = configs.SHAPES[shape]
+        # serving shapes search the serve registry (workload axis): the
+        # decode objective is per-token round time under the KV-inclusive
+        # memory model, prefill is weighted TTFT
+        workload = {"train": "train", "prefill": "prefill",
+                    "decode": "decode", "long_decode": "decode"}[sh.kind]
         choice = plan_search_report(
             spec, base, hw, seq_len=sh.seq_len,
             global_batch=sh.global_batch,
             data_replicas=_data_replicas(mesh, base),
-            prefix=f"[{arch} × {shape} @ {mesh_name}] ")
-        plan = choice.plan
+            prefix=f"[{arch} × {shape} @ {mesh_name}] ",
+            workload=workload, sp=sh.kind == "long_decode")
+        plan = choice.plan      # serve choices carry schedule="serve_*";
+        #                         build_serving resolves them via the
+        #                         registry (make_serving_schedule)
     cell = build_cell(arch, shape, mesh, plan=plan)
     lowered = cell.lower()
     t_lower = time.time() - t0
@@ -68,20 +70,36 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
     mem = compiled.memory_analysis()
     print(f"[{arch} × {shape} @ {mesh_name}] memory_analysis:")
     print(f"  {mem}")
+    # analytic cross-check of the schedule's footprint vs XLA's: the
+    # training memory model for train cells, the KV-cache-inclusive
+    # serving one for prefill/decode cells
+    dp = _data_replicas(mesh, cell.plan)
+    from repro.core.schedule import weighted_round_time
+    sched = cell.bundle.sched
     if cell.shape.kind == "train":
-        # analytic cross-check of the schedule's footprint vs XLA's
-        dp = _data_replicas(mesh, cell.plan)
-        mm = cell.bundle.sched.memory_model(
+        label = "schedule"
+        mm = sched.memory_model(
             cell.spec, cell.plan, hw,
             microbatch_tokens=cell.bundle.microbatch_size
             * cell.bundle.seq_len,
             data_replicas=dp)
-        from repro.core.schedule import weighted_round_time
-        _, bubble = weighted_round_time(cell.bundle.sched)
-        print(f"  schedule memory_model (analytic): {mm}")
-        print(f"  predicted weighted bubble: {bubble:.3f} "
-              f"(budget {hw.hbm_bytes / 1e9:.1f} GB -> "
-              f"{'fits' if mm.fits(hw.hbm_bytes) else 'OVER'})")
+    else:
+        label = "serve"
+        sp = cell.shape.kind == "long_decode"
+        rows = (cell.shape.global_batch if sp else
+                max(cell.shape.global_batch
+                    // (dp * sched.n_microbatches), 1))
+        qlen = cell.shape.seq_len if cell.shape.kind == "prefill" else 1
+        mm = sched.memory_model(
+            cell.spec, cell.plan, hw, microbatch_tokens=rows * qlen,
+            data_replicas=dp, cache_len=cell.shape.seq_len,
+            global_batch=cell.shape.global_batch, sp=sp,
+            prefill=cell.shape.kind == "prefill")
+    _, bubble = weighted_round_time(sched)
+    print(f"  {label} memory_model (analytic): {mm}")
+    print(f"  predicted weighted bubble: {bubble:.3f} "
+          f"(budget {hw.hbm_bytes / 1e9:.1f} GB -> "
+          f"{'fits' if mm.fits(hw.hbm_bytes) else 'OVER'})")
     from repro.parallel.compat import cost_analysis
     cost = cost_analysis(compiled)
     print(f"[{arch} × {shape} @ {mesh_name}] cost_analysis (stock, "

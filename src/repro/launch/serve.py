@@ -8,9 +8,17 @@ if __name__ == "__main__" and "--host-devices" in sys.argv:
         + os.environ.get("XLA_FLAGS", ""))
 """Pipelined serving driver: prefill a batch of requests, then decode.
 
+Drives the schedule-table EngineSession (serving/engine.py): pick a
+serve schedule from the registry with --schedule serve_1f /
+serve_interleaved (--virtual-stages v interleaves each stage's chunks,
+cutting the prefill ramp — and the worst request's TTFT — by ~v).
+
 CPU example:
   python -m repro.launch.serve --arch rwkv6-1.6b --smoke --tokens 16 \\
       --host-devices 2 --batch 4
+  python -m repro.launch.serve --arch qwen3-14b --smoke --tokens 8 \\
+      --host-devices 2 --batch 4 --schedule serve_interleaved \\
+      --virtual-stages 2
 """
 import argparse        # noqa: E402
 import time            # noqa: E402
@@ -26,6 +34,8 @@ from repro.serving.engine import build_serving     # noqa: E402
 
 
 def main(argv=None):
+    from repro.core.schedule import SCHEDULES, plan_kwargs_for_schedule
+    serve_names = sorted(n for n, c in SCHEDULES.items() if c.is_serving)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", type=str, required=True)
     ap.add_argument("--smoke", action="store_true")
@@ -36,7 +46,14 @@ def main(argv=None):
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--host-devices", type=int, default=None)
+    ap.add_argument("--schedule", type=str, default=None,
+                    choices=[None, *serve_names])
+    ap.add_argument("--virtual-stages", type=int, default=None)
     args = ap.parse_args(argv)
+    if args.virtual_stages and args.virtual_stages > 1 \
+            and args.schedule not in (None, "serve_interleaved"):
+        ap.error("--virtual-stages > 1 requires --schedule "
+                 "serve_interleaved")
 
     cfg = configs.get(args.arch)
     if args.smoke:
@@ -49,33 +66,34 @@ def main(argv=None):
         shape = configs.SHAPES["decode_32k"]
         batch, prefill, cache_len = (shape.global_batch, args.prefill,
                                      shape.seq_len)
+    if args.schedule or args.virtual_stages:
+        name = args.schedule or ("serve_interleaved"
+                                 if (args.virtual_stages or 1) > 1
+                                 else "serve_1f")
+        plan = plan.with_(**plan_kwargs_for_schedule(
+            name, virtual_stages=args.virtual_stages,
+            stash_mode=plan.stash_mode))
     if spec.frontend == "vision":
         prefill = max(prefill, spec.n_patches + 8)
     dmesh = split_model_axis(mesh, plan.pp, plan.tp)
-    sb = build_serving(spec, plan, dmesh, cache_len=cache_len,
-                       global_batch=batch, prefill_len=prefill,
-                       compute_dtype=(jnp.float32 if args.smoke
-                                      else jnp.bfloat16))
+    session = build_serving(spec, plan, dmesh, cache_len=cache_len,
+                            global_batch=batch, prefill_len=prefill,
+                            compute_dtype=(jnp.float32 if args.smoke
+                                           else jnp.bfloat16))
+    print(f"serve schedule: {session.sched.name} "
+          f"(S={session.sched.n_stages} R={session.sched.n_microbatches}"
+          f"{f' v={session.sched.virtual_stages}' if session.sched.virtual_stages > 1 else ''}"
+          f", {session.sched.n_ticks} ticks/pass)")
 
-    state = jax.jit(sb.init_state, out_shardings=sb.state_shardings())(
-        jax.random.key(0))
+    session.start(jax.random.key(0))
     rng = np.random.default_rng(0)
-
-    pre = jax.jit(sb.prefill_step,
-                  in_shardings=(sb.state_shardings(), None),
-                  out_shardings=(sb.state_shardings(), None))
-    dec = jax.jit(sb.decode_step,
-                  in_shardings=(sb.state_shardings(), None),
-                  out_shardings=(sb.state_shardings(), None),
-                  donate_argnums=0)
-
     batch_in = {k: jnp.asarray(
         rng.integers(0, spec.vocab, v.shape).astype(np.int32)
         if v.dtype == jnp.int32 else
         rng.standard_normal(v.shape).astype(np.float32) * 0.02)
-        for k, v in sb.prefill_specs.items()}
+        for k, v in session.prefill_specs.items()}
     t0 = time.time()
-    state, nxt = pre(state, batch_in)
+    nxt = session.prefill(batch_in)
     jax.block_until_ready(nxt)
     t_pre = time.time() - t0
     print(f"prefill[{prefill}] batch={batch}: {t_pre:.2f}s "
@@ -84,7 +102,7 @@ def main(argv=None):
     t0 = time.time()
     outs = []
     for _ in range(args.tokens):
-        state, nxt = dec(state, nxt)
+        nxt = session.decode(nxt)
         outs.append(np.asarray(nxt))
     dt = time.time() - t0
     print(f"decoded {args.tokens} steps × {batch} seqs in {dt:.2f}s "

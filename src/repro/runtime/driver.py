@@ -146,18 +146,36 @@ def plan_choice(spec, old_plan, new_model_axis: int, hw=prof.TPU_V5E, *,
 
 def plan_search_report(spec, base_plan, hw=prof.TPU_V5E, *, seq_len: int,
                        global_batch: int, data_replicas: int,
-                       prefix: str = "") -> PlanChoice:
+                       prefix: str = "", workload: str = "train",
+                       sp: bool = False) -> PlanChoice:
     """Shared launch-entry-point surface: search, print, return.
 
     Used by launch/train.py and launch/dryrun.py so the microbatch-token
     derivation and the printed summary stay in sync between them.
+    ``workload`` follows :func:`~repro.core.partitioner.plan_search`:
+    serving workloads derive per-microbatch tokens from the decode
+    microbatch count (one query token per row when decoding) and budget
+    the KV/SSM cache against the HBM alongside the weights.
     """
-    mb_tokens = seq_len * max(global_batch // max(data_replicas, 1)
-                              // base_plan.microbatches, 1)
-    choice = plan_choice(spec, base_plan, base_plan.pp * base_plan.tp, hw,
-                         minibatch_tokens=mb_tokens,
-                         data_replicas=data_replicas)
-    print(f"{prefix}plan_search: {choice.describe()}")
+    dp = max(data_replicas, 1)
+    if workload == "train":
+        mb_tokens = seq_len * max(global_batch // dp
+                                  // base_plan.microbatches, 1)
+        choice = plan_choice(spec, base_plan, base_plan.pp * base_plan.tp,
+                             hw, minibatch_tokens=mb_tokens,
+                             data_replicas=data_replicas)
+    else:
+        from repro.core.schedule import fit_serving_microbatches
+        R = fit_serving_microbatches(base_plan.decode_microbatches,
+                                     global_batch, dp, sp=sp)
+        rows = global_batch if sp else max(global_batch // dp // R, 1)
+        mb_tokens = rows * (seq_len if workload == "prefill" else 1)
+        choice = plan_search(spec, base_plan, base_plan.pp * base_plan.tp,
+                             hw, minibatch_tokens=mb_tokens,
+                             data_replicas=data_replicas,
+                             workload=workload, cache_len=seq_len,
+                             global_batch=global_batch, sp=sp)
+    print(f"{prefix}plan_search[{workload}]: {choice.describe()}")
     print(f"{prefix}  predicted {choice.memory}")
     return choice
 
@@ -208,13 +226,24 @@ def reshard_state_for_plan(state_host, spec, old_plan, new_plan):
     ([stash_slots, pp'·v', ...] over the regrouped storage rows) the
     same way (the restart is a sync point, so seeding every version
     with the live weights is exact).
+
+    Serving plans ride the same path: the serving engine stores its
+    weights (and caches) in the SAME chunk-major storage order as the
+    training interleaved family, so a train checkpoint at (pp, v) is
+    bit-identical under a serve plan at (pp, v) — the round-trip is the
+    identity on parameters — and a serving state (no ``opt_stages`` /
+    ``stash`` keys) regroups its parameters without growing them.
     """
     old_sched = old_plan.make_schedule()
     new_sched = new_plan.make_schedule()
     same_layout = (old_plan.virtual_stages == new_plan.virtual_stages
                    and old_plan.pp == new_plan.pp)
-    if same_layout and old_sched.uses_stash_ring == new_sched.uses_stash_ring \
-            and old_sched.stash_slots == new_sched.stash_slots:
+    has_rings = "stash" in state_host
+    old_ring = old_sched.uses_stash_ring and has_rings
+    new_ring = new_sched.uses_stash_ring and has_rings
+    if same_layout and old_ring == new_ring \
+            and (not new_ring
+                 or old_sched.stash_slots == new_sched.stash_slots):
         return state_host
     # a schedule-only change at the same (pp, v) still falls through: the
     # state tree's stash ring must be dropped/rebuilt to the new schedule
@@ -239,16 +268,44 @@ def reshard_state_for_plan(state_host, spec, old_plan, new_plan):
     params["layer_windows"] = w
     params["layer_thetas"] = t
     out["params"] = params
-    # optimizer/stash state: re-group the same way
-    out["opt_stages"] = {
-        slot: (sub if same_layout
-               else _regroup_chunks(sub, old_plan, new_plan))
-        for slot, sub in state_host["opt_stages"].items()}
-    out["stash"] = {"current": new_stages}
-    if new_sched.uses_stash_ring:
-        out["stash"]["ring"] = jax.tree.map(
-            lambda a: jnp.broadcast_to(
-                a[None], (new_sched.stash_slots,) + a.shape) + 0, new_stages)
+    # optimizer/stash state: re-group the same way (training states only —
+    # a serving state carries neither)
+    if "opt_stages" in state_host:
+        out["opt_stages"] = {
+            slot: (sub if same_layout
+                   else _regroup_chunks(sub, old_plan, new_plan))
+            for slot, sub in state_host["opt_stages"].items()}
+    # a serving KV/SSM cache is chunk-stacked like the weights: permute
+    # its rows through the same storage orders.  Across chunk *counts*
+    # the per-row layer groups change and live recurrent state cannot be
+    # re-cut — refuse loudly; the caller re-prefills after replanning.
+    if "cache" in state_host:
+        old_chunks = old_plan.pp * old_plan.virtual_stages
+        if old_chunks != new_chunks:
+            raise ValueError(
+                "cannot reshard a serving KV/SSM cache across chunk "
+                f"counts ({old_chunks} -> {new_chunks} storage rows): "
+                "per-row layer groups change; re-prefill after "
+                "replanning (params regroup fine — drop 'cache' from "
+                "the state to move weights only)")
+        src = _storage_perms(old_plan)
+        dst = _storage_perms(new_plan)
+
+        def _rows(a):
+            if src is not None:
+                a = a[src[0]]
+            if dst is not None:
+                a = a[dst[1]]
+            return a
+
+        out["cache"] = jax.tree.map(_rows, state_host["cache"])
+    if has_rings:
+        out["stash"] = {"current": new_stages}
+        if new_sched.uses_stash_ring:
+            out["stash"]["ring"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a[None], (new_sched.stash_slots,) + a.shape) + 0,
+                new_stages)
     return out
 
 

@@ -1,21 +1,34 @@
-"""Pipelined serving: prefill and decode steps.
+"""Table-driven pipelined serving: prefill and decode as schedule clients.
 
-Decode microbatches the request batch into R groups and pipelines them
-through the stages (fwd-only 1F schedule, ticks = R + S − 1) — the serving
-analogue of PipeDream's minibatch injection; with continuous batching the
-pipeline stays full.  Each stage holds the KV/SSM state for its own layers
-(cache sharded: batch over data, layers with their stage, heads over
-tensor).
+Serving consumes the SAME schedule subsystem training does: a
+forward-only :class:`~repro.core.schedule.ServingSchedule` from the
+registry (``serve_1f`` one chunk per stage, ``serve_interleaved``
+virtual stages) emits the dense (tick, stage) → (microbatch, chunk,
+input-source) index tables, and the executor here only gathers table
+rows — no tick→stage index arithmetic lives in this module, mirroring
+core/pipeline.py.  Each stage holds the KV/SSM state for its own
+chunks' layers (cache stacked chunk-major like the weights: storage row
+p = s·v + j holds model chunk j·S + s, the
+``ScheduleInterleaved1F1B.storage_chunk_order()`` layout — so
+``reshard_state_for_plan`` round-trips train → serve checkpoints
+unchanged); rows shard over data, heads over tensor.
 
 Long-context mode (``sp=True``, used by long_500k with global_batch=1):
 the KV cache is sharded over the *data* axis along sequence length and
 attention combines partial softmax stats across shards (SP decode,
-models/nn.py::_sdpa_decode_seq_sharded).
+models/nn.py::_sdpa_decode_seq_sharded).  The forward-only schedules
+have no microbatch-group constraint, so sp (R = 1) interleaves too.
+
+:func:`build_serving` returns an :class:`EngineSession` — the pure
+jit-able pieces (``decode_step``/``prefill_step``/``init_state`` +
+pspecs, consumed by launch/cell.py for dry-run lowering) plus the
+stateful serving API: ``session.prefill(batch)``,
+``session.decode(tokens)``, ``session.state_shardings()``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,63 +38,112 @@ from jax.sharding import PartitionSpec as P
 
 from repro.parallel.compat import shard_map
 
+from repro.core.schedule import (F_CHUNK, F_FROM_EMBEDS, F_MB,
+                                 ServingSchedule, default_cache_lens,
+                                 fit_serving_microbatches,
+                                 make_serving_schedule)
 from repro.models import lm_head
 from repro.models import spec as spec_lib
 from repro.models.init import init_params
 from repro.models.stage import encoder_fwd, init_stage_state, make_statics, stage_fwd
 from repro.parallel.mesh import AXIS_STAGE, AXIS_TENSOR, ParallelismPlan, data_axes
 
+__all__ = ["EngineSession", "build_serving", "default_cache_lens",
+           "fit_decode_microbatches"]
 
-def default_cache_lens(spec: spec_lib.ModelSpec, pp: int, cache_len: int
-                       ) -> List[int]:
-    """Per-position static KV capacities (union-max across stages).
 
-    Windowed layers only need ``window`` slots; a position gets the max
-    requirement over the stages that share it (DESIGN.md §8).
+def fit_decode_microbatches(plan: ParallelismPlan, global_batch: int,
+                            dp: int, mesh: Optional[Mesh] = None) -> int:
+    """Largest R ≤ ``plan.decode_microbatches`` with dp·R | global_batch.
+
+    Validates up front that the data axes divide the batch: the old
+    fitting loop (``while global_batch % (dp * R): R -= 1``) walked R
+    down to 0 and died with a bare ``ZeroDivisionError`` when dp did
+    not divide ``global_batch``.  The fitting rule itself lives in
+    ``core/schedule.py`` (``fit_serving_microbatches``) so plan_search
+    prices the same R the engine runs.
     """
-    lps = spec.layers_per_stage(pp)
-    lens = []
-    for i in range(lps):
-        need = 0
-        for s in range(pp):
-            blk = spec.blocks[s * lps + i]
-            if blk.mixer != "attn":
-                continue
-            w = blk.window
-            need = max(need, cache_len if w <= 0 else min(w, cache_len))
-        lens.append(max(need, 8))
-    return lens
+    try:
+        return fit_serving_microbatches(plan.decode_microbatches,
+                                        global_batch, dp)
+    except ValueError as e:
+        mesh_desc = (
+            f" (mesh {dict(zip(mesh.axis_names, mesh.devices.shape))})"
+            if mesh is not None else "")
+        raise ValueError(f"{e}{mesh_desc}") from None
 
 
 @dataclasses.dataclass
-class ServeBundle:
+class EngineSession:
+    """One serving session over a registry schedule.
+
+    Pure pieces (``decode_step``/``prefill_step``/``init_state`` and
+    the pspecs) are exposed for dry-run lowering (launch/cell.py);
+    the stateful API — ``start``, ``prefill``, ``decode`` — is what
+    launch/serve.py and the examples drive.  Step functions are jitted
+    lazily with the session's shardings; ``state`` lives on the mesh
+    between calls.
+    """
+
     spec: spec_lib.ModelSpec
     plan: ParallelismPlan
     mesh: Mesh
+    sched: ServingSchedule
     decode_step: Callable          # (state, tokens) -> (state, next_tokens)
     prefill_step: Optional[Callable]
     init_state: Callable           # (key) -> state
     state_pspecs: Any
     token_spec: jax.ShapeDtypeStruct
     prefill_specs: Optional[Dict[str, jax.ShapeDtypeStruct]]
+    state: Any = None
+    _jit: Dict[str, Callable] = dataclasses.field(default_factory=dict)
 
     def state_shardings(self):
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
                             self.state_pspecs,
                             is_leaf=lambda x: isinstance(x, P))
 
+    def start(self, key=None) -> "EngineSession":
+        """Initialize (or reset) the session state on the mesh."""
+        if "init" not in self._jit:
+            self._jit["init"] = jax.jit(
+                self.init_state, out_shardings=self.state_shardings())
+        self.state = self._jit["init"](
+            key if key is not None else jax.random.key(0))
+        return self
+
+    def prefill(self, batch):
+        """Pipelined prefill of the whole batch; returns first tokens."""
+        assert self.prefill_step is not None, (
+            "session built without prefill_len; decode-only")
+        if self.state is None:
+            self.start()
+        if "prefill" not in self._jit:
+            sh = self.state_shardings()
+            self._jit["prefill"] = jax.jit(
+                self.prefill_step, in_shardings=(sh, None),
+                out_shardings=(sh, None))
+        self.state, tokens = self._jit["prefill"](self.state, batch)
+        return tokens
+
+    def decode(self, tokens):
+        """One pipelined decode step; returns the next token per row."""
+        if self.state is None:
+            self.start()
+        if "decode" not in self._jit:
+            sh = self.state_shardings()
+            self._jit["decode"] = jax.jit(
+                self.decode_step, in_shardings=(sh, None),
+                out_shardings=(sh, None), donate_argnums=0)
+        self.state, tokens = self._jit["decode"](self.state, tokens)
+        return tokens
+
 
 def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                   mesh: Mesh, *, cache_len: int, global_batch: int,
                   prefill_len: int = 0, sp: bool = False,
-                  compute_dtype=jnp.bfloat16) -> ServeBundle:
+                  compute_dtype=jnp.bfloat16) -> EngineSession:
     S = plan.pp
-    assert plan.virtual_stages == 1, (
-        "serving runs one chunk per stage.  Training-side interleaving is "
-        "fully supported (schedule='interleaved' for flush semantics, "
-        "'interleaved_async' for per-microbatch updates with per-chunk "
-        "weight-version rings — see docs/schedules.md); interleaving the "
-        "prefill/decode schedules here is a ROADMAP open item")
     daxes = data_axes(mesh)
     dp = int(np.prod([mesh.devices.shape[mesh.axis_names.index(a)]
                       for a in daxes]))
@@ -97,28 +159,42 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         sp_shards = dp
         batch_dim_spec = None
     else:
-        R = min(plan.decode_microbatches, max(global_batch // dp, 1))
-        while global_batch % (dp * R):
-            R -= 1
+        R = fit_decode_microbatches(plan, global_batch, dp, mesh)
         gb = global_batch // (dp * R)           # local rows per group
         seq_axis = None
         sp_shards = 1
         batch_dim_spec = dnames
 
-    statics = make_statics(spec, plan,
+    # The serving schedule comes from the registry (make_serving_schedule
+    # raises the lookup error for names with no serving analogue); a plan
+    # with virtual_stages > 1 interleaves its chunks exactly like the
+    # training side.
+    sched = make_serving_schedule(plan, R)
+    sched.validate()
+    v = sched.virtual_stages
+    n_chunks = sched.n_chunks
+    # model-side construction (init, statics, per-chunk scalars) sees the
+    # chunk count as "pp", mirroring core/pipeline.py
+    mplan = (plan.with_(pp=n_chunks, schedule="auto", virtual_stages=1)
+             if v > 1 else plan)
+    tabs = sched.tables()
+    FT, EXIT_T = np.asarray(tabs.fwd), np.asarray(tabs.exit_mb)
+
+    statics = make_statics(spec, mplan,
                            tokens_per_mb=gb * max(prefill_len, 1))
+    lps = spec.layers_per_stage(n_chunks)
     if prefill_len:
         # Prefill writes a contiguous qlen slab: every attention cache must
         # be full-length (windowed layers still *mask* to their window; the
         # ring-buffer memory optimization only applies to decode-only use).
-        lens = [cache_len] * spec.layers_per_stage(S)
+        lens = [cache_len] * lps
     else:
-        lens = default_cache_lens(spec, S, cache_len)
+        lens = default_cache_lens(spec, n_chunks, cache_len)
     # SP shards only full-length caches over the data axes; windowed ring
     # buffers (len < cache_len) are small and stay replicated — their
     # modulo write/read does not distribute.  The flag is static and
-    # stage-uniform because default_cache_lens already union-maxes the
-    # per-position requirement across stages.
+    # chunk-uniform because default_cache_lens already union-maxes the
+    # per-position requirement across chunks.
     sp_flags = [sp and l >= cache_len for l in lens]
     if sp:
         lens = [max(-(-l // sp_shards), 8) if f else l
@@ -147,11 +223,17 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         return any(getattr(k, "key", None) == "kv" for k in path)
 
     def _cache_template():
-        """Global cache template, stacked (pp, R, rows_g, ...)."""
+        """Global cache template, stacked chunk-major (S·v, R, rows_g, …).
+
+        Storage row p = s·v + j holds chunk j·S + s's state — the same
+        permutation the weights use — so the contiguous stage shard owns
+        its chunks' caches.  Every chunk shares the (union-maxed) state
+        structure, so the zero template needs no per-row permute.
+        """
         base = init_stage_state(statics, rows_g, glens, compute_dtype)
 
         def stack(leaf):
-            return jnp.zeros((S, R) + leaf.shape, leaf.dtype)
+            return jnp.zeros((n_chunks, R) + leaf.shape, leaf.dtype)
 
         return jax.tree.map(stack, base)
 
@@ -159,7 +241,7 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         base = init_stage_state(statics, rows_g, glens, compute_dtype)
 
         def pspec(path, leaf):
-            dims: list = [AXIS_STAGE, None]         # (pp, R, ...)
+            dims: list = [AXIS_STAGE, None]         # (S·v, R, ...)
             dims.append(batch_dim_spec)             # rows
             dims += [None] * (leaf.ndim - 1)
             if _is_kv(path) and sp_flags[_layer_of(path)]:
@@ -168,26 +250,59 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
 
         return jax.tree_util.tree_map_with_path(pspec, base)
 
-    fwd_perm = [(i, i + 1) for i in range(S - 1)]
+    # chunk hops wrap from the last stage back to stage 0 at virtual
+    # stages (chunk j·S + (S−1) -> chunk (j+1)·S + 0)
+    fwd_perm = ([(i, (i + 1) % S) for i in range(S)] if v > 1
+                else [(i, i + 1) for i in range(S - 1)])
+
+    def gather_row(table, tick):
+        """Row of a [T, S, C] schedule table for (tick, this stage)."""
+        s = jax.lax.axis_index(AXIS_STAGE)
+        rows = jax.lax.dynamic_index_in_dim(jnp.asarray(table), tick, 0,
+                                            keepdims=False)
+        return jax.lax.dynamic_index_in_dim(rows, s, 0, keepdims=False)
 
     # ---------------- one pipelined forward pass --------------------------
     def _pipe_forward(params, cache, embeds_ring, pos, qlen, enc_ring):
-        """embeds_ring: (R, Bg_rows, qlen, d); returns (h_ring, cache')."""
+        """embeds_ring: (R, Bg_rows, qlen, d); returns (h_ring, cache').
+
+        Walks the serving schedule's forward table tick by tick: every
+        stage gathers its (microbatch, chunk, input-source) row, runs
+        that chunk over its recurrent state, and ppermutes the hidden
+        state downstream; the exit table names the microbatch whose
+        last-chunk output lands in ``h_ring`` each tick.
+        """
         win, th = params["layer_windows"], params["layer_thetas"]
 
         def f_phase(tick, cache, recv_f, h_ring, weights, win, th, embeds,
                     enc_ring, pos):
-            s = jax.lax.axis_index(AXIS_STAGE)
-            r = tick - s
-            valid = (r >= 0) & (r < R)
-            rsafe = jnp.clip(r, 0, R - 1)
+            row = gather_row(FT, tick)
+            m = row[F_MB]
+            valid = m >= 0
+            rsafe = jnp.clip(m, 0, R - 1)
+            j = jnp.clip(row[F_CHUNK], 0, v - 1)
+            # this tick's chunk view of the stage-local stacked rows
+            if v == 1:
+                w_loc, win_loc, th_loc = weights, win[0], th[0]
+            else:
+                w_loc = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, j, 0,
+                                                           keepdims=True),
+                    weights)
+                win_loc = jax.lax.dynamic_index_in_dim(win, j, 0,
+                                                       keepdims=False)
+                th_loc = jax.lax.dynamic_index_in_dim(th, j, 0,
+                                                      keepdims=False)
             x0 = jax.lax.dynamic_index_in_dim(embeds, rsafe, 0,
                                               keepdims=False)
-            x_in = jnp.where(s == 0, x0, recv_f[0])
-            st_r = jax.tree.map(
-                lambda a: jax.lax.dynamic_index_in_dim(a[0], rsafe, 0,
-                                                       keepdims=False),
-                cache)
+            x_in = jnp.where(row[F_FROM_EMBEDS] > 0, x0, recv_f[0])
+
+            def _read(a):
+                aj = jax.lax.dynamic_index_in_dim(a, j, 0, keepdims=False)
+                return jax.lax.dynamic_index_in_dim(aj, rsafe, 0,
+                                                    keepdims=False)
+
+            st_r = jax.tree.map(_read, cache)
             cross = None
             if has_enc:
                 cross = jax.lax.dynamic_index_in_dim(enc_ring, rsafe, 0,
@@ -195,24 +310,34 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
             positions = jnp.broadcast_to(
                 pos + jnp.arange(qlen, dtype=jnp.int32), (x_in.shape[0], qlen))
             h, new_st, _ = stage_fwd(
-                weights, x_in, statics, positions=positions,
-                windows=win[0], thetas=th[0], tp_axis=tp_axis,
+                w_loc, x_in, statics, positions=positions,
+                windows=win_loc, thetas=th_loc, tp_axis=tp_axis,
                 state=st_r, cache_pos=pos, cross_x=cross, seq_axis=seq_axes)
 
-            def wr(a, n):
-                old = jax.lax.dynamic_index_in_dim(a[0], rsafe, 0,
+            def _write(a, n):
+                aj = jax.lax.dynamic_index_in_dim(a, j, 0, keepdims=False)
+                old = jax.lax.dynamic_index_in_dim(aj, rsafe, 0,
                                                    keepdims=False)
                 new = jnp.where(valid, n.astype(a.dtype), old)
-                return jax.lax.dynamic_update_index_in_dim(a[0], new, rsafe,
-                                                           0)[None]
+                aj = jax.lax.dynamic_update_index_in_dim(aj, new, rsafe, 0)
+                return jax.lax.dynamic_update_index_in_dim(a, aj, j, 0)
 
-            cache = jax.tree.map(wr, cache, new_st)
+            cache = jax.tree.map(_write, cache, new_st)
             h_send = jax.lax.ppermute(h, AXIS_STAGE, fwd_perm) if S > 1 else h
-            old_h = jax.lax.dynamic_index_in_dim(h_ring, rsafe, 0,
+            # the exit table names the microbatch leaving the last chunk;
+            # every stage updates its own ring shard, and _pipe_forward
+            # slices the output stage's shard after the scan (the ring is
+            # stage-sharded — stages other than the last hold stale rows,
+            # never a "replicated" divergent copy)
+            s = jax.lax.axis_index(AXIS_STAGE)
+            m_exit = jax.lax.dynamic_index_in_dim(jnp.asarray(EXIT_T), tick,
+                                                  0, keepdims=False)
+            esafe = jnp.clip(m_exit, 0, R - 1)
+            old_h = jax.lax.dynamic_index_in_dim(h_ring[0], esafe, 0,
                                                  keepdims=False)
-            h_keep = jnp.where(valid & (s == S - 1), h, old_h)
-            h_ring = jax.lax.dynamic_update_index_in_dim(h_ring, h_keep,
-                                                         rsafe, 0)
+            h_keep = jnp.where((m_exit >= 0) & (s == S - 1), h, old_h)
+            h_ring = jax.lax.dynamic_update_index_in_dim(h_ring[0], h_keep,
+                                                         esafe, 0)[None]
             return cache, h_send[None], h_ring
 
         cache_pspec = _cache_pspec()
@@ -220,7 +345,7 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                                    is_leaf=lambda x: isinstance(x, P))
         act_pspec = P(AXIS_STAGE, batch_dim_spec, None, None)
         emb_pspec = P(None, batch_dim_spec, None, None)
-        hring_pspec = P(None, batch_dim_spec, None, None)
+        hring_pspec = P(AXIS_STAGE, None, batch_dim_spec, None, None)
         enc_pspec = (P(None, batch_dim_spec, None, None) if has_enc
                      else P(None, None, None, None))
         stage_pspec = _box["pspecs"]["stages"]
@@ -233,9 +358,8 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
             out_specs=(cache_pspec, act_pspec, hring_pspec),
             check_vma=False)
 
-        rows_g = gb * (1 if sp else dp)
         recv = jnp.zeros((S, rows_g, qlen, spec.d_model), compute_dtype)
-        h_ring = jnp.zeros((R, rows_g, qlen, spec.d_model), compute_dtype)
+        h_ring = jnp.zeros((S, R, rows_g, qlen, spec.d_model), compute_dtype)
 
         def body(carry, tick):
             cache, recv, h_ring = carry
@@ -246,15 +370,15 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
 
         (cache, _, h_ring), _ = jax.lax.scan(
             body, (cache, recv, h_ring),
-            jnp.arange(R + S - 1, dtype=jnp.int32))
-        return h_ring, cache
+            jnp.arange(sched.n_ticks, dtype=jnp.int32))
+        # only the output stage's ring shard carries the exits
+        return h_ring[S - 1], cache
 
     # ---------------- decode step ----------------------------------------
     def decode_step(state, tokens):
         """tokens: (B_global,) int32; returns (state, next (B_global,))."""
         params, cache, pos = state["params"], state["cache"], state["pos"]
         emb = lm_head.embed_tokens(params["embed"], tokens)[:, None]
-        rows_g = gb * (1 if sp else dp)
         embeds_ring = emb.reshape(R, rows_g, 1, spec.d_model)
         if has_enc:
             enc_ring = state["enc_out"]
@@ -292,7 +416,6 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                                           emb.astype(compute_dtype),
                                           jnp.int32(0), emb.shape[2],
                                           enc_ring)
-            rows_g = h_ring.shape[1]
             h_last = h_ring[:, :, -1:].reshape(R * rows_g, 1, spec.d_model)
             nxt = lm_head.sample_greedy(
                 params["head"], params["final_norm"]["scale"], h_last,
@@ -304,7 +427,6 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                 new_state["enc_out"] = enc_ring
             return new_state, nxt
 
-        rows_g = gb * (1 if sp else dp)
         text_len = prefill_len - (spec.n_patches
                                   if spec.frontend == "vision" else 0)
         prefill_specs = {"tokens": jax.ShapeDtypeStruct(
@@ -320,7 +442,7 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
     _box: Dict[str, Any] = {}
 
     def _shapes():
-        p, s = init_params(spec, plan, jax.random.key(0), compute_dtype)
+        p, s = init_params(spec, mplan, jax.random.key(0), compute_dtype)
         _box["pspecs"] = s
         return p
 
@@ -328,11 +450,21 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
     pspecs = _box["pspecs"]
 
     def init_state(key):
-        params, _ = init_params(spec, plan, key, compute_dtype)
+        params, _ = init_params(spec, mplan, key, compute_dtype)
+        if v > 1:
+            # storage order: row s·v + j holds model chunk j·S + s, so the
+            # contiguous stage shard owns its interleaved chunks — the
+            # same layout training uses, which is why
+            # reshard_state_for_plan loads train checkpoints unchanged
+            perm = jnp.asarray(sched.storage_chunk_order())
+            params = dict(params)
+            params["stages"] = jax.tree.map(lambda a: a[perm],
+                                            params["stages"])
+            params["layer_windows"] = params["layer_windows"][perm]
+            params["layer_thetas"] = params["layer_thetas"][perm]
         state = {"params": params, "cache": _cache_template(),
                  "pos": jnp.zeros((), jnp.int32)}
         if has_enc:
-            rows_g = gb * (1 if sp else dp)
             state["enc_out"] = jnp.zeros((R, rows_g, enc_len, d_enc),
                                          compute_dtype)
         return state
@@ -342,10 +474,9 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
     if has_enc:
         state_pspecs["enc_out"] = P(None, batch_dim_spec, None, None)
 
-    token_spec = jax.ShapeDtypeStruct(
-        (global_batch if sp else global_batch,), jnp.int32)
+    token_spec = jax.ShapeDtypeStruct((global_batch,), jnp.int32)
 
-    return ServeBundle(spec=spec, plan=plan, mesh=mesh,
-                       decode_step=decode_step, prefill_step=prefill_step,
-                       init_state=init_state, state_pspecs=state_pspecs,
-                       token_spec=token_spec, prefill_specs=prefill_specs)
+    return EngineSession(spec=spec, plan=plan, mesh=mesh, sched=sched,
+                         decode_step=decode_step, prefill_step=prefill_step,
+                         init_state=init_state, state_pspecs=state_pspecs,
+                         token_spec=token_spec, prefill_specs=prefill_specs)

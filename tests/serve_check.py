@@ -1,0 +1,99 @@
+"""Subprocess worker: interleaved serving == 1F serving, bit-level.
+
+Usage: serve_check.py DATA PP TP V SP STEPS
+
+Builds the same tiny dense LM under ``serve_1f`` (the one-chunk
+reference) and ``serve_interleaved`` (v chunks per stage) on a
+(data, pp, tp) host-device mesh and asserts the greedy continuations
+are bit-identical — prefill first tokens plus STEPS decode steps
+(SP = 1 runs the sequence-parallel decode path instead: replicated
+rows, KV positions sharded over data, R = 1).  At dp = tp = 1 the
+``serve_1f`` reference itself is additionally pinned to the
+non-incremental full-forward teacher.  Prints MATCH on success.
+"""
+import sys
+
+data, pp, tp, v, sp, steps = map(int, sys.argv[1:7])
+
+import os  # noqa: E402
+
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={data * pp * tp}")
+
+import jax                # noqa: E402
+import jax.numpy as jnp   # noqa: E402
+import numpy as np        # noqa: E402
+
+from repro.launch.mesh import make_host_mesh                  # noqa: E402
+from repro.models import lm_head                              # noqa: E402
+from repro.models import spec as spec_lib                     # noqa: E402
+from repro.models.stage import full_transformer, make_statics  # noqa: E402
+from repro.parallel.mesh import ParallelismPlan, split_model_axis  # noqa: E402
+from repro.serving.engine import build_serving                # noqa: E402
+
+n_layers = pp * v * 2
+blocks = tuple(spec_lib.BlockSpec(mixer="attn", ffn="dense")
+               for _ in range(n_layers))
+spec = spec_lib.ModelSpec(
+    name="serve-check", d_model=64, n_layers=n_layers, n_heads=4,
+    n_kv=2, d_head=16, d_ff=128, vocab=256,
+    blocks=blocks, norm="rmsnorm", act="silu")
+
+mesh = make_host_mesh(data=data, model=pp * tp)
+dmesh = split_model_axis(mesh, pp, tp)
+dp = data
+cache = 64
+if sp:
+    batch, prefill = 2, 0          # decode-only, replicated rows
+else:
+    batch, prefill = 4 * dp, 8
+
+start_tokens = np.asarray(jax.random.randint(
+    jax.random.key(1), (batch, max(prefill, 1)), 1, spec.vocab, jnp.int32))
+
+runs = {}
+for name, vv in (("serve_1f", 1), ("serve_interleaved", v)):
+    plan = ParallelismPlan(
+        pp=pp, tp=tp, microbatches=4, decode_microbatches=4,
+        schedule=name if vv > 1 else "auto",
+        virtual_stages=vv)
+    sess = build_serving(spec, plan, dmesh, cache_len=cache,
+                         global_batch=batch, prefill_len=prefill,
+                         sp=bool(sp), compute_dtype=jnp.float32)
+    assert sess.sched.name == name, (sess.sched.name, name)
+    sess.start(jax.random.key(0))
+    if prefill:
+        tk = jnp.asarray(start_tokens.reshape(
+            sess.prefill_specs["tokens"].shape))
+        toks = [np.asarray(sess.prefill({"tokens": tk}))]
+    else:
+        toks = [start_tokens[:, 0]]
+    for _ in range(steps):
+        toks.append(np.asarray(sess.decode(jnp.asarray(toks[-1]))))
+    runs[name] = (np.stack(toks), sess)
+
+got_1f, sess_1f = runs["serve_1f"]
+got_iv, _ = runs["serve_interleaved"]
+np.testing.assert_array_equal(got_1f, got_iv)
+
+if dp == 1 and tp == 1 and not sp:
+    # pin the reference itself to the non-incremental teacher
+    params = jax.tree.map(np.asarray, sess_1f.state["params"])
+    statics = make_statics(spec, ParallelismPlan(pp=pp, tp=1),
+                           tokens_per_mb=prefill + steps + 1)
+    seq = jnp.asarray(start_tokens)
+    want = []
+    for _ in range(steps + 1):
+        emb = lm_head.embed_tokens(params["embed"], seq)
+        pos = jnp.broadcast_to(jnp.arange(seq.shape[1]), seq.shape)
+        h, _ = full_transformer(params, emb.astype(jnp.float32), statics,
+                                positions=pos)
+        nxt = lm_head.sample_greedy(
+            params["head"], params["final_norm"]["scale"], h[:, -1:],
+            norm_kind=spec.norm, norm_bias=params["final_norm"].get("bias"),
+            vocab=spec.vocab)
+        want.append(np.asarray(nxt))
+        seq = jnp.concatenate([seq, nxt[:, None]], axis=1)
+    np.testing.assert_array_equal(got_1f, np.stack(want))
+
+print("MATCH")

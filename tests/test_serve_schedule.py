@@ -1,0 +1,373 @@
+"""Serving schedules as registry clients (ISSUE-4 acceptance).
+
+Covers:
+  * structural invariants of the forward-only tables (``validate()``)
+    over an (S, R, v) matrix, including partial microbatch groups and
+    the R = 1 sequence-parallel decode case;
+  * serve_ttft closed forms and the simulator cross-check —
+    ``serve_interleaved`` TTFT < ``serve_1f`` TTFT at S >= 3;
+  * the KV/SSM cache term of the serving memory_model (golden values,
+    dp/tp/sp sharding);
+  * ``plan_search(workload="decode")`` rejecting a plan whose
+    KV-cache-inclusive memory_model exceeds the HBM budget (golden);
+  * the ``fit_decode_microbatches`` regression — a clear ValueError
+    (not ZeroDivisionError) when dp does not divide the batch;
+  * the registry-lookup error path of ``make_serving_schedule`` and the
+    train -> serve storage-order round trip.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import profiler as prof
+from repro.core.partitioner import plan_search
+from repro.core.schedule import (SCHEDULES, ScheduleInterleaved1F1B,
+                                 ScheduleServe1F, ScheduleServeInterleaved,
+                                 default_cache_lens, make_serving_schedule,
+                                 serve_ttft, serving_cache_bytes,
+                                 weighted_round_time)
+from repro.models import spec as S
+from repro.parallel.mesh import ParallelismPlan
+
+HW = dataclasses.replace(prof.TPU_V5E, hbm_bytes=1e18)
+
+
+def mk_spec(n_layers=8, heads=4, d_model=256, d_ff=1024, vocab=1024,
+            n_kv=None):
+    blocks = tuple(S.BlockSpec(mixer="attn", ffn="dense")
+                   for _ in range(n_layers))
+    return S.ModelSpec(name="t", d_model=d_model, n_layers=n_layers,
+                       n_heads=heads, n_kv=n_kv or heads,
+                       d_head=max(d_model // heads, 8), d_ff=d_ff,
+                       vocab=vocab, blocks=blocks, norm="rmsnorm",
+                       act="silu")
+
+
+# ---------------------------------------------------------------------------
+# table invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s", [1, 2, 3, 4])
+@pytest.mark.parametrize("r", [1, 2, 3, 5, 8])
+def test_serve_1f_tables_valid(s, r):
+    sched = ScheduleServe1F(s, r)
+    sched.validate()
+    assert sched.n_ticks == r + s - 1
+    # the fwd timing is the classic 1F pipe: stage s forwards t - s
+    tabs = sched.tables()
+    for t in range(sched.n_ticks):
+        for st in range(s):
+            f = t - st
+            assert tabs.fwd[t, st, 0] == (f if 0 <= f < r else -1)
+
+
+@pytest.mark.parametrize("s", [1, 2, 3, 4])
+@pytest.mark.parametrize("r", [1, 2, 3, 5, 8])
+@pytest.mark.parametrize("v", [2, 3])
+def test_serve_interleaved_tables_valid(s, r, v):
+    """Any R is valid — no microbatch-group constraint forward-only."""
+    sched = ScheduleServeInterleaved(s, r, virtual_stages=v)
+    sched.validate()
+    if r % s == 0:              # full groups: closed-form tick count
+        assert sched.n_ticks == v * r + s - 1
+
+
+def test_serve_interleaved_storage_order_matches_training():
+    """The serving chunk-major layout IS the training one — what lets
+    reshard_state_for_plan round-trip train -> serve checkpoints."""
+    for s, v in [(2, 2), (4, 2), (2, 4), (3, 3)]:
+        train = ScheduleInterleaved1F1B(s, s, virtual_stages=v)
+        serve = ScheduleServeInterleaved(s, 1, virtual_stages=v)
+        np.testing.assert_array_equal(train.storage_chunk_order(),
+                                      serve.storage_chunk_order())
+
+
+def test_serving_schedules_registered():
+    assert SCHEDULES["serve_1f"] is ScheduleServe1F
+    assert SCHEDULES["serve_interleaved"] is ScheduleServeInterleaved
+    assert ScheduleServe1F.is_serving
+    assert not SCHEDULES["1f1b"].is_serving
+
+
+def test_make_serving_schedule_resolution_and_error():
+    # training plans map onto the serving analogue of their chunking
+    plan = ParallelismPlan(pp=4, tp=1, microbatches=8,
+                           decode_microbatches=8)
+    assert make_serving_schedule(plan).name == "serve_1f"
+    iplan = ParallelismPlan(pp=4, tp=1, microbatches=8, stash_mode="flush",
+                            schedule="interleaved", virtual_stages=2)
+    sched = make_serving_schedule(iplan, 6)
+    assert sched.name == "serve_interleaved"
+    assert sched.virtual_stages == 2 and sched.n_microbatches == 6
+    # registry-lookup error path (replaces the old virtual_stages == 1
+    # assert): a serve resolution missing from the registry raises
+    saved = SCHEDULES.pop("serve_interleaved")
+    try:
+        with pytest.raises(KeyError, match="registered serving schedules"):
+            make_serving_schedule(iplan, 6)
+    finally:
+        SCHEDULES["serve_interleaved"] = saved
+    # an unknown/typo'd name errors too — never a silent serve_1f
+    typo = plan.with_(schedule="serve_interlaved")
+    with pytest.raises(KeyError, match="serve_interlaved"):
+        make_serving_schedule(typo, 4)
+
+
+# ---------------------------------------------------------------------------
+# TTFT + simulator cross-check
+# ---------------------------------------------------------------------------
+
+def test_serve_ttft_closed_forms():
+    for s in (2, 3, 4):
+        r = 2 * s
+        assert serve_ttft(ScheduleServe1F(s, r)) == pytest.approx(
+            r + s - 1)
+        for v in (2, 4):
+            got = serve_ttft(ScheduleServeInterleaved(s, r,
+                                                      virtual_stages=v))
+            assert got == pytest.approx((v * r + s - 1) / v)
+
+
+@pytest.mark.parametrize("s", [3, 4, 6])
+def test_interleaved_serving_cuts_ttft_at_depth(s):
+    """Acceptance: serve_interleaved TTFT < serve_1f TTFT at S >= 3,
+    cross-checked against the table-walking simulator."""
+    from benchmarks.simulator import simulate_schedule
+    r = 2 * s
+    one = ScheduleServe1F(s, r)
+    two = ScheduleServeInterleaved(s, r, virtual_stages=2)
+    assert serve_ttft(two) < serve_ttft(one)
+    # the simulator walks the same forward-only tables: its round_time
+    # equals the TTFT (the prefill round IS the ramp), both measures
+    sim1, sim2 = simulate_schedule(one), simulate_schedule(two)
+    assert sim1.round_time == pytest.approx(serve_ttft(one))
+    assert sim2.round_time == pytest.approx(serve_ttft(two))
+    assert sim2.round_time < sim1.round_time
+    # weighted_round_time agrees (no backward slots to charge)
+    assert weighted_round_time(two)[0] == pytest.approx(serve_ttft(two))
+
+
+def test_partial_groups_never_slower_than_1f():
+    for s in (2, 3, 4):
+        for r in (1, 3, 5, 7):
+            for v in (2, 3):
+                assert serve_ttft(ScheduleServeInterleaved(
+                    s, r, virtual_stages=v)) <= serve_ttft(
+                        ScheduleServe1F(s, r)) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# KV/SSM cache memory model
+# ---------------------------------------------------------------------------
+
+def test_serving_cache_bytes_golden():
+    """2 (K,V) × rows × len × kv_heads × d_head × 2 B per attn layer,
+    rows sharded over dp, heads over tp, positions over dp under sp."""
+    spec = mk_spec(n_layers=8, heads=4, d_model=256)
+    plan = ParallelismPlan(pp=4, tp=1, decode_microbatches=8)
+    sched = make_serving_schedule(plan)
+    dp, gb, cl = 4, 128, 32768
+    got = serving_cache_bytes(spec, plan, sched, cache_len=cl,
+                              global_batch=gb, data_replicas=dp)
+    # 2 layers/stage, rows = 128/4 = 32 per device
+    want = 2 * 2.0 * (gb / dp) * cl * spec.n_kv * spec.d_head * 2.0
+    assert got == pytest.approx(want)
+    # tp shards the KV heads
+    tplan = ParallelismPlan(pp=2, tp=2, decode_microbatches=8)
+    tsched = make_serving_schedule(tplan)
+    gt = serving_cache_bytes(spec, tplan, tsched, cache_len=cl,
+                             global_batch=gb, data_replicas=dp)
+    want_t = 4 * 2.0 * (gb / dp) * cl * (spec.n_kv // 2) * spec.d_head * 2.0
+    assert gt == pytest.approx(want_t)
+    # sp: rows replicate, full-length positions shard — same total here
+    gsp = serving_cache_bytes(spec, plan, sched, cache_len=cl,
+                              global_batch=gb // dp, sp=True,
+                              data_replicas=dp)
+    want_sp = 2 * 2.0 * (gb / dp) * (cl / dp) * spec.n_kv \
+        * spec.d_head * 2.0
+    assert gsp == pytest.approx(want_sp)
+
+
+def test_serving_memory_model_fields():
+    spec = mk_spec()
+    plan = ParallelismPlan(pp=4, tp=1, decode_microbatches=8)
+    sched = make_serving_schedule(plan)
+    mm = sched.memory_model(spec, plan, HW, microbatch_tokens=16,
+                            data_replicas=4, cache_len=4096,
+                            global_batch=128)
+    assert mm.cache_bytes > 0
+    assert mm.stash_bytes == mm.grad_bytes == mm.optimizer_bytes == 0.0
+    assert mm.resid_bytes == 0.0
+    assert mm.total_bytes == pytest.approx(
+        mm.weight_bytes + mm.workspace_bytes + mm.cache_bytes)
+    assert "cache" in str(mm)
+    with pytest.raises(AssertionError, match="cache_len"):
+        sched.memory_model(spec, plan, HW, microbatch_tokens=16)
+    # prefill forces full-length caches on windowed stacks
+    blocks = tuple(S.BlockSpec(mixer="attn", ffn="dense", window=64)
+                   for _ in range(8))
+    wspec = dataclasses.replace(spec, blocks=blocks)
+    assert default_cache_lens(wspec, 4, 4096) == [64, 64]
+    dec = sched.memory_model(wspec, plan, HW, microbatch_tokens=16,
+                             data_replicas=4, cache_len=4096,
+                             global_batch=128)
+    pre = sched.memory_model(wspec, plan, HW, microbatch_tokens=16,
+                             data_replicas=4, cache_len=4096,
+                             global_batch=128, prefill=True)
+    assert pre.cache_bytes > dec.cache_bytes   # ring buffers vs slabs
+
+
+# ---------------------------------------------------------------------------
+# plan_search workload axis
+# ---------------------------------------------------------------------------
+
+def test_plan_search_decode_rejects_kv_over_budget():
+    """Acceptance golden: a decode plan whose KV-cache-inclusive
+    memory_model exceeds Hardware.hbm_bytes is rejected."""
+    spec = mk_spec(n_layers=8, heads=4, d_model=256)
+    base = ParallelismPlan(pp=4, tp=1, microbatches=8,
+                           decode_microbatches=8)
+    kw = dict(minibatch_tokens=32, data_replicas=1,
+              workload="decode", cache_len=131072, global_batch=256)
+    cands = plan_search(spec, base, 4, HW, return_all=True, **kw)
+    assert cands and all(c.workload == "decode" for c in cands)
+    assert all(c.memory.cache_bytes > 0 for c in cands)
+    for c in cands:
+        assert c.plan.make_schedule().is_serving
+    # every candidate's KV cache alone blows a 1 GB budget -> no plan
+    assert min(c.memory.cache_bytes for c in cands) > 1e9
+    with pytest.raises(AssertionError, match="no plan fits"):
+        plan_search(spec, base, 4, HW, hbm_bytes=1e9, **kw)
+    # a budget between cache-inclusive and cache-free totals rejects the
+    # over-budget candidates but keeps the lean ones
+    totals = sorted(c.memory.total_bytes for c in cands)
+    if totals[0] < totals[-1]:
+        budget = (totals[0] + totals[-1]) / 2
+        best = plan_search(spec, base, 4, HW, hbm_bytes=budget, **kw)
+        assert best.feasible and best.memory.total_bytes <= budget
+
+
+def test_plan_search_prefill_prefers_interleaved_at_depth():
+    """The TTFT objective picks serve_interleaved over serve_1f when the
+    pipe is deep (heads=3 pins tp=1 -> pp=4 is the only split)."""
+    spec = mk_spec(n_layers=8, heads=3, d_model=192)
+    base = ParallelismPlan(pp=4, tp=1, microbatches=8,
+                           decode_microbatches=8)
+    kw = dict(minibatch_tokens=512, data_replicas=1, workload="prefill",
+              cache_len=512, global_batch=8)
+    cands = plan_search(spec, base, 4, HW, return_all=True, **kw)
+    assert all(c.plan.pp == 4 for c in cands)
+    best = cands[0]
+    assert best.plan.schedule == "serve_interleaved"
+    one = [c for c in cands if c.plan.schedule == "serve_1f"]
+    assert one and best.round_time < min(c.round_time for c in one)
+    best.plan.make_schedule().validate()
+
+
+def test_plan_search_prices_the_fitted_microbatch_count():
+    """The planner must score the R the engine will actually run: the
+    batch-fitted count (global_batch / dp caps it) and R = 1 under
+    sequence-parallel decode — not the config's nominal R."""
+    spec = mk_spec()
+    base = ParallelismPlan(pp=4, tp=1, microbatches=8,
+                           decode_microbatches=8)
+    # dp=4 over batch 8 leaves 2 rows per replica -> R = 2, not 8
+    best = plan_search(spec, base, 4, HW, minibatch_tokens=2,
+                       data_replicas=4, workload="decode", cache_len=1024,
+                       global_batch=8)
+    assert best.plan.make_schedule().n_microbatches == 2
+    # sp decode replicates rows: R = 1 regardless of the config
+    sp_best = plan_search(spec, base, 4, HW, minibatch_tokens=1,
+                          data_replicas=4, workload="decode",
+                          cache_len=1024, global_batch=1, sp=True)
+    assert sp_best.plan.make_schedule().n_microbatches == 1
+    # an indivisible batch fails with the engine's own clear error
+    with pytest.raises(ValueError, match="not divisible"):
+        plan_search(spec, base, 4, HW, minibatch_tokens=1,
+                    data_replicas=3, workload="decode", cache_len=1024,
+                    global_batch=8)
+
+
+def test_plan_search_serving_rejects_training_schedules():
+    spec = mk_spec()
+    base = ParallelismPlan(pp=4, tp=1, microbatches=8,
+                           decode_microbatches=8)
+    with pytest.raises(AssertionError, match="does not run"):
+        plan_search(spec, base, 4, HW, minibatch_tokens=32,
+                    workload="decode", cache_len=1024, global_batch=8,
+                    schedules=("1f1b",))
+    with pytest.raises(AssertionError, match="cache_len"):
+        plan_search(spec, base, 4, HW, minibatch_tokens=32,
+                    workload="decode")
+
+
+# ---------------------------------------------------------------------------
+# train -> serve checkpoint round trip
+# ---------------------------------------------------------------------------
+
+def test_reshard_train_to_serve_roundtrip():
+    """The serving engine stores weights in the training chunk-major
+    order, so a train checkpoint at (pp, v) is IDENTICAL under a serve
+    plan at (pp, v); a cross-layout move regroups parameters without
+    inventing stash/optimizer state for a serving tree."""
+    from repro.models.spec import stage_varying_scalars
+    from repro.runtime.driver import reshard_state_for_plan
+    spec = mk_spec(n_layers=8)
+    train = ParallelismPlan(pp=2, tp=1, microbatches=4, stash_mode="flush",
+                            schedule="interleaved", virtual_stages=2)
+    serve = ParallelismPlan(pp=2, tp=1, decode_microbatches=4,
+                            schedule="serve_interleaved", virtual_stages=2)
+    rng = np.random.default_rng(0)
+    stages = {"layer_0": {"w": rng.standard_normal((4, 3, 3))}}
+    cache = {"layer_0": {"kv": rng.standard_normal((4, 2, 5))}}
+    w, t = stage_varying_scalars(spec, 4)
+    state = {"params": {"stages": stages,
+                        "layer_windows": np.asarray(w),
+                        "layer_thetas": np.asarray(t)},
+             "cache": cache, "pos": 0}
+    out = reshard_state_for_plan(state, spec, train, serve)
+    assert out is state          # same chunk-major layout: identity
+    # cross-layout: (pp=2, v=2) serve -> (pp=4, v=1) serve regroups the
+    # interleaved storage rows [0, 2, 1, 3] back to layer-major — the
+    # cache rows ride the SAME permutation as the weights
+    serve1 = ParallelismPlan(pp=4, tp=1, decode_microbatches=4,
+                             schedule="serve_1f")
+    out2 = reshard_state_for_plan(state, spec, serve, serve1)
+    assert "stash" not in out2 and "opt_stages" not in out2
+    order = ScheduleServeInterleaved(2, 4,
+                                     virtual_stages=2).storage_chunk_order()
+    np.testing.assert_allclose(
+        np.asarray(out2["params"]["stages"]["layer_0"]["w"]),
+        stages["layer_0"]["w"][np.argsort(order)])
+    np.testing.assert_allclose(
+        np.asarray(out2["cache"]["layer_0"]["kv"]),
+        cache["layer_0"]["kv"][np.argsort(order)])
+    # across chunk counts the per-row layer groups change: a live cache
+    # cannot be re-cut — refuse loudly instead of silently misaligning
+    serve_half = ParallelismPlan(pp=2, tp=1, decode_microbatches=4,
+                                 schedule="serve_1f")
+    with pytest.raises(ValueError, match="re-prefill"):
+        reshard_state_for_plan(state, spec, serve, serve_half)
+
+
+# ---------------------------------------------------------------------------
+# fit_decode_microbatches regression (the ZeroDivisionError bug)
+# ---------------------------------------------------------------------------
+
+def test_fit_decode_microbatches_validates_dp():
+    from repro.serving.engine import fit_decode_microbatches
+    plan = ParallelismPlan(pp=2, tp=1, decode_microbatches=8)
+    assert fit_decode_microbatches(plan, 16, 2) == 8
+    assert fit_decode_microbatches(plan, 12, 2) == 6
+    assert fit_decode_microbatches(plan, 2, 2) == 1
+    # dp does not divide the batch: a clear error naming batch and dp —
+    # the old loop walked R to 0 and died with ZeroDivisionError
+    with pytest.raises(ValueError, match="global_batch=4.*dp=3"):
+        fit_decode_microbatches(plan, 4, 3)
+    with pytest.raises(ValueError, match="not divisible"):
+        fit_decode_microbatches(plan, 7, 2)
+    # a degenerate microbatch count is a clear error, not ZeroDivision
+    from repro.core.schedule import fit_serving_microbatches
+    with pytest.raises(ValueError, match="decode_microbatches=0"):
+        fit_serving_microbatches(0, 8, 2)

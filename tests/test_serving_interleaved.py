@@ -1,0 +1,58 @@
+"""Interleaved serving == 1F serving, bit-level (fp32) — ISSUE-4.
+
+Each case runs tests/serve_check.py in a subprocess so it can set
+--xla_force_host_platform_device_count before jax initializes (the main
+pytest process keeps 1 device per the task spec).  The worker builds
+the SAME model under ``serve_1f`` and ``serve_interleaved`` and asserts
+identical greedy continuations (prefill + decode); at dp = tp = 1 the
+reference is additionally pinned to the non-incremental teacher.
+
+A fast case runs by default; the full matrix — S ∈ {2, 4}, v = 2, TP,
+and sequence-parallel decode — carries the ``slow`` marker.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+# data, pp, tp, v, sp, steps
+FAST_MATRIX = [
+    (1, 2, 1, 2, 0, 4),     # S=2, v=2, prefill + decode, teacher-pinned
+]
+
+SLOW_MATRIX = [
+    (1, 4, 1, 2, 0, 4),     # S=4 deep pipe, teacher-pinned
+    (1, 2, 2, 2, 0, 4),     # tensor parallelism (GQA KV sharded)
+    (2, 2, 1, 2, 1, 4),     # sequence-parallel decode (R=1, sharded KV)
+]
+
+
+def _run_case(case):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, os.path.join(HERE, "serve_check.py"),
+         *[str(a) for a in case]],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nERR:\n{out.stderr}"
+    assert "MATCH" in out.stdout
+
+
+@pytest.mark.parametrize("case", FAST_MATRIX,
+                         ids=lambda c: "d{}xpp{}xtp{}v{}{}".format(
+                             *c[:4], "_sp" if c[4] else ""))
+def test_serve_interleaved_matches_1f(case):
+    _run_case(case)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("case", SLOW_MATRIX,
+                         ids=lambda c: "d{}xpp{}xtp{}v{}{}".format(
+                             *c[:4], "_sp" if c[4] else ""))
+def test_serve_interleaved_matches_1f_full(case):
+    _run_case(case)
