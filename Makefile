@@ -1,5 +1,6 @@
 # Convenience entry points matching the ROADMAP commands.
-.PHONY: tier1 tier1-full bench bench-serving plan-smoke serve-smoke docs-check
+.PHONY: tier1 tier1-full bench bench-serving bench-batching plan-smoke \
+	serve-smoke batch-smoke docs-check
 
 tier1:
 	scripts/tier1.sh
@@ -13,11 +14,17 @@ bench:
 bench-serving:
 	PYTHONPATH=src:. python benchmarks/serving_bench.py
 
+bench-batching:
+	PYTHONPATH=src:. python benchmarks/batching_bench.py
+
 plan-smoke:
 	python scripts/plan_smoke.py
 
 serve-smoke:
 	python scripts/serve_smoke.py
+
+batch-smoke:
+	python scripts/batch_smoke.py
 
 docs-check:
 	python scripts/docs_check.py

@@ -6,9 +6,12 @@
 # — the chosen plan for qwen3 + olmoe must fit the config's HBM budget —
 # the serve smoke (scripts/serve_smoke.py): both serving schedules
 # through EngineSession.prefill + 4 decode steps, bit-identical —
-# and the docs-check gate (scripts/docs_check.py): every
-# `path.py::symbol` reference in docs/*.md + README.md must resolve
-# against the source tree, so renamed symbols fail fast.
+# the batch smoke (scripts/batch_smoke.py): a staggered 3-request trace
+# through the continuous-batching slot scheduler, every request
+# bit-identical to its solo run — and the docs-check gate
+# (scripts/docs_check.py): every `path.py::symbol` reference in
+# docs/*.md + README.md must resolve against the source tree, so
+# renamed symbols fail fast.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,5 +22,6 @@ if [[ "${1:-}" == "--full" ]]; then
 fi
 python scripts/plan_smoke.py
 python scripts/serve_smoke.py
+python scripts/batch_smoke.py
 python scripts/docs_check.py
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest "${ARGS[@]}" "$@"

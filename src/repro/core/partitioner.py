@@ -314,6 +314,7 @@ class PlanChoice:
     hbm_bytes: float               # budget the candidate was checked against
     feasible: bool                 # memory.total_bytes <= hbm_bytes
     workload: str = "train"        # train | prefill | decode
+    occupancy: float = 1.0         # expected live-slot fraction (decode)
 
     @property
     def per_microbatch(self) -> float:
@@ -383,7 +384,8 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
                 workload: str = "train",
                 cache_len: Optional[int] = None,
                 global_batch: Optional[int] = None,
-                sp: bool = False):
+                sp: bool = False,
+                occupancy: float = 1.0):
     """Jointly pick (pp, tp, schedule, virtual_stages) for a model axis.
 
     Enumerates every pp dividing ``model_axis`` whose chunk count
@@ -415,6 +417,22 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
     against ``data_replicas``, 1 under ``sp``), so ramp, workspace and
     TTFT describe the executed tables, not the config's nominal R.
 
+    ``occupancy`` (decode only, 0 < occupancy <= 1) prices a
+    continuously batched server at its *expected* live-slot fraction
+    instead of assuming a full batch: the round is scored over the
+    schedule's liveness-masked tables
+    (:meth:`~repro.core.schedule.ServingSchedule.with_live_slots`, the
+    first ``round(occupancy · R)`` slots live — drained ticks cost
+    nothing), while the MemoryModel keeps budgeting the full-R capacity
+    the engine actually allocates.  Like the rest of the objective this
+    is the *analytic schedule walk*, not the lockstep executor's
+    wall-clock: the jitted decode step runs every tick of the static
+    full-R tables regardless of liveness, so the masked score is the
+    bound an occupancy-aware executor could reach (ending the scan at
+    the last live exit), useful for comparing how candidates' table
+    shapes degrade under partial batches — not a measurement of the
+    shipped engine.  At occupancy 1 the behaviour is unchanged.
+
     Pass measured-calibrated ``profiles``
     (profiler.scale_profiles_to_measurements) to make the search respond
     to live straggler measurements.  Tie-breaking is deterministic:
@@ -425,6 +443,10 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
     ranked candidate list instead, infeasible ones included).
     """
     assert workload in ("train", "prefill", "decode"), workload
+    assert 0.0 < occupancy <= 1.0, occupancy
+    assert occupancy == 1.0 or workload == "decode", (
+        "occupancy < 1 models a partially live decode batch; prefill "
+        "and train rounds are full by construction")
     serving = workload != "train"
     if serving:
         assert cache_len is not None and global_batch is not None, (
@@ -506,12 +528,17 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
                         profiles, part, pp, tp, hw,
                         data_replicas=data_replicas)
                 tf, tb = phases[key]
-                rt, bubble = weighted_round_time(sched, tf, tb)
+                scored = sched
+                if serving and occupancy < 1.0:
+                    n_live = max(1, int(round(occupancy * R)))
+                    scored = sched.with_live_slots(range(n_live))
+                rt, bubble = weighted_round_time(scored, tf, tb)
                 if workload == "prefill":
-                    rt = serve_ttft(sched, tf)
+                    rt = serve_ttft(scored, tf)
                 cands.append(PlanChoice(plan, part, rt, bubble, mm, budget,
                                         feasible=mm.fits(budget),
-                                        workload=workload))
+                                        workload=workload,
+                                        occupancy=occupancy))
     assert cands, f"no structurally valid plan for model_axis={model_axis}"
 
     def rank(c: PlanChoice):

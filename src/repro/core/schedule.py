@@ -76,7 +76,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
-from typing import Dict, Iterable, List, Tuple, Type
+from typing import Dict, Iterable, List, Optional, Tuple, Type
 
 import numpy as np
 
@@ -1016,7 +1016,20 @@ class ServingSchedule(PipelineSchedule):
     ``memory_model`` replaces the training rings with the serving cache
     term: live weights + KV/SSM cache (:func:`serving_cache_bytes`) +
     the engine's in-flight rings (embeds + hidden, R slots each).
+
+    Slot liveness (continuous batching): ``live_slots`` — a sorted
+    tuple of microbatch-slot indices — masks the tables to a partially
+    occupied batch: a non-live slot's F rows and exits become bubbles
+    while live slots keep their full-R timing, which is exactly how the
+    continuous-batching engine runs (free slots compute garbage that is
+    never written — serving/batcher.py).  ``validate()`` proves the
+    forward-only contract over the live slots only; the drained ticks
+    cost nothing under :func:`weighted_round_time`, which is how
+    ``plan_search(occupancy=...)`` prices expected occupancy instead of
+    assuming a full batch.  ``None`` (the default) means fully live.
     """
+
+    live_slots: Optional[Tuple[int, ...]] = None
 
     name = "abstract_serve"
     accumulate = False
@@ -1025,6 +1038,41 @@ class ServingSchedule(PipelineSchedule):
     plan_stash_modes = ("stash", "vertical", "flush", "2bw")
     needs_group_microbatches = False
     is_serving = True
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.live_slots is not None:
+            R = self.n_microbatches
+            assert all(0 <= m < R for m in self.live_slots), (
+                f"live_slots {self.live_slots} out of range for R={R}")
+            assert list(self.live_slots) == sorted(set(self.live_slots)), (
+                f"live_slots must be sorted and unique: {self.live_slots}")
+
+    @property
+    def live_count(self) -> int:
+        """Number of live microbatch slots (R when unmasked)."""
+        return (self.n_microbatches if self.live_slots is None
+                else len(self.live_slots))
+
+    def live_mask(self) -> np.ndarray:
+        """Boolean [R] mask of live slots."""
+        mask = np.ones(self.n_microbatches, bool)
+        if self.live_slots is not None:
+            mask[:] = False
+            mask[list(self.live_slots)] = True
+        return mask
+
+    def with_live_slots(self, live) -> "ServingSchedule":
+        """This schedule with only ``live`` microbatch slots occupied.
+
+        ``live`` is an iterable of slot indices (or None to unmask).
+        The timing of live slots is unchanged — masking only blanks the
+        dead slots' rows — so the masked tables describe exactly what
+        the continuous-batching engine executes between admissions.
+        """
+        slots = None if live is None else tuple(sorted(set(int(m)
+                                                          for m in live)))
+        return dataclasses.replace(self, live_slots=slots)
 
     @property
     def n_ticks(self) -> int:
@@ -1062,13 +1110,25 @@ class ServingSchedule(PipelineSchedule):
                     fwd[t, s, F_RESID_WRITE] = 0
                     if c == S * v - 1:
                         exit_mb[t] = m
+        if self.live_slots is not None:
+            # blank the dead slots' rows: their time slots stay bubbles
+            # (live slots keep the full-R timing — the engine's tables
+            # are static, a free slot simply computes unwritten garbage)
+            live = self.live_mask()
+            mb = fwd[:, :, F_MB]
+            dead = (mb >= 0) & ~live[np.clip(mb, 0, R - 1)]
+            fwd[dead] = -1
+            edead = (exit_mb >= 0) & ~live[np.clip(exit_mb, 0, R - 1)]
+            exit_mb[edead] = -1
         return ScheduleTables(fwd, bwd, exit_mb, demb)
 
     def validate(self) -> None:
-        """Forward-only dataflow contract (see class docstring)."""
+        """Forward-only dataflow contract over the live slots."""
         S, R, v = self.n_stages, self.n_microbatches, self.virtual_stages
         tabs = self.tables()
         T, L = self.n_ticks, S * v
+        live = self.live_mask()
+        live_mbs = [m for m in range(R) if live[m]]
         assert tabs.fwd.shape == (T, S, F_COLS), tabs.fwd.shape
         assert tabs.bwd.shape == (T, S, B_COLS), tabs.bwd.shape
         assert (tabs.bwd[:, :, B_MB] < 0).all(), "serving is forward-only"
@@ -1079,21 +1139,37 @@ class ServingSchedule(PipelineSchedule):
                 fr = tabs.fwd[t, s]
                 if fr[F_MB] < 0:
                     continue
+                assert live[int(fr[F_MB])], (
+                    f"tick {t} stage {s}: dead slot {int(fr[F_MB])} "
+                    "scheduled")
                 c = int(fr[F_CHUNK]) * S + s
                 key = (int(fr[F_MB]), c)
                 assert key not in f_time, f"duplicate F{key}"
                 assert (fr[F_FROM_EMBEDS] == 1) == (c == 0), (t, s)
                 f_time[key] = t
-        assert len(f_time) == R * L, (len(f_time), R * L)
-        for m in range(R):
+        assert len(f_time) == len(live_mbs) * L, (
+            len(f_time), len(live_mbs) * L)
+        for m in live_mbs:
             for c in range(1, L):   # one-tick hops, wrap included
                 assert f_time[(m, c)] == f_time[(m, c - 1)] + 1, (m, c)
         for t in range(T):
             fr = tabs.fwd[t, S - 1]
             is_exit = fr[F_MB] >= 0 and fr[F_CHUNK] == v - 1
             assert tabs.exit_mb[t] == (fr[F_MB] if is_exit else -1), t
-        assert int((tabs.exit_mb >= 0).sum()) == R
-        assert tabs.exit_mb[T - 1] >= 0, "round must end on the last exit"
+        assert int((tabs.exit_mb >= 0).sum()) == len(live_mbs)
+        if self.live_slots is None:
+            assert tabs.exit_mb[T - 1] >= 0, (
+                "round must end on the last exit")
+        else:
+            # masking only blanks: every live slot exits at EXACTLY the
+            # tick the unmasked schedule gives it (dead slots' exits
+            # blank to -1); the round may drain early past the last one
+            full = dataclasses.replace(self, live_slots=None)
+            fx = full.tables().exit_mb
+            keep = (fx >= 0) & live[np.clip(fx, 0, R - 1)]
+            want = np.where(keep, fx, -1)
+            assert (tabs.exit_mb == want).all(), (
+                "masked exit table moved a live slot's exit tick")
 
     def memory_model(self, spec, plan, hw, *, microbatch_tokens: int,
                      data_replicas: int = 1, cache_len: int = None,
@@ -1102,7 +1178,9 @@ class ServingSchedule(PipelineSchedule):
         """Serving footprint: weights + KV/SSM cache + in-flight rings.
 
         No version ring, residual ring, gradient accumulator or
-        optimizer state — the serving state is {params, cache, pos}.
+        optimizer state — the serving state is {params, cache, pos,
+        live} (the per-slot position/liveness vectors are R int32s,
+        below noise).
         The workspace term matches the engine's rings: the R-slot embeds
         ring, the R-slot exiting-hidden ring, and one activation in
         flight per stage (each slot is one microbatch × qlen of hidden

@@ -74,7 +74,17 @@ def _fit_microbatches(plan: ParallelismPlan, global_batch: int,
 
 def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
                plan: Optional[ParallelismPlan] = None,
-               optimizer=None) -> Cell:
+               optimizer=None, serve_op: str = "auto") -> Cell:
+    """Build one (arch × shape × mesh) cell.
+
+    ``serve_op`` selects the serving step lowered for prefill shapes:
+    ``"auto"`` (the one-shot ``prefill_step``, unchanged behaviour) or
+    ``"admit"`` — the continuous-batching masked per-slot prefill
+    (``EngineSession.admit_step``: (state, batch, slot_mask)), so the
+    admission path gets the same dry-run lowering/SPMD-sharding proof
+    the one-shot steps get.
+    """
+    assert serve_op in ("auto", "admit"), serve_op
     cfg = configs.get(arch)
     spec = cfg.full_spec()
     shape = configs.SHAPES[shape_name]
@@ -123,6 +133,16 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
         batch_sds = {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
                                              sharding=batch_sh[k])
                      for k, v in session.prefill_specs.items()}
+        if serve_op == "admit":
+            # masked per-slot admission: one replicated [R] slot mask
+            mask_sh = NamedSharding(dmesh, P())
+            mask_sds = jax.ShapeDtypeStruct(
+                (session.sched.n_microbatches,), jax.numpy.int32,
+                sharding=mask_sh)
+            return Cell(arch, shape, plan, mesh, dmesh, session.admit_step,
+                        (state_sds, batch_sds, mask_sds),
+                        (state_sh, batch_sh, mask_sh), (state_sh, None),
+                        spec, session)
         in_sh = (state_sh, batch_sh)
         out_sh = (state_sh, None)
         return Cell(arch, shape, plan, mesh, dmesh, session.prefill_step,

@@ -13,12 +13,23 @@ serve schedule from the registry with --schedule serve_1f /
 serve_interleaved (--virtual-stages v interleaves each stage's chunks,
 cutting the prefill ramp — and the worst request's TTFT — by ~v).
 
+--arrivals switches to continuous batching (serving/batcher.py): the
+batch becomes R microbatch *slots* served from a request stream —
+admission writes a new request's prefill into a freed slot mid-stream,
+eviction on max_new_tokens frees it the next tick.  The trace is
+either explicit arrival steps ("0,0,3,7" — one request per entry) or
+"poisson:RATE:N" (N requests, exponential inter-arrival at RATE
+requests/step, seeded); --policy synchronized runs the drain-then-
+refill baseline for comparison.
+
 CPU example:
   python -m repro.launch.serve --arch rwkv6-1.6b --smoke --tokens 16 \\
       --host-devices 2 --batch 4
   python -m repro.launch.serve --arch qwen3-14b --smoke --tokens 8 \\
       --host-devices 2 --batch 4 --schedule serve_interleaved \\
       --virtual-stages 2
+  python -m repro.launch.serve --arch qwen3-14b --smoke --tokens 12 \\
+      --host-devices 2 --batch 4 --arrivals 0,0,2,5,9
 """
 import argparse        # noqa: E402
 import time            # noqa: E402
@@ -31,6 +42,49 @@ from repro import configs                          # noqa: E402
 from repro.launch.mesh import make_host_mesh, make_production_mesh  # noqa: E402
 from repro.parallel.mesh import split_model_axis   # noqa: E402
 from repro.serving.engine import build_serving     # noqa: E402
+
+
+def parse_arrivals(spec_str: str, seed: int = 0):
+    """'t0,t1,...' explicit steps, or 'poisson:RATE:N' (RATE req/step)."""
+    if spec_str.startswith("poisson:"):
+        _, rate, n = spec_str.split(":")
+        rng = np.random.default_rng(seed)
+        gaps = rng.exponential(scale=1.0 / float(rate), size=int(n))
+        return np.floor(np.cumsum(gaps)).astype(int).tolist()
+    return [int(t) for t in spec_str.split(",")]
+
+
+def serve_arrivals(session, spec, args):
+    """Continuous batching over a request trace (--arrivals)."""
+    from repro.serving.batcher import ContinuousBatchingSession, Request
+    if spec.frontend == "vision" or spec.encoder is not None:
+        raise SystemExit("--arrivals serves text-only models")
+    arrivals = parse_arrivals(args.arrivals, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    text_len = session.prefill_specs["tokens"].shape[2]
+    trace = [Request(rid=i,
+                     prompt=rng.integers(1, spec.vocab, text_len)
+                     .astype(np.int32),
+                     max_new_tokens=args.tokens, arrival=int(t))
+             for i, t in enumerate(sorted(arrivals))]
+    session.start(jax.random.key(0))
+    server = ContinuousBatchingSession(session, policy=args.policy)
+    t0 = time.time()
+    report = server.run(trace)
+    dt = time.time() - t0
+    s = report.summary()
+    print(f"{args.policy} batching: {s['requests']} requests over "
+          f"{session.sched.n_microbatches} slots, {s['steps']} steps "
+          f"({s['decode_rounds']} decode + {s['admit_rounds']} admit "
+          f"rounds) in {dt:.2f}s")
+    print(f"  goodput {s['goodput_tokens_per_s']:.1f} tok/s; per-token "
+          f"latency p50 {s['p50_per_token_latency_s'] * 1e3:.1f} ms / "
+          f"p99 {s['p99_per_token_latency_s'] * 1e3:.1f} ms; mean TTFT "
+          f"{s['mean_ttft_s'] * 1e3:.1f} ms")
+    for r in report.requests[:8]:
+        print(f"  request {r.rid}: arrival step {r.arrival}, admitted "
+              f"{r.step_admitted}, done {r.step_done}, "
+              f"tokens {r.tokens[:6]}{'...' if len(r.tokens) > 6 else ''}")
 
 
 def main(argv=None):
@@ -49,6 +103,14 @@ def main(argv=None):
     ap.add_argument("--schedule", type=str, default=None,
                     choices=[None, *serve_names])
     ap.add_argument("--virtual-stages", type=int, default=None)
+    ap.add_argument("--arrivals", type=str, default=None,
+                    help="continuous batching: 't0,t1,...' arrival steps "
+                         "(one request each) or 'poisson:RATE:N'")
+    ap.add_argument("--policy", type=str, default="continuous",
+                    choices=["continuous", "synchronized"],
+                    help="slot scheduler policy under --arrivals")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="prompt + poisson-trace seed under --arrivals")
     args = ap.parse_args(argv)
     if args.virtual_stages and args.virtual_stages > 1 \
             and args.schedule not in (None, "serve_interleaved"):
@@ -84,6 +146,9 @@ def main(argv=None):
           f"(S={session.sched.n_stages} R={session.sched.n_microbatches}"
           f"{f' v={session.sched.virtual_stages}' if session.sched.virtual_stages > 1 else ''}"
           f", {session.sched.n_ticks} ticks/pass)")
+
+    if args.arrivals:
+        return serve_arrivals(session, spec, args)
 
     session.start(jax.random.key(0))
     rng = np.random.default_rng(0)

@@ -232,7 +232,11 @@ def reshard_state_for_plan(state_host, spec, old_plan, new_plan):
     training interleaved family, so a train checkpoint at (pp, v) is
     bit-identical under a serve plan at (pp, v) — the round-trip is the
     identity on parameters — and a serving state (no ``opt_stages`` /
-    ``stash`` keys) regroups its parameters without growing them.
+    ``stash`` keys) regroups its parameters without growing them.  The
+    per-slot ``pos``/``live`` vectors of a continuous-batching state
+    are slot-major, not chunk-major: they pass through untouched while
+    the cache rows permute, staying aligned with the (unchanged) slot
+    axis — partially-filled states reshard exactly like full ones.
     """
     old_sched = old_plan.make_schedule()
     new_sched = new_plan.make_schedule()

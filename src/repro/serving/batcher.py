@@ -1,0 +1,387 @@
+"""Continuous batching: an Orca-style slot scheduler over the serve tables.
+
+The one-shot :class:`~repro.serving.engine.EngineSession` runs a single
+synchronized batch: every schedule microbatch slot prefills together and
+decodes until the caller stops — a finished sequence's slot keeps
+burning its table rows (bubbles), and new requests wait for a full
+restart.  This module turns that session into a request-stream server
+by scheduling *slots* instead of batches, Orca-style (iteration-level
+scheduling):
+
+  * a **slot** is one of the serve schedule's R microbatch slots — the
+    unit the tables already name per tick (``F_MB``) — carrying
+    ``lanes`` sequence rows and, on the device, its own cache rows,
+    cache position and liveness (``state["pos"][r]`` /
+    ``state["live"][r]``, serving/engine.py);
+  * **requests** move waiting → prefilling → decoding → finished:
+    admission writes a waiting request's prefill into a free slot
+    mid-stream (``EngineSession.write_prefill_into_slots`` — a masked
+    per-slot prefill pass, no global flush: live slots' recurrent state
+    is untouched and their decode resumes from the same pipeline
+    state), and eviction on EOS / ``max_new_tokens`` frees the slot and
+    its cache rows on the *next* scheduler tick
+    (``EngineSession.reset_slots``);
+  * the per-slot cache-lifetime discipline is the serving analogue of
+    PipeDream-2BW's bounded weight/activation versions: at most R slot
+    caches are ever live, and a slot's cache lifetime is exactly its
+    request's admission→eviction interval.
+
+Exactness: because admission only gates *writes* per slot (rows are
+independent in every mixer), a request admitted mid-stream decodes
+bit-exactly (fp32) what the same request produces in a solo one-shot
+run — scripts/batch_smoke.py and tests/test_batcher.py prove it
+against ``serve_1f`` for S ∈ {2, 4} including interleaved (v = 2)
+configs.
+
+Scheduling policies:
+
+  * ``policy="continuous"`` — admit into any free slot the moment both
+    the slot and a request are available (the point of this module);
+  * ``policy="synchronized"`` — admit only when EVERY slot is free
+    (drain-then-refill), the PR-4 baseline the benchmark
+    (benchmarks/batching_bench.py) compares against.
+
+Time is counted in scheduler **steps** (one step = at most one masked
+admission pass + one decode round), which keeps arrival traces
+deterministic under a real engine; wall-clock seconds come from a
+pluggable ``clock`` so the analytic benchmark can drive the same
+scheduler with modeled time.
+
+Prompts must be exactly the engine's ``prefill_len`` tokens long
+(the masked prefill is a fixed-shape pipelined pass); ragged prompts
+are future work (pad on the client, or build sessions per bucket).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["Request", "RequestQueue", "Slot", "BatchingReport",
+           "ContinuousBatchingSession"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request and its lifecycle record.
+
+    ``arrival`` is the scheduler step at which the request becomes
+    visible to the server.  The scheduler fills the lifecycle fields:
+    generated ``tokens`` (the prefill's first token included), the
+    admission/first-token/completion steps, and the wall-clock stamps
+    (from the session's ``clock``).
+    """
+
+    rid: int
+    prompt: np.ndarray             # (prefill_len,) int32
+    max_new_tokens: int
+    arrival: int = 0               # scheduler step of arrival
+    eos_id: Optional[int] = None   # per-request override of the session's
+
+    # -- lifecycle (scheduler-owned) --------------------------------------
+    state: str = "waiting"         # waiting|prefilling|decoding|finished
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    step_admitted: Optional[int] = None
+    step_first: Optional[int] = None
+    step_done: Optional[int] = None
+    t_arrival: Optional[float] = None
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def finished(self) -> bool:
+        return self.state == "finished"
+
+    def _record(self, token: int, step: int, now: float,
+                eos_id: Optional[int]) -> None:
+        """Append one generated token; flip to finished on EOS/max_len."""
+        self.tokens.append(int(token))
+        if self.t_first is None:
+            self.t_first, self.step_first = now, step
+        self.state = "decoding"
+        eos = self.eos_id if self.eos_id is not None else eos_id
+        if (eos is not None and int(token) == eos) \
+                or len(self.tokens) >= self.max_new_tokens:
+            self.state = "finished"
+            self.t_done, self.step_done = now, step
+
+
+class RequestQueue:
+    """Arrival-gated FIFO of waiting requests."""
+
+    def __init__(self, requests: Sequence[Request] = ()):
+        self._pending = deque(sorted(requests,
+                                     key=lambda r: (r.arrival, r.rid)))
+        self._ready: deque = deque()
+
+    def push(self, request: Request) -> None:
+        """Add a request (arrival must be >= every queued arrival)."""
+        if self._pending and request.arrival < self._pending[-1].arrival:
+            raise ValueError(
+                f"request {request.rid} arrives at step {request.arrival}, "
+                f"before the queue tail "
+                f"({self._pending[-1].arrival}); push in arrival order")
+        self._pending.append(request)
+
+    def absorb_arrivals(self, step: int, now: float) -> None:
+        """Move every request with ``arrival <= step`` into the ready FIFO."""
+        while self._pending and self._pending[0].arrival <= step:
+            r = self._pending.popleft()
+            r.t_arrival = now
+            self._ready.append(r)
+
+    def pop_ready(self) -> Optional[Request]:
+        return self._ready.popleft() if self._ready else None
+
+    @property
+    def n_ready(self) -> int:
+        return len(self._ready)
+
+    def __len__(self) -> int:
+        return len(self._pending) + len(self._ready)
+
+
+@dataclasses.dataclass
+class Slot:
+    """One schedule microbatch slot: ``lanes`` request lanes that share
+    the slot's device-side cache rows, position and liveness."""
+
+    index: int
+    lanes: int
+    requests: List[Optional[Request]] = dataclasses.field(
+        default_factory=list)
+
+    def __post_init__(self):
+        if not self.requests:
+            self.requests = [None] * self.lanes
+
+    @property
+    def free(self) -> bool:
+        return all(r is None for r in self.requests)
+
+    @property
+    def drained(self) -> bool:
+        """Occupied, and every request in it has finished (evict next tick)."""
+        return (not self.free
+                and all(r is None or r.finished for r in self.requests))
+
+    def live_lanes(self):
+        """(lane, request) pairs still decoding."""
+        return [(i, r) for i, r in enumerate(self.requests)
+                if r is not None and not r.finished]
+
+    def clear(self) -> None:
+        self.requests = [None] * self.lanes
+
+
+@dataclasses.dataclass
+class BatchingReport:
+    """Outcome of one :meth:`ContinuousBatchingSession.run`."""
+
+    requests: List[Request]
+    policy: str
+    steps: int
+    decode_rounds: int
+    admit_rounds: int
+    wall_seconds: float
+
+    @property
+    def completed(self) -> List[Request]:
+        return [r for r in self.requests if r.finished]
+
+    @property
+    def completed_tokens(self) -> int:
+        return sum(len(r.tokens) for r in self.completed)
+
+    @property
+    def goodput_tokens_per_s(self) -> float:
+        """Completed tokens per second — tokens of unfinished requests
+        do not count (that is what makes it goodput, not throughput)."""
+        return self.completed_tokens / max(self.wall_seconds, 1e-12)
+
+    def per_token_latency_s(self) -> np.ndarray:
+        """Per-request (completion − arrival) / tokens, seconds."""
+        return np.asarray([(r.t_done - r.t_arrival) / len(r.tokens)
+                           for r in self.completed])
+
+    def summary(self) -> dict:
+        lat = self.per_token_latency_s()
+        ttft = np.asarray([r.t_first - r.t_arrival for r in self.completed])
+        return {
+            "policy": self.policy,
+            "requests": len(self.requests),
+            "completed": len(self.completed),
+            "completed_tokens": self.completed_tokens,
+            "steps": self.steps,
+            "decode_rounds": self.decode_rounds,
+            "admit_rounds": self.admit_rounds,
+            "wall_seconds": self.wall_seconds,
+            "goodput_tokens_per_s": self.goodput_tokens_per_s,
+            "p50_per_token_latency_s":
+                float(np.percentile(lat, 50)) if lat.size else float("nan"),
+            "p99_per_token_latency_s":
+                float(np.percentile(lat, 99)) if lat.size else float("nan"),
+            "mean_ttft_s":
+                float(ttft.mean()) if ttft.size else float("nan"),
+        }
+
+
+class ContinuousBatchingSession:
+    """Drive an EngineSession as a request-stream server.
+
+    ``session`` needs the admission surface (built with
+    ``prefill_len > 0``); anything engine-shaped works — the analytic
+    benchmark drives the same scheduler with a modeled engine.  One
+    ``step()``:
+
+      1. evict slots drained on the previous step
+         (``session.reset_slots``) — EOS/max_len frees the slot and its
+         cache rows the next tick;
+      2. admit ready requests into free slots
+         (``session.write_prefill_into_slots`` — continuous policy; the
+         synchronized policy waits until every slot is free);
+      3. one decode round for all live slots (``session.decode``).
+    """
+
+    def __init__(self, session, *, eos_id: Optional[int] = None,
+                 policy: str = "continuous",
+                 clock: Callable[[], float] = time.perf_counter):
+        if policy not in ("continuous", "synchronized"):
+            raise ValueError(f"unknown policy {policy!r}")
+        if getattr(session, "admit_step", None) is None:
+            raise ValueError(
+                "continuous batching needs the per-slot admission step; "
+                "build the session with prefill_len= (> 0)")
+        self.session = session
+        self.eos_id = eos_id
+        self.policy = policy
+        self.clock = clock
+        self.R = int(session.sched.n_microbatches)
+        gb = int(session.token_spec.shape[0])
+        tok = session.prefill_specs["tokens"].shape   # (R, rows, text_len)
+        assert tok[0] == self.R, (tok, self.R)
+        self.rows = int(tok[1])
+        self.text_len = int(tok[2])
+        if gb != self.R * self.rows:
+            raise ValueError(
+                f"global_batch {gb} != R·rows = {self.R}·{self.rows}")
+        self.slots = [Slot(i, self.rows) for i in range(self.R)]
+        self.queue = RequestQueue()
+        self.steps = 0
+        self.decode_rounds = 0
+        self.admit_rounds = 0
+        self._all: List[Request] = []
+
+    # ---- admission -------------------------------------------------------
+
+    def _admissible_slots(self) -> List[Slot]:
+        free = [s for s in self.slots if s.free]
+        if self.policy == "synchronized" and len(free) != len(self.slots):
+            return []               # drain-then-refill: wait for all
+        return free
+
+    def _admit(self) -> None:
+        slots: List[Slot] = []
+        for slot in self._admissible_slots():
+            if not self.queue.n_ready:
+                break
+            for lane in range(slot.lanes):
+                req = self.queue.pop_ready()
+                if req is None:
+                    break
+                if len(req.prompt) != self.text_len:
+                    raise ValueError(
+                        f"request {req.rid}: prompt length "
+                        f"{len(req.prompt)} != the session's prefill_len "
+                        f"{self.text_len}; prompts must match exactly "
+                        "(pad on the client or build per-length sessions)")
+                req.state = "prefilling"
+                req.step_admitted = self.steps
+                slot.requests[lane] = req
+            slots.append(slot)
+        if not slots:
+            return
+        # admission = remapping the embeds ring: the admitted requests'
+        # prompts land in their slots' rows of the (R, rows, text) batch
+        tokens = np.zeros((self.R, self.rows, self.text_len), np.int32)
+        mask = np.zeros((self.R,), np.int32)
+        for slot in slots:
+            mask[slot.index] = 1
+            for lane, req in enumerate(slot.requests):
+                if req is not None:
+                    tokens[slot.index, lane] = req.prompt
+        first = self.session.write_prefill_into_slots({"tokens": tokens},
+                                                      mask)
+        first = np.asarray(first).reshape(self.R, self.rows)
+        self.admit_rounds += 1
+        now = self.clock()
+        for slot in slots:
+            for lane, req in enumerate(slot.requests):
+                if req is not None:
+                    req._record(first[slot.index, lane], self.steps, now,
+                                self.eos_id)
+
+    # ---- one scheduler step ----------------------------------------------
+
+    def step(self) -> bool:
+        """Run one scheduler step; returns True while work remains."""
+        now = self.clock()
+        # 1) evict slots drained last step: free cache rows + liveness
+        drained = [s for s in self.slots if s.drained]
+        if drained:
+            mask = np.zeros((self.R,), np.int32)
+            for s in drained:
+                mask[s.index] = 1
+                s.clear()
+            self.session.reset_slots(mask)
+        # 2) admission
+        self.queue.absorb_arrivals(self.steps, now)
+        if self.queue.n_ready:
+            self._admit()
+        # 3) decode every live lane one token
+        live = [(s, lane, r) for s in self.slots
+                for lane, r in s.live_lanes()]
+        if live:
+            tokens = np.zeros((self.R, self.rows), np.int32)
+            for s, lane, r in live:
+                tokens[s.index, lane] = r.tokens[-1]
+            nxt = self.session.decode(tokens.reshape(-1))
+            nxt = np.asarray(nxt).reshape(self.R, self.rows)
+            self.decode_rounds += 1
+            now = self.clock()
+            for s, lane, r in live:
+                r._record(nxt[s.index, lane], self.steps, now, self.eos_id)
+        self.steps += 1
+        return bool(len(self.queue) or live
+                    or any(not s.free for s in self.slots))
+
+    # ---- main loop ---------------------------------------------------------
+
+    def run(self, requests: Sequence[Request], *,
+            max_steps: int = 100_000) -> BatchingReport:
+        """Serve a trace of requests to completion (or ``max_steps``)."""
+        self._all = list(requests)
+        self.queue = RequestQueue(self._all)
+        # fresh trace: arrival gating and accounting restart from zero
+        # (a reused server would otherwise absorb every arrival at once)
+        self.steps = 0
+        self.decode_rounds = 0
+        self.admit_rounds = 0
+        if self.session.state is None:
+            self.session.start()
+        # begin empty: every slot free until its first admission
+        self.session.reset_slots(np.ones((self.R,), np.int32))
+        for s in self.slots:
+            s.clear()
+        t0 = self.clock()
+        while self.steps < max_steps:
+            if not self.step():
+                break
+        return BatchingReport(
+            requests=self._all, policy=self.policy, steps=self.steps,
+            decode_rounds=self.decode_rounds,
+            admit_rounds=self.admit_rounds,
+            wall_seconds=self.clock() - t0)

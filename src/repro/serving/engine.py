@@ -24,6 +24,18 @@ jit-able pieces (``decode_step``/``prefill_step``/``init_state`` +
 pspecs, consumed by launch/cell.py for dry-run lowering) plus the
 stateful serving API: ``session.prefill(batch)``,
 ``session.decode(tokens)``, ``session.state_shardings()``.
+
+Continuous batching (serving/batcher.py): the serving state is
+per-slot — each schedule microbatch slot carries its own cache
+position (``state["pos"]``, [R]) and liveness (``state["live"]``,
+[R]) — and two slot ops let a request stream flow through a running
+session without a global flush: ``session.reset_slots(mask)`` frees
+slots (eviction: zeroed cache rows, pos, live) and
+``session.write_prefill_into_slots(batch, mask)`` admits new requests
+by running the pipelined prefill with every cache write gated per
+slot.  Decode writes are gated by ``live`` the same way, so free
+slots compute garbage that is never written while live slots decode
+at their own positions.
 """
 from __future__ import annotations
 
@@ -95,6 +107,8 @@ class EngineSession:
     state_pspecs: Any
     token_spec: jax.ShapeDtypeStruct
     prefill_specs: Optional[Dict[str, jax.ShapeDtypeStruct]]
+    reset_step: Callable           # (state, slot_mask) -> state
+    admit_step: Optional[Callable] = None  # (state, batch, mask) -> (st, tok)
     state: Any = None
     _jit: Dict[str, Callable] = dataclasses.field(default_factory=dict)
 
@@ -114,8 +128,11 @@ class EngineSession:
 
     def prefill(self, batch):
         """Pipelined prefill of the whole batch; returns first tokens."""
-        assert self.prefill_step is not None, (
-            "session built without prefill_len; decode-only")
+        if self.prefill_step is None:
+            raise ValueError(
+                "this session was built without a prefill step; pass "
+                "prefill_len= (> 0) to build_serving to enable "
+                "prefill — decode-only sessions can only decode()")
         if self.state is None:
             self.start()
         if "prefill" not in self._jit:
@@ -136,6 +153,48 @@ class EngineSession:
                 self.decode_step, in_shardings=(sh, None),
                 out_shardings=(sh, None), donate_argnums=0)
         self.state, tokens = self._jit["decode"](self.state, tokens)
+        return tokens
+
+    # ---- continuous-batching slot ops (serving/batcher.py drives these) ---
+
+    def reset_slots(self, slot_mask):
+        """Free the masked microbatch slots: zero cache rows, pos, live."""
+        if self.state is None:
+            self.start()
+        if "reset" not in self._jit:
+            sh = self.state_shardings()
+            self._jit["reset"] = jax.jit(
+                self.reset_step, in_shardings=(sh, None), out_shardings=sh,
+                donate_argnums=0)
+        self.state = self._jit["reset"](self.state,
+                                        jnp.asarray(slot_mask, jnp.int32))
+        return self
+
+    def write_prefill_into_slots(self, batch, slot_mask):
+        """Masked prefill: admit new requests into the masked slots.
+
+        Live slots' recurrent state is untouched (every cache write is
+        gated per slot), so admission needs no global flush.  Returns
+        the first token of every slot row; only the admitted slots'
+        entries are meaningful.
+        """
+        if self.admit_step is None:
+            raise ValueError(
+                "this session was built without a prefill step; pass "
+                "prefill_len= (> 0) to build_serving to enable "
+                "per-slot admission")
+        if self.state is None:
+            self.start()
+        if "admit" not in self._jit:
+            sh = self.state_shardings()
+            # donate like decode/reset: admission runs on every freed
+            # slot, and a non-donated pass would transiently double the
+            # params + full-R cache footprint mid-serving
+            self._jit["admit"] = jax.jit(
+                self.admit_step, in_shardings=(sh, None, None),
+                out_shardings=(sh, None), donate_argnums=0)
+        self.state, tokens = self._jit["admit"](
+            self.state, batch, jnp.asarray(slot_mask, jnp.int32))
         return tokens
 
 
@@ -263,7 +322,8 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         return jax.lax.dynamic_index_in_dim(rows, s, 0, keepdims=False)
 
     # ---------------- one pipelined forward pass --------------------------
-    def _pipe_forward(params, cache, embeds_ring, pos, qlen, enc_ring):
+    def _pipe_forward(params, cache, embeds_ring, pos, qlen, enc_ring,
+                      slot_mask):
         """embeds_ring: (R, Bg_rows, qlen, d); returns (h_ring, cache').
 
         Walks the serving schedule's forward table tick by tick: every
@@ -271,15 +331,26 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         that chunk over its recurrent state, and ppermutes the hidden
         state downstream; the exit table names the microbatch whose
         last-chunk output lands in ``h_ring`` each tick.
+
+        ``pos`` is the per-slot cache position vector [R] — each
+        microbatch slot decodes at its own offset, which is what lets
+        continuous batching hold requests of different ages in one
+        batch — and ``slot_mask`` [R] gates every cache write per slot:
+        a masked-out slot still computes (the tables are static) but
+        its recurrent state is never touched, so a masked prefill can
+        admit new requests without perturbing live ones.
         """
         win, th = params["layer_windows"], params["layer_thetas"]
 
         def f_phase(tick, cache, recv_f, h_ring, weights, win, th, embeds,
-                    enc_ring, pos):
+                    enc_ring, pos, slot_mask):
             row = gather_row(FT, tick)
             m = row[F_MB]
-            valid = m >= 0
             rsafe = jnp.clip(m, 0, R - 1)
+            valid = (m >= 0) & (jax.lax.dynamic_index_in_dim(
+                slot_mask, rsafe, 0, keepdims=False) > 0)
+            pos_r = jax.lax.dynamic_index_in_dim(pos, rsafe, 0,
+                                                 keepdims=False)
             j = jnp.clip(row[F_CHUNK], 0, v - 1)
             # this tick's chunk view of the stage-local stacked rows
             if v == 1:
@@ -308,11 +379,13 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                 cross = jax.lax.dynamic_index_in_dim(enc_ring, rsafe, 0,
                                                      keepdims=False)
             positions = jnp.broadcast_to(
-                pos + jnp.arange(qlen, dtype=jnp.int32), (x_in.shape[0], qlen))
+                pos_r + jnp.arange(qlen, dtype=jnp.int32),
+                (x_in.shape[0], qlen))
             h, new_st, _ = stage_fwd(
                 w_loc, x_in, statics, positions=positions,
                 windows=win_loc, thetas=th_loc, tp_axis=tp_axis,
-                state=st_r, cache_pos=pos, cross_x=cross, seq_axis=seq_axes)
+                state=st_r, cache_pos=pos_r, cross_x=cross,
+                seq_axis=seq_axes)
 
             def _write(a, n):
                 aj = jax.lax.dynamic_index_in_dim(a, j, 0, keepdims=False)
@@ -354,7 +427,7 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         f_sharded = shard_map(
             f_phase, mesh=mesh,
             in_specs=(P(), cache_pspec, act_pspec, hring_pspec, stage_pspec,
-                      win_pspec, win_pspec, emb_pspec, enc_pspec, P()),
+                      win_pspec, win_pspec, emb_pspec, enc_pspec, P(), P()),
             out_specs=(cache_pspec, act_pspec, hring_pspec),
             check_vma=False)
 
@@ -365,7 +438,7 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
             cache, recv, h_ring = carry
             cache, recv, h_ring = f_sharded(
                 tick, cache, recv, h_ring, params["stages"], win, th,
-                embeds_ring, enc_ring, pos)
+                embeds_ring, enc_ring, pos, slot_mask)
             return (cache, recv, h_ring), None
 
         (cache, _, h_ring), _ = jax.lax.scan(
@@ -376,8 +449,18 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
 
     # ---------------- decode step ----------------------------------------
     def decode_step(state, tokens):
-        """tokens: (B_global,) int32; returns (state, next (B_global,))."""
+        """tokens: (B_global,) int32; returns (state, next (B_global,)).
+
+        Cache writes are gated by the per-slot ``live`` mask and each
+        slot advances its own ``pos``: a free slot (live = 0, as left by
+        ``reset_slots``) computes garbage that is never written, so the
+        continuous batcher can keep decoding the live slots while free
+        slots await admission.  A fully live batch (the one-shot
+        sessions: ``init_state`` starts all-live) behaves exactly as the
+        scalar-position engine did.
+        """
         params, cache, pos = state["params"], state["cache"], state["pos"]
+        live = state["live"]
         emb = lm_head.embed_tokens(params["embed"], tokens)[:, None]
         embeds_ring = emb.reshape(R, rows_g, 1, spec.d_model)
         if has_enc:
@@ -385,19 +468,56 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         else:
             enc_ring = jnp.zeros((1, 1, 1, 1), compute_dtype)
         h_ring, cache = _pipe_forward(params, cache, embeds_ring, pos, 1,
-                                      enc_ring)
+                                      enc_ring, live)
         h = h_ring.reshape(R * rows_g, 1, spec.d_model)
         nxt = lm_head.sample_greedy(
             params["head"], params["final_norm"]["scale"], h,
             norm_kind=spec.norm, norm_bias=params["final_norm"].get("bias"),
             vocab=spec.vocab)
-        return ({**state, "cache": cache, "pos": pos + 1}, nxt)
+        return ({**state, "cache": cache, "pos": pos + live}, nxt)
 
-    # ---------------- prefill step ----------------------------------------
+    # ---------------- slot reset (eviction) --------------------------------
+    def reset_slots_step(state, slot_mask):
+        """Zero the cache rows, pos and liveness of masked slots.
+
+        ``slot_mask``: [R] int32, 1 = free this slot.  The freed slot's
+        chunk-major cache rows (dim 1 of every [S·v, R, ...] leaf) are
+        zeroed so a later admission prefills recurrent layers from a
+        clean state; elementwise, so it runs under the session's
+        state shardings unchanged.
+        """
+        m = slot_mask > 0
+
+        def _zero(a):
+            mm = m.reshape((1, R) + (1,) * (a.ndim - 2))
+            return jnp.where(mm, jnp.zeros((), a.dtype), a)
+
+        out = {**state,
+               "cache": jax.tree.map(_zero, state["cache"]),
+               "pos": jnp.where(m, 0, state["pos"]).astype(jnp.int32),
+               "live": jnp.where(m, 0, state["live"]).astype(jnp.int32)}
+        if has_enc:
+            out["enc_out"] = jnp.where(
+                m.reshape((R, 1, 1, 1)),
+                jnp.zeros((), state["enc_out"].dtype), state["enc_out"])
+        return out
+
+    # ---------------- prefill / admission steps ----------------------------
     prefill_step = None
+    admit_step = None
     prefill_specs = None
     if prefill_len:
-        def prefill_step(state, batch):
+        def admit_step(state, batch, slot_mask):
+            """Masked per-slot prefill: write new requests into slots.
+
+            Runs the full pipelined prefill pass (the tables are
+            static) but every cache write is gated by ``slot_mask``, so
+            only the admitted slots' rows, positions and liveness
+            change — live slots' recurrent state is untouched and their
+            decode continues from the same pipeline state afterwards
+            (no global flush).  Returns the first token of every slot;
+            the caller keeps the admitted ones.
+            """
             params, cache = state["params"], state["cache"]
             tokens = batch["tokens"]                    # (R, rows, S_text)
             emb = lm_head.embed_tokens(params["embed"], tokens)
@@ -414,18 +534,27 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                 enc_ring = jnp.zeros((1, 1, 1, 1), compute_dtype)
             h_ring, cache = _pipe_forward(params, cache,
                                           emb.astype(compute_dtype),
-                                          jnp.int32(0), emb.shape[2],
-                                          enc_ring)
+                                          jnp.zeros((R,), jnp.int32),
+                                          emb.shape[2], enc_ring, slot_mask)
             h_last = h_ring[:, :, -1:].reshape(R * rows_g, 1, spec.d_model)
             nxt = lm_head.sample_greedy(
                 params["head"], params["final_norm"]["scale"], h_last,
                 norm_kind=spec.norm,
                 norm_bias=params["final_norm"].get("bias"), vocab=spec.vocab)
+            m = slot_mask > 0
             new_state = {**state, "cache": cache,
-                         "pos": jnp.int32(emb.shape[2])}
+                         "pos": jnp.where(m, jnp.int32(emb.shape[2]),
+                                          state["pos"]),
+                         "live": jnp.where(m, 1,
+                                           state["live"]).astype(jnp.int32)}
             if has_enc:
-                new_state["enc_out"] = enc_ring
+                new_state["enc_out"] = jnp.where(
+                    m.reshape((R, 1, 1, 1)), enc_ring, state["enc_out"])
             return new_state, nxt
+
+        def prefill_step(state, batch):
+            # one-shot prefill == admitting every slot at once
+            return admit_step(state, batch, jnp.ones((R,), jnp.int32))
 
         text_len = prefill_len - (spec.n_patches
                                   if spec.frontend == "vision" else 0)
@@ -462,15 +591,21 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                                             params["stages"])
             params["layer_windows"] = params["layer_windows"][perm]
             params["layer_thetas"] = params["layer_thetas"][perm]
+        # per-slot serving state: each schedule microbatch slot carries
+        # its own cache position and liveness.  A fresh session is fully
+        # live (the one-shot flows behave as before); the continuous
+        # batcher resets all slots first and admits per slot.
         state = {"params": params, "cache": _cache_template(),
-                 "pos": jnp.zeros((), jnp.int32)}
+                 "pos": jnp.zeros((R,), jnp.int32),
+                 "live": jnp.ones((R,), jnp.int32)}
         if has_enc:
             state["enc_out"] = jnp.zeros((R, rows_g, enc_len, d_enc),
                                          compute_dtype)
         return state
 
     cache_pspec = _cache_pspec()
-    state_pspecs = {"params": pspecs, "cache": cache_pspec, "pos": P()}
+    state_pspecs = {"params": pspecs, "cache": cache_pspec, "pos": P(),
+                    "live": P()}
     if has_enc:
         state_pspecs["enc_out"] = P(None, batch_dim_spec, None, None)
 
@@ -479,4 +614,5 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
     return EngineSession(spec=spec, plan=plan, mesh=mesh, sched=sched,
                          decode_step=decode_step, prefill_step=prefill_step,
                          init_state=init_state, state_pspecs=state_pspecs,
-                         token_spec=token_spec, prefill_specs=prefill_specs)
+                         token_spec=token_spec, prefill_specs=prefill_specs,
+                         reset_step=reset_slots_step, admit_step=admit_step)

@@ -1,0 +1,91 @@
+"""Subprocess worker: continuous batching is bit-exact vs solo runs.
+
+Usage: batch_check.py PP V R STEPS
+
+Builds a tiny dense LM served by a continuous-batching session over a
+``pp``-stage pipe (``serve_interleaved`` with v chunks per stage when
+V > 1, else ``serve_1f``) with R microbatch slots, runs a staggered
+(R + 1)-request trace — the extra request arrives mid-stream and is
+admitted into the slot freed by the earliest-finishing request — and
+asserts every request's token sequence is bit-identical (fp32) to the
+same request run SOLO through a fresh one-shot ``serve_1f`` session
+(the ISSUE-5 exactness contract).  Prints MATCH on success.
+"""
+import sys
+
+pp, v, r_slots, steps = map(int, sys.argv[1:5])
+
+import os  # noqa: E402
+
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={pp}")
+
+import jax                # noqa: E402
+import jax.numpy as jnp   # noqa: E402
+import numpy as np        # noqa: E402
+
+from repro.launch.mesh import make_host_mesh                  # noqa: E402
+from repro.models import spec as spec_lib                     # noqa: E402
+from repro.parallel.mesh import ParallelismPlan, split_model_axis  # noqa: E402
+from repro.serving.batcher import (ContinuousBatchingSession,  # noqa: E402
+                                   Request)
+from repro.serving.engine import build_serving                # noqa: E402
+
+PREFILL, CACHE = 8, 64
+n_layers = pp * max(v, 1) * 2
+blocks = tuple(spec_lib.BlockSpec(mixer="attn", ffn="dense")
+               for _ in range(n_layers))
+spec = spec_lib.ModelSpec(
+    name="batch-check", d_model=64, n_layers=n_layers, n_heads=4,
+    n_kv=2, d_head=16, d_ff=128, vocab=256, blocks=blocks,
+    norm="rmsnorm", act="silu")
+mesh = make_host_mesh(data=1, model=pp)
+dmesh = split_model_axis(mesh, pp, 1)
+
+
+def make_session(schedule, vv):
+    plan = ParallelismPlan(pp=pp, tp=1, microbatches=max(r_slots, 1),
+                           decode_microbatches=r_slots, schedule=schedule,
+                           virtual_stages=vv)
+    return build_serving(spec, plan, dmesh, cache_len=CACHE,
+                         global_batch=r_slots, prefill_len=PREFILL,
+                         compute_dtype=jnp.float32)
+
+
+def solo_tokens(prompt, n_tokens):
+    sess = make_session("auto", 1)           # the serve_1f reference
+    sess.start(jax.random.key(0))
+    tokens = jnp.asarray(np.broadcast_to(prompt, (r_slots, 1, PREFILL)))
+    toks = [np.asarray(sess.prefill({"tokens": tokens}))[0]]
+    for _ in range(n_tokens - 1):
+        last = jnp.asarray(np.full((r_slots,), toks[-1], np.int32))
+        toks.append(np.asarray(sess.decode(last))[0])
+    return [int(t) for t in toks]
+
+
+rng = np.random.default_rng(11)
+n_req = r_slots + 1
+prompts = [rng.integers(1, 256, PREFILL).astype(np.int32)
+           for _ in range(n_req)]
+# request 0 finishes early; the last request arrives mid-stream and is
+# admitted into its freed slot while the others still decode
+lens = [3] + [steps] * (n_req - 2) + [max(steps - 2, 2)]
+trace = [Request(rid=i, prompt=prompts[i], max_new_tokens=lens[i],
+                 arrival=0 if i < r_slots else 1)
+         for i in range(n_req)]
+
+sess = make_session("serve_interleaved" if v > 1 else "auto", v)
+assert sess.sched.name == ("serve_interleaved" if v > 1 else "serve_1f")
+sess.start(jax.random.key(0))
+report = ContinuousBatchingSession(sess).run(trace)
+assert len(report.completed) == n_req, report.summary()
+late = trace[-1]
+assert late.step_admitted > trace[0].step_done, (
+    late.step_admitted, trace[0].step_done)
+
+for r in trace:
+    want = solo_tokens(r.prompt, r.max_new_tokens)
+    np.testing.assert_array_equal(np.asarray(r.tokens), np.asarray(want),
+                                  err_msg=f"request {r.rid}")
+
+print("MATCH")

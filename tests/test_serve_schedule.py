@@ -351,6 +351,125 @@ def test_reshard_train_to_serve_roundtrip():
         reshard_state_for_plan(state, spec, serve, serve_half)
 
 
+def test_reshard_partially_filled_serving_state():
+    """ISSUE-5 satellite: a continuous-batching serving state — cache
+    rows filled only for live slots, per-slot ``pos``/``live`` arrays —
+    reshards across storage layouts with the slot-major arrays riding
+    along unchanged (they index slots, not chunks: the chunk-row
+    permutation must move cache rows while leaving them aligned), and
+    still refuses across chunk counts."""
+    from repro.models.spec import stage_varying_scalars
+    from repro.runtime.driver import reshard_state_for_plan
+    spec = mk_spec(n_layers=8)
+    serve = ParallelismPlan(pp=2, tp=1, decode_microbatches=4,
+                            schedule="serve_interleaved", virtual_stages=2)
+    rng = np.random.default_rng(3)
+    R = 4
+    # chunk-major cache [4 storage rows, R slots, ...]: slots 1 and 3
+    # live (partially filled rows), slots 0 and 2 freed (zeros)
+    live = np.asarray([0, 1, 0, 1], np.int32)
+    pos = np.asarray([0, 7, 0, 3], np.int32)
+    kv = rng.standard_normal((4, R, 2, 5)) * live[None, :, None, None]
+    w, t = stage_varying_scalars(spec, 4)
+    state = {"params": {"stages": {"layer_0":
+                                   {"w": rng.standard_normal((4, 3, 3))}},
+                        "layer_windows": np.asarray(w),
+                        "layer_thetas": np.asarray(t)},
+             "cache": {"layer_0": {"kv": kv}}, "pos": pos, "live": live}
+    serve1 = ParallelismPlan(pp=4, tp=1, decode_microbatches=4,
+                             schedule="serve_1f")
+    out = reshard_state_for_plan(state, spec, serve, serve1)
+    order = ScheduleServeInterleaved(2, R,
+                                     virtual_stages=2).storage_chunk_order()
+    # cache rows permuted chunk-major -> layer-major; the slot axis (and
+    # with it which slots are filled) is untouched
+    np.testing.assert_array_equal(np.asarray(out["cache"]["layer_0"]["kv"]),
+                                  kv[np.argsort(order)])
+    np.testing.assert_array_equal(np.asarray(out["pos"]), pos)
+    np.testing.assert_array_equal(np.asarray(out["live"]), live)
+    # freed slots stay all-zero in every storage row after the permute
+    assert (np.asarray(out["cache"]["layer_0"]["kv"])[:, live == 0]
+            == 0).all()
+    # across chunk counts: refuse, exactly as before
+    half = ParallelismPlan(pp=2, tp=1, decode_microbatches=4,
+                           schedule="serve_1f")
+    with pytest.raises(ValueError, match="re-prefill"):
+        reshard_state_for_plan(state, spec, serve, half)
+
+
+# ---------------------------------------------------------------------------
+# slot-liveness masks (continuous batching) + occupancy pricing
+# ---------------------------------------------------------------------------
+
+def test_masked_serve_tables_valid():
+    """with_live_slots blanks dead slots into bubbles; validate() proves
+    the forward-only contract over the live slots only."""
+    for s, r, v in [(1, 1, 1), (2, 4, 1), (2, 4, 2), (4, 8, 2), (3, 5, 3)]:
+        sched = (ScheduleServe1F(s, r) if v == 1
+                 else ScheduleServeInterleaved(s, r, virtual_stages=v))
+        for live in (None, range(r), [0], [r - 1],
+                     range(0, r, 2)):
+            m = sched.with_live_slots(live)
+            m.validate()
+            n_live = r if live is None else len(list(live))
+            assert m.live_count == n_live
+            tabs = m.tables()
+            assert int((tabs.exit_mb >= 0).sum()) == n_live
+            fwd_mbs = tabs.fwd[:, :, 0]
+            assert set(fwd_mbs[fwd_mbs >= 0].tolist()) == (
+                set(range(r)) if live is None else set(live))
+    # live timing is unchanged by masking: the live slots' rows match
+    full = ScheduleServeInterleaved(2, 4, virtual_stages=2)
+    masked = full.with_live_slots([1, 3])
+    ft, mt = full.tables(), masked.tables()
+    keep = np.isin(ft.fwd[:, :, 0], [1, 3])
+    np.testing.assert_array_equal(ft.fwd[keep], mt.fwd[keep])
+    assert (mt.fwd[~keep, 0] == -1).all()
+    # out-of-range / duplicate masks are rejected
+    with pytest.raises(AssertionError, match="out of range"):
+        full.with_live_slots([7])
+
+
+def test_masked_round_time_shrinks_with_occupancy():
+    """Drained ticks cost nothing: the weighted round of a half-live
+    batch is strictly cheaper than the full batch, never cheaper than
+    a single slot."""
+    for sched in (ScheduleServe1F(2, 8),
+                  ScheduleServeInterleaved(4, 8, virtual_stages=2)):
+        full, _ = weighted_round_time(sched)
+        half, _ = weighted_round_time(sched.with_live_slots(range(4)))
+        one, _ = weighted_round_time(sched.with_live_slots([0]))
+        assert one < half < full
+
+
+def test_plan_search_occupancy_prices_masked_tables():
+    """ISSUE-5: decode plan_search can price expected occupancy instead
+    of assuming full R — the score shrinks with occupancy while the
+    memory budget keeps charging the full-R capacity."""
+    spec = mk_spec(n_layers=8, heads=4, d_model=256)
+    base = ParallelismPlan(pp=4, tp=1, microbatches=8,
+                           decode_microbatches=8)
+    kw = dict(minibatch_tokens=32, data_replicas=1, workload="decode",
+              cache_len=4096, global_batch=8)
+    full = plan_search(spec, base, 4, HW, return_all=True, **kw)
+    half = plan_search(spec, base, 4, HW, return_all=True,
+                       occupancy=0.5, **kw)
+    by_plan = {(c.plan.pp, c.plan.schedule, c.plan.virtual_stages): c
+               for c in full}
+    assert all(c.occupancy == 0.5 for c in half)
+    for c in half:
+        f = by_plan[(c.plan.pp, c.plan.schedule, c.plan.virtual_stages)]
+        assert c.round_time < f.round_time          # drained ticks free
+        assert c.memory.total_bytes == f.memory.total_bytes  # capacity
+    # occupancy is a decode-only knob
+    with pytest.raises(AssertionError, match="occupancy"):
+        plan_search(spec, base, 4, HW, minibatch_tokens=32,
+                    data_replicas=1, workload="prefill", cache_len=4096,
+                    global_batch=8, occupancy=0.5)
+    with pytest.raises(AssertionError):
+        plan_search(spec, base, 4, HW, occupancy=0.0, **kw)
+
+
 # ---------------------------------------------------------------------------
 # fit_decode_microbatches regression (the ZeroDivisionError bug)
 # ---------------------------------------------------------------------------

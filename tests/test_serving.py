@@ -106,6 +106,60 @@ def test_windowed_ring_cache_matches_full_cache():
     np.testing.assert_array_equal(outs[64], want)
 
 
+def test_start_reentry_after_donated_decode_is_bit_exact():
+    """ISSUE-5 satellite: ``start(); decode(); start(); decode()``.
+
+    ``EngineSession.decode`` jits with ``donate_argnums=0`` — the state
+    buffers of every decode are donated.  Re-calling ``start()`` must
+    rebuild a fresh state (never alias donated buffers), so replaying
+    the same session from the same key reproduces the first run
+    bit-exactly, prefill included."""
+    cfg = configs.get("olmoe_1b_7b")
+    spec = cfg.smoke_spec()
+    plan = ParallelismPlan(pp=1, tp=1, microbatches=1,
+                           decode_microbatches=1)
+    mesh = make_host_mesh(data=1, model=1)
+    dmesh = split_model_axis(mesh, 1, 1)
+    sb = build_serving(spec, plan, dmesh, cache_len=32, global_batch=2,
+                       prefill_len=8, compute_dtype=jnp.float32)
+    tokens = jax.random.randint(jax.random.key(1), (1, 2, 8), 1,
+                                spec.vocab, jnp.int32)
+
+    def one_run():
+        sb.start(jax.random.key(0))
+        toks = [np.asarray(sb.prefill({"tokens": tokens}))]
+        for _ in range(4):
+            toks.append(np.asarray(sb.decode(jnp.asarray(toks[-1]))))
+        return np.stack(toks)
+
+    first = one_run()
+    second = one_run()               # same session object, same _jit cache
+    np.testing.assert_array_equal(first, second)
+    # and the state the replay left behind is live (not donated junk)
+    third = np.asarray(sb.decode(jnp.asarray(second[-1])))
+    assert third.shape == (2,)
+
+
+def test_prefill_without_prefill_len_raises_value_error():
+    """ISSUE-5 satellite: the decode-only guard survives ``python -O``
+    and names the fix (prefill_len=)."""
+    cfg = configs.get("olmoe_1b_7b")
+    spec = cfg.smoke_spec()
+    plan = ParallelismPlan(pp=1, tp=1, microbatches=1,
+                           decode_microbatches=1)
+    mesh = make_host_mesh(data=1, model=1)
+    dmesh = split_model_axis(mesh, 1, 1)
+    sb = build_serving(spec, plan, dmesh, cache_len=32, global_batch=2,
+                       prefill_len=0, compute_dtype=jnp.float32)
+    assert sb.prefill_step is None and sb.admit_step is None
+    with pytest.raises(ValueError, match="prefill_len"):
+        sb.prefill({"tokens": jnp.ones((1, 2, 8), jnp.int32)})
+    with pytest.raises(ValueError, match="prefill_len"):
+        sb.write_prefill_into_slots({"tokens": jnp.ones((1, 2, 8),
+                                                        jnp.int32)},
+                                    np.ones((1,), np.int32))
+
+
 def test_whisper_enc_dec_serving_runs():
     cfg = configs.get("whisper_medium")
     spec = cfg.smoke_spec()
