@@ -1,6 +1,6 @@
 # Convenience entry points matching the ROADMAP commands.
-.PHONY: tier1 tier1-full bench bench-serving bench-batching plan-smoke \
-	serve-smoke batch-smoke docs-check
+.PHONY: tier1 tier1-full bench bench-serving bench-batching bench-paging \
+	plan-smoke serve-smoke batch-smoke page-smoke docs-check
 
 tier1:
 	scripts/tier1.sh
@@ -17,6 +17,9 @@ bench-serving:
 bench-batching:
 	PYTHONPATH=src:. python benchmarks/batching_bench.py
 
+bench-paging:
+	PYTHONPATH=src:. python benchmarks/batching_bench.py --paging
+
 plan-smoke:
 	python scripts/plan_smoke.py
 
@@ -25,6 +28,9 @@ serve-smoke:
 
 batch-smoke:
 	python scripts/batch_smoke.py
+
+page-smoke:
+	python scripts/page_smoke.py
 
 docs-check:
 	python scripts/docs_check.py

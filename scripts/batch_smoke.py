@@ -35,7 +35,7 @@ from repro.serving.engine import build_serving                # noqa: E402
 PP, R, PREFILL, CACHE = 2, 2, 8, 64
 
 
-def make_session(schedule="auto", virtual_stages=1):
+def make_session(schedule="auto", virtual_stages=1, page_size=0):
     blocks = tuple(spec_lib.BlockSpec(mixer="attn", ffn="dense")
                    for _ in range(PP * max(virtual_stages, 1) * 2))
     spec = spec_lib.ModelSpec(
@@ -49,7 +49,8 @@ def make_session(schedule="auto", virtual_stages=1):
                            virtual_stages=virtual_stages)
     return spec, build_serving(spec, plan, dmesh, cache_len=CACHE,
                                global_batch=R, prefill_len=PREFILL,
-                               compute_dtype=jnp.float32)
+                               compute_dtype=jnp.float32,
+                               page_size=page_size)
 
 
 def solo_tokens(spec, prompt, n_tokens):
@@ -96,7 +97,57 @@ def main() -> int:
     if not ok:
         print("BATCH SMOKE FAILED: mid-stream admission is not bit-exact")
         return 1
-    print("\nbatch smoke OK (3 staggered requests bit-exact vs solo runs)")
+    print("batch smoke OK (3 staggered requests bit-exact vs solo runs)\n")
+    return ragged_main()
+
+
+def ragged_run(page_size):
+    """The ragged trace (3 prompt lengths, mid-stream admission)."""
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(1, 256, n).astype(np.int32) for n in (5, 8, 3)]
+    trace = [
+        Request(rid=0, prompt=prompts[0], max_new_tokens=3, arrival=0),
+        Request(rid=1, prompt=prompts[1], max_new_tokens=10, arrival=0),
+        Request(rid=2, prompt=prompts[2], max_new_tokens=6, arrival=1),
+    ]
+    _, sess = make_session(page_size=page_size)
+    sess.start(jax.random.key(0))
+    report = ContinuousBatchingSession(sess).run(trace)
+    assert len(report.completed) == 3, report.summary()
+    assert trace[2].step_admitted > trace[0].step_done, (
+        "request 2 must admit mid-stream into request 0's freed slot")
+    if page_size:
+        # eviction must have returned every page to the pool
+        sess._alloc.check()
+        assert sess._alloc.live_pages == 0, sess._alloc.tables
+    return trace
+
+
+def ragged_main() -> int:
+    """Ragged prompts, dense vs paged: every request bit-exact (fp32)."""
+    dense = ragged_run(page_size=0)
+    paged = ragged_run(page_size=16)
+    ok = True
+    for d, p in zip(dense, paged):
+        mark = "==" if d.tokens == p.tokens else "!="
+        print(f"  ragged request {d.rid} (prompt {len(d.prompt)} tok): "
+              f"dense {d.tokens} {mark} paged {p.tokens}")
+        ok &= d.tokens == p.tokens
+    for d in dense:
+        solo = [Request(rid=d.rid, prompt=d.prompt,
+                        max_new_tokens=d.max_new_tokens, arrival=0)]
+        _, sess = make_session()
+        sess.start(jax.random.key(0))
+        ContinuousBatchingSession(sess).run(solo)
+        mark = "==" if d.tokens == solo[0].tokens else "!="
+        print(f"  ragged request {d.rid}: batched {d.tokens} {mark} "
+              f"solo {solo[0].tokens}")
+        ok &= d.tokens == solo[0].tokens
+    if not ok:
+        print("BATCH SMOKE FAILED: ragged paged/dense traces diverge")
+        return 1
+    print("\nbatch smoke OK (3 staggered requests bit-exact vs solo runs; "
+          "ragged trace bit-exact dense vs paged vs solo)")
     return 0
 
 

@@ -8,7 +8,10 @@
 # through EngineSession.prefill + 4 decode steps, bit-identical —
 # the batch smoke (scripts/batch_smoke.py): a staggered 3-request trace
 # through the continuous-batching slot scheduler, every request
-# bit-identical to its solo run — and the docs-check gate
+# bit-identical to its solo run —
+# the page smoke (scripts/page_smoke.py): paged-KV allocator invariant
+# fuzz plus an undersized-pool run where exhaustion queues admissions
+# instead of crashing — and the docs-check gate
 # (scripts/docs_check.py): every `path.py::symbol` reference in
 # docs/*.md + README.md must resolve against the source tree, so
 # renamed symbols fail fast.
@@ -23,5 +26,6 @@ fi
 python scripts/plan_smoke.py
 python scripts/serve_smoke.py
 python scripts/batch_smoke.py
+python scripts/page_smoke.py
 python scripts/docs_check.py
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest "${ARGS[@]}" "$@"

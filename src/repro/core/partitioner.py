@@ -385,7 +385,8 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
                 cache_len: Optional[int] = None,
                 global_batch: Optional[int] = None,
                 sp: bool = False,
-                occupancy: float = 1.0):
+                occupancy: float = 1.0,
+                page_size: int = 0):
     """Jointly pick (pp, tp, schedule, virtual_stages) for a model axis.
 
     Enumerates every pp dividing ``model_axis`` whose chunk count
@@ -433,6 +434,15 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
     shapes degrade under partial batches — not a measurement of the
     shipped engine.  At occupancy 1 the behaviour is unchanged.
 
+    ``page_size`` (serving only) prices the paged KV cache the engine
+    allocates under ``build_serving(page_size=...)``: full-length
+    attention KV is budgeted by pages in use — ``occupancy`` worth of
+    slots, rounded up to whole slots — instead of full-R capacity,
+    while recurrent state and windowed ring buffers stay dense
+    (:func:`~repro.core.schedule.serving_cache_bytes`).  A decode plan
+    that is HBM-infeasible dense can therefore fit paged at the same R.
+    Rejected with ``sp`` (the engine refuses that combination too).
+
     Pass measured-calibrated ``profiles``
     (profiler.scale_profiles_to_measurements) to make the search respond
     to live straggler measurements.  Tie-breaking is deterministic:
@@ -452,6 +462,12 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
         assert cache_len is not None and global_batch is not None, (
             f"plan_search(workload={workload!r}) needs cache_len= and "
             "global_batch= to size the KV/SSM cache term")
+    assert page_size == 0 or serving, (
+        "page_size prices the serving engine's paged KV cache; training "
+        "plans have no KV cache")
+    assert not (page_size and sp), (
+        "paged KV and sequence-parallel decode are mutually exclusive "
+        "(the engine rejects the combination)")
     if profiles is None:
         profiles = profile_analytic(
             spec, hw, minibatch_tokens=minibatch_tokens,
@@ -512,7 +528,8 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
                         microbatch_tokens=minibatch_tokens,
                         data_replicas=data_replicas, cache_len=cache_len,
                         global_batch=global_batch, sp=sp,
-                        prefill=(workload == "prefill"))
+                        prefill=(workload == "prefill"),
+                        page_size=page_size, kv_occupancy=occupancy)
                 else:
                     mm = sched.memory_model(
                         spec, plan, hw,

@@ -934,7 +934,10 @@ def default_cache_lens(spec, pp: int, cache_len: int) -> List[int]:
 def serving_cache_bytes(spec, plan, sched, *, cache_len: int,
                         global_batch: int, sp: bool = False,
                         prefill: bool = False,
-                        data_replicas: int = 1) -> float:
+                        data_replicas: int = 1,
+                        page_size: int = 0,
+                        kv_occupancy: float = 1.0,
+                        n_slots: Optional[int] = None) -> float:
     """Worst-stage per-device KV/SSM/WKV cache bytes of one serve state.
 
     Mirrors the engine's cache template (serving/engine.py): stage s
@@ -945,6 +948,18 @@ def serving_cache_bytes(spec, plan, sched, *, cache_len: int,
     replicated); KV heads shard over tp when divisible (GQA groups
     replicate otherwise, matching models/init.py::attn_static).  Prefill
     forces full-length caches (the contiguous qlen slab write).
+
+    Paged KV (``page_size > 0``): full-length attention layers — the
+    ones the engine pages, i.e. ``lens[i] >= cache_len`` — are priced by
+    pages in use instead of slot capacity.  ``kv_occupancy`` is the
+    expected fraction of KV positions actually held (mean request
+    length / cache_len × live-slot fraction); with ``n_slots`` the
+    fraction rounds UP to whole slots' worth of pages (the allocator
+    hands out pages per slot, so sub-slot occupancies are unreachable).
+    Constant-size recurrent state (mamba/rwkv/cmix) and windowed ring
+    buffers stay dense — paging only thins full-length KV.  The shared
+    per-slot page tables (int32, replicated across stages) are priced
+    once.  Paged + sp is rejected, matching the engine.
     """
     from repro.core.profiler import ACT_BYTES
 
@@ -954,6 +969,9 @@ def serving_cache_bytes(spec, plan, sched, *, cache_len: int,
     lps = spec.n_layers // L
     dp = max(int(data_replicas), 1)
     tp = plan.tp
+    if page_size:
+        assert not sp, "paged KV and sequence-parallel decode exclusive"
+        assert cache_len % page_size == 0, (cache_len, page_size)
     if sp:
         rows = float(global_batch)               # replicated over data
     else:
@@ -963,19 +981,27 @@ def serving_cache_bytes(spec, plan, sched, *, cache_len: int,
     else:
         lens = default_cache_lens(spec, L, cache_len)
     sp_flags = [sp and ln >= cache_len for ln in lens]
+    paged_flags = [page_size > 0 and ln >= cache_len for ln in lens]
     if sp:
         lens = [max(-(-ln // dp), 8) if f else ln
                 for ln, f in zip(lens, sp_flags)]
     kv_local = (spec.n_kv // tp if spec.n_kv and spec.n_kv % tp == 0
                 else spec.n_kv)
+    occ = min(max(float(kv_occupancy), 0.0), 1.0)
+    if n_slots:
+        # page granularity: ceil to whole slots' worth of pages
+        occ = math.ceil(occ * n_slots) / n_slots
     stage_bytes = [0.0] * S
+    any_paged = False
     for c in range(L):
         s = c % S
         for i in range(lps):
             blk = spec.blocks[c * lps + i]
             b = 0.0
             if blk.mixer == "attn":
-                b += 2.0 * rows * lens[i] * kv_local * spec.d_head \
+                rows_eff = rows * occ if paged_flags[i] else rows
+                any_paged |= paged_flags[i]
+                b += 2.0 * rows_eff * lens[i] * kv_local * spec.d_head \
                     * ACT_BYTES
             elif blk.mixer == "mamba":
                 ms = spec.mamba
@@ -990,6 +1016,10 @@ def serving_cache_bytes(spec, plan, sched, *, cache_len: int,
             if blk.ffn == "rwkv_cmix":
                 b += rows * spec.d_model * ACT_BYTES
             stage_bytes[s] += b
+    if any_paged:
+        # per-slot page tables, int32, replicated on every stage
+        table_bytes = (n_slots or rows) * (cache_len // page_size) * 4.0
+        stage_bytes = [b + table_bytes for b in stage_bytes]
     return max(stage_bytes)
 
 
@@ -1174,7 +1204,8 @@ class ServingSchedule(PipelineSchedule):
     def memory_model(self, spec, plan, hw, *, microbatch_tokens: int,
                      data_replicas: int = 1, cache_len: int = None,
                      global_batch: int = None, sp: bool = False,
-                     prefill: bool = False) -> MemoryModel:
+                     prefill: bool = False, page_size: int = 0,
+                     kv_occupancy: float = 1.0) -> MemoryModel:
         """Serving footprint: weights + KV/SSM cache + in-flight rings.
 
         No version ring, residual ring, gradient accumulator or
@@ -1196,7 +1227,8 @@ class ServingSchedule(PipelineSchedule):
         cache = serving_cache_bytes(
             spec, plan, self, cache_len=cache_len,
             global_batch=global_batch, sp=sp, prefill=prefill,
-            data_replicas=data_replicas)
+            data_replicas=data_replicas, page_size=page_size,
+            kv_occupancy=kv_occupancy, n_slots=self.n_microbatches)
         return MemoryModel(
             schedule=self.name,
             weight_bytes=(blocks + shared) * hw.param_bytes,

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mamba_scan import mamba_scan as _mamba
+from repro.kernels.paged_attention import paged_attention as _paged
 from repro.kernels.wkv6 import wkv6 as _wkv6
 
 _FORCE: Optional[bool] = None
@@ -58,6 +59,14 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = -1,
                  block_q=block_q, block_k=block_k,
                  interpret=interpret_mode())
     return out[:, :sq]
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    window=-1):
+    """Decode attention over a paged KV pool (no padding needed: page and
+    table extents are already block-exact by construction)."""
+    return _paged(q, k_pages, v_pages, block_tables, lengths,
+                  window=window, interpret=interpret_mode())
 
 
 def mamba_scan(u, dt, A, B, C, D, *, chunk: int = 128,

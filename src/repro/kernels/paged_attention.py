@@ -1,0 +1,147 @@
+"""Paged-attention decode Pallas TPU kernel (page-table gather + GQA).
+
+Decode-side attention over a block-paged KV cache: instead of one dense
+``(B, cache_len, KV, Dh)`` slab per sequence, keys/values live in a
+global page pool ``(P, page, KV, Dh)`` and each sequence owns an ordered
+list of page ids (its *page table* row).  The kernel walks the table one
+page per sequential grid step: the scalar-prefetched table entry feeds
+the k/v BlockSpec index maps, so the gather IS the DMA schedule — each
+(page, Dh) tile streams through VMEM exactly like a ``block_k`` tile of
+the flash kernel (kernels/flash_attention.py), with the same running
+(m, l, acc) softmax scratch discipline.
+
+Grid: (batch, kv_heads, n_pages); the page axis is innermost
+("arbitrary" = sequential on TPU) so the VMEM scratch carries the
+running state across pages.  GQA is handled by processing one KV head's
+whole query-head group (G = H // KV) per grid step — the (G, page)
+score tile hits the MXU as one matmul.
+
+Scalar-prefetch operands (SMEM, available before the body runs):
+  block_tables (B, n_pages) int32   page ids, -1 = not allocated
+  lengths      (B,)         int32   valid keys per sequence
+  window       (1,)         int32   sliding window (<= 0: global)
+
+``pl.when`` skips pages past the sequence's valid length (and pages
+wholly outside the window), so a short sequence in a long-capacity batch
+costs only its own pages — the roofline win paging buys at the kernel
+level on top of the HBM-capacity win.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.parallel.compat import tpu_compiler_params
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tab_ref, len_ref, w_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, page: int, n_pages: int,
+                  scale: float):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    length = len_ref[b]              # valid keys for this sequence
+    window = w_ref[0]                # <= 0 means global
+    qpos = length - 1                # the decode query's position
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Page-level visibility: skip unallocated pages, pages past the valid
+    # length, and pages wholly older than the sliding window.
+    live = (tab_ref[b, i] >= 0) & (i * page < length)
+    live &= (window <= 0) | (qpos - (i * page + page - 1)
+                             < jnp.maximum(window, 1))
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0]                                   # (G, Dh)
+        k = k_ref[0, :, 0, :]                             # (page, Dh)
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, page)
+        kpos = i * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos <= qpos
+        mask &= (window <= 0) | ((qpos - kpos) < jnp.maximum(window, 1))
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(i == n_pages - 1)
+    def _finalize():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
+                    window=-1, interpret: bool = False):
+    """q: (B, H, Dh); k_pages, v_pages: (P, page, KV, Dh); H % KV == 0.
+
+    ``block_tables``: (B, n_pages) int32 page ids into the pool, -1 for
+    unallocated entries; ``lengths``: (B,) int32 valid keys per sequence
+    (the decode query sits at position ``lengths - 1``).  ``window`` may
+    be a Python int or traced scalar (<= 0: global).  Returns
+    (B, H, Dh) in q.dtype; softmax statistics in f32.
+    """
+    b, h, dh = q.shape
+    n_pool, page, kv, dh_k = k_pages.shape
+    assert dh == dh_k and h % kv == 0, (q.shape, k_pages.shape)
+    n_pages = block_tables.shape[1]
+    group = h // kv
+    scale = 1.0 / np.sqrt(dh)
+    qg = q.reshape(b, kv, group, dh)
+
+    kernel = functools.partial(_paged_kernel, page=page, n_pages=n_pages,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, kv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, dh),
+                         lambda b_, h_, i, tab, lens, w: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, page, 1, dh),
+                         lambda b_, h_, i, tab, lens, w:
+                         (jnp.maximum(tab[b_, i], 0), 0, h_, 0)),
+            pl.BlockSpec((1, page, 1, dh),
+                         lambda b_, h_, i, tab, lens, w:
+                         (jnp.maximum(tab[b_, i], 0), 0, h_, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, group, dh),
+            lambda b_, h_, i, tab, lens, w: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group,), jnp.float32),
+            pltpu.VMEM((group, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, group, dh), q.dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(block_tables, jnp.int32),
+      jnp.asarray(lengths, jnp.int32),
+      jnp.asarray(window, jnp.int32).reshape(1),
+      qg, k_pages, v_pages)
+    return out.reshape(b, h, dh)

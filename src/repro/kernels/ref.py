@@ -98,3 +98,41 @@ def wkv6_ref(r, k, v, w, u, s0=None):
     s_last, ys = jax.lax.scan(step, s0, xs)
     y = ys.transpose(1, 0, 2, 3)                                   # (B,S,H,D)
     return y.astype(r.dtype), s_last
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
+                        window: int = -1):
+    """Decode-step oracle over a paged KV pool.
+
+    q: (B, H, Dh); k_pages, v_pages: (P, page, KV, Dh);
+    block_tables: (B, n_pages) int32 page ids (-1 = unallocated);
+    lengths: (B,) int32 valid keys (query sits at lengths - 1).
+    Gathers every table entry into a dense (B, n_pages*page, KV, Dh)
+    slab, masks invalid keys, and runs the naive f32 softmax.
+    """
+    b, h, dh = q.shape
+    n_pool, page, kv, _ = k_pages.shape
+    n_pages = block_tables.shape[1]
+    tab = jnp.asarray(block_tables, jnp.int32)
+    safe = jnp.clip(tab, 0, n_pool - 1)
+    k = k_pages[safe].reshape(b, n_pages * page, kv, dh)
+    v = v_pages[safe].reshape(b, n_pages * page, kv, dh)
+    if kv != h:
+        k = jnp.repeat(k, h // kv, axis=2)
+        v = jnp.repeat(v, h // kv, axis=2)
+    scale = 1.0 / np.sqrt(dh)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(n_pages * page)[None, :]               # (1, K)
+    qpos = (jnp.asarray(lengths, jnp.int32) - 1)[:, None]    # (B, 1)
+    mask = (kpos <= qpos) & (kpos < jnp.asarray(lengths)[:, None])
+    mask &= jnp.repeat(tab >= 0, page, axis=1)
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    # zero masked values too: a dead page may hold garbage (even NaN),
+    # and 0 * NaN would otherwise poison the weighted sum
+    v = jnp.where(mask[:, :, None, None], v, 0.0)
+    out = jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -74,7 +74,8 @@ def _fit_microbatches(plan: ParallelismPlan, global_batch: int,
 
 def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
                plan: Optional[ParallelismPlan] = None,
-               optimizer=None, serve_op: str = "auto") -> Cell:
+               optimizer=None, serve_op: str = "auto",
+               page_size: int = 0) -> Cell:
     """Build one (arch × shape × mesh) cell.
 
     ``serve_op`` selects the serving step lowered for prefill shapes:
@@ -83,8 +84,15 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
     (``EngineSession.admit_step``: (state, batch, slot_mask)), so the
     admission path gets the same dry-run lowering/SPMD-sharding proof
     the one-shot steps get.
+
+    ``page_size`` (serving shapes only) builds the session with the
+    paged KV cache, so the dry-run lowers and sharding-checks the page
+    pool + page-table step signatures the paged engine runs.
     """
     assert serve_op in ("auto", "admit"), serve_op
+    shape_kind = configs.SHAPES[shape_name].kind
+    assert page_size == 0 or shape_kind != "train", (
+        "page_size pages the serving KV cache; training shapes have none")
     cfg = configs.get(arch)
     spec = cfg.full_spec()
     shape = configs.SHAPES[shape_name]
@@ -119,7 +127,8 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
     prefill_len = shape.seq_len if shape.kind == "prefill" else 0
     session = build_serving(spec, plan, dmesh, cache_len=shape.seq_len,
                             global_batch=shape.global_batch,
-                            prefill_len=prefill_len, sp=sp)
+                            prefill_len=prefill_len, sp=sp,
+                            page_size=page_size)
     state_shape = jax.eval_shape(session.init_state, jax.random.key(0))
     state_sds = _sds(state_shape, session.state_shardings())
     state_sh = session.state_shardings()

@@ -37,7 +37,8 @@ def _data_replicas(mesh, plan) -> int:
 
 def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
              plan=None, note: str = "", verbose: bool = True,
-             do_plan_search: bool = False, hw=prof.TPU_V5E):
+             do_plan_search: bool = False, hw=prof.TPU_V5E,
+             page_size: int = 0):
     mesh_name = "2x16x16" if multi_pod else "16x16"
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -61,7 +62,11 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
         plan = choice.plan      # serve choices carry schedule="serve_*";
         #                         build_serving resolves them via the
         #                         registry (make_serving_schedule)
-    cell = build_cell(arch, shape, mesh, plan=plan)
+    # train has no KV cache; long_decode runs sp, which excludes paging
+    sh_kind = configs.SHAPES[shape].kind
+    if sh_kind not in ("prefill", "decode"):
+        page_size = 0
+    cell = build_cell(arch, shape, mesh, plan=plan, page_size=page_size)
     lowered = cell.lower()
     t_lower = time.time() - t0
     compiled = lowered.compile()
@@ -94,7 +99,8 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
             cell.spec, cell.plan, hw, microbatch_tokens=rows * qlen,
             data_replicas=dp, cache_len=cell.shape.seq_len,
             global_batch=cell.shape.global_batch, sp=sp,
-            prefill=cell.shape.kind == "prefill")
+            prefill=cell.shape.kind == "prefill",
+            page_size=0 if sp else page_size)
     _, bubble = weighted_round_time(sched)
     print(f"  {label} memory_model (analytic): {mm}")
     print(f"  predicted weighted bubble: {bubble:.3f} "
@@ -152,6 +158,10 @@ def main(argv=None):
                     help="let plan_search pick (pp, tp, schedule, "
                          "virtual_stages) under the HBM budget instead of "
                          "the config's hand-written plan")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="serving shapes: lower the paged-KV engine "
+                         "(page pool + page tables) instead of the dense "
+                         "cache; ignored for train shapes")
     args = ap.parse_args(argv)
     err = virtual_stages_error(args.schedule, args.virtual_stages)
     if err:
@@ -188,7 +198,8 @@ def main(argv=None):
                 run_cell(arch, shape, multi_pod=args.multi_pod,
                          out_dir=args.out, note=args.note,
                          plan=plan_for(arch),
-                         do_plan_search=args.plan_search)
+                         do_plan_search=args.plan_search,
+                         page_size=args.page_size)
             except Exception:
                 failures.append((arch, shape))
                 traceback.print_exc()
@@ -201,7 +212,7 @@ def main(argv=None):
     assert args.arch and args.shape, "--arch/--shape or --all"
     run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
              out_dir=args.out, note=args.note, plan=plan_for(args.arch),
-             do_plan_search=args.plan_search)
+             do_plan_search=args.plan_search, page_size=args.page_size)
 
 
 if __name__ == "__main__":

@@ -98,6 +98,9 @@ def main(argv=None):
     ap.add_argument("--prefill", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged KV cache page size in tokens (0 = dense; "
+                         "must divide --cache-len)")
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--host-devices", type=int, default=None)
     ap.add_argument("--schedule", type=str, default=None,
@@ -141,11 +144,17 @@ def main(argv=None):
     session = build_serving(spec, plan, dmesh, cache_len=cache_len,
                             global_batch=batch, prefill_len=prefill,
                             compute_dtype=(jnp.float32 if args.smoke
-                                           else jnp.bfloat16))
+                                           else jnp.bfloat16),
+                            page_size=args.page_size)
     print(f"serve schedule: {session.sched.name} "
           f"(S={session.sched.n_stages} R={session.sched.n_microbatches}"
           f"{f' v={session.sched.virtual_stages}' if session.sched.virtual_stages > 1 else ''}"
           f", {session.sched.n_ticks} ticks/pass)")
+    if session.paged:
+        pg = session.paged
+        print(f"paged KV: page_size={pg['page_size']} "
+              f"max_pages/slot={pg['max_pages']} "
+              f"pool_pages={pg['pool_pages']}")
 
     if args.arrivals:
         return serve_arrivals(session, spec, args)

@@ -233,6 +233,7 @@ def attention(
     cache_pos=None,            # scalar write offset into the cache
     cross_x=None,              # encoder output for cross attention
     seq_axis: Optional[str] = None,  # cache sharded over this axis (SP)
+    paged_kv=None,             # (k_pool, v_pool, table_row, write_gate)
 ):
     """Returns (out, new_kv_cache). x: (B, S, d_local-replicated)."""
     b, s, _ = x.shape
@@ -274,7 +275,93 @@ def attention(
         out = jnp.einsum("bsk,kd->bsd", out, p["wo"])
         return maybe_psum(out, tp_axis), new_cache
 
-    if kv_cache is not None:
+    if paged_kv is not None:
+        # Block-paged KV cache (serving decode/prefill). The pools are
+        # global across slots — (n_pool, B, page, KV, Dh) — and ``row``
+        # is this slot's page table (-1 = unallocated). Writes are gated
+        # by ``gate`` (slot validity) AND page liveness; reads gather the
+        # table into a dense (B, n_pages*page, KV, Dh) view whose extent
+        # and k_pos mask match the dense ring path exactly, so fp32
+        # outputs are bit-identical to the dense cache (masked entries
+        # contribute exact zeros to the softmax).
+        assert kv_cache is None and cross_x is None and seq_axis is None
+        k_pool, v_pool, row, gate = paged_kv
+        n_pool, _, ps, n_kv, dh = k_pool.shape
+        npg = row.shape[0]
+        L = npg * ps
+        q_pos = positions[0] if positions.ndim == 2 else positions
+
+        def _write_page(pool, new, pi, width):
+            # new: (B, width, KV, Dh) slab chunk for table entry ``pi``.
+            pid = jax.lax.dynamic_index_in_dim(row, pi, keepdims=False)
+            ok = gate & (pid >= 0)
+            pid_safe = jnp.clip(pid, 0, n_pool - 1)
+            cur = jax.lax.dynamic_slice(
+                pool, (pid_safe, 0, 0, 0, 0), (1, b, ps, n_kv, dh))
+            upd = cur.at[0, :, :width].set(new.astype(pool.dtype))
+            upd = jnp.where(ok, upd, cur)
+            return jax.lax.dynamic_update_slice(
+                pool, upd, (pid_safe, 0, 0, 0, 0))
+
+        if s == 1:
+            # decode: one key lands at offset cache_pos % ps inside the
+            # slot's page cache_pos // ps.
+            pi = cache_pos // ps
+            off = cache_pos % ps
+
+            def _write_tok(pool, new):
+                pid = jax.lax.dynamic_index_in_dim(row, pi, keepdims=False)
+                ok = gate & (pid >= 0)
+                pid_safe = jnp.clip(pid, 0, n_pool - 1)
+                cur = jax.lax.dynamic_slice(
+                    pool, (pid_safe, 0, off, 0, 0), (1, b, 1, n_kv, dh))
+                upd = jnp.where(ok, new[None, :, None].astype(pool.dtype),
+                                cur)
+                return jax.lax.dynamic_update_slice(
+                    pool, upd, (pid_safe, 0, off, 0, 0))
+
+            k_pool = _write_tok(k_pool, k[:, 0])
+            v_pool = _write_tok(v_pool, v[:, 0])
+            if st.causal and kernel_ops.use_pallas():
+                # Pallas paged kernel: flatten (page, lane) so every lane
+                # gets its own table row (all lanes of a slot share page
+                # ids and the slot's length).
+                lane = jnp.arange(b, dtype=jnp.int32)
+                tabs = jnp.where(row[None, :] >= 0,
+                                 row[None, :] * b + lane[:, None], -1)
+                lens_v = jnp.full((b,), cache_pos + 1, jnp.int32)
+                kp = k_pool.swapaxes(0, 1).reshape(n_pool * b, ps, n_kv, dh)
+                vp = v_pool.swapaxes(0, 1).reshape(n_pool * b, ps, n_kv, dh)
+                out = kernel_ops.paged_attention(q[:, 0], kp, vp, tabs,
+                                                 lens_v, window=window)
+                out = out[:, None].reshape(b, s, st.n_heads_local * st.d_head)
+                out = jnp.einsum("bsk,kd->bsd", out, p["wo"])
+                return maybe_psum(out, tp_axis), (k_pool, v_pool)
+        else:
+            # prefill: write the fresh slab page-by-page (static unroll —
+            # n_pages_slab is a compile-time constant). Unallocated pages
+            # of ragged slots skip via the per-page gate.
+            for ii in range(-(-s // ps)):
+                lo = ii * ps
+                width = min(ps, s - lo)
+                k_pool = _write_page(k_pool, k[:, lo:lo + width],
+                                     cache_pos // ps + ii, width)
+                v_pool = _write_page(v_pool, v[:, lo:lo + width],
+                                     cache_pos // ps + ii, width)
+
+        # XLA twin read: gather the table into a dense slab and fall
+        # through to the shared masked-softmax tail.
+        safe = jnp.clip(row, 0, n_pool - 1)
+        kk = jnp.take(k_pool, safe, axis=0)      # (npg, B, ps, KV, Dh)
+        vv = jnp.take(v_pool, safe, axis=0)
+        k = kk.transpose(1, 0, 2, 3, 4).reshape(b, L, n_kv, dh)
+        v = vv.transpose(1, 0, 2, 3, 4).reshape(b, L, n_kv, dh)
+        j_idx = jnp.arange(L)
+        alive = jnp.repeat(row >= 0, ps)
+        k_pos = jnp.where((j_idx < cache_pos + s) & alive, j_idx,
+                          _INVALID_POS)
+        new_cache = (k_pool, v_pool)
+    elif kv_cache is not None:
         ck, cv = kv_cache  # (B, L, KV, Dh)
         L = ck.shape[1]
         if s == 1:
@@ -304,8 +391,8 @@ def attention(
         k_pos = k_positions_new
 
     causal = st.causal and cross_x is None
-    if (kv_cache is None and cross_x is None and causal
-            and kernel_ops.use_pallas()):
+    if (kv_cache is None and paged_kv is None and cross_x is None
+            and causal and kernel_ops.use_pallas()):
         # Pallas TPU flash kernel (kernels/flash_attention.py): GQA mapped
         # in the BlockSpec index map, window rides in SMEM.
         out = kernel_ops.flash_attention(q, k, v, causal=True,

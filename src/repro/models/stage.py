@@ -63,23 +63,36 @@ def _squeeze_stage(tree):
 
 def _block_apply(st: StageStatics, blk: spec_lib.BlockSpec, lp, x, *,
                  positions, window, theta, tp_axis, state, cache_pos,
-                 cross_x, seq_axis=None):
+                 cross_x, seq_axis=None, paged=None):
     """One block: mixer + ffn with pre-norm residuals.
 
-    Returns (x, new_state, aux_loss).
+    Returns (x, new_state, aux_loss).  ``paged`` (serving only) is a
+    ((k_pool, v_pool), table_row, write_gate) triple routing this
+    layer's attention through the block-paged KV pool instead of the
+    dense per-slot cache; the updated pools come back under the
+    ``"paged_kv"`` key of new_state (popped off by stage_fwd).
     """
     aux = jnp.zeros((), jnp.float32)
     new_state: Dict[str, Any] = {}
     if blk.mixer == "attn":
         h = nn.apply_norm(lp["norm1"], x, st.spec.norm)
-        kv = state.get("kv") if state else None
-        out, new_kv = nn.attention(
-            lp["attn"], h, st.attn, positions=positions, window=window,
-            theta=theta, tp_axis=tp_axis, kv_cache=kv, cache_pos=cache_pos,
-            seq_axis=seq_axis)
-        x = x + out
-        if new_kv is not None:
-            new_state["kv"] = new_kv
+        if paged is not None:
+            pools, row, gate = paged
+            out, new_pools = nn.attention(
+                lp["attn"], h, st.attn, positions=positions, window=window,
+                theta=theta, tp_axis=tp_axis, cache_pos=cache_pos,
+                paged_kv=(pools[0], pools[1], row, gate))
+            x = x + out
+            new_state["paged_kv"] = new_pools
+        else:
+            kv = state.get("kv") if state else None
+            out, new_kv = nn.attention(
+                lp["attn"], h, st.attn, positions=positions, window=window,
+                theta=theta, tp_axis=tp_axis, kv_cache=kv,
+                cache_pos=cache_pos, seq_axis=seq_axis)
+            x = x + out
+            if new_kv is not None:
+                new_state["kv"] = new_kv
         if blk.cross_attn:
             h = nn.apply_norm(lp["norm_x"], x, st.spec.norm)
             out, _ = nn.attention(
@@ -122,7 +135,7 @@ def _block_apply(st: StageStatics, blk: spec_lib.BlockSpec, lp, x, *,
 
 def stage_fwd(stage_params, x, st: StageStatics, *, positions, windows,
               thetas, tp_axis: Optional[str], state=None, cache_pos=None,
-              cross_x=None, seq_axis=None):
+              cross_x=None, seq_axis=None, paged=None):
     """Run one stage over its blocks.
 
     stage_params: {'layer_i': ...} with leading [1] stage dim on leaves.
@@ -131,19 +144,28 @@ def stage_fwd(stage_params, x, st: StageStatics, *, positions, windows,
     seq_axis: None, an axis name/tuple applied to every block, or a
     *list* with one entry per stage position (SP shards only full-length
     caches — serving/engine.py).
-    Returns (x, new_state, aux_loss_sum).
+    paged: optional {"pools": {'layer_i': (k_pool, v_pool)}, "row",
+    "gate"} routing the listed attention layers through the block-paged
+    KV pool (serving/engine.py).  When given, returns
+    (x, (new_state, new_pools), aux_loss_sum) — the pools are global
+    across slots, so they cannot ride in the per-slot state tree.
+    Returns (x, new_state, aux_loss_sum) otherwise.
     """
     aux_total = jnp.zeros((), jnp.float32)
     new_states: Dict[str, Any] = {}
+    new_pools: Dict[str, Any] = {}
 
     def run_block(i, blk, x):
         lp = _squeeze_stage(stage_params[f"layer_{i}"])
         lstate = state[f"layer_{i}"] if state is not None else None
         sa = seq_axis[i] if isinstance(seq_axis, list) else seq_axis
+        pg = None
+        if paged is not None and f"layer_{i}" in paged["pools"]:
+            pg = (paged["pools"][f"layer_{i}"], paged["row"], paged["gate"])
         return _block_apply(
             st, blk, lp, x, positions=positions, window=windows[i],
             theta=thetas[i], tp_axis=tp_axis, state=lstate,
-            cache_pos=cache_pos, cross_x=cross_x, seq_axis=sa)
+            cache_pos=cache_pos, cross_x=cross_x, seq_axis=sa, paged=pg)
 
     for i, blk in enumerate(st.program):
         fn = partial(run_block, i, blk)
@@ -152,7 +174,11 @@ def stage_fwd(stage_params, x, st: StageStatics, *, positions, windows,
         x, ns, aux = fn(x)
         aux_total = aux_total + aux
         if state is not None:
+            if ns and "paged_kv" in ns:
+                new_pools[f"layer_{i}"] = ns.pop("paged_kv")
             new_states[f"layer_{i}"] = ns
+    if paged is not None:
+        return x, (new_states, new_pools), aux_total
     return x, (new_states if state is not None else None), aux_total
 
 
@@ -161,17 +187,19 @@ def stage_fwd(stage_params, x, st: StageStatics, *, positions, windows,
 # --------------------------------------------------------------------------
 
 def init_stage_state(st: StageStatics, batch_local: int, cache_lens,
-                     dtype=jnp.bfloat16):
+                     dtype=jnp.bfloat16, paged_layers=()):
     """Per-stage serving state with a leading [pp]-stackable layout.
 
     cache_lens: [lps] static KV capacities (per position; uniform across
     stages — union-max, see DESIGN.md).  Entries for non-attn blocks ignored.
+    paged_layers: positions whose attention KV lives in the global page
+    pool instead (serving/engine.py) — no dense "kv" entry for those.
     Returned WITHOUT the leading stage dim (caller stacks / shards).
     """
     out: Dict[str, Any] = {}
     for i, blk in enumerate(st.program):
         s: Dict[str, Any] = {}
-        if blk.mixer == "attn":
+        if blk.mixer == "attn" and i not in paged_layers:
             kvshape = (batch_local, cache_lens[i], st.attn.n_kv_local, st.attn.d_head)
             s["kv"] = (jnp.zeros(kvshape, dtype), jnp.zeros(kvshape, dtype))
         elif blk.mixer == "mamba":

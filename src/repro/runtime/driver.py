@@ -303,6 +303,12 @@ def reshard_state_for_plan(state_host, spec, old_plan, new_plan):
             return a
 
         out["cache"] = jax.tree.map(_rows, state_host["cache"])
+        # the paged KV page pool is chunk-stacked exactly like the dense
+        # cache: permute its leading rows the same way.  Page tables are
+        # slot-major and shared across all paged layers — they pass
+        # through untouched, like pos/live.
+        if "pages" in state_host:
+            out["pages"] = jax.tree.map(_rows, state_host["pages"])
     if has_rings:
         out["stash"] = {"current": new_stages}
         if new_sched.uses_stash_ring:

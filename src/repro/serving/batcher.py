@@ -47,9 +47,22 @@ deterministic under a real engine; wall-clock seconds come from a
 pluggable ``clock`` so the analytic benchmark can drive the same
 scheduler with modeled time.
 
-Prompts must be exactly the engine's ``prefill_len`` tokens long
-(the masked prefill is a fixed-shape pipelined pass); ragged prompts
-are future work (pad on the client, or build sessions per bucket).
+Prompts up to the engine's ``prefill_len`` admit directly: the masked
+prefill is a fixed-shape pipelined pass, so shorter (ragged) prompts are
+right-padded into the batch and a per-slot ``lens`` vector tells the
+engine where each slot's real prompt ends (the first token is read at
+``lens - 1`` and decode resumes from ``pos = lens``) — no global flush,
+no per-length session builds.  Models with recurrent (mamba/rwkv) state
+still need exact-length prompts (their prefill would absorb the
+padding); prompts *longer* than ``prefill_len`` always raise.
+
+Paged KV (``build_serving(page_size=...)``): this module also owns the
+:class:`PageAllocator` — the host-side free list behind the engine's
+global page pool.  Admission allocates ``ceil(len / page_size)`` pages
+per slot, decode allocates one page at each page-boundary crossing, and
+eviction releases the slot's pages.  When the pool cannot cover a
+prompt, admission *queues* the request (no crash) and retries after the
+next eviction.
 """
 from __future__ import annotations
 
@@ -60,8 +73,120 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
-__all__ = ["Request", "RequestQueue", "Slot", "BatchingReport",
-           "ContinuousBatchingSession"]
+__all__ = ["PageAllocator", "Request", "RequestQueue", "Slot",
+           "BatchingReport", "ContinuousBatchingSession"]
+
+
+class PageAllocator:
+    """Host-side free-list allocator for the global KV page pool.
+
+    The pool is ``pool_pages`` pages of ``page_size`` tokens each; every
+    slot owns an ordered page-table row (``tables[slot]``, int32, -1 =
+    unallocated) shared by all paged attention layers (a slot's layers
+    hold identical lengths, so one table indexes every layer's pool).
+    Freed pages go back on the free list LIFO — reuse needs no zeroing,
+    because admission overwrites every allocated prompt page and decode
+    writes each position before it becomes visible (the k_pos mask hides
+    stale tails).
+
+    Invariants (checked by :meth:`check`, gated by scripts/page_smoke.py):
+    live + free page counts partition the pool, no page appears twice,
+    and a slot's page count is exactly ``ceil(tokens / page_size)``.
+    """
+
+    def __init__(self, pool_pages: int, n_slots: int, max_pages: int,
+                 page_size: int):
+        if pool_pages <= 0 or page_size <= 0:
+            raise ValueError(f"bad pool geometry: {pool_pages=} {page_size=}")
+        self.pool_pages = int(pool_pages)
+        self.page_size = int(page_size)
+        self.max_pages = int(max_pages)
+        self.n_slots = int(n_slots)
+        self.free: List[int] = list(range(self.pool_pages - 1, -1, -1))
+        self.tables = np.full((n_slots, max_pages), -1, np.int32)
+        self.counts = np.zeros(n_slots, np.int64)   # pages per slot
+        self.tokens = np.zeros(n_slots, np.int64)   # tokens per slot
+
+    @property
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    @property
+    def live_pages(self) -> int:
+        return int(self.counts.sum())
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-int(n_tokens) // self.page_size)
+
+    def alloc_slot(self, slot: int, n_tokens: int) -> None:
+        """(Re)allocate ``slot`` to hold an ``n_tokens`` prompt."""
+        if n_tokens > self.max_pages * self.page_size:
+            raise ValueError(
+                f"slot {slot}: {n_tokens} tokens exceed the paged KV "
+                f"capacity of {self.max_pages * self.page_size} tokens "
+                f"({self.max_pages} pages x {self.page_size})")
+        need = self.pages_needed(n_tokens)
+        self.release_slot(slot)
+        if need > len(self.free):
+            raise RuntimeError(
+                f"page pool exhausted: slot {slot} needs {need} pages, "
+                f"{len(self.free)}/{self.pool_pages} free — the batcher "
+                "should queue admissions when the pool runs dry")
+        for i in range(need):
+            self.tables[slot, i] = self.free.pop()
+        self.counts[slot] = need
+        self.tokens[slot] = n_tokens
+
+    def extend_slot(self, slot: int, n_tokens: int) -> None:
+        """Grow ``slot`` to cover ``n_tokens`` (decode boundary crossing)."""
+        if n_tokens > self.max_pages * self.page_size:
+            raise ValueError(
+                f"slot {slot}: {n_tokens} tokens exceed the paged KV "
+                f"capacity of {self.max_pages * self.page_size} tokens")
+        need = self.pages_needed(n_tokens)
+        while self.counts[slot] < need:
+            if not self.free:
+                raise RuntimeError(
+                    f"page pool exhausted growing slot {slot} to "
+                    f"{n_tokens} tokens ({need} pages); evict a slot or "
+                    "size pool_pages for the worst-case decode length")
+            self.tables[slot, self.counts[slot]] = self.free.pop()
+            self.counts[slot] += 1
+        self.tokens[slot] = max(int(self.tokens[slot]), int(n_tokens))
+
+    def release_slot(self, slot: int) -> None:
+        """Return the slot's pages to the pool (no-op on an empty slot)."""
+        n = int(self.counts[slot])
+        for i in range(n):
+            pid = int(self.tables[slot, i])
+            if pid < 0:
+                raise AssertionError(
+                    f"slot {slot} table corrupt: entry {i} unallocated "
+                    f"inside counted range {n}")
+            self.free.append(pid)
+        self.tables[slot, :] = -1
+        self.counts[slot] = 0
+        self.tokens[slot] = 0
+
+    def check(self) -> None:
+        """Assert the allocator invariants (scripts/page_smoke.py gate)."""
+        live = [int(p) for row, c in zip(self.tables, self.counts)
+                for p in row[:int(c)]]
+        if any(p < 0 for p in live):
+            raise AssertionError("unallocated entry inside a counted range")
+        seen = live + [int(p) for p in self.free]
+        if len(seen) != self.pool_pages or len(set(seen)) != len(seen):
+            raise AssertionError(
+                f"pages lost or double-booked: {len(set(seen))} unique of "
+                f"{len(seen)} tracked, pool is {self.pool_pages}")
+        for s in range(self.n_slots):
+            if int(self.counts[s]) != self.pages_needed(self.tokens[s]):
+                raise AssertionError(
+                    f"slot {s}: {int(self.counts[s])} pages != "
+                    f"ceil({int(self.tokens[s])} / {self.page_size})")
+            tail = self.tables[s, int(self.counts[s]):]
+            if (tail >= 0).any():
+                raise AssertionError(f"slot {s}: pages beyond count")
 
 
 @dataclasses.dataclass
@@ -135,6 +260,13 @@ class RequestQueue:
 
     def pop_ready(self) -> Optional[Request]:
         return self._ready.popleft() if self._ready else None
+
+    def peek_ready(self) -> Optional[Request]:
+        return self._ready[0] if self._ready else None
+
+    def push_front(self, request: Request) -> None:
+        """Return a popped request to the head (admission stall/retry)."""
+        self._ready.appendleft(request)
 
     @property
     def n_ready(self) -> int:
@@ -284,37 +416,70 @@ class ContinuousBatchingSession:
         return free
 
     def _admit(self) -> None:
+        alloc = getattr(self.session, "_alloc", None)
+        ragged_ok = getattr(self.session, "ragged_ok", True)
         slots: List[Slot] = []
+        slot_lens = {}
+        reserved = 0        # pool pages claimed by this admission round
+        stalled = False
         for slot in self._admissible_slots():
-            if not self.queue.n_ready:
+            if stalled or not self.queue.n_ready:
                 break
             for lane in range(slot.lanes):
-                req = self.queue.pop_ready()
+                req = self.queue.peek_ready()
                 if req is None:
                     break
-                if len(req.prompt) != self.text_len:
+                plen = len(req.prompt)
+                if plen > self.text_len:
                     raise ValueError(
-                        f"request {req.rid}: prompt length "
-                        f"{len(req.prompt)} != the session's prefill_len "
-                        f"{self.text_len}; prompts must match exactly "
-                        "(pad on the client or build per-length sessions)")
+                        f"request {req.rid}: prompt length {plen} exceeds "
+                        f"the session's prefill_len {self.text_len}; "
+                        "truncate on the client or build the session with "
+                        "a larger prefill_len")
+                if plen < self.text_len and not ragged_ok:
+                    raise ValueError(
+                        f"request {req.rid}: prompt length {plen} != "
+                        f"prefill_len {self.text_len}, and this model "
+                        "carries recurrent (mamba/rwkv) state — ragged "
+                        "admission would absorb the padding; pad on the "
+                        "client or build per-length sessions")
+                if slot.index in slot_lens and slot_lens[slot.index] != plen:
+                    # lanes of a slot share one cache position; leave the
+                    # mismatched request for the next free slot
+                    break
+                if alloc is not None and slot.index not in slot_lens:
+                    need = alloc.pages_needed(plen)
+                    if need > alloc.free_pages - reserved:
+                        # page pool dry: queue the request, retry after
+                        # the next eviction returns pages
+                        stalled = True
+                        break
+                    reserved += need
+                self.queue.pop_ready()
                 req.state = "prefilling"
                 req.step_admitted = self.steps
                 slot.requests[lane] = req
-            slots.append(slot)
+                slot_lens.setdefault(slot.index, plen)
+            if not slot.free:
+                slots.append(slot)
         if not slots:
             return
         # admission = remapping the embeds ring: the admitted requests'
-        # prompts land in their slots' rows of the (R, rows, text) batch
+        # prompts land in their slots' rows of the (R, rows, text) batch,
+        # right-padded; ``lens`` carries each slot's real prompt length
         tokens = np.zeros((self.R, self.rows, self.text_len), np.int32)
         mask = np.zeros((self.R,), np.int32)
+        lens = np.full((self.R,), self.text_len, np.int32)
         for slot in slots:
             mask[slot.index] = 1
+            lens[slot.index] = slot_lens[slot.index]
             for lane, req in enumerate(slot.requests):
                 if req is not None:
-                    tokens[slot.index, lane] = req.prompt
-        first = self.session.write_prefill_into_slots({"tokens": tokens},
-                                                      mask)
+                    tokens[slot.index, lane, :len(req.prompt)] = req.prompt
+        batch = {"tokens": tokens}
+        if any(slot_lens[s.index] != self.text_len for s in slots):
+            batch["lens"] = lens
+        first = self.session.write_prefill_into_slots(batch, mask)
         first = np.asarray(first).reshape(self.R, self.rows)
         self.admit_rounds += 1
         now = self.clock()

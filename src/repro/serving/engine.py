@@ -110,7 +110,17 @@ class EngineSession:
     reset_step: Callable           # (state, slot_mask) -> state
     admit_step: Optional[Callable] = None  # (state, batch, mask) -> (st, tok)
     state: Any = None
+    # paged-KV config ({"page_size", "max_pages", "pool_pages",
+    # "cache_len"}) — None for the dense cache layout
+    paged: Optional[Dict[str, Any]] = None
+    # ragged (per-slot prompt lengths) admission supported? False when
+    # the model carries recurrent (mamba/rwkv) state, whose prefill
+    # would absorb the padding tokens.
+    ragged_ok: bool = True
     _jit: Dict[str, Callable] = dataclasses.field(default_factory=dict)
+    _alloc: Any = None             # host-side PageAllocator (paged mode)
+    _pos: Any = None               # host mirrors of pos/live for paging
+    _live: Any = None
 
     def state_shardings(self):
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
@@ -124,7 +134,29 @@ class EngineSession:
                 self.init_state, out_shardings=self.state_shardings())
         self.state = self._jit["init"](
             key if key is not None else jax.random.key(0))
+        if self.paged is not None:
+            from repro.serving.batcher import PageAllocator
+            R = self.sched.n_microbatches
+            self._alloc = PageAllocator(self.paged["pool_pages"], R,
+                                        self.paged["max_pages"],
+                                        self.paged["page_size"])
+            self._pos = np.zeros(R, np.int64)
+            self._live = np.ones(R, np.int64)
         return self
+
+    # ---- paged-KV host-side hooks (allocator lives in serving/batcher) ----
+
+    def _push_tables(self):
+        """Mirror the host allocator's page tables into device state."""
+        self.state = {**self.state,
+                      "tables": jnp.asarray(self._alloc.tables)}
+
+    def _slot_lens(self, batch):
+        text_len = self.prefill_specs["tokens"].shape[2]
+        R = self.sched.n_microbatches
+        if isinstance(batch, dict) and batch.get("lens") is not None:
+            return np.asarray(batch["lens"]).reshape(R), text_len
+        return np.full(R, text_len, np.int64), text_len
 
     def prefill(self, batch):
         """Pipelined prefill of the whole batch; returns first tokens."""
@@ -135,6 +167,13 @@ class EngineSession:
                 "prefill — decode-only sessions can only decode()")
         if self.state is None:
             self.start()
+        if self.paged is not None:
+            lens, _ = self._slot_lens(batch)
+            for r in range(self.sched.n_microbatches):
+                self._alloc.alloc_slot(r, int(lens[r]))
+            self._push_tables()
+            self._pos[:] = lens
+            self._live[:] = 1
         if "prefill" not in self._jit:
             sh = self.state_shardings()
             self._jit["prefill"] = jax.jit(
@@ -147,12 +186,26 @@ class EngineSession:
         """One pipelined decode step; returns the next token per row."""
         if self.state is None:
             self.start()
+        if self.paged is not None:
+            # allocate on page-boundary crossing: this step writes the
+            # key at position pos, which must land in an owned page
+            cap = self.paged["cache_len"]
+            for r in np.flatnonzero(self._live):
+                if self._pos[r] >= cap:
+                    raise RuntimeError(
+                        f"slot {r} is at position {int(self._pos[r])} — "
+                        f"paged KV capacity is cache_len={cap} tokens; "
+                        "evict or raise cache_len")
+                self._alloc.extend_slot(int(r), int(self._pos[r]) + 1)
+            self._push_tables()
         if "decode" not in self._jit:
             sh = self.state_shardings()
             self._jit["decode"] = jax.jit(
                 self.decode_step, in_shardings=(sh, None),
                 out_shardings=(sh, None), donate_argnums=0)
         self.state, tokens = self._jit["decode"](self.state, tokens)
+        if self.paged is not None:
+            self._pos += self._live
         return tokens
 
     # ---- continuous-batching slot ops (serving/batcher.py drives these) ---
@@ -161,6 +214,13 @@ class EngineSession:
         """Free the masked microbatch slots: zero cache rows, pos, live."""
         if self.state is None:
             self.start()
+        if self.paged is not None:
+            for r in np.flatnonzero(np.asarray(slot_mask)):
+                self._alloc.release_slot(int(r))
+            self._push_tables()
+            m = np.asarray(slot_mask) > 0
+            self._pos[m] = 0
+            self._live[m] = 0
         if "reset" not in self._jit:
             sh = self.state_shardings()
             self._jit["reset"] = jax.jit(
@@ -185,6 +245,21 @@ class EngineSession:
                 "per-slot admission")
         if self.state is None:
             self.start()
+        if (isinstance(batch, dict) and batch.get("lens") is not None
+                and not self.ragged_ok):
+            raise ValueError(
+                "ragged admission (per-slot prompt lengths) is not "
+                "supported for models with recurrent (mamba/rwkv) "
+                "state: prefill would absorb the padding tokens; pad "
+                "prompts to the session prefill_len instead")
+        if self.paged is not None:
+            lens, text_len = self._slot_lens(batch)
+            mask = np.asarray(slot_mask) > 0
+            for r in np.flatnonzero(mask):
+                self._alloc.alloc_slot(int(r), int(lens[r]))
+            self._push_tables()
+            self._pos[mask] = lens[mask]
+            self._live[mask] = 1
         if "admit" not in self._jit:
             sh = self.state_shardings()
             # donate like decode/reset: admission runs on every freed
@@ -201,8 +276,28 @@ class EngineSession:
 def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                   mesh: Mesh, *, cache_len: int, global_batch: int,
                   prefill_len: int = 0, sp: bool = False,
-                  compute_dtype=jnp.bfloat16) -> EngineSession:
+                  compute_dtype=jnp.bfloat16, page_size: int = 0,
+                  pool_pages: Optional[int] = None) -> EngineSession:
+    """``page_size > 0`` switches full-length attention KV to the
+    block-paged layout: a global per-layer page pool
+    (n_chunks, pool_pages, rows, page_size, KV, Dh) plus one per-slot
+    page table (R, max_pages) shared by every paged layer (all layers of
+    a slot hold identical lengths).  ``pool_pages`` defaults to
+    R · cache_len / page_size (dense-capacity parity); size it smaller
+    to trade worst-case capacity for more slots per HBM byte —
+    core/schedule.py::serving_cache_bytes prices the pool, and the
+    continuous batcher queues admissions when the pool runs dry.
+    Windowed (ring-buffer) layers and recurrent state stay dense.
+    """
     S = plan.pp
+    if page_size:
+        if sp:
+            raise ValueError("paged KV (page_size > 0) and sequence-"
+                             "sharded caches (sp=True) are exclusive")
+        if cache_len % page_size:
+            raise ValueError(
+                f"cache_len={cache_len} must be a multiple of "
+                f"page_size={page_size}")
     daxes = data_axes(mesh)
     dp = int(np.prod([mesh.devices.shape[mesh.axis_names.index(a)]
                       for a in daxes]))
@@ -271,6 +366,20 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
     # the global dim is l_local * dp.
     glens = [l * (dp if f else 1) for l, f in zip(lens, sp_flags)]
 
+    # Paged layers: full-length attention KV moves into the global page
+    # pool; windowed ring buffers (len < cache_len) and recurrent state
+    # stay dense (constant-size — paging buys them nothing).
+    if page_size:
+        paged_layers = frozenset(
+            i for i, blk in enumerate(statics.program)
+            if blk.mixer == "attn" and lens[i] >= cache_len)
+        max_pages = cache_len // page_size
+        if pool_pages is None:
+            pool_pages = R * max_pages
+    else:
+        paged_layers = frozenset()
+        max_pages = pool_pages = 0
+
     def _layer_of(path) -> int:
         for k in path:
             key = str(getattr(k, "key", ""))
@@ -289,15 +398,35 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         its chunks' caches.  Every chunk shares the (union-maxed) state
         structure, so the zero template needs no per-row permute.
         """
-        base = init_stage_state(statics, rows_g, glens, compute_dtype)
+        base = init_stage_state(statics, rows_g, glens, compute_dtype,
+                                paged_layers=paged_layers)
 
         def stack(leaf):
             return jnp.zeros((n_chunks, R) + leaf.shape, leaf.dtype)
 
         return jax.tree.map(stack, base)
 
+    def _pages_template():
+        """Global page pools, one (k, v) pair per paged layer.
+
+        Leaves are (n_chunks, pool_pages, rows_g, page, KV, Dh): the
+        pool is global across slots (no R dim) — that is the whole
+        point — while the lane dim shards over data exactly like the
+        dense cache rows.  One shared (R, max_pages) table indexes every
+        layer's pool (all layers of a slot hold identical lengths).
+        """
+        z = jnp.zeros((n_chunks, pool_pages, rows_g, page_size,
+                       statics.attn.n_kv_local, statics.attn.d_head),
+                      compute_dtype)
+        return {f"layer_{i}": (z, z) for i in sorted(paged_layers)}
+
+    def _pages_pspec():
+        pp = P(AXIS_STAGE, None, batch_dim_spec, None, None, None)
+        return {f"layer_{i}": (pp, pp) for i in sorted(paged_layers)}
+
     def _cache_pspec():
-        base = init_stage_state(statics, rows_g, glens, compute_dtype)
+        base = init_stage_state(statics, rows_g, glens, compute_dtype,
+                                paged_layers=paged_layers)
 
         def pspec(path, leaf):
             dims: list = [AXIS_STAGE, None]         # (S·v, R, ...)
@@ -322,9 +451,10 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         return jax.lax.dynamic_index_in_dim(rows, s, 0, keepdims=False)
 
     # ---------------- one pipelined forward pass --------------------------
-    def _pipe_forward(params, cache, embeds_ring, pos, qlen, enc_ring,
-                      slot_mask):
-        """embeds_ring: (R, Bg_rows, qlen, d); returns (h_ring, cache').
+    def _pipe_forward(params, cache, pages, embeds_ring, pos, tables, qlen,
+                      enc_ring, slot_mask):
+        """embeds_ring: (R, Bg_rows, qlen, d); returns (h_ring, cache',
+        pages').
 
         Walks the serving schedule's forward table tick by tick: every
         stage gathers its (microbatch, chunk, input-source) row, runs
@@ -342,8 +472,8 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         """
         win, th = params["layer_windows"], params["layer_thetas"]
 
-        def f_phase(tick, cache, recv_f, h_ring, weights, win, th, embeds,
-                    enc_ring, pos, slot_mask):
+        def f_phase(tick, cache, pages, recv_f, h_ring, weights, win, th,
+                    embeds, enc_ring, pos, tables, slot_mask):
             row = gather_row(FT, tick)
             m = row[F_MB]
             rsafe = jnp.clip(m, 0, R - 1)
@@ -381,11 +511,30 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
             positions = jnp.broadcast_to(
                 pos_r + jnp.arange(qlen, dtype=jnp.int32),
                 (x_in.shape[0], qlen))
-            h, new_st, _ = stage_fwd(
+            paged_arg = None
+            if pages:
+                # this chunk's pool view + the slot's page-table row;
+                # writes inside attention are gated by ``valid`` AND
+                # per-page liveness (table entry >= 0)
+                pools_r = {
+                    name: tuple(
+                        jax.lax.dynamic_index_in_dim(pl, j, 0,
+                                                     keepdims=False)
+                        for pl in pair)
+                    for name, pair in pages.items()}
+                row_r = jax.lax.dynamic_index_in_dim(tables, rsafe, 0,
+                                                     keepdims=False)
+                paged_arg = {"pools": pools_r, "row": row_r,
+                             "gate": valid}
+            h, st_out, _ = stage_fwd(
                 w_loc, x_in, statics, positions=positions,
                 windows=win_loc, thetas=th_loc, tp_axis=tp_axis,
                 state=st_r, cache_pos=pos_r, cross_x=cross,
-                seq_axis=seq_axes)
+                seq_axis=seq_axes, paged=paged_arg)
+            if paged_arg is not None:
+                new_st, new_pools = st_out
+            else:
+                new_st, new_pools = st_out, None
 
             def _write(a, n):
                 aj = jax.lax.dynamic_index_in_dim(a, j, 0, keepdims=False)
@@ -396,6 +545,15 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                 return jax.lax.dynamic_update_index_in_dim(a, aj, j, 0)
 
             cache = jax.tree.map(_write, cache, new_st)
+            if new_pools is not None:
+                # attention already gated the page writes; just put the
+                # chunk's pool view back
+                pages = {
+                    name: tuple(
+                        jax.lax.dynamic_update_index_in_dim(
+                            pl, np_.astype(pl.dtype), j, 0)
+                        for pl, np_ in zip(pages[name], new_pools[name]))
+                    for name in pages}
             h_send = jax.lax.ppermute(h, AXIS_STAGE, fwd_perm) if S > 1 else h
             # the exit table names the microbatch leaving the last chunk;
             # every stage updates its own ring shard, and _pipe_forward
@@ -411,11 +569,12 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
             h_keep = jnp.where((m_exit >= 0) & (s == S - 1), h, old_h)
             h_ring = jax.lax.dynamic_update_index_in_dim(h_ring[0], h_keep,
                                                          esafe, 0)[None]
-            return cache, h_send[None], h_ring
+            return cache, pages, h_send[None], h_ring
 
         cache_pspec = _cache_pspec()
         cache_pspec = jax.tree.map(lambda p: P(*p), cache_pspec,
                                    is_leaf=lambda x: isinstance(x, P))
+        pages_pspec = _pages_pspec()
         act_pspec = P(AXIS_STAGE, batch_dim_spec, None, None)
         emb_pspec = P(None, batch_dim_spec, None, None)
         hring_pspec = P(AXIS_STAGE, None, batch_dim_spec, None, None)
@@ -426,26 +585,27 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
 
         f_sharded = shard_map(
             f_phase, mesh=mesh,
-            in_specs=(P(), cache_pspec, act_pspec, hring_pspec, stage_pspec,
-                      win_pspec, win_pspec, emb_pspec, enc_pspec, P(), P()),
-            out_specs=(cache_pspec, act_pspec, hring_pspec),
+            in_specs=(P(), cache_pspec, pages_pspec, act_pspec, hring_pspec,
+                      stage_pspec, win_pspec, win_pspec, emb_pspec,
+                      enc_pspec, P(), P(), P()),
+            out_specs=(cache_pspec, pages_pspec, act_pspec, hring_pspec),
             check_vma=False)
 
         recv = jnp.zeros((S, rows_g, qlen, spec.d_model), compute_dtype)
         h_ring = jnp.zeros((S, R, rows_g, qlen, spec.d_model), compute_dtype)
 
         def body(carry, tick):
-            cache, recv, h_ring = carry
-            cache, recv, h_ring = f_sharded(
-                tick, cache, recv, h_ring, params["stages"], win, th,
-                embeds_ring, enc_ring, pos, slot_mask)
-            return (cache, recv, h_ring), None
+            cache, pages, recv, h_ring = carry
+            cache, pages, recv, h_ring = f_sharded(
+                tick, cache, pages, recv, h_ring, params["stages"], win, th,
+                embeds_ring, enc_ring, pos, tables, slot_mask)
+            return (cache, pages, recv, h_ring), None
 
-        (cache, _, h_ring), _ = jax.lax.scan(
-            body, (cache, recv, h_ring),
+        (cache, pages, _, h_ring), _ = jax.lax.scan(
+            body, (cache, pages, recv, h_ring),
             jnp.arange(sched.n_ticks, dtype=jnp.int32))
         # only the output stage's ring shard carries the exits
-        return h_ring[S - 1], cache
+        return h_ring[S - 1], cache, pages
 
     # ---------------- decode step ----------------------------------------
     def decode_step(state, tokens):
@@ -461,20 +621,26 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         """
         params, cache, pos = state["params"], state["cache"], state["pos"]
         live = state["live"]
+        pages = state.get("pages", {})
+        tables = state.get("tables", jnp.zeros((R, 1), jnp.int32))
         emb = lm_head.embed_tokens(params["embed"], tokens)[:, None]
         embeds_ring = emb.reshape(R, rows_g, 1, spec.d_model)
         if has_enc:
             enc_ring = state["enc_out"]
         else:
             enc_ring = jnp.zeros((1, 1, 1, 1), compute_dtype)
-        h_ring, cache = _pipe_forward(params, cache, embeds_ring, pos, 1,
-                                      enc_ring, live)
+        h_ring, cache, pages = _pipe_forward(params, cache, pages,
+                                             embeds_ring, pos, tables, 1,
+                                             enc_ring, live)
         h = h_ring.reshape(R * rows_g, 1, spec.d_model)
         nxt = lm_head.sample_greedy(
             params["head"], params["final_norm"]["scale"], h,
             norm_kind=spec.norm, norm_bias=params["final_norm"].get("bias"),
             vocab=spec.vocab)
-        return ({**state, "cache": cache, "pos": pos + live}, nxt)
+        new_state = {**state, "cache": cache, "pos": pos + live}
+        if pages:
+            new_state["pages"] = pages
+        return (new_state, nxt)
 
     # ---------------- slot reset (eviction) --------------------------------
     def reset_slots_step(state, slot_mask):
@@ -519,7 +685,10 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
             the caller keeps the admitted ones.
             """
             params, cache = state["params"], state["cache"]
+            pages = state.get("pages", {})
+            tables = state.get("tables", jnp.zeros((R, 1), jnp.int32))
             tokens = batch["tokens"]                    # (R, rows, S_text)
+            lens_vec = batch.get("lens")                # (R,) or None
             emb = lm_head.embed_tokens(params["embed"], tokens)
             if spec.frontend == "vision" and "patches" in batch:
                 emb = jnp.concatenate(
@@ -532,21 +701,35 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                                            d_enc)
             else:
                 enc_ring = jnp.zeros((1, 1, 1, 1), compute_dtype)
-            h_ring, cache = _pipe_forward(params, cache,
-                                          emb.astype(compute_dtype),
-                                          jnp.zeros((R,), jnp.int32),
-                                          emb.shape[2], enc_ring, slot_mask)
-            h_last = h_ring[:, :, -1:].reshape(R * rows_g, 1, spec.d_model)
+            qlen = emb.shape[2]
+            h_ring, cache, pages = _pipe_forward(
+                params, cache, pages, emb.astype(compute_dtype),
+                jnp.zeros((R,), jnp.int32), tables, qlen, enc_ring,
+                slot_mask)
+            if lens_vec is None:
+                h_last = h_ring[:, :, -1:]
+                new_pos = jnp.int32(qlen)
+            else:
+                # ragged prompts: each slot's last REAL token sits at
+                # lens - 1 (prompts are right-padded to the batch width;
+                # pad positions never feed real queries — causal mask)
+                lens_vec = jnp.asarray(lens_vec, jnp.int32)
+                idx = jnp.clip(lens_vec, 1, qlen) - 1
+                h_last = jnp.take_along_axis(
+                    h_ring, idx[:, None, None, None], axis=2)
+                new_pos = jnp.clip(lens_vec, 1, qlen)
+            h_last = h_last.reshape(R * rows_g, 1, spec.d_model)
             nxt = lm_head.sample_greedy(
                 params["head"], params["final_norm"]["scale"], h_last,
                 norm_kind=spec.norm,
                 norm_bias=params["final_norm"].get("bias"), vocab=spec.vocab)
             m = slot_mask > 0
             new_state = {**state, "cache": cache,
-                         "pos": jnp.where(m, jnp.int32(emb.shape[2]),
-                                          state["pos"]),
+                         "pos": jnp.where(m, new_pos, state["pos"]),
                          "live": jnp.where(m, 1,
                                            state["live"]).astype(jnp.int32)}
+            if pages:
+                new_state["pages"] = pages
             if has_enc:
                 new_state["enc_out"] = jnp.where(
                     m.reshape((R, 1, 1, 1)), enc_ring, state["enc_out"])
@@ -598,6 +781,9 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         state = {"params": params, "cache": _cache_template(),
                  "pos": jnp.zeros((R,), jnp.int32),
                  "live": jnp.ones((R,), jnp.int32)}
+        if page_size:
+            state["pages"] = _pages_template()
+            state["tables"] = jnp.full((R, max_pages), -1, jnp.int32)
         if has_enc:
             state["enc_out"] = jnp.zeros((R, rows_g, enc_len, d_enc),
                                          compute_dtype)
@@ -606,13 +792,25 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
     cache_pspec = _cache_pspec()
     state_pspecs = {"params": pspecs, "cache": cache_pspec, "pos": P(),
                     "live": P()}
+    if page_size:
+        state_pspecs["pages"] = _pages_pspec()
+        state_pspecs["tables"] = P()
     if has_enc:
         state_pspecs["enc_out"] = P(None, batch_dim_spec, None, None)
 
     token_spec = jax.ShapeDtypeStruct((global_batch,), jnp.int32)
 
+    paged_cfg = None
+    if page_size:
+        paged_cfg = {"page_size": page_size, "max_pages": max_pages,
+                     "pool_pages": pool_pages, "cache_len": cache_len}
+    ragged_ok = (not has_enc and spec.frontend != "vision" and not any(
+        blk.mixer in ("mamba", "rwkv") or blk.ffn == "rwkv_cmix"
+        for blk in statics.program))
+
     return EngineSession(spec=spec, plan=plan, mesh=mesh, sched=sched,
                          decode_step=decode_step, prefill_step=prefill_step,
                          init_state=init_state, state_pspecs=state_pspecs,
                          token_spec=token_spec, prefill_specs=prefill_specs,
-                         reset_step=reset_slots_step, admit_step=admit_step)
+                         reset_step=reset_slots_step, admit_step=admit_step,
+                         paged=paged_cfg, ragged_ok=ragged_ok)

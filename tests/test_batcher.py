@@ -265,7 +265,16 @@ def test_error_paths():
     with pytest.raises(ValueError, match="prefill_len"):
         ContinuousBatchingSession(bad)
     server = ContinuousBatchingSession(eng, clock=eng.clock)
+    long = Request(rid=0, prompt=np.arange(6, dtype=np.int32),
+                   max_new_tokens=1)
+    with pytest.raises(ValueError, match="exceeds"):
+        server.run([long])
+    # short prompts are legal now (ragged admission) — unless the model
+    # carries recurrent state, which would absorb the padding
+    rec = FakeEngine(slots=2)
+    rec.ragged_ok = False
+    recs = ContinuousBatchingSession(rec, clock=rec.clock)
     short = Request(rid=0, prompt=np.arange(2, dtype=np.int32),
                     max_new_tokens=1)
-    with pytest.raises(ValueError, match="prefill_len"):
-        server.run([short])
+    with pytest.raises(ValueError, match="recurrent"):
+        recs.run([short])

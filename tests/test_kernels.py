@@ -155,6 +155,83 @@ def test_mamba_scan_matches_chunked_jnp_twin():
                                atol=2e-4, rtol=1e-3)
 
 
+PAGED_CASES = [
+    # b, h, kv, dh, page, n_pages, window
+    (2, 4, 2, 64, 16, 8, -1),
+    (3, 4, 4, 32, 16, 4, -1),        # MHA (group size 1)
+    (2, 8, 2, 64, 64, 4, -1),        # big pages, 4:1 GQA
+    (2, 4, 1, 32, 16, 8, -1),        # MQA
+    (2, 4, 2, 64, 16, 8, 20),        # windowed: dead-page skipping
+    (1, 2, 2, 16, 64, 2, 48),        # window inside one page
+]
+
+
+def _paged_case(b, h, kv, dh, page, n_pages, seed):
+    """Random pool + permuted tables + ragged per-row lengths."""
+    rng = np.random.default_rng(seed)
+    n_pool = b * n_pages + 3                     # spare pages stay garbage
+    ks = jax.random.split(jax.random.fold_in(KEY, seed), 3)
+    q = jax.random.normal(ks[0], (b, h, dh), jnp.float32)
+    k_pages = jax.random.normal(ks[1], (n_pool, page, kv, dh), jnp.float32)
+    v_pages = jax.random.normal(ks[2], (n_pool, page, kv, dh), jnp.float32)
+    lengths = rng.integers(1, n_pages * page + 1, b).astype(np.int32)
+    perm = rng.permutation(n_pool)
+    tables = np.full((b, n_pages), -1, np.int32)
+    used = 0
+    for r in range(b):
+        need = -(-int(lengths[r]) // page)
+        tables[r, :need] = perm[used:used + need]
+        used += need
+    return q, k_pages, v_pages, jnp.asarray(tables), jnp.asarray(lengths)
+
+
+@pytest.mark.parametrize("b,h,kv,dh,page,n_pages,window", PAGED_CASES)
+def test_paged_attention_matches_ref(b, h, kv, dh, page, n_pages, window):
+    q, kp, vp, tables, lengths = _paged_case(
+        b, h, kv, dh, page, n_pages, seed=b * h + page + n_pages)
+    got = ops.paged_attention(q, kp, vp, tables, lengths, window=window)
+    want = ref.paged_attention_ref(q, kp, vp, tables, lengths,
+                                   window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-3)
+
+
+def test_paged_ref_matches_dense_gather():
+    """The paged oracle equals dense attention over the gathered slab."""
+    b, h, kv, dh, page, n_pages = 2, 4, 2, 32, 16, 4
+    q, kp, vp, tables, lengths = _paged_case(b, h, kv, dh, page, n_pages,
+                                             seed=5)
+    got = ref.paged_attention_ref(q, kp, vp, tables, lengths)
+    outs = []
+    for r in range(b):
+        ln = int(lengths[r])
+        pages = [int(p) for p in tables[r] if p >= 0]
+        kd = jnp.concatenate([kp[p] for p in pages], axis=0)[:ln]
+        vd = jnp.concatenate([vp[p] for p in pages], axis=0)[:ln]
+        # one query at position ln-1 attending over ln dense keys
+        o = ref.attention_ref(q[r][None, None], kd[None], vd[None],
+                              causal=False)
+        outs.append(o[0, 0])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(jnp.stack(outs)),
+                               atol=2e-5, rtol=1e-3)
+
+
+def test_paged_attention_garbage_pages_ignored():
+    """NaN in unreferenced / beyond-length pool pages must not leak."""
+    b, h, kv, dh, page, n_pages = 2, 4, 2, 32, 16, 4
+    q, kp, vp, tables, lengths = _paged_case(b, h, kv, dh, page, n_pages,
+                                             seed=9)
+    used = set(int(p) for p in np.asarray(tables).ravel() if p >= 0)
+    spare = [p for p in range(kp.shape[0]) if p not in used]
+    kp = kp.at[jnp.asarray(spare)].set(jnp.nan)
+    vp = vp.at[jnp.asarray(spare)].set(jnp.nan)
+    got = ops.paged_attention(q, kp, vp, tables, lengths)
+    want = ref.paged_attention_ref(q, kp, vp, tables, lengths)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-3)
+
+
 @pytest.mark.parametrize("arch", ["dense", "rwkv", "hybrid"])
 def test_model_dispatch_equivalence(arch):
     """use_pallas() on/off must not change transformer outputs."""

@@ -1,0 +1,226 @@
+"""Paged KV cache: allocator invariants, planner pricing, error paths.
+
+The bit-exactness of the paged data path itself is proven end-to-end by
+scripts/batch_smoke.py (ragged trace, dense vs paged vs solo) and the
+kernel parity matrix in tests/test_kernels.py; this file covers the
+host-side allocator contract, the pages-in-use memory pricing the
+planner uses (including the plan_search golden: a decode plan that is
+HBM-infeasible dense fits paged), and the loud-failure paths.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.partitioner import plan_search
+from repro.core.profiler import TPU_V5E
+from repro.core.schedule import serving_cache_bytes
+from repro.models import spec as spec_lib
+from repro.parallel.mesh import ParallelismPlan
+from repro.serving.batcher import PageAllocator
+
+
+def _attn_spec(n_layers=8, window=0):
+    blocks = tuple(spec_lib.BlockSpec(mixer="attn", ffn="dense",
+                                      window=window)
+                   for _ in range(n_layers))
+    return spec_lib.ModelSpec(
+        name="paged-test", d_model=64, n_layers=n_layers, n_heads=4,
+        n_kv=2, d_head=16, d_ff=128, vocab=256, blocks=blocks,
+        norm="rmsnorm", act="silu")
+
+
+def _serve_plan(pp=2, r=8):
+    return ParallelismPlan(pp=pp, tp=1, microbatches=r,
+                           decode_microbatches=r, schedule="serve_1f")
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator: the host-side free-list contract
+# ---------------------------------------------------------------------------
+
+def test_allocator_alloc_extend_release_roundtrip():
+    a = PageAllocator(pool_pages=16, n_slots=4, max_pages=4, page_size=16)
+    assert a.free_pages == 16 and a.live_pages == 0
+    a.alloc_slot(0, 17)                       # 2 pages (17 tokens)
+    assert a.counts[0] == 2 and a.free_pages == 14
+    a.extend_slot(0, 33)                      # crosses into page 3
+    assert a.counts[0] == 3 and a.free_pages == 13
+    a.extend_slot(0, 34)                      # same page: no growth
+    assert a.counts[0] == 3
+    a.check()
+    a.release_slot(0)
+    assert a.free_pages == 16 and a.counts[0] == 0
+    assert (a.tables[0] == -1).all()
+    a.release_slot(0)                         # idempotent
+    a.check()
+
+
+def test_allocator_reuses_freed_pages():
+    a = PageAllocator(pool_pages=4, n_slots=2, max_pages=2, page_size=8)
+    a.alloc_slot(0, 16)
+    first = set(a.tables[0][a.tables[0] >= 0])
+    a.alloc_slot(1, 16)
+    assert a.free_pages == 0
+    a.release_slot(0)
+    a.alloc_slot(0, 9)                        # must reuse slot 0's pages
+    reused = set(a.tables[0][a.tables[0] >= 0])
+    assert reused <= first
+    a.check()
+
+
+def test_allocator_capacity_and_exhaustion_errors():
+    a = PageAllocator(pool_pages=3, n_slots=2, max_pages=2, page_size=8)
+    with pytest.raises(ValueError, match="16"):
+        a.alloc_slot(0, 17)                   # over per-slot capacity
+    a.alloc_slot(0, 16)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        a.alloc_slot(1, 16)                   # pool has 1 page left
+    a.alloc_slot(1, 8)                        # 1 page fits
+    with pytest.raises(RuntimeError, match="exhausted"):
+        a.extend_slot(1, 9)
+    a.check()
+    # failed alloc/extend must not leak pages
+    assert a.free_pages == 0 and a.live_pages == 3
+
+
+def test_allocator_check_catches_double_booking():
+    a = PageAllocator(pool_pages=4, n_slots=2, max_pages=2, page_size=8)
+    a.alloc_slot(0, 8)
+    a.alloc_slot(1, 8)
+    a.tables[1, 0] = a.tables[0, 0]           # corrupt: shared page
+    with pytest.raises(AssertionError):
+        a.check()
+
+
+# ---------------------------------------------------------------------------
+# serving_cache_bytes: pages-in-use pricing
+# ---------------------------------------------------------------------------
+
+def test_cache_bytes_paged_occupancy_one_matches_dense():
+    spec, plan = _attn_spec(), _serve_plan()
+    sched = plan.make_schedule()
+    kw = dict(cache_len=1024, global_batch=8)
+    dense = serving_cache_bytes(spec, plan, sched, **kw)
+    paged = serving_cache_bytes(spec, plan, sched, page_size=64,
+                                kv_occupancy=1.0, n_slots=8, **kw)
+    table = 8 * (1024 // 64) * 4.0            # per-slot int32 tables
+    assert paged == dense + table
+
+
+def test_cache_bytes_paged_scales_with_occupancy_slot_granular():
+    spec, plan = _attn_spec(), _serve_plan()
+    sched = plan.make_schedule()
+    kw = dict(cache_len=1024, global_batch=8, page_size=64, n_slots=8)
+    dense = serving_cache_bytes(spec, plan, sched, cache_len=1024,
+                                global_batch=8)
+    table = 8 * (1024 // 64) * 4.0
+    half = serving_cache_bytes(spec, plan, sched, kv_occupancy=0.5, **kw)
+    assert abs(half - (dense / 2 + table)) < 1e-6
+    # 0.3 of 8 slots rounds UP to 3 whole slots' worth of pages
+    frac = serving_cache_bytes(spec, plan, sched, kv_occupancy=0.3, **kw)
+    assert abs(frac - (dense * 3 / 8 + table)) < 1e-6
+
+
+def test_cache_bytes_recurrent_state_stays_dense():
+    """Paging thins attention KV only: mamba/windowed stay full price."""
+    blocks = tuple(spec_lib.BlockSpec(mixer=("attn" if i % 2 else "mamba"),
+                                      ffn="dense") for i in range(8))
+    spec = spec_lib.ModelSpec(
+        name="hybrid-test", d_model=64, n_layers=8, n_heads=4, n_kv=2,
+        d_head=16, d_ff=128, vocab=256, blocks=blocks, norm="rmsnorm",
+        act="silu", mamba=spec_lib.MambaSpec())
+    plan = _serve_plan()
+    sched = plan.make_schedule()
+    kw = dict(cache_len=1024, global_batch=8)
+    dense = serving_cache_bytes(spec, plan, sched, **kw)
+    floor = serving_cache_bytes(spec, plan, sched, page_size=64,
+                                kv_occupancy=0.0, n_slots=8, **kw)
+    table = 8 * (1024 // 64) * 4.0
+    # at zero occupancy only the recurrent state + tables remain, and
+    # that floor is strictly positive (mamba conv + ssm state is dense)
+    assert table < floor < dense
+
+    # windowed attention (ring buffer < cache_len) is never paged
+    wspec = _attn_spec(window=128)
+    wdense = serving_cache_bytes(wspec, plan, sched, **kw)
+    wpaged = serving_cache_bytes(wspec, plan, sched, page_size=64,
+                                 kv_occupancy=0.0, n_slots=8, **kw)
+    assert wpaged == wdense                   # no paged layer, no tables
+
+
+def test_cache_bytes_paged_rejects_sp_and_bad_page_size():
+    spec, plan = _attn_spec(), _serve_plan()
+    sched = plan.make_schedule()
+    with pytest.raises(AssertionError):
+        serving_cache_bytes(spec, plan, sched, cache_len=1024,
+                            global_batch=8, sp=True, page_size=64)
+    with pytest.raises(AssertionError):
+        serving_cache_bytes(spec, plan, sched, cache_len=1000,
+                            global_batch=8, page_size=64)
+
+
+# ---------------------------------------------------------------------------
+# plan_search golden: dense-infeasible decode plan fits paged
+# ---------------------------------------------------------------------------
+
+def test_plan_search_paged_unlocks_infeasible_decode_plan():
+    import dataclasses
+
+    spec = _attn_spec(n_layers=8)
+    plan = _serve_plan(pp=2, r=32)
+    sched = plan.make_schedule()
+    dense_cache = serving_cache_bytes(spec, plan, sched, cache_len=4096,
+                                      global_batch=32)
+    # budget: generous for weights/workspace, too tight for the dense
+    # cache, roomy for the paged cache at 25% occupancy
+    budget = 0.5 * dense_cache
+    hw = dataclasses.replace(TPU_V5E, hbm_bytes=budget)
+    kw = dict(minibatch_tokens=32, workload="decode", cache_len=4096,
+              global_batch=32, occupancy=0.25, return_all=True)
+    dense = plan_search(spec, plan, 2, hw, **kw)
+    paged = plan_search(spec, plan, 2, hw, page_size=64, **kw)
+
+    def feas(cands, pp):
+        return [c.feasible for c in cands if c.plan.pp == pp
+                and c.plan.schedule == "serve_1f"]
+    assert not any(feas(dense, 2)), "dense pp=2 should blow the budget"
+    assert all(feas(paged, 2)), "paged pp=2 should fit at 25% occupancy"
+    # the paged feasible set is a superset of the dense one
+    dense_ok = {(c.plan.pp, c.plan.schedule, c.plan.virtual_stages)
+                for c in dense if c.feasible}
+    paged_ok = {(c.plan.pp, c.plan.schedule, c.plan.virtual_stages)
+                for c in paged if c.feasible}
+    assert dense_ok <= paged_ok
+
+
+def test_plan_search_rejects_paged_train_and_sp():
+    spec = _attn_spec()
+    plan = _serve_plan()
+    with pytest.raises(AssertionError, match="training"):
+        plan_search(spec, plan, 2, TPU_V5E, minibatch_tokens=32,
+                    workload="train", page_size=64)
+    with pytest.raises(AssertionError, match="exclusive"):
+        plan_search(spec, plan, 2, TPU_V5E, minibatch_tokens=32,
+                    workload="decode", cache_len=4096, global_batch=32,
+                    sp=True, page_size=64)
+
+
+# ---------------------------------------------------------------------------
+# build_serving error paths (validation precedes any device work)
+# ---------------------------------------------------------------------------
+
+def test_build_serving_rejects_bad_paged_configs():
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel.mesh import split_model_axis
+    from repro.serving.engine import build_serving
+
+    spec = _attn_spec()
+    plan = _serve_plan(pp=1, r=2)
+    mesh = make_host_mesh(data=1, model=1)
+    dmesh = split_model_axis(mesh, 1, 1)
+    with pytest.raises(ValueError, match="multiple"):
+        build_serving(spec, plan, dmesh, cache_len=100, global_batch=2,
+                      page_size=16)
+    with pytest.raises(ValueError, match="exclusive"):
+        build_serving(spec, plan, dmesh, cache_len=128, global_batch=2,
+                      sp=True, page_size=16)
