@@ -1,6 +1,7 @@
 # Convenience entry points matching the ROADMAP commands.
 .PHONY: tier1 tier1-full bench bench-serving bench-batching bench-paging \
-	plan-smoke serve-smoke batch-smoke page-smoke docs-check
+	bench-buckets bench-check plan-smoke serve-smoke batch-smoke \
+	page-smoke docs-check
 
 tier1:
 	scripts/tier1.sh
@@ -19,6 +20,12 @@ bench-batching:
 
 bench-paging:
 	PYTHONPATH=src:. python benchmarks/batching_bench.py --paging
+
+bench-buckets:
+	PYTHONPATH=src:. python benchmarks/batching_bench.py --buckets
+
+bench-check:
+	python scripts/bench_check.py
 
 plan-smoke:
 	python scripts/plan_smoke.py

@@ -26,6 +26,13 @@ Emits the ``BENCH_batching.json`` trajectory artifact and prints
 via ``make bench-batching``:
 
   PYTHONPATH=src:. python benchmarks/batching_bench.py [--out BENCH_batching.json]
+
+``--buckets`` (``make bench-buckets``) runs the liveness-aware
+bucketed-executor comparison instead: full-R lockstep vs bucketed
+execution over a ~25%-occupancy Poisson trace, reporting executed
+slot-ticks per completed token (see :func:`bench_buckets`); its rows
+merge into the same BENCH_batching.json.  ``--paging`` runs the
+paged-KV capacity study (-> BENCH_paging.json).
 """
 from __future__ import annotations
 
@@ -39,8 +46,9 @@ import numpy as np
 from repro import configs
 from repro.core import profiler as prof
 from repro.core.partitioner import partition_rectangular, stage_phase_times
-from repro.core.schedule import (fit_serving_microbatches,
-                                 make_serving_schedule,
+from repro.core.schedule import (F_MB, bucket_lattice,
+                                 fit_serving_microbatches,
+                                 make_serving_schedule, pick_bucket,
                                  plan_kwargs_for_schedule, serve_ttft,
                                  weighted_round_time)
 from repro.serving.batcher import ContinuousBatchingSession, Request
@@ -59,6 +67,17 @@ class _Spec:
     shape: tuple
 
 
+def _slot_ticks(sched) -> int:
+    """(tick, stage) cells of the table that name a microbatch slot.
+
+    The table executor runs the stage compute for every named cell —
+    a lockstep full-R table names every slot whether live or dead, so
+    dead slots burn real stage executions; ramp bubbles (``F_MB < 0``)
+    execute nothing and do not count.
+    """
+    return int((np.asarray(sched.tables().fwd)[:, :, F_MB] >= 0).sum())
+
+
 class AnalyticEngine:
     """Engine-shaped cost model over the serve schedule tables.
 
@@ -67,17 +86,39 @@ class AnalyticEngine:
     modeled clock: decode advances by the forward-only round time,
     admission by the prefill round.  Tokens are deterministic
     nonsense — the bench measures scheduling, not logits.
+
+    ``bucket_costs`` turns on the liveness-aware bucketed cost model:
+    a ``{R_b: (decode_s, admit_s, slot_ticks)}`` table over the bucket
+    lattice.  The engine then mirrors slot liveness through
+    reset/admit/compact (the batcher compacts live slots into a prefix,
+    exactly as the real bucketed EngineSession requires) and charges
+    each round at the smallest bucket covering the live count.  Every
+    round — bucketed or not — accrues ``executed_slot_ticks``: the
+    (tick, stage) cells of the round's table that *name* a slot
+    (``F_MB >= 0`` — a full-R table names every slot, dead or live, and
+    a dead slot's stage compute still executes; ramp bubbles execute
+    nothing).  That count is the honest unit of the bucketing win.
     """
 
-    def __init__(self, sched, *, rows, text_len, decode_s, admit_s):
+    def __init__(self, sched, *, rows, text_len, decode_s, admit_s,
+                 bucket_costs=None):
         self.sched = sched
-        R = sched.n_microbatches
+        R = self.R = sched.n_microbatches
         self.token_spec = _Spec((R * rows,))
         self.prefill_specs = {"tokens": _Spec((R, rows, text_len))}
         self.admit_step = object()
         self.state = None
         self.now = 0.0
         self.decode_s, self.admit_s = decode_s, admit_s
+        full_ticks = _slot_ticks(sched)
+        self.buckets = tuple(sorted(bucket_costs)) if bucket_costs else None
+        self._costs = dict(bucket_costs) if bucket_costs else {
+            R: (decode_s, admit_s, full_ticks)}
+        self._live = np.zeros(R, bool)
+        self.executed_slot_ticks = 0
+        self.bucket_log: list = []
+        self._occ_sum = 0            # live slots summed over decode rounds
+        self._occ_rounds = 0
 
     def clock(self):
         return self.now
@@ -86,16 +127,41 @@ class AnalyticEngine:
         self.state = object()
         return self
 
+    def _bucket(self) -> int:
+        n = max(1, int(self._live.sum()))
+        if self.buckets is None:
+            return self.R
+        return pick_bucket(n, self.buckets)
+
+    @property
+    def mean_occupancy(self) -> float:
+        """Mean live-slot fraction over the decode rounds run so far."""
+        return self._occ_sum / max(self._occ_rounds * self.R, 1)
+
     def reset_slots(self, mask):
+        self._live[np.asarray(mask).reshape(-1) > 0] = False
         return self                      # elementwise zeroing: free
 
+    def compact_slots(self, perm):
+        self._live = self._live[np.asarray(perm, np.int64)]
+        return self.state                # pure permutation: free
+
     def write_prefill_into_slots(self, batch, mask):
-        self.now += self.admit_s
+        self._live |= np.asarray(mask).reshape(-1) > 0
+        _, admit_s, ticks = self._costs[self._bucket()]
+        self.now += admit_s
+        self.executed_slot_ticks += ticks
         return (batch["tokens"][:, :, -1].reshape(-1) % 251 + 1).astype(
             np.int32)
 
     def decode(self, tokens):
-        self.now += self.decode_s
+        b = self._bucket()
+        decode_s, _, ticks = self._costs[b]
+        self.now += decode_s
+        self.executed_slot_ticks += ticks
+        self.bucket_log.append(b)
+        self._occ_sum += int(self._live.sum())
+        self._occ_rounds += 1
         return ((np.asarray(tokens) * 31 + 7) % 251 + 1).astype(np.int32)
 
 
@@ -140,20 +206,30 @@ def _serve_setup(arch: str):
     return spec, plan, shape, R, rows
 
 
-def _round_costs(spec, plan, shape, R, rows):
-    """(sched, decode_s, admit_s): modeled per-op costs at R slots."""
+def _phase_times(spec, plan, shape, R, rows):
+    """(sched, tf, ptf): per-stage decode/prefill phase seconds at R.
+
+    The phase times depend on the partition and per-row token counts,
+    never on which slots are live — so one (tf, ptf) pair prices every
+    bucket of the same schedule (shorter tables, same stage work)."""
     sched = make_serving_schedule(plan, R)
     dec_prof = prof.profile_analytic(
         spec, HW, minibatch_tokens=rows // DATA, kv_len=shape.seq_len)
     part = partition_rectangular(dec_prof, sched.n_chunks, DATA, HW)
     tf, _ = stage_phase_times(dec_prof, part, plan.pp, plan.tp, HW,
                               data_replicas=DATA)
-    decode_s, _ = weighted_round_time(sched, tf, 0.0)
     pre_prof = prof.profile_analytic(
         spec, HW, minibatch_tokens=(rows // DATA) * PREFILL)
     ppart = partition_rectangular(pre_prof, sched.n_chunks, DATA, HW)
     ptf, _ = stage_phase_times(pre_prof, ppart, plan.pp, plan.tp, HW,
                                data_replicas=DATA)
+    return sched, tf, ptf
+
+
+def _round_costs(spec, plan, shape, R, rows):
+    """(sched, decode_s, admit_s): modeled per-op costs at R slots."""
+    sched, tf, ptf = _phase_times(spec, plan, shape, R, rows)
+    decode_s, _ = weighted_round_time(sched, tf, 0.0)
     admit_s = serve_ttft(sched, ptf)
     return sched, decode_s, admit_s
 
@@ -252,6 +328,134 @@ def bench_paging(arch: str, page_size: int = 64) -> list:
     return rows_out
 
 
+def low_occupancy_trace(n, slots, rng, text_len, occupancy=0.25):
+    """Poisson arrivals tuned to hold ~``occupancy``·R slots live.
+
+    Little's law: live slots = arrival rate x mean residence, so the
+    exponential inter-arrival scale is MEAN_NEW_TOKENS steps of
+    residence over the ``occupancy * slots`` concurrency target.  This
+    is the regime the bucketed executor exists for: the full-R lockstep
+    engine burns the whole table every round while only a quarter of
+    the slots produce tokens.
+    """
+    target_live = max(occupancy * slots, 0.5)
+    gaps = rng.exponential(scale=MEAN_NEW_TOKENS / target_live, size=n)
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    return [Request(
+        rid=i, prompt=rng.integers(1, 999, text_len).astype(np.int32),
+        max_new_tokens=int(rng.integers(MEAN_NEW_TOKENS // 2,
+                                        (3 * MEAN_NEW_TOKENS) // 2)),
+        arrival=int(arrivals[i])) for i in range(n)]
+
+
+def bench_buckets(arch: str, occupancy: float = 0.25) -> list:
+    """Executed slot-ticks per token: full-R lockstep vs bucketed.
+
+    Both engines serve the SAME ~25%-occupancy Poisson trace through
+    the real slot scheduler; the only difference is the cost/tick
+    model: lockstep charges every round the full-R table (R·S·v named
+    cells — dead slots' stage compute still executes), bucketed charges
+    the smallest lattice bucket covering the live prefix — exactly the
+    table the liveness-aware EngineSession scans.  Token streams are
+    identical by construction (the real engine's buckets are bit-exact,
+    proven by scripts/batch_smoke.py), so executed slot-ticks per
+    completed token is the apples-to-apples waste metric.
+
+    Wall-clock rounds (and therefore the goodput column) win less than
+    the slot-tick ratio: the S-1 pipeline ramp is paid per round no
+    matter how few slots the table names.  The per-round slot-tick
+    ceiling is R/1 (all lattice tables share the same S·v per slot);
+    each row records its measured ratio next to that ceiling.
+    """
+    spec, plan, shape, R, rows = _serve_setup(arch)
+    sched, tf, ptf = _phase_times(spec, plan, shape, R, rows)
+    costs = {}
+    for b in bucket_lattice(R):
+        sb = sched.bucketed(b)
+        costs[b] = (weighted_round_time(sb, tf, 0.0)[0],
+                    serve_ttft(sb, ptf), _slot_ticks(sb))
+    ceiling = costs[R][2] / costs[1][2]
+
+    rows_out = []
+    for mode in ("lockstep_full_R", "bucketed"):
+        rng = np.random.default_rng(SEED)
+        eng = AnalyticEngine(
+            sched, rows=rows, text_len=PREFILL,
+            decode_s=costs[R][0], admit_s=costs[R][1],
+            bucket_costs=costs if mode == "bucketed" else None)
+        server = ContinuousBatchingSession(eng, policy="continuous",
+                                           clock=eng.clock)
+        report = server.run(low_occupancy_trace(N_REQUESTS, R, rng,
+                                                PREFILL, occupancy))
+        s = report.summary()
+        assert s["completed"] == N_REQUESTS, s
+        occ = eng.mean_occupancy
+        assert abs(occ - occupancy) < 0.15, (
+            f"{arch}/{mode}: trace drifted to {occ:.2f} mean occupancy, "
+            f"target {occupancy}")
+        hist = {int(b): eng.bucket_log.count(b)
+                for b in sorted(set(eng.bucket_log))}
+        rows_out.append({
+            "arch": arch, "mode": mode, "schedule": sched.name,
+            "pp": plan.pp, "tp": plan.tp, "slots": R,
+            "rows_per_slot": rows, "target_occupancy": occupancy,
+            "mean_occupancy": occ,
+            "buckets": list(eng.buckets) if eng.buckets else [R],
+            "bucket_rounds": hist,
+            "executed_slot_ticks": int(eng.executed_slot_ticks),
+            "slot_ticks_per_token": (eng.executed_slot_ticks
+                                     / max(report.completed_tokens, 1)),
+            "tick_ratio_ceiling": ceiling, **s,
+        })
+    full, bkt = rows_out
+    assert full["completed_tokens"] == bkt["completed_tokens"], rows_out
+    ratio = (full["slot_ticks_per_token"] / bkt["slot_ticks_per_token"])
+    for r in rows_out:
+        r["slot_ticks_ratio"] = ratio
+    return rows_out
+
+
+def main_buckets(out: str, occupancy: float = 0.25):
+    rows = []
+    for arch in ARCHS:
+        rows.extend(bench_buckets(arch, occupancy))
+    print("name,us_per_call,derived")
+    by: Dict[str, Dict[str, dict]] = {}
+    for r in rows:
+        by.setdefault(r["arch"], {})[r["mode"]] = r
+        print(f"{r['arch']}.buckets.{r['mode']},"
+              f"{r['decode_rounds']},"
+              f"slot_ticks/token={r['slot_ticks_per_token']:.1f} "
+              f"occ={r['mean_occupancy']:.2f} "
+              f"goodput={r['goodput_tokens_per_s']:.1f}tok/s")
+    # acceptance: at ~25% occupancy the bucketed executor must cut
+    # executed slot-ticks per token >= 3x on the shallow-pipe serving
+    # config (the ratio a deep pipe can reach is capped by its S-1 ramp
+    # — asserted against each table's own analytic ceiling instead)
+    best = 0.0
+    for arch, m in by.items():
+        b = m["bucketed"]
+        ratio, ceil_ = b["slot_ticks_ratio"], b["tick_ratio_ceiling"]
+        best = max(best, ratio)
+        assert ratio >= min(3.0, 0.8 * ceil_), (arch, ratio, ceil_)
+        print(f"# {arch}: {ratio:.2f}x fewer executed slot-ticks per "
+              f"token at {b['mean_occupancy']:.0%} occupancy "
+              f"(lattice {b['buckets']}, per-round ceiling {ceil_:.2f}x)")
+    assert best >= 3.0, f"no arch reached the 3x acceptance bar: {best:.2f}x"
+    # merge into the batching artifact: bucket rows live alongside the
+    # policy-comparison rows, replacing any stale bucket rows
+    try:
+        with open(out) as f:
+            prev = [r for r in json.load(f)
+                    if r.get("mode") not in ("lockstep_full_R", "bucketed")]
+    except (FileNotFoundError, json.JSONDecodeError):
+        prev = []
+    rows = prev + rows
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {len(rows)} rows -> {out}")
+
+
 def main_paging(out: str):
     rows = []
     for arch in ARCHS:
@@ -297,9 +501,19 @@ def main(argv=None):
     ap.add_argument("--paging", action="store_true",
                     help="paged-KV slots-per-HBM-byte bench "
                          "(-> BENCH_paging.json)")
+    ap.add_argument("--buckets", action="store_true",
+                    help="liveness-aware bucketed executor bench: "
+                         "executed slot-ticks per token, lockstep vs "
+                         "bucketed, on a ~25%%-occupancy trace "
+                         "(rows merged into BENCH_batching.json)")
+    ap.add_argument("--occupancy", type=float, default=0.25,
+                    help="target live-slot fraction for --buckets")
     args = ap.parse_args(argv)
     if args.paging:
         return main_paging(args.out or "BENCH_paging.json")
+    if args.buckets:
+        return main_buckets(args.out or "BENCH_batching.json",
+                            args.occupancy)
     args.out = args.out or "BENCH_batching.json"
     rows = []
     for arch in ARCHS:

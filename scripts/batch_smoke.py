@@ -35,7 +35,8 @@ from repro.serving.engine import build_serving                # noqa: E402
 PP, R, PREFILL, CACHE = 2, 2, 8, 64
 
 
-def make_session(schedule="auto", virtual_stages=1, page_size=0):
+def make_session(schedule="auto", virtual_stages=1, page_size=0,
+                 n_slots=R, buckets=False):
     blocks = tuple(spec_lib.BlockSpec(mixer="attn", ffn="dense")
                    for _ in range(PP * max(virtual_stages, 1) * 2))
     spec = spec_lib.ModelSpec(
@@ -44,23 +45,23 @@ def make_session(schedule="auto", virtual_stages=1, page_size=0):
         norm="rmsnorm", act="silu")
     mesh = make_host_mesh(data=1, model=PP)
     dmesh = split_model_axis(mesh, PP, 1)
-    plan = ParallelismPlan(pp=PP, tp=1, microbatches=R,
-                           decode_microbatches=R, schedule=schedule,
+    plan = ParallelismPlan(pp=PP, tp=1, microbatches=n_slots,
+                           decode_microbatches=n_slots, schedule=schedule,
                            virtual_stages=virtual_stages)
     return spec, build_serving(spec, plan, dmesh, cache_len=CACHE,
-                               global_batch=R, prefill_len=PREFILL,
+                               global_batch=n_slots, prefill_len=PREFILL,
                                compute_dtype=jnp.float32,
-                               page_size=page_size)
+                               page_size=page_size, buckets=buckets)
 
 
-def solo_tokens(spec, prompt, n_tokens):
+def solo_tokens(spec, prompt, n_tokens, n_slots=R):
     """The request alone through a fresh one-shot serve_1f session."""
-    _, sess = make_session()
+    _, sess = make_session(n_slots=n_slots)
     sess.start(jax.random.key(0))
-    tokens = jnp.asarray(np.broadcast_to(prompt, (R, 1, PREFILL)))
+    tokens = jnp.asarray(np.broadcast_to(prompt, (n_slots, 1, PREFILL)))
     toks = [np.asarray(sess.prefill({"tokens": tokens}))[0]]
     for _ in range(n_tokens - 1):
-        last = jnp.asarray(np.full((R,), toks[-1], np.int32))
+        last = jnp.asarray(np.full((n_slots,), toks[-1], np.int32))
         toks.append(np.asarray(sess.decode(last))[0])
     return [int(t) for t in toks]
 
@@ -147,7 +148,74 @@ def ragged_main() -> int:
         print("BATCH SMOKE FAILED: ragged paged/dense traces diverge")
         return 1
     print("\nbatch smoke OK (3 staggered requests bit-exact vs solo runs; "
-          "ragged trace bit-exact dense vs paged vs solo)")
+          "ragged trace bit-exact dense vs paged vs solo)\n")
+    return bucket_main()
+
+
+def _bucket_trace(prompts):
+    """Down-then-up bucket pressure over R = 4 slots: four requests fill
+    the batch (bucket 4), the two short ones finish and their eviction
+    compacts the survivors into a 2-slot prefix (bucket 2), then a late
+    arrival admits mid-stream and grows the bucket back (3 live -> 4)."""
+    return [
+        Request(rid=0, prompt=prompts[0], max_new_tokens=3, arrival=0),
+        Request(rid=1, prompt=prompts[1], max_new_tokens=3, arrival=0),
+        Request(rid=2, prompt=prompts[2], max_new_tokens=12, arrival=0),
+        Request(rid=3, prompt=prompts[3], max_new_tokens=12, arrival=0),
+        Request(rid=4, prompt=prompts[4], max_new_tokens=4, arrival=5),
+    ]
+
+
+def bucket_main() -> int:
+    """Mid-stream bucket switches, bit-exact vs the full-R path.
+
+    The same 5-request trace runs through a plain full-R session and a
+    bucketed one (dense and paged): the bucketed server must shrink its
+    bucket when evictions compact the batch, grow it back on the late
+    admission, and still stream every request bit-identically (fp32) to
+    the full-R run and to a solo one-shot session.
+    """
+    R4 = 4
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(1, 256, PREFILL).astype(np.int32)
+               for _ in range(5)]
+    spec = None
+    runs = {}
+    for name, kw in (("full_R", {}),
+                     ("bucketed", {"buckets": True}),
+                     ("bucketed_paged", {"buckets": True, "page_size": 16})):
+        t = _bucket_trace(prompts)
+        spec, sess = make_session(n_slots=R4, **kw)
+        sess.start(jax.random.key(0))
+        report = ContinuousBatchingSession(sess).run(t)
+        assert len(report.completed) == 5, (name, report.summary())
+        runs[name] = t
+        if kw.get("buckets"):
+            log = sess._bucket_log
+            shrank = any(b2 < b1 for b1, b2 in zip(log, log[1:]))
+            grew = any(b2 > b1 for b1, b2 in zip(log, log[1:]))
+            assert len(set(log)) >= 2 and shrank and grew, (
+                f"{name}: trace must switch buckets both ways, log={log}")
+            print(f"  {name} bucket log: {log}")
+        if kw.get("page_size"):
+            sess._alloc.check()
+            assert sess._alloc.live_pages == 0, sess._alloc.tables
+    ok = True
+    for r_full, r_bkt, r_pg in zip(runs["full_R"], runs["bucketed"],
+                                   runs["bucketed_paged"]):
+        solo = solo_tokens(spec, r_full.prompt, r_full.max_new_tokens,
+                           n_slots=R4)
+        same = (r_full.tokens == r_bkt.tokens == r_pg.tokens == solo)
+        mark = "==" if same else "!="
+        print(f"  request {r_full.rid}: full-R {r_full.tokens} {mark} "
+              f"bucketed {r_bkt.tokens} (paged {r_pg.tokens}, "
+              f"solo {solo})")
+        ok &= same
+    if not ok:
+        print("BATCH SMOKE FAILED: bucket switches are not bit-exact")
+        return 1
+    print("\nbatch smoke OK (bucket shrink/grow mid-stream, bit-exact vs "
+          "full-R and solo, dense + paged)")
     return 0
 
 

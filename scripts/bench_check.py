@@ -1,0 +1,155 @@
+#!/usr/bin/env python
+"""bench-check: every BENCH_*.json artifact must be well-formed.
+
+CI gate (scripts/tier1.sh / `make bench-check`) against benchmark-
+artifact rot: the BENCH_*.json trajectory files are committed outputs
+of the benchmarks (serving_bench, batching_bench, batching_bench
+--paging / --buckets), and downstream plots and the ROADMAP tables read
+them by key.  A half-written file, a renamed column, or a NaN that
+snuck through a cost model should fail fast here, not at plot time.
+
+Checks, per file:
+
+  * parses as JSON and is a non-empty list of row dicts;
+  * every row of a known artifact carries that artifact's required
+    keys (rows are matched to a row-kind by its discriminator column —
+    ``policy`` / ``mode`` — so one file may mix row kinds, as
+    BENCH_batching.json does with policy rows + bucket rows);
+  * every numeric value is finite — ``NaN``/``Infinity`` survive
+    ``json.dump`` and silently poison comparisons downstream.
+
+Unknown BENCH_*.json files (a new benchmark's artifact) get the
+structural + finiteness checks only, so adding a benchmark does not
+require touching this gate.
+
+Exit status: 0 clean, 1 with a listing of every malformed artifact.
+"""
+import glob
+import json
+import math
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# required keys per (file, row-kind); the row-kind is picked by the
+# discriminator column so mixed-kind files check each row correctly
+_COMMON_RUN = ("requests", "completed", "completed_tokens", "steps",
+               "goodput_tokens_per_s", "p50_per_token_latency_s",
+               "p99_per_token_latency_s", "mean_ttft_s")
+SCHEMAS = {
+    "BENCH_serving.json": {
+        None: ("arch", "shape", "workload", "schedule", "pp", "tp",
+               "virtual_stages", "microbatches", "ttft_ms", "round_ms",
+               "tokens_per_sec", "bubble"),
+    },
+    "BENCH_batching.json": {
+        ("policy", None): ("arch", "schedule", "slots", "rows_per_slot",
+                           "decode_round_ms", "admit_round_ms")
+        + _COMMON_RUN,
+        ("mode", "lockstep_full_R"): (),   # same as bucketed, below
+        ("mode", "bucketed"): (),
+    },
+    "BENCH_paging.json": {
+        ("mode", None): ("arch", "mode", "page_size", "slots",
+                         "slot_multiplier", "per_slot_bytes_multiplier",
+                         "kv_budget_gb") + _COMMON_RUN,
+    },
+}
+_BUCKET_ROW = ("arch", "mode", "slots", "buckets", "bucket_rounds",
+               "mean_occupancy", "executed_slot_ticks",
+               "slot_ticks_per_token", "slot_ticks_ratio") + _COMMON_RUN
+SCHEMAS["BENCH_batching.json"][("mode", "lockstep_full_R")] = _BUCKET_ROW
+SCHEMAS["BENCH_batching.json"][("mode", "bucketed")] = _BUCKET_ROW
+
+
+def _required_keys(fname: str, row: dict):
+    """Required keys for this row, or None when the file is unknown."""
+    schema = SCHEMAS.get(fname)
+    if schema is None:
+        return None
+    if None in schema:
+        return schema[None]
+    for (col, val), keys in schema.items():
+        if val is not None and row.get(col) == val:
+            return keys
+    for (col, val), keys in schema.items():
+        if val is None and col in row:
+            return keys
+    return ()        # no kind matched: reported by the caller
+
+
+def _bad_numbers(row: dict, prefix=""):
+    """Dotted paths of every non-finite numeric value in the row."""
+    bad = []
+    for k, v in row.items():
+        if isinstance(v, bool):
+            continue
+        if isinstance(v, (int, float)):
+            if not math.isfinite(v):
+                bad.append(f"{prefix}{k}={v}")
+        elif isinstance(v, dict):
+            bad.extend(_bad_numbers(v, f"{prefix}{k}."))
+        elif isinstance(v, list):
+            bad.extend(f"{prefix}{k}[{i}]={x}" for i, x in enumerate(v)
+                       if isinstance(x, (int, float))
+                       and not isinstance(x, bool)
+                       and not math.isfinite(x))
+    return bad
+
+
+def check_artifact(path: str):
+    fname = os.path.basename(path)
+    failures = []
+    try:
+        with open(path) as f:
+            rows = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{fname}: does not parse: {e}"]
+    if not isinstance(rows, list) or not rows:
+        return [f"{fname}: expected a non-empty list of rows, "
+                f"got {type(rows).__name__}"]
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            failures.append(f"{fname}[{i}]: row is "
+                            f"{type(row).__name__}, not an object")
+            continue
+        required = _required_keys(fname, row)
+        if required == ():
+            failures.append(
+                f"{fname}[{i}]: row matches no known kind for this "
+                f"artifact (discriminators: "
+                f"policy={row.get('policy')!r} mode={row.get('mode')!r})")
+        elif required:
+            missing = [k for k in required if k not in row]
+            if missing:
+                failures.append(
+                    f"{fname}[{i}]: missing keys {missing}")
+        failures.extend(f"{fname}[{i}]: non-finite value {b}"
+                        for b in _bad_numbers(row))
+    return failures
+
+
+def main() -> int:
+    paths = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
+    assert paths, "bench-check found no BENCH_*.json artifacts"
+    failures = []
+    n_rows = 0
+    for p in paths:
+        failures.extend(check_artifact(p))
+        try:
+            with open(p) as f:
+                n_rows += len(json.load(f))
+        except Exception:
+            pass
+    if failures:
+        print("BENCH CHECK FAILED:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print(f"bench check OK ({len(paths)} artifacts, {n_rows} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

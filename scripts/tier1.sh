@@ -11,10 +11,12 @@
 # bit-identical to its solo run —
 # the page smoke (scripts/page_smoke.py): paged-KV allocator invariant
 # fuzz plus an undersized-pool run where exhaustion queues admissions
-# instead of crashing — and the docs-check gate
+# instead of crashing — the docs-check gate
 # (scripts/docs_check.py): every `path.py::symbol` reference in
 # docs/*.md + README.md must resolve against the source tree, so
-# renamed symbols fail fast.
+# renamed symbols fail fast — and the bench-check gate
+# (scripts/bench_check.py): every committed BENCH_*.json artifact must
+# parse, carry its expected columns and hold only finite numbers.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -28,4 +30,5 @@ python scripts/serve_smoke.py
 python scripts/batch_smoke.py
 python scripts/page_smoke.py
 python scripts/docs_check.py
+python scripts/bench_check.py
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest "${ARGS[@]}" "$@"

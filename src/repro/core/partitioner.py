@@ -24,11 +24,11 @@ import numpy as np
 from repro.core.profiler import (Hardware, LayerProfile,
                                  comm_time_activations, comm_time_tp_allreduce,
                                  comm_time_weight_sync, profile_analytic)
-from repro.core.schedule import (SCHEDULES, MemoryModel,
+from repro.core.schedule import (SCHEDULES, MemoryModel, bucket_lattice,
                                  fit_serving_microbatches, make_schedule,
                                  make_serving_schedule, paper_noam,
-                                 plan_kwargs_for_schedule, serve_ttft,
-                                 weighted_round_time)
+                                 pick_bucket, plan_kwargs_for_schedule,
+                                 serve_ttft, weighted_round_time)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -315,6 +315,9 @@ class PlanChoice:
     feasible: bool                 # memory.total_bytes <= hbm_bytes
     workload: str = "train"        # train | prefill | decode
     occupancy: float = 1.0         # expected live-slot fraction (decode)
+    # the bucket-lattice variant the round_time was scored on: the
+    # smallest compacted size >= occupancy·R slots (R at occupancy 1)
+    bucket: Optional[int] = None
 
     @property
     def per_microbatch(self) -> float:
@@ -420,19 +423,21 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
 
     ``occupancy`` (decode only, 0 < occupancy <= 1) prices a
     continuously batched server at its *expected* live-slot fraction
-    instead of assuming a full batch: the round is scored over the
-    schedule's liveness-masked tables
-    (:meth:`~repro.core.schedule.ServingSchedule.with_live_slots`, the
-    first ``round(occupancy · R)`` slots live — drained ticks cost
-    nothing), while the MemoryModel keeps budgeting the full-R capacity
-    the engine actually allocates.  Like the rest of the objective this
-    is the *analytic schedule walk*, not the lockstep executor's
-    wall-clock: the jitted decode step runs every tick of the static
-    full-R tables regardless of liveness, so the masked score is the
-    bound an occupancy-aware executor could reach (ending the scan at
-    the last live exit), useful for comparing how candidates' table
-    shapes degrade under partial batches — not a measurement of the
-    shipped engine.  At occupancy 1 the behaviour is unchanged.
+    instead of assuming a full batch: the expected live count
+    ``ceil(occupancy · R)`` is ceiled to the engine's bucket lattice
+    (:func:`~repro.core.schedule.pick_bucket` over
+    :func:`~repro.core.schedule.bucket_lattice`) and the round is
+    scored over that bucket's compacted tables
+    (:meth:`~repro.core.schedule.ServingSchedule.bucketed` — provably
+    the full-R tables with dead slots deleted), while the MemoryModel
+    keeps budgeting the full-R capacity the engine actually allocates.
+    This is the round the liveness-aware executor *executes*, not an
+    analytic bound: ``build_serving(buckets=True)`` runs exactly the
+    bucket-sized program the score walks (serving/engine.py), including
+    the slot-ceiling — a 25%-occupancy batch on an R = 8 lattice runs
+    the 2-slot bucket, not a hypothetical 2.0-slot table.  The chosen
+    bucket is recorded on :attr:`PlanChoice.bucket`.  At occupancy 1
+    the behaviour is unchanged (the lattice tops out at R).
 
     ``page_size`` (serving only) prices the paged KV cache the engine
     allocates under ``build_serving(page_size=...)``: full-length
@@ -546,16 +551,22 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
                         data_replicas=data_replicas)
                 tf, tb = phases[key]
                 scored = sched
+                bucket = None
                 if serving and occupancy < 1.0:
-                    n_live = max(1, int(round(occupancy * R)))
-                    scored = sched.with_live_slots(range(n_live))
+                    # price what the bucketed executor executes: the
+                    # smallest compacted variant covering the expected
+                    # live count, not a fractional-slot analytic bound
+                    n_live = max(1, math.ceil(occupancy * R))
+                    bucket = pick_bucket(n_live, bucket_lattice(R))
+                    scored = sched.bucketed(bucket)
                 rt, bubble = weighted_round_time(scored, tf, tb)
                 if workload == "prefill":
                     rt = serve_ttft(scored, tf)
                 cands.append(PlanChoice(plan, part, rt, bubble, mm, budget,
                                         feasible=mm.fits(budget),
                                         workload=workload,
-                                        occupancy=occupancy))
+                                        occupancy=occupancy,
+                                        bucket=bucket))
     assert cands, f"no structurally valid plan for model_axis={model_axis}"
 
     def rank(c: PlanChoice):

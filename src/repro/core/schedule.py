@@ -1104,6 +1104,47 @@ class ServingSchedule(PipelineSchedule):
                                                           for m in live)))
         return dataclasses.replace(self, live_slots=slots)
 
+    def bucketed(self, n_live: int) -> "ServingSchedule":
+        """The compacted ``n_live``-slot variant of this schedule.
+
+        Where :meth:`with_live_slots` *masks* (dead slots' rows blank to
+        bubbles but the round keeps full-R ticks), ``bucketed``
+        *deletes*: the returned schedule is this one with
+        ``n_microbatches = n_live``, so its round is the short
+        ``n_live + S·v − ...`` tick program the liveness-aware engine
+        actually executes for a compacted batch whose live slots occupy
+        the prefix ``[0, n_live)``.
+
+        Proof that deletion ≡ mask-then-truncate (checked here, every
+        call): serve timing ``t = s + g·v·S + j·S + o`` depends only on
+        a slot's own index m = g·S + o, never on R, so slot m < n_live
+        keeps identical (tick, stage, chunk) placement in both tables.
+        We assert the bucket's fwd/exit tables equal the full-R
+        ``with_live_slots(range(n_live))`` tables truncated to the
+        bucket's ``n_ticks`` — and that the masked tail past that is
+        pure bubble — then run the bucket's own ``validate()``.
+        """
+        R = self.n_microbatches
+        if not 1 <= n_live <= R:
+            raise ValueError(f"bucket size {n_live} outside [1, R={R}]")
+        bucket = dataclasses.replace(self, n_microbatches=n_live,
+                                     live_slots=None)
+        bucket.validate()
+        masked = dataclasses.replace(self, live_slots=None).with_live_slots(
+            range(n_live))
+        bt, mt = bucket.tables(), masked.tables()
+        Tb = bucket.n_ticks
+        assert (bt.fwd == mt.fwd[:Tb]).all(), (
+            "bucketed fwd table is not the masked full-R table with dead "
+            "slots deleted")
+        assert (bt.exit_mb == mt.exit_mb[:Tb]).all(), (
+            "bucketed exit table diverges from the masked full-R exits")
+        assert (mt.fwd[Tb:, :, F_MB] < 0).all() and (
+            mt.exit_mb[Tb:] < 0).all(), (
+            "masked full-R table still schedules work past the bucket's "
+            "last tick — deletion would drop it")
+        return bucket
+
     @property
     def n_ticks(self) -> int:
         S, R, v = self.n_stages, self.n_microbatches, self.virtual_stages
@@ -1313,6 +1354,41 @@ def serve_ttft(sched: PipelineSchedule, t_fwd=1.0) -> float:
     exits = np.flatnonzero(tabs.exit_mb >= 0)
     assert exits.size, "schedule has no exit ticks"
     return float(f_phase[: int(exits[-1]) + 1].sum())
+
+
+def bucket_lattice(R: int) -> Tuple[int, ...]:
+    """The compacted-variant sizes the liveness-aware engine compiles.
+
+    Powers of two up to R, plus R itself: {1, 2, 4, …, R}.  Log₂(R)+1
+    programs cover every occupancy within 2x of the ideal slot count —
+    the lattice-of-static-variants trick (compile few, select per
+    step), bounded so lazy per-bucket jit stays cheap.  R = 6 →
+    (1, 2, 4, 6).
+    """
+    if R < 1:
+        raise ValueError(f"R={R} must be >= 1")
+    lat = []
+    b = 1
+    while b < R:
+        lat.append(b)
+        b *= 2
+    lat.append(R)
+    return tuple(lat)
+
+
+def pick_bucket(n_live: int, lattice: Iterable[int]) -> int:
+    """Smallest lattice entry that fits ``n_live`` live slots.
+
+    An empty batch (n_live = 0) still runs the smallest bucket — the
+    engine's decode is never a no-op program.  ``lattice`` must contain
+    a bucket ≥ n_live (it always does when built by
+    :func:`bucket_lattice` with R ≥ n_live).
+    """
+    fits = sorted(b for b in lattice if b >= max(1, int(n_live)))
+    if not fits:
+        raise ValueError(
+            f"no bucket in {sorted(lattice)} fits {n_live} live slots")
+    return fits[0]
 
 
 def fit_serving_microbatches(decode_microbatches: int, global_batch: int,

@@ -75,7 +75,8 @@ def _fit_microbatches(plan: ParallelismPlan, global_batch: int,
 def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
                plan: Optional[ParallelismPlan] = None,
                optimizer=None, serve_op: str = "auto",
-               page_size: int = 0) -> Cell:
+               page_size: int = 0,
+               bucket: Optional[int] = None) -> Cell:
     """Build one (arch × shape × mesh) cell.
 
     ``serve_op`` selects the serving step lowered for prefill shapes:
@@ -88,8 +89,16 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
     ``page_size`` (serving shapes only) builds the session with the
     paged KV cache, so the dry-run lowers and sharding-checks the page
     pool + page-table step signatures the paged engine runs.
+
+    ``bucket`` (decode shapes only) builds the session with the
+    liveness-aware bucket lattice and lowers the compacted
+    ``bucket``-slot decode variant (``EngineSession.decode_step_for``)
+    instead of the full-R step — same state/token signature, shorter
+    table scan — so bucketed programs get the same dry-run proof.
     """
     assert serve_op in ("auto", "admit"), serve_op
+    assert bucket is None or configs.SHAPES[shape_name].kind in (
+        "decode", "long_decode"), "bucket= lowers a decode variant"
     shape_kind = configs.SHAPES[shape_name].kind
     assert page_size == 0 or shape_kind != "train", (
         "page_size pages the serving KV cache; training shapes have none")
@@ -128,7 +137,8 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
     session = build_serving(spec, plan, dmesh, cache_len=shape.seq_len,
                             global_batch=shape.global_batch,
                             prefill_len=prefill_len, sp=sp,
-                            page_size=page_size)
+                            page_size=page_size,
+                            buckets=bucket is not None)
     state_shape = jax.eval_shape(session.init_state, jax.random.key(0))
     state_sds = _sds(state_shape, session.state_shardings())
     state_sh = session.state_shardings()
@@ -164,7 +174,14 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
                                    sharding=tok_sh)
     in_sh = (state_sh, tok_sh)
     out_sh = (state_sh, None)
-    return Cell(arch, shape, plan, mesh, dmesh, session.decode_step,
+    step = session.decode_step
+    if bucket is not None:
+        if bucket not in session.buckets:
+            raise ValueError(f"bucket {bucket} not in the lattice "
+                             f"{session.buckets} for R="
+                             f"{session.sched.n_microbatches}")
+        step = session.decode_step_for(bucket)
+    return Cell(arch, shape, plan, mesh, dmesh, step,
                 (state_sds, tok_sds), in_sh, out_sh, spec, session)
 
 

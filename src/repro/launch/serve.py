@@ -44,14 +44,49 @@ from repro.parallel.mesh import split_model_axis   # noqa: E402
 from repro.serving.engine import build_serving     # noqa: E402
 
 
+_ARRIVALS_HELP = ("accepted --arrivals formats: 't0,t1,...' "
+                  "(comma-separated non-negative integer arrival steps, "
+                  "one request each) or 'poisson:RATE:N' (N requests, "
+                  "exponential inter-arrival at RATE requests/step, "
+                  "e.g. 'poisson:0.5:32')")
+
+
 def parse_arrivals(spec_str: str, seed: int = 0):
-    """'t0,t1,...' explicit steps, or 'poisson:RATE:N' (RATE req/step)."""
+    """'t0,t1,...' explicit steps, or 'poisson:RATE:N' (RATE req/step).
+
+    A malformed spec raises :class:`ValueError` naming the accepted
+    formats — never a bare unpack/parse traceback.
+    """
     if spec_str.startswith("poisson:"):
-        _, rate, n = spec_str.split(":")
+        parts = spec_str.split(":")
+        if len(parts) != 3:
+            raise ValueError(
+                f"malformed arrivals spec {spec_str!r}: poisson traces "
+                f"need both a rate and a count; {_ARRIVALS_HELP}")
+        try:
+            rate, n = float(parts[1]), int(parts[2])
+        except ValueError:
+            raise ValueError(
+                f"malformed arrivals spec {spec_str!r}: RATE must be a "
+                f"number and N an integer; {_ARRIVALS_HELP}") from None
+        if rate <= 0 or n <= 0:
+            raise ValueError(
+                f"malformed arrivals spec {spec_str!r}: RATE and N must "
+                f"be positive; {_ARRIVALS_HELP}")
         rng = np.random.default_rng(seed)
-        gaps = rng.exponential(scale=1.0 / float(rate), size=int(n))
+        gaps = rng.exponential(scale=1.0 / rate, size=n)
         return np.floor(np.cumsum(gaps)).astype(int).tolist()
-    return [int(t) for t in spec_str.split(",")]
+    try:
+        steps = [int(t) for t in spec_str.split(",")]
+    except ValueError:
+        raise ValueError(
+            f"malformed arrivals spec {spec_str!r}: non-numeric arrival "
+            f"step; {_ARRIVALS_HELP}") from None
+    if any(t < 0 for t in steps):
+        raise ValueError(
+            f"malformed arrivals spec {spec_str!r}: arrival steps must "
+            f"be non-negative; {_ARRIVALS_HELP}")
+    return steps
 
 
 def serve_arrivals(session, spec, args):
@@ -81,6 +116,11 @@ def serve_arrivals(session, spec, args):
           f"latency p50 {s['p50_per_token_latency_s'] * 1e3:.1f} ms / "
           f"p99 {s['p99_per_token_latency_s'] * 1e3:.1f} ms; mean TTFT "
           f"{s['mean_ttft_s'] * 1e3:.1f} ms")
+    if getattr(session, "buckets", None) and session._bucket_log:
+        from collections import Counter
+        hist = Counter(session._bucket_log)
+        print("  bucket rounds: " + ", ".join(
+            f"R_b={b} x{hist[b]}" for b in sorted(hist)))
     for r in report.requests[:8]:
         print(f"  request {r.rid}: arrival step {r.arrival}, admitted "
               f"{r.step_admitted}, done {r.step_done}, "
@@ -101,6 +141,11 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=0,
                     help="paged KV cache page size in tokens (0 = dense; "
                          "must divide --cache-len)")
+    ap.add_argument("--buckets", action="store_true",
+                    help="liveness-aware bucketed execution: compile a "
+                         "lattice of compacted decode variants and run "
+                         "the smallest bucket covering the live slots "
+                         "(bit-exact vs the full-R path)")
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--host-devices", type=int, default=None)
     ap.add_argument("--schedule", type=str, default=None,
@@ -145,7 +190,8 @@ def main(argv=None):
                             global_batch=batch, prefill_len=prefill,
                             compute_dtype=(jnp.float32 if args.smoke
                                            else jnp.bfloat16),
-                            page_size=args.page_size)
+                            page_size=args.page_size,
+                            buckets=args.buckets)
     print(f"serve schedule: {session.sched.name} "
           f"(S={session.sched.n_stages} R={session.sched.n_microbatches}"
           f"{f' v={session.sched.virtual_stages}' if session.sched.virtual_stages > 1 else ''}"
@@ -155,6 +201,9 @@ def main(argv=None):
         print(f"paged KV: page_size={pg['page_size']} "
               f"max_pages/slot={pg['max_pages']} "
               f"pool_pages={pg['pool_pages']}")
+    if session.buckets:
+        print(f"bucket lattice: {session.buckets} (liveness-aware "
+              "compacted decode variants, jitted lazily per bucket)")
 
     if args.arrivals:
         return serve_arrivals(session, spec, args)

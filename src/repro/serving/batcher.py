@@ -154,6 +154,23 @@ class PageAllocator:
             self.counts[slot] += 1
         self.tokens[slot] = max(int(self.tokens[slot]), int(n_tokens))
 
+    def permute_slots(self, perm) -> None:
+        """Reorder the slot rows: new slot i takes old slot perm[i].
+
+        The host half of ``EngineSession.compact_slots``: page *ids*
+        (and therefore the pool and free list) are untouched — a slot's
+        pages travel with its table row, so compaction never moves or
+        re-owns a page, it only renames which slot index points at it.
+        """
+        perm = np.asarray(perm, np.int64).reshape(-1)
+        if sorted(perm.tolist()) != list(range(self.n_slots)):
+            raise ValueError(
+                f"perm must be a permutation of range({self.n_slots}), "
+                f"got {perm.tolist()}")
+        self.tables = self.tables[perm].copy()
+        self.counts = self.counts[perm].copy()
+        self.tokens = self.tokens[perm].copy()
+
     def release_slot(self, slot: int) -> None:
         """Return the slot's pages to the pool (no-op on an empty slot)."""
         n = int(self.counts[slot])
@@ -208,6 +225,9 @@ class Request:
 
     # -- lifecycle (scheduler-owned) --------------------------------------
     state: str = "waiting"         # waiting|prefilling|decoding|finished
+    # finished early because its slot ran out of KV room mid-decode
+    # (CacheExhausted backpressure) — tokens holds what was generated
+    truncated: bool = False
     tokens: List[int] = dataclasses.field(default_factory=list)
     step_admitted: Optional[int] = None
     step_first: Optional[int] = None
@@ -489,12 +509,73 @@ class ContinuousBatchingSession:
                     req._record(first[slot.index, lane], self.steps, now,
                                 self.eos_id)
 
+    # ---- slot compaction (liveness-aware bucketed sessions) ---------------
+
+    def _compact(self) -> None:
+        """Move occupied slots to the front (stable order) so the live
+        set forms a bucket prefix.
+
+        Only runs against a bucketed session (``session.buckets``):
+        ``compact_slots`` permutes the device state, host mirrors and
+        page-table rows (no KV bytes move in paged mode), and this
+        scheduler permutes its request lists to match.  Admission fills
+        free slots in index order, so once compacted the occupied
+        prefix only ever grows contiguously — the engine's bucket
+        picker sees live slots packed in ``[0, n_live)``.
+        """
+        if getattr(self.session, "buckets", None) is None:
+            return
+        occ = [s.index for s in self.slots if not s.free]
+        perm = occ + [s.index for s in self.slots if s.free]
+        if perm == list(range(self.R)):
+            return
+        self.session.compact_slots(perm)
+        old = {s.index: s.requests for s in self.slots}
+        for new_i, old_i in enumerate(perm):
+            self.slots[new_i].requests = old[old_i]
+
+    def _evict_exhausted(self, slot_idx, now: float) -> None:
+        """Backpressure for a :class:`CacheExhausted` decode.
+
+        The named slots have no KV room left (paged capacity or page
+        pool dry): their requests finish *truncated* — keeping the
+        tokens generated so far — the slots reset (returning their
+        pages), and the batch compacts so the retried decode runs a
+        smaller bucket.  Queued admissions then reuse the freed room on
+        the next step, matching the allocator's pool-dry admission
+        behavior.
+        """
+        mask = np.zeros((self.R,), np.int32)
+        for i in slot_idx:
+            slot = self.slots[int(i)]
+            for r in slot.requests:
+                if r is not None and not r.finished:
+                    r.state = "finished"
+                    r.truncated = True
+                    r.t_done, r.step_done = now, self.steps
+            slot.clear()
+            mask[int(i)] = 1
+        self.session.reset_slots(mask)
+        self._compact()
+
+    def _live_lanes(self):
+        return [(s, lane, r) for s in self.slots
+                for lane, r in s.live_lanes()]
+
+    def _decode_round(self, live) -> np.ndarray:
+        tokens = np.zeros((self.R, self.rows), np.int32)
+        for s, lane, r in live:
+            tokens[s.index, lane] = r.tokens[-1]
+        nxt = self.session.decode(tokens.reshape(-1))
+        return np.asarray(nxt).reshape(self.R, self.rows)
+
     # ---- one scheduler step ----------------------------------------------
 
     def step(self) -> bool:
         """Run one scheduler step; returns True while work remains."""
         now = self.clock()
-        # 1) evict slots drained last step: free cache rows + liveness
+        # 1) evict slots drained last step: free cache rows + liveness;
+        #    on a bucketed session, compact so live slots stay a prefix
         drained = [s for s in self.slots if s.drained]
         if drained:
             mask = np.zeros((self.R,), np.int32)
@@ -502,23 +583,31 @@ class ContinuousBatchingSession:
                 mask[s.index] = 1
                 s.clear()
             self.session.reset_slots(mask)
+            self._compact()
         # 2) admission
         self.queue.absorb_arrivals(self.steps, now)
         if self.queue.n_ready:
             self._admit()
-        # 3) decode every live lane one token
-        live = [(s, lane, r) for s in self.slots
-                for lane, r in s.live_lanes()]
+        # 3) decode every live lane one token; a CacheExhausted decode
+        #    evicts the blocked slots (truncating their requests) and
+        #    retries once — backpressure instead of a crashed serve loop
+        live = self._live_lanes()
         if live:
-            tokens = np.zeros((self.R, self.rows), np.int32)
-            for s, lane, r in live:
-                tokens[s.index, lane] = r.tokens[-1]
-            nxt = self.session.decode(tokens.reshape(-1))
-            nxt = np.asarray(nxt).reshape(self.R, self.rows)
-            self.decode_rounds += 1
-            now = self.clock()
-            for s, lane, r in live:
-                r._record(nxt[s.index, lane], self.steps, now, self.eos_id)
+            try:
+                nxt = self._decode_round(live)
+            except RuntimeError as e:
+                from repro.serving.engine import CacheExhausted
+                if not isinstance(e, CacheExhausted):
+                    raise
+                self._evict_exhausted(e.slots, self.clock())
+                live = self._live_lanes()
+                nxt = self._decode_round(live) if live else None
+            if live:
+                self.decode_rounds += 1
+                now = self.clock()
+                for s, lane, r in live:
+                    r._record(nxt[s.index, lane], self.steps, now,
+                              self.eos_id)
         self.steps += 1
         return bool(len(self.queue) or live
                     or any(not s.free for s in self.slots))

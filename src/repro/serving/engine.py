@@ -51,17 +51,35 @@ from jax.sharding import PartitionSpec as P
 from repro.parallel.compat import shard_map
 
 from repro.core.schedule import (F_CHUNK, F_FROM_EMBEDS, F_MB,
-                                 ServingSchedule, default_cache_lens,
+                                 ServingSchedule, bucket_lattice,
+                                 default_cache_lens,
                                  fit_serving_microbatches,
-                                 make_serving_schedule)
+                                 make_serving_schedule, pick_bucket)
 from repro.models import lm_head
 from repro.models import spec as spec_lib
 from repro.models.init import init_params
 from repro.models.stage import encoder_fwd, init_stage_state, make_statics, stage_fwd
 from repro.parallel.mesh import AXIS_STAGE, AXIS_TENSOR, ParallelismPlan, data_axes
 
-__all__ = ["EngineSession", "build_serving", "default_cache_lens",
-           "fit_decode_microbatches"]
+__all__ = ["CacheExhausted", "EngineSession", "build_serving",
+           "default_cache_lens", "fit_decode_microbatches"]
+
+
+class CacheExhausted(RuntimeError):
+    """A decode step cannot proceed: the named slots are out of KV room.
+
+    Raised by :meth:`EngineSession.decode` *before* any device step or
+    allocator mutation when a live slot hits the paged capacity
+    (``pos >= cache_len``) or the page pool cannot cover this step's
+    boundary crossings.  ``slots`` names the blocked slot indices so the
+    continuous batcher can evict-or-queue exactly those (backpressure,
+    matching :class:`~repro.serving.batcher.PageAllocator`'s pool-dry
+    admission behavior) instead of crashing the serve loop.
+    """
+
+    def __init__(self, message: str, slots=()):
+        super().__init__(message)
+        self.slots = tuple(int(s) for s in slots)
 
 
 def fit_decode_microbatches(plan: ParallelismPlan, global_batch: int,
@@ -109,6 +127,14 @@ class EngineSession:
     prefill_specs: Optional[Dict[str, jax.ShapeDtypeStruct]]
     reset_step: Callable           # (state, slot_mask) -> state
     admit_step: Optional[Callable] = None  # (state, batch, mask) -> (st, tok)
+    # slot compaction: (state, perm) -> state with new slot i = old perm[i]
+    compact_step: Optional[Callable] = None
+    # liveness-aware bucketing (build_serving(buckets=True)): the lattice
+    # of compacted variants, plus factories returning the un-jitted
+    # decode/admit step for one bucket (jitted lazily per bucket)
+    buckets: Optional[tuple] = None
+    decode_step_for: Optional[Callable] = None   # (R_b) -> step fn
+    admit_step_for: Optional[Callable] = None    # (R_b) -> step fn
     state: Any = None
     # paged-KV config ({"page_size", "max_pages", "pool_pages",
     # "cache_len"}) — None for the dense cache layout
@@ -117,10 +143,14 @@ class EngineSession:
     # the model carries recurrent (mamba/rwkv) state, whose prefill
     # would absorb the padding tokens.
     ragged_ok: bool = True
-    _jit: Dict[str, Callable] = dataclasses.field(default_factory=dict)
+    _jit: Dict[Any, Callable] = dataclasses.field(default_factory=dict)
     _alloc: Any = None             # host-side PageAllocator (paged mode)
-    _pos: Any = None               # host mirrors of pos/live for paging
+    # host mirrors of state["pos"]/state["live"] — maintained in EVERY
+    # mode (the bucket picker and the paged allocator both read them;
+    # tests/test_paged.py locks them to the device values)
+    _pos: Any = None
     _live: Any = None
+    _bucket_log: list = dataclasses.field(default_factory=list)
 
     def state_shardings(self):
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
@@ -134,15 +164,35 @@ class EngineSession:
                 self.init_state, out_shardings=self.state_shardings())
         self.state = self._jit["init"](
             key if key is not None else jax.random.key(0))
+        R = self.sched.n_microbatches
+        self._pos = np.zeros(R, np.int64)
+        self._live = np.ones(R, np.int64)
+        self._bucket_log = []
         if self.paged is not None:
             from repro.serving.batcher import PageAllocator
-            R = self.sched.n_microbatches
             self._alloc = PageAllocator(self.paged["pool_pages"], R,
                                         self.paged["max_pages"],
                                         self.paged["page_size"])
-            self._pos = np.zeros(R, np.int64)
-            self._live = np.ones(R, np.int64)
         return self
+
+    # ---- liveness-aware bucket selection ---------------------------------
+
+    def _resolve_bucket(self, bucket, n_min=None):
+        """The compacted variant to run: explicit, engine-picked, or R."""
+        R = self.sched.n_microbatches
+        if self.buckets is None:
+            if bucket not in (None, R):
+                raise ValueError(
+                    f"bucket={bucket} on a session built without "
+                    "buckets=True — pass buckets=True to build_serving")
+            return R
+        if bucket is None:
+            n = int(self._live.sum()) if n_min is None else int(n_min)
+            return pick_bucket(n, self.buckets)
+        if bucket not in self.buckets:
+            raise ValueError(
+                f"bucket {bucket} is not in the lattice {self.buckets}")
+        return int(bucket)
 
     # ---- paged-KV host-side hooks (allocator lives in serving/batcher) ----
 
@@ -167,13 +217,13 @@ class EngineSession:
                 "prefill — decode-only sessions can only decode()")
         if self.state is None:
             self.start()
+        lens, _ = self._slot_lens(batch)
         if self.paged is not None:
-            lens, _ = self._slot_lens(batch)
             for r in range(self.sched.n_microbatches):
                 self._alloc.alloc_slot(r, int(lens[r]))
             self._push_tables()
-            self._pos[:] = lens
-            self._live[:] = 1
+        self._pos[:] = lens
+        self._live[:] = 1
         if "prefill" not in self._jit:
             sh = self.state_shardings()
             self._jit["prefill"] = jax.jit(
@@ -182,30 +232,69 @@ class EngineSession:
         self.state, tokens = self._jit["prefill"](self.state, batch)
         return tokens
 
-    def decode(self, tokens):
-        """One pipelined decode step; returns the next token per row."""
+    def decode(self, tokens, bucket=None):
+        """One pipelined decode step; returns the next token per row.
+
+        On a bucketed session (``build_serving(buckets=True)``) the step
+        runs the smallest compacted variant covering the live slots —
+        ``bucket`` overrides, ``None`` lets the engine pick from the
+        liveness mirror.  Live slots must sit in the bucket prefix
+        (the batcher's ``compact_slots`` guarantees it); the returned
+        token vector keeps the full ``global_batch`` width, rows of
+        slots outside the bucket are garbage (they are dead).
+        """
         if self.state is None:
             self.start()
+        R = self.sched.n_microbatches
+        b = self._resolve_bucket(bucket)
+        if b < R and int(self._live[b:].sum()):
+            raise ValueError(
+                f"decode bucket {b} excludes live slots "
+                f"{(np.flatnonzero(self._live[b:]) + b).tolist()}; "
+                "compact_slots first")
         if self.paged is not None:
             # allocate on page-boundary crossing: this step writes the
-            # key at position pos, which must land in an owned page
+            # key at position pos, which must land in an owned page.
+            # Every blocker is found BEFORE any allocator mutation, so a
+            # CacheExhausted leaves the session retryable after the
+            # batcher evicts the named slots.
             cap = self.paged["cache_len"]
-            for r in np.flatnonzero(self._live):
-                if self._pos[r] >= cap:
-                    raise RuntimeError(
-                        f"slot {r} is at position {int(self._pos[r])} — "
-                        f"paged KV capacity is cache_len={cap} tokens; "
-                        "evict or raise cache_len")
+            live_r = np.flatnonzero(self._live)
+            over = [int(r) for r in live_r if self._pos[r] >= cap]
+            if over:
+                raise CacheExhausted(
+                    f"slots {over} are at paged KV capacity "
+                    f"(cache_len={cap} tokens); evict or raise cache_len",
+                    slots=over)
+            free = self._alloc.free_pages
+            dry = []
+            for r in live_r:
+                need = (self._alloc.pages_needed(int(self._pos[r]) + 1)
+                        - int(self._alloc.counts[r]))
+                if need > free:
+                    dry.append(int(r))
+                else:
+                    free -= need
+            if dry:
+                raise CacheExhausted(
+                    f"page pool exhausted growing slots {dry} "
+                    f"({self._alloc.free_pages} pages free); evict a slot "
+                    "or size pool_pages for the worst-case decode length",
+                    slots=dry)
+            for r in live_r:
                 self._alloc.extend_slot(int(r), int(self._pos[r]) + 1)
             self._push_tables()
-        if "decode" not in self._jit:
+        key = ("decode", b)
+        if key not in self._jit:
             sh = self.state_shardings()
-            self._jit["decode"] = jax.jit(
-                self.decode_step, in_shardings=(sh, None),
+            fn = self.decode_step if b == R else self.decode_step_for(b)
+            self._jit[key] = jax.jit(
+                fn, in_shardings=(sh, None),
                 out_shardings=(sh, None), donate_argnums=0)
-        self.state, tokens = self._jit["decode"](self.state, tokens)
-        if self.paged is not None:
-            self._pos += self._live
+        self.state, tokens = self._jit[key](self.state, tokens)
+        self._pos += self._live
+        if self.buckets is not None:
+            self._bucket_log.append(b)
         return tokens
 
     # ---- continuous-batching slot ops (serving/batcher.py drives these) ---
@@ -214,13 +303,13 @@ class EngineSession:
         """Free the masked microbatch slots: zero cache rows, pos, live."""
         if self.state is None:
             self.start()
+        m = np.asarray(slot_mask) > 0
         if self.paged is not None:
-            for r in np.flatnonzero(np.asarray(slot_mask)):
+            for r in np.flatnonzero(m):
                 self._alloc.release_slot(int(r))
             self._push_tables()
-            m = np.asarray(slot_mask) > 0
-            self._pos[m] = 0
-            self._live[m] = 0
+        self._pos[m] = 0
+        self._live[m] = 0
         if "reset" not in self._jit:
             sh = self.state_shardings()
             self._jit["reset"] = jax.jit(
@@ -230,13 +319,16 @@ class EngineSession:
                                         jnp.asarray(slot_mask, jnp.int32))
         return self
 
-    def write_prefill_into_slots(self, batch, slot_mask):
+    def write_prefill_into_slots(self, batch, slot_mask, bucket=None):
         """Masked prefill: admit new requests into the masked slots.
 
         Live slots' recurrent state is untouched (every cache write is
         gated per slot), so admission needs no global flush.  Returns
         the first token of every slot row; only the admitted slots'
-        entries are meaningful.
+        entries are meaningful.  On a bucketed session the pass runs
+        the smallest compacted variant covering both the live slots and
+        the admitted ones (which must therefore sit in a bucket prefix
+        — the batcher admits into the lowest free slots).
         """
         if self.admit_step is None:
             raise ValueError(
@@ -252,32 +344,85 @@ class EngineSession:
                 "supported for models with recurrent (mamba/rwkv) "
                 "state: prefill would absorb the padding tokens; pad "
                 "prompts to the session prefill_len instead")
+        mask = np.asarray(slot_mask) > 0
+        R = self.sched.n_microbatches
+        occupied = mask | (self._live > 0)
+        n_min = (int(np.flatnonzero(occupied)[-1]) + 1 if occupied.any()
+                 else 1)
+        b = self._resolve_bucket(bucket, n_min=n_min)
+        if b < R and occupied[b:].any():
+            raise ValueError(
+                f"admit bucket {b} excludes occupied slots "
+                f"{(np.flatnonzero(occupied[b:]) + b).tolist()}; "
+                "compact_slots or admit into lower slots first")
+        lens, _ = self._slot_lens(batch)
         if self.paged is not None:
-            lens, text_len = self._slot_lens(batch)
-            mask = np.asarray(slot_mask) > 0
             for r in np.flatnonzero(mask):
                 self._alloc.alloc_slot(int(r), int(lens[r]))
             self._push_tables()
-            self._pos[mask] = lens[mask]
-            self._live[mask] = 1
-        if "admit" not in self._jit:
+        self._pos[mask] = lens[mask]
+        self._live[mask] = 1
+        key = ("admit", b)
+        if key not in self._jit:
             sh = self.state_shardings()
             # donate like decode/reset: admission runs on every freed
             # slot, and a non-donated pass would transiently double the
             # params + full-R cache footprint mid-serving
-            self._jit["admit"] = jax.jit(
-                self.admit_step, in_shardings=(sh, None, None),
+            fn = self.admit_step if b == R else self.admit_step_for(b)
+            self._jit[key] = jax.jit(
+                fn, in_shardings=(sh, None, None),
                 out_shardings=(sh, None), donate_argnums=0)
-        self.state, tokens = self._jit["admit"](
+        self.state, tokens = self._jit[key](
             self.state, batch, jnp.asarray(slot_mask, jnp.int32))
+        if self.buckets is not None:
+            self._bucket_log.append(b)
         return tokens
+
+    def compact_slots(self, perm):
+        """Permute the per-slot state: new slot i takes old slot perm[i].
+
+        Pure row permutation of every per-slot axis — cache slot rows,
+        ``pos``, ``live``, the page-table rows and ``enc_out`` — plus
+        the host mirrors and the :class:`PageAllocator`'s rows.  In
+        paged mode **no KV bytes move**: the page pool is global and
+        untouched, only the (R, max_pages) table reorders, which is
+        what makes compaction O(R·max_pages) instead of O(cache bytes)
+        and lets the batcher compact on every eviction.
+        """
+        if self.compact_step is None:
+            raise ValueError("this session was built without a compact "
+                             "step (rebuild with a current build_serving)")
+        if self.state is None:
+            self.start()
+        R = self.sched.n_microbatches
+        perm = np.asarray(perm, np.int64).reshape(-1)
+        if sorted(perm.tolist()) != list(range(R)):
+            raise ValueError(
+                f"perm must be a permutation of range({R}), got "
+                f"{perm.tolist()}")
+        if "compact" not in self._jit:
+            sh = self.state_shardings()
+            self._jit["compact"] = jax.jit(
+                self.compact_step, in_shardings=(sh, None),
+                out_shardings=sh, donate_argnums=0)
+        self.state = self._jit["compact"](self.state,
+                                          jnp.asarray(perm, jnp.int32))
+        self._pos = self._pos[perm]
+        self._live = self._live[perm]
+        if self._alloc is not None:
+            # host allocator rows follow the same permutation; the device
+            # tables were permuted identically by compact_step, so no
+            # _push_tables is needed
+            self._alloc.permute_slots(perm)
+        return self
 
 
 def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                   mesh: Mesh, *, cache_len: int, global_batch: int,
                   prefill_len: int = 0, sp: bool = False,
                   compute_dtype=jnp.bfloat16, page_size: int = 0,
-                  pool_pages: Optional[int] = None) -> EngineSession:
+                  pool_pages: Optional[int] = None,
+                  buckets: bool = False) -> EngineSession:
     """``page_size > 0`` switches full-length attention KV to the
     block-paged layout: a global per-layer page pool
     (n_chunks, pool_pages, rows, page_size, KV, Dh) plus one per-slot
@@ -288,6 +433,16 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
     core/schedule.py::serving_cache_bytes prices the pool, and the
     continuous batcher queues admissions when the pool runs dry.
     Windowed (ring-buffer) layers and recurrent state stay dense.
+
+    ``buckets=True`` turns on liveness-aware bucketed execution: the
+    session carries lazy per-bucket decode/admit variants for every
+    size in ``bucket_lattice(R)`` — each one the SAME program over the
+    same full-R state, scanning only the bucket's (shorter) serve
+    tables — plus a ``compact_slots`` permutation op.  A half-empty
+    batch then pays ``b + S·v − …`` ticks instead of full-R ticks,
+    bit-exact with the full-R path (the bucketed table is provably the
+    masked full-R table with dead slots deleted —
+    ``ServingSchedule.bucketed``).
     """
     S = plan.pp
     if page_size:
@@ -451,8 +606,13 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         return jax.lax.dynamic_index_in_dim(rows, s, 0, keepdims=False)
 
     # ---------------- one pipelined forward pass --------------------------
-    def _pipe_forward(params, cache, pages, embeds_ring, pos, tables, qlen,
-                      enc_ring, slot_mask):
+    # ``ft_tab``/``exit_tab``/``n_ticks_b`` select the table variant: the
+    # full-R serve tables, or a bucketed (compacted) variant whose tables
+    # are the full ones with dead slots deleted — the slot-indexed state
+    # stays full-R shaped either way, a bucket just scans fewer ticks.
+    def _pipe_forward_impl(params, cache, pages, embeds_ring, pos, tables,
+                           qlen, enc_ring, slot_mask, ft_tab, exit_tab,
+                           n_ticks_b):
         """embeds_ring: (R, Bg_rows, qlen, d); returns (h_ring, cache',
         pages').
 
@@ -474,7 +634,7 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
 
         def f_phase(tick, cache, pages, recv_f, h_ring, weights, win, th,
                     embeds, enc_ring, pos, tables, slot_mask):
-            row = gather_row(FT, tick)
+            row = gather_row(ft_tab, tick)
             m = row[F_MB]
             rsafe = jnp.clip(m, 0, R - 1)
             valid = (m >= 0) & (jax.lax.dynamic_index_in_dim(
@@ -561,8 +721,8 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
             # stage-sharded — stages other than the last hold stale rows,
             # never a "replicated" divergent copy)
             s = jax.lax.axis_index(AXIS_STAGE)
-            m_exit = jax.lax.dynamic_index_in_dim(jnp.asarray(EXIT_T), tick,
-                                                  0, keepdims=False)
+            m_exit = jax.lax.dynamic_index_in_dim(jnp.asarray(exit_tab),
+                                                  tick, 0, keepdims=False)
             esafe = jnp.clip(m_exit, 0, R - 1)
             old_h = jax.lax.dynamic_index_in_dim(h_ring[0], esafe, 0,
                                                  keepdims=False)
@@ -603,44 +763,70 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
 
         (cache, pages, _, h_ring), _ = jax.lax.scan(
             body, (cache, pages, recv, h_ring),
-            jnp.arange(sched.n_ticks, dtype=jnp.int32))
+            jnp.arange(n_ticks_b, dtype=jnp.int32))
         # only the output stage's ring shard carries the exits
         return h_ring[S - 1], cache, pages
 
-    # ---------------- decode step ----------------------------------------
-    def decode_step(state, tokens):
-        """tokens: (B_global,) int32; returns (state, next (B_global,)).
+    def _make_pipe_forward(bsched):
+        bt = bsched.tables()
+        ft = np.asarray(bt.fwd)
+        ex = np.asarray(bt.exit_mb)
+        nt = bsched.n_ticks
+        return lambda *a: _pipe_forward_impl(*a, ft, ex, nt)
 
-        Cache writes are gated by the per-slot ``live`` mask and each
-        slot advances its own ``pos``: a free slot (live = 0, as left by
-        ``reset_slots``) computes garbage that is never written, so the
-        continuous batcher can keep decoding the live slots while free
-        slots await admission.  A fully live batch (the one-shot
-        sessions: ``init_state`` starts all-live) behaves exactly as the
-        scalar-position engine did.
+    _pipe_forward = _make_pipe_forward(sched)
+
+    # ---------------- decode step ----------------------------------------
+    def _make_decode_step(pipe_forward, in_bucket):
+        """Build one decode step over ``pipe_forward``'s table variant.
+
+        ``in_bucket`` is None for the full-R variant, else the static
+        0/1 [R] prefix mask of the bucket: only in-bucket slots compute
+        and advance (``pos + live·in_bucket``) — the caller guarantees
+        no live slot sits outside the bucket.
         """
-        params, cache, pos = state["params"], state["cache"], state["pos"]
-        live = state["live"]
-        pages = state.get("pages", {})
-        tables = state.get("tables", jnp.zeros((R, 1), jnp.int32))
-        emb = lm_head.embed_tokens(params["embed"], tokens)[:, None]
-        embeds_ring = emb.reshape(R, rows_g, 1, spec.d_model)
-        if has_enc:
-            enc_ring = state["enc_out"]
-        else:
-            enc_ring = jnp.zeros((1, 1, 1, 1), compute_dtype)
-        h_ring, cache, pages = _pipe_forward(params, cache, pages,
-                                             embeds_ring, pos, tables, 1,
-                                             enc_ring, live)
-        h = h_ring.reshape(R * rows_g, 1, spec.d_model)
-        nxt = lm_head.sample_greedy(
-            params["head"], params["final_norm"]["scale"], h,
-            norm_kind=spec.norm, norm_bias=params["final_norm"].get("bias"),
-            vocab=spec.vocab)
-        new_state = {**state, "cache": cache, "pos": pos + live}
-        if pages:
-            new_state["pages"] = pages
-        return (new_state, nxt)
+
+        def decode_step(state, tokens):
+            """tokens: (B_global,) int32; returns (state, next
+            (B_global,)).
+
+            Cache writes are gated by the per-slot ``live`` mask and
+            each slot advances its own ``pos``: a free slot (live = 0,
+            as left by ``reset_slots``) computes garbage that is never
+            written, so the continuous batcher can keep decoding the
+            live slots while free slots await admission.  A fully live
+            batch (the one-shot sessions: ``init_state`` starts
+            all-live) behaves exactly as the scalar-position engine did.
+            """
+            params, cache = state["params"], state["cache"]
+            pos, live = state["pos"], state["live"]
+            pages = state.get("pages", {})
+            tables = state.get("tables", jnp.zeros((R, 1), jnp.int32))
+            emb = lm_head.embed_tokens(params["embed"], tokens)[:, None]
+            embeds_ring = emb.reshape(R, rows_g, 1, spec.d_model)
+            if has_enc:
+                enc_ring = state["enc_out"]
+            else:
+                enc_ring = jnp.zeros((1, 1, 1, 1), compute_dtype)
+            gate = (live if in_bucket is None
+                    else live * jnp.asarray(in_bucket, jnp.int32))
+            h_ring, cache, pages = pipe_forward(params, cache, pages,
+                                                embeds_ring, pos, tables,
+                                                1, enc_ring, gate)
+            h = h_ring.reshape(R * rows_g, 1, spec.d_model)
+            nxt = lm_head.sample_greedy(
+                params["head"], params["final_norm"]["scale"], h,
+                norm_kind=spec.norm,
+                norm_bias=params["final_norm"].get("bias"),
+                vocab=spec.vocab)
+            new_state = {**state, "cache": cache, "pos": pos + gate}
+            if pages:
+                new_state["pages"] = pages
+            return (new_state, nxt)
+
+        return decode_step
+
+    decode_step = _make_decode_step(_pipe_forward, None)
 
     # ---------------- slot reset (eviction) --------------------------------
     def reset_slots_step(state, slot_mask):
@@ -668,72 +854,107 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                 jnp.zeros((), state["enc_out"].dtype), state["enc_out"])
         return out
 
+    # ---------------- slot compaction (permutation) ------------------------
+    def compact_slots_step(state, perm):
+        """Permute every per-slot axis: new slot i = old slot perm[i].
+
+        ``perm``: [R] int32 full permutation.  A pure gather along the
+        slot dim — cache leaves on dim 1 of [S·v, R, ...], pos / live /
+        page tables / enc_out on dim 0.  The page *pool* is global and
+        untouched: in paged mode compaction moves zero KV bytes, only
+        table rows — which is what makes it cheap enough to run on
+        every eviction so live slots always form a bucket prefix.
+        """
+        out = {**state,
+               "cache": jax.tree.map(lambda a: jnp.take(a, perm, axis=1),
+                                     state["cache"]),
+               "pos": jnp.take(state["pos"], perm, axis=0),
+               "live": jnp.take(state["live"], perm, axis=0)}
+        if "tables" in state:
+            out["tables"] = jnp.take(state["tables"], perm, axis=0)
+        if has_enc:
+            out["enc_out"] = jnp.take(state["enc_out"], perm, axis=0)
+        return out
+
     # ---------------- prefill / admission steps ----------------------------
     prefill_step = None
     admit_step = None
     prefill_specs = None
     if prefill_len:
-        def admit_step(state, batch, slot_mask):
-            """Masked per-slot prefill: write new requests into slots.
+        def _make_admit_step(pipe_forward, in_bucket):
+            def admit_step(state, batch, slot_mask):
+                """Masked per-slot prefill: write new requests into
+                slots.
 
-            Runs the full pipelined prefill pass (the tables are
-            static) but every cache write is gated by ``slot_mask``, so
-            only the admitted slots' rows, positions and liveness
-            change — live slots' recurrent state is untouched and their
-            decode continues from the same pipeline state afterwards
-            (no global flush).  Returns the first token of every slot;
-            the caller keeps the admitted ones.
-            """
-            params, cache = state["params"], state["cache"]
-            pages = state.get("pages", {})
-            tables = state.get("tables", jnp.zeros((R, 1), jnp.int32))
-            tokens = batch["tokens"]                    # (R, rows, S_text)
-            lens_vec = batch.get("lens")                # (R,) or None
-            emb = lm_head.embed_tokens(params["embed"], tokens)
-            if spec.frontend == "vision" and "patches" in batch:
-                emb = jnp.concatenate(
-                    [batch["patches"].astype(emb.dtype), emb], axis=2)
-            if has_enc:
-                fr = batch["frames"].reshape(-1, enc_len, d_enc)
-                enc_out = encoder_fwd(params["encoder"],
-                                      fr.astype(compute_dtype), spec)
-                enc_ring = enc_out.reshape(tokens.shape[0], -1, enc_len,
-                                           d_enc)
-            else:
-                enc_ring = jnp.zeros((1, 1, 1, 1), compute_dtype)
-            qlen = emb.shape[2]
-            h_ring, cache, pages = _pipe_forward(
-                params, cache, pages, emb.astype(compute_dtype),
-                jnp.zeros((R,), jnp.int32), tables, qlen, enc_ring,
-                slot_mask)
-            if lens_vec is None:
-                h_last = h_ring[:, :, -1:]
-                new_pos = jnp.int32(qlen)
-            else:
-                # ragged prompts: each slot's last REAL token sits at
-                # lens - 1 (prompts are right-padded to the batch width;
-                # pad positions never feed real queries — causal mask)
-                lens_vec = jnp.asarray(lens_vec, jnp.int32)
-                idx = jnp.clip(lens_vec, 1, qlen) - 1
-                h_last = jnp.take_along_axis(
-                    h_ring, idx[:, None, None, None], axis=2)
-                new_pos = jnp.clip(lens_vec, 1, qlen)
-            h_last = h_last.reshape(R * rows_g, 1, spec.d_model)
-            nxt = lm_head.sample_greedy(
-                params["head"], params["final_norm"]["scale"], h_last,
-                norm_kind=spec.norm,
-                norm_bias=params["final_norm"].get("bias"), vocab=spec.vocab)
-            m = slot_mask > 0
-            new_state = {**state, "cache": cache,
-                         "pos": jnp.where(m, new_pos, state["pos"]),
-                         "live": jnp.where(m, 1,
-                                           state["live"]).astype(jnp.int32)}
-            if pages:
-                new_state["pages"] = pages
-            if has_enc:
-                new_state["enc_out"] = jnp.where(
-                    m.reshape((R, 1, 1, 1)), enc_ring, state["enc_out"])
-            return new_state, nxt
+                Runs the pipelined prefill pass over this variant's
+                (static) tables, but every cache write is gated by
+                ``slot_mask``, so only the admitted slots' rows,
+                positions and liveness change — live slots' recurrent
+                state is untouched and their decode continues from the
+                same pipeline state afterwards (no global flush).
+                Returns the first token of every slot; the caller keeps
+                the admitted ones.
+                """
+                params, cache = state["params"], state["cache"]
+                pages = state.get("pages", {})
+                tables = state.get("tables", jnp.zeros((R, 1), jnp.int32))
+                tokens = batch["tokens"]                # (R, rows, S_text)
+                lens_vec = batch.get("lens")            # (R,) or None
+                gate = (slot_mask if in_bucket is None
+                        else slot_mask * jnp.asarray(in_bucket, jnp.int32))
+                emb = lm_head.embed_tokens(params["embed"], tokens)
+                if spec.frontend == "vision" and "patches" in batch:
+                    emb = jnp.concatenate(
+                        [batch["patches"].astype(emb.dtype), emb], axis=2)
+                if has_enc:
+                    fr = batch["frames"].reshape(-1, enc_len, d_enc)
+                    enc_out = encoder_fwd(params["encoder"],
+                                          fr.astype(compute_dtype), spec)
+                    enc_ring = enc_out.reshape(tokens.shape[0], -1,
+                                               enc_len, d_enc)
+                else:
+                    enc_ring = jnp.zeros((1, 1, 1, 1), compute_dtype)
+                qlen = emb.shape[2]
+                h_ring, cache, pages = pipe_forward(
+                    params, cache, pages, emb.astype(compute_dtype),
+                    jnp.zeros((R,), jnp.int32), tables, qlen, enc_ring,
+                    gate)
+                if lens_vec is None:
+                    h_last = h_ring[:, :, -1:]
+                    new_pos = jnp.int32(qlen)
+                else:
+                    # ragged prompts: each slot's last REAL token sits
+                    # at lens - 1 (prompts are right-padded to the batch
+                    # width; pad positions never feed real queries —
+                    # causal mask)
+                    lens_vec = jnp.asarray(lens_vec, jnp.int32)
+                    idx = jnp.clip(lens_vec, 1, qlen) - 1
+                    h_last = jnp.take_along_axis(
+                        h_ring, idx[:, None, None, None], axis=2)
+                    new_pos = jnp.clip(lens_vec, 1, qlen)
+                h_last = h_last.reshape(R * rows_g, 1, spec.d_model)
+                nxt = lm_head.sample_greedy(
+                    params["head"], params["final_norm"]["scale"], h_last,
+                    norm_kind=spec.norm,
+                    norm_bias=params["final_norm"].get("bias"),
+                    vocab=spec.vocab)
+                m = gate > 0
+                new_state = {
+                    **state, "cache": cache,
+                    "pos": jnp.where(m, new_pos, state["pos"]),
+                    "live": jnp.where(m, 1,
+                                      state["live"]).astype(jnp.int32)}
+                if pages:
+                    new_state["pages"] = pages
+                if has_enc:
+                    new_state["enc_out"] = jnp.where(
+                        m.reshape((R, 1, 1, 1)), enc_ring,
+                        state["enc_out"])
+                return new_state, nxt
+
+            return admit_step
+
+        admit_step = _make_admit_step(_pipe_forward, None)
 
         def prefill_step(state, batch):
             # one-shot prefill == admitting every slot at once
@@ -808,9 +1029,32 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         blk.mixer in ("mamba", "rwkv") or blk.ffn == "rwkv_cmix"
         for blk in statics.program))
 
+    # ---------------- liveness-aware bucket variants -----------------------
+    lattice = None
+    decode_step_for = None
+    admit_step_for = None
+    if buckets:
+        lattice = bucket_lattice(R)
+
+        def decode_step_for(R_b):
+            # bucketed() proves the variant's tables are the full-R
+            # tables with dead slots deleted — the exactness contract
+            in_b = (np.arange(R) < int(R_b)).astype(np.int32)
+            return _make_decode_step(_make_pipe_forward(sched.bucketed(R_b)),
+                                     in_b)
+
+        if prefill_len:
+            def admit_step_for(R_b):
+                in_b = (np.arange(R) < int(R_b)).astype(np.int32)
+                return _make_admit_step(
+                    _make_pipe_forward(sched.bucketed(R_b)), in_b)
+
     return EngineSession(spec=spec, plan=plan, mesh=mesh, sched=sched,
                          decode_step=decode_step, prefill_step=prefill_step,
                          init_state=init_state, state_pspecs=state_pspecs,
                          token_spec=token_spec, prefill_specs=prefill_specs,
                          reset_step=reset_slots_step, admit_step=admit_step,
+                         compact_step=compact_slots_step, buckets=lattice,
+                         decode_step_for=decode_step_for,
+                         admit_step_for=admit_step_for,
                          paged=paged_cfg, ragged_ok=ragged_ok)

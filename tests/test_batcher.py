@@ -278,3 +278,37 @@ def test_error_paths():
                     max_new_tokens=1)
     with pytest.raises(ValueError, match="recurrent"):
         recs.run([short])
+
+
+# ---------------------------------------------------------------------------
+# --arrivals trace parsing (launch/serve.py)
+# ---------------------------------------------------------------------------
+
+def test_parse_arrivals_accepts_both_forms():
+    from repro.launch.serve import parse_arrivals
+    assert parse_arrivals("0,0,2,5") == [0, 0, 2, 5]
+    pois = parse_arrivals("poisson:0.5:8", seed=1)
+    assert len(pois) == 8
+    assert all(isinstance(t, int) and t >= 0 for t in pois)
+    assert pois == sorted(pois)                  # cumulative gaps
+    assert parse_arrivals("poisson:0.5:8", seed=1) == pois   # seeded
+    assert parse_arrivals("poisson:0.5:8", seed=2) != pois
+
+
+def test_parse_arrivals_rejects_malformed_specs():
+    """ISSUE-7: every malformed --arrivals spec raises a ValueError
+    naming the accepted formats — never a bare unpack/parse traceback."""
+    from repro.launch.serve import parse_arrivals
+    bad_specs = [
+        "poisson:0.5",            # missing N
+        "poisson:0.5:8:extra",    # too many parts
+        "poisson:fast:8",         # non-numeric rate
+        "poisson:0.5:many",       # non-integer count
+        "poisson:-1:8",           # non-positive rate
+        "poisson:0.5:0",          # non-positive count
+        "1,two,3",                # non-numeric step
+        "3,-1",                   # negative step
+    ]
+    for spec in bad_specs:
+        with pytest.raises(ValueError, match="accepted --arrivals"):
+            parse_arrivals(spec)

@@ -224,3 +224,150 @@ def test_build_serving_rejects_bad_paged_configs():
     with pytest.raises(ValueError, match="exclusive"):
         build_serving(spec, plan, dmesh, cache_len=128, global_batch=2,
                       sp=True, page_size=16)
+
+
+# ---------------------------------------------------------------------------
+# host mirrors vs device state: randomized op-sequence fuzz (real engine)
+# ---------------------------------------------------------------------------
+
+def _tiny_session(page_size, n_slots=4, prefill=8, cache=64,
+                  buckets=True, pool_pages=None):
+    import jax
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel.mesh import split_model_axis
+    from repro.serving.engine import build_serving
+
+    spec = _attn_spec(n_layers=2)
+    mesh = make_host_mesh(data=1, model=1)
+    dmesh = split_model_axis(mesh, 1, 1)
+    plan = _serve_plan(pp=1, r=n_slots)
+    sess = build_serving(spec, plan, dmesh, cache_len=cache,
+                         global_batch=n_slots, prefill_len=prefill,
+                         compute_dtype=jnp.float32, page_size=page_size,
+                         buckets=buckets, pool_pages=pool_pages)
+    sess.start(jax.random.key(0))
+    return sess
+
+
+@pytest.mark.parametrize("page_size", [0, 16])
+def test_host_mirrors_track_device_state_under_random_ops(page_size):
+    """ISSUE-7: the engine's host ``_pos``/``_live`` mirrors (which the
+    bucket picker and paged allocator trust) must equal the device
+    ``state["pos"]``/``state["live"]`` after EVERY admit / decode /
+    reset / compact, under a randomized legal op sequence — and the
+    page allocator invariants must hold throughout."""
+    R, PREFILL = 4, 8
+    sess = _tiny_session(page_size, n_slots=R, prefill=PREFILL)
+    rng = np.random.default_rng(42)
+
+    def check(op):
+        np.testing.assert_array_equal(
+            sess._pos, np.asarray(sess.state["pos"]),
+            err_msg=f"pos mirror diverged after {op}")
+        np.testing.assert_array_equal(
+            sess._live, np.asarray(sess.state["live"]),
+            err_msg=f"live mirror diverged after {op}")
+        if sess._alloc is not None:
+            sess._alloc.check()
+
+    prefix = True          # live slots known to form a bucket prefix?
+    for step in range(40):
+        op = rng.choice(["admit", "decode", "reset", "compact"])
+        if op == "admit":
+            free = [i for i in range(R) if not sess._live[i]]
+            if not free:
+                continue
+            picks = rng.choice(free, size=rng.integers(1, len(free) + 1),
+                               replace=False)
+            mask = np.zeros(R, np.int32)
+            mask[picks] = 1
+            toks = rng.integers(1, 256, (R, 1, PREFILL)).astype(np.int32)
+            sess.write_prefill_into_slots({"tokens": toks}, mask)
+            prefix = False
+        elif op == "decode":
+            # an arbitrary live layout only runs the full-R program;
+            # after a compaction to a prefix the auto bucket pick is
+            # legal too — exercise both
+            bucket = None if prefix else R
+            sess.decode(rng.integers(1, 256, R).astype(np.int32),
+                        bucket=bucket)
+        elif op == "reset":
+            mask = (rng.random(R) < 0.5).astype(np.int32)
+            sess.reset_slots(mask)
+            prefix = False
+        else:
+            if rng.random() < 0.5:
+                # batcher-style: occupied slots first, stable
+                occ = [i for i in range(R) if sess._live[i]]
+                perm = occ + [i for i in range(R) if not sess._live[i]]
+                prefix = True
+            else:
+                perm = rng.permutation(R).tolist()
+                prefix = False
+            sess.compact_slots(perm)
+        check(f"{op} (step {step})")
+    # the fuzz must have executed every op kind at least once
+    assert sess.state is not None
+
+
+# ---------------------------------------------------------------------------
+# CacheExhausted backpressure: truncate-and-continue, never a crash
+# ---------------------------------------------------------------------------
+
+def test_cache_exhausted_truncates_request_instead_of_crashing():
+    """ISSUE-7: a decode that would overflow a slot's paged KV capacity
+    raises the typed :class:`CacheExhausted` BEFORE any allocator
+    mutation; the batcher catches it, finishes the blocked request as
+    ``truncated`` (keeping its tokens), frees the slot's pages and
+    retries the round — the serve loop never crashes and the other
+    requests are unaffected."""
+    from repro.serving.batcher import ContinuousBatchingSession, Request
+    from repro.serving.engine import CacheExhausted
+
+    PREFILL, CACHE, PAGE = 8, 16, 4      # capacity: 16 tokens per slot
+    sess = _tiny_session(PAGE, n_slots=2, prefill=PREFILL, cache=CACHE,
+                         buckets=False)
+    rng = np.random.default_rng(5)
+    trace = [
+        # 8 prompt + 20 new > 16-token capacity: must truncate mid-decode
+        Request(rid=0, prompt=rng.integers(1, 256, PREFILL)
+                .astype(np.int32), max_new_tokens=20, arrival=0),
+        # fits comfortably: must finish untruncated, unaffected
+        Request(rid=1, prompt=rng.integers(1, 256, PREFILL)
+                .astype(np.int32), max_new_tokens=4, arrival=0),
+    ]
+    server = ContinuousBatchingSession(sess)
+    report = server.run(trace)
+    assert len(report.completed) == 2, report.summary()
+    long_r, short_r = trace
+    assert long_r.truncated and long_r.finished
+    # prefill token + decodes up to the 16-token capacity, never more
+    assert 0 < len(long_r.tokens) <= CACHE - PREFILL + 1
+    assert short_r.finished and not short_r.truncated
+    assert len(short_r.tokens) == 4
+    # eviction returned every page: pool fully free, invariants hold
+    sess._alloc.check()
+    assert sess._alloc.live_pages == 0
+
+    # engine-level contract: the raise is typed, names the blocked
+    # slots, and leaves the allocator untouched (the op is retryable)
+    sess2 = _tiny_session(PAGE, n_slots=2, prefill=PREFILL, cache=CACHE,
+                          buckets=False)
+    toks = rng.integers(1, 256, (2, 1, PREFILL)).astype(np.int32)
+    sess2.write_prefill_into_slots({"tokens": toks},
+                                   np.array([1, 1], np.int32))
+    for _ in range(CACHE - PREFILL):
+        sess2.decode(np.zeros(2, np.int32))
+    before = (sess2._alloc.tables.copy(), sess2._alloc.counts.copy())
+    with pytest.raises(CacheExhausted) as ei:
+        sess2.decode(np.zeros(2, np.int32))
+    assert isinstance(ei.value, RuntimeError)        # old handlers survive
+    assert set(ei.value.slots) == {0, 1}
+    np.testing.assert_array_equal(sess2._alloc.tables, before[0])
+    np.testing.assert_array_equal(sess2._alloc.counts, before[1])
+    sess2._alloc.check()
+    # evicting the blocked slots makes the next decode legal again
+    sess2.reset_slots(np.array([1, 1], np.int32))
+    for i in (0, 1):
+        sess2._alloc.release_slot(i)
+    sess2.decode(np.zeros(2, np.int32))

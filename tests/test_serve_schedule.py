@@ -470,9 +470,73 @@ def test_plan_search_occupancy_prices_masked_tables():
         plan_search(spec, base, 4, HW, occupancy=0.0, **kw)
 
 
-# ---------------------------------------------------------------------------
-# fit_decode_microbatches regression (the ZeroDivisionError bug)
-# ---------------------------------------------------------------------------
+def test_bucketed_tables_are_truncated_masked_tables():
+    """ISSUE-7: ``bucketed(k)`` is the full-R table with the dead-slot
+    tail *deleted*, not masked — the bucket's tables are exactly the
+    live prefix of ``with_live_slots(range(k))`` and the truncated tail
+    held only bubbles (re-proving the validate() argument externally:
+    a slot's timing depends on its own index, never on R)."""
+    for s, r, v in [(2, 4, 1), (2, 8, 1), (4, 8, 2), (3, 5, 1)]:
+        sched = (ScheduleServe1F(s, r) if v == 1
+                 else ScheduleServeInterleaved(s, r, virtual_stages=v))
+        for k in (1, 2, r - 1, r):
+            if k < 1:
+                continue
+            b = sched.bucketed(k)
+            b.validate()
+            assert b.n_microbatches == k and b.live_slots is None
+            masked = sched.with_live_slots(range(k))
+            bt, mt = b.tables(), masked.tables()
+            np.testing.assert_array_equal(bt.fwd, mt.fwd[:b.n_ticks])
+            np.testing.assert_array_equal(bt.exit_mb,
+                                          mt.exit_mb[:b.n_ticks])
+            assert (mt.fwd[b.n_ticks:, :, 0] < 0).all()
+            # the planner's masked price == the executor's bucket price
+            assert weighted_round_time(b) == weighted_round_time(masked)
+    with pytest.raises(ValueError, match="outside"):
+        ScheduleServe1F(2, 4).bucketed(0)
+    with pytest.raises(ValueError, match="outside"):
+        ScheduleServe1F(2, 4).bucketed(5)
+
+
+def test_bucket_lattice_and_pick():
+    from repro.core.schedule import bucket_lattice, pick_bucket
+    assert bucket_lattice(1) == (1,)
+    assert bucket_lattice(6) == (1, 2, 4, 6)
+    assert bucket_lattice(8) == (1, 2, 4, 8)
+    assert bucket_lattice(16) == (1, 2, 4, 8, 16)
+    with pytest.raises(ValueError):
+        bucket_lattice(0)
+    lat = bucket_lattice(8)
+    assert pick_bucket(0, lat) == 1     # empty batch still runs a program
+    assert pick_bucket(1, lat) == 1
+    assert pick_bucket(3, lat) == 4
+    assert pick_bucket(8, lat) == 8
+    with pytest.raises(ValueError, match="fits"):
+        pick_bucket(9, lat)
+
+
+def test_plan_search_occupancy_prices_bucket_lattice():
+    """ISSUE-7: occupancy pricing quantizes to the executor's bucket
+    lattice — the scored round is the one the liveness-aware engine
+    actually runs, and the chosen bucket rides along on PlanChoice."""
+    from repro.core.schedule import bucket_lattice, pick_bucket
+    spec = mk_spec(n_layers=8, heads=4, d_model=256)
+    base = ParallelismPlan(pp=4, tp=1, microbatches=8,
+                           decode_microbatches=8)
+    kw = dict(minibatch_tokens=32, data_replicas=1, workload="decode",
+              cache_len=4096, global_batch=8)
+    full = plan_search(spec, base, 4, HW, return_all=True, **kw)
+    assert all(c.bucket is None for c in full)     # full R: no variant
+    import math
+    from repro.core.schedule import fit_serving_microbatches
+    r = fit_serving_microbatches(base.decode_microbatches, 8, 1)
+    for occ in (0.2, 0.5):
+        cands = plan_search(spec, base, 4, HW, return_all=True,
+                            occupancy=occ, **kw)
+        want = pick_bucket(max(1, math.ceil(occ * r)), bucket_lattice(r))
+        for c in cands:
+            assert c.bucket == want, (c.plan, c.bucket, want)
 
 def test_fit_decode_microbatches_validates_dp():
     from repro.serving.engine import fit_decode_microbatches
