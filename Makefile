@@ -1,13 +1,16 @@
 # Convenience entry points matching the ROADMAP commands.
-.PHONY: tier1 tier1-full bench bench-serving bench-batching bench-paging \
-	bench-buckets bench-check plan-smoke serve-smoke batch-smoke \
-	page-smoke docs-check
+.PHONY: tier1 tier1-full coverage bench bench-serving bench-batching \
+	bench-paging bench-buckets bench-spec bench-check plan-smoke \
+	serve-smoke batch-smoke page-smoke spec-smoke docs-check
 
 tier1:
 	scripts/tier1.sh
 
 tier1-full:
 	scripts/tier1.sh --full
+
+coverage:
+	scripts/tier1.sh --coverage
 
 bench:
 	PYTHONPATH=src:. python benchmarks/partitioner_bench.py
@@ -24,6 +27,9 @@ bench-paging:
 bench-buckets:
 	PYTHONPATH=src:. python benchmarks/batching_bench.py --buckets
 
+bench-spec:
+	PYTHONPATH=src:. python benchmarks/spec_bench.py
+
 bench-check:
 	python scripts/bench_check.py
 
@@ -38,6 +44,9 @@ batch-smoke:
 
 page-smoke:
 	python scripts/page_smoke.py
+
+spec-smoke:
+	python scripts/spec_smoke.py
 
 docs-check:
 	python scripts/docs_check.py

@@ -4,7 +4,8 @@
 CI gate (scripts/tier1.sh / `make bench-check`) against benchmark-
 artifact rot: the BENCH_*.json trajectory files are committed outputs
 of the benchmarks (serving_bench, batching_bench, batching_bench
---paging / --buckets), and downstream plots and the ROADMAP tables read
+--paging / --buckets, spec_bench), and downstream plots and the ROADMAP
+tables read
 them by key.  A half-written file, a renamed column, or a NaN that
 snuck through a cost model should fail fast here, not at plot time.
 
@@ -54,6 +55,13 @@ SCHEMAS = {
         ("mode", None): ("arch", "mode", "page_size", "slots",
                          "slot_multiplier", "per_slot_bytes_multiplier",
                          "kv_budget_gb") + _COMMON_RUN,
+    },
+    "BENCH_spec.json": {
+        None: ("arch", "schedule", "slots", "rows_per_slot", "spec_k",
+               "alpha", "decode_round_ms", "verify_round_ms", "draft_ms",
+               "baseline_goodput_tokens_per_s", "speedup", "spec_rounds",
+               "drafted_tokens", "accepted_drafts", "accepted_tokens",
+               "acceptance_rate", "accepted_per_round") + _COMMON_RUN,
     },
 }
 _BUCKET_ROW = ("arch", "mode", "slots", "buckets", "bucket_rounds",

@@ -1,0 +1,263 @@
+#!/usr/bin/env python
+"""spec-smoke: speculative draft–verify decode end-to-end on CPU (CI gate).
+
+Three bit-exactness proofs over a 2-stage pipe, each against the same
+request run through a fresh non-speculative ``serve_1f`` session:
+
+  1. the staggered 3-request continuous-batching trace of batch_smoke,
+     served by the SELF-drafting spec session (head-only ``draft()`` +
+     pipelined ``verify()``), dense and paged — mid-stream admission
+     into a freed slot must not perturb any stream, and the paged run
+     must hand every page back;
+  2. the same staggered trace with an INJECTED oracle draft function
+     that gives each resident request a different draft quality — one
+     slot totally rejected every round, one fully accepted every round,
+     one partially accepted with a per-round varying prefix — so
+     per-slot acceptance, rejected-suffix rollback, and the bonus-token
+     floor are all exercised in one batch;
+  3. the down-then-up bucket trace of batch_smoke over R = 4 slots with
+     ``buckets=True``: evictions must shrink the verify bucket,
+     the late admission must grow it back, and every stream must match
+     the full-R spec run and the solo session (dense and paged).
+
+Greedy speculative decode is exact by construction — any draft quality
+only changes how many rounds the same tokens take.  Run via
+``make spec-smoke`` (wired into scripts/tier1.sh).
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=2 "
+                           + os.environ.get("XLA_FLAGS", ""))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                # noqa: E402
+import jax.numpy as jnp   # noqa: E402
+import numpy as np        # noqa: E402
+
+from repro.models import spec as spec_lib                     # noqa: E402
+from repro.launch.mesh import make_host_mesh                  # noqa: E402
+from repro.parallel.mesh import ParallelismPlan, split_model_axis  # noqa: E402
+from repro.serving.batcher import ContinuousBatchingSession, Request  # noqa: E402
+from repro.serving.engine import build_serving                # noqa: E402
+
+PP, R, PREFILL, CACHE, VOCAB = 2, 2, 8, 64, 256
+K = 3
+
+
+def make_session(schedule="auto", spec_k=None, page_size=0, n_slots=R,
+                 buckets=False):
+    blocks = tuple(spec_lib.BlockSpec(mixer="attn", ffn="dense")
+                   for _ in range(PP * 2))
+    spec = spec_lib.ModelSpec(
+        name="spec-smoke", d_model=64, n_layers=len(blocks), n_heads=4,
+        n_kv=2, d_head=16, d_ff=128, vocab=VOCAB, blocks=blocks,
+        norm="rmsnorm", act="silu")
+    mesh = make_host_mesh(data=1, model=PP)
+    dmesh = split_model_axis(mesh, PP, 1)
+    plan = ParallelismPlan(pp=PP, tp=1, microbatches=n_slots,
+                           decode_microbatches=n_slots, schedule=schedule)
+    return spec, build_serving(spec, plan, dmesh, cache_len=CACHE,
+                               global_batch=n_slots, prefill_len=PREFILL,
+                               compute_dtype=jnp.float32,
+                               page_size=page_size, buckets=buckets,
+                               spec_k=spec_k)
+
+
+def solo_tokens(prompt, n_tokens, n_slots=R):
+    """The request alone through a fresh one-shot serve_1f session."""
+    _, sess = make_session(n_slots=n_slots)
+    sess.start(jax.random.key(0))
+    tokens = jnp.asarray(np.broadcast_to(prompt, (n_slots, 1, PREFILL)))
+    toks = [np.asarray(sess.prefill({"tokens": tokens}))[0]]
+    for _ in range(n_tokens - 1):
+        last = jnp.asarray(np.full((n_slots,), toks[-1], np.int32))
+        toks.append(np.asarray(sess.decode(last))[0])
+    return [int(t) for t in toks]
+
+
+def staggered_trace(prompts):
+    return [
+        Request(rid=0, prompt=prompts[0], max_new_tokens=3, arrival=0),
+        Request(rid=1, prompt=prompts[1], max_new_tokens=10, arrival=0),
+        Request(rid=2, prompt=prompts[2], max_new_tokens=6, arrival=1),
+    ]
+
+
+def self_draft_main() -> int:
+    """Staggered trace, self-drafting spec session, dense + paged."""
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(1, VOCAB, PREFILL).astype(np.int32)
+               for _ in range(3)]
+    solos = {i: solo_tokens(p, staggered_trace(prompts)[i].max_new_tokens)
+             for i, p in enumerate(prompts)}
+    ok = True
+    for label, kw in (("dense", {}), ("paged", {"page_size": 16})):
+        trace = staggered_trace(prompts)
+        _, sess = make_session(schedule="serve_spec_1f", spec_k=K, **kw)
+        sess.start(jax.random.key(0))
+        report = ContinuousBatchingSession(sess).run(trace)
+        assert len(report.completed) == 3, (label, report.summary())
+        assert trace[2].step_admitted > trace[0].step_done, (
+            "request 2 must admit mid-stream into request 0's freed slot")
+        assert report.spec_rounds == report.decode_rounds > 0, (
+            label, report.summary())
+        # every token a request keeps came from an accepted verify
+        # column (the admission round contributes exactly one each)
+        assert report.accepted_tokens == report.completed_tokens - 3, (
+            label, report.summary())
+        for r in trace:
+            mark = "==" if r.tokens == solos[r.rid] else "!="
+            print(f"  [{label}] request {r.rid}: spec {r.tokens} {mark} "
+                  f"solo {solos[r.rid]}")
+            ok &= r.tokens == solos[r.rid]
+        print(f"  [{label}] spec_rounds={report.spec_rounds} "
+              f"acc_rate={report.acceptance_rate:.2f} "
+              f"tok/round={report.accepted_per_round:.2f}")
+        if kw.get("page_size"):
+            sess._alloc.check()
+            assert sess._alloc.live_pages == 0, sess._alloc.tables
+    if not ok:
+        print("SPEC SMOKE FAILED: self-drafted decode is not bit-exact")
+        return 1
+    print("spec smoke OK (staggered trace, self-draft, dense + paged "
+          "bit-exact vs solo)\n")
+    return mixed_main()
+
+
+def oracle_draft_fn(server, refs, modes, spec_k):
+    """Per-request draft quality injection.
+
+    ``refs[rid]`` is the request's true greedy stream (solo run, padded
+    ``spec_k`` past max_new_tokens); each lane's next true tokens are
+    ``refs[rid][len(r.tokens):]``.  ``modes[rid]``: ``"reject"`` drafts
+    are wrong at every position (``+1 mod vocab`` of the truth),
+    ``"accept"`` drafts are the truth, ``"mixed"`` drafts are correct
+    for a prefix that cycles 0..spec_k-1 across rounds.
+    """
+    state = {"round": 0}
+
+    def draft(last):
+        flat = np.asarray(last).reshape(-1)
+        out = np.ones((flat.size, spec_k), np.int32)
+        for s in server.slots:
+            for lane, r in enumerate(s.requests):
+                if r is None:
+                    continue
+                i = len(r.tokens)
+                true = np.asarray(refs[r.rid][i:i + spec_k], np.int32)
+                mode = modes[r.rid]
+                if mode == "reject":
+                    d = (true + 1) % VOCAB
+                elif mode == "accept":
+                    d = true
+                else:
+                    n_ok = state["round"] % spec_k
+                    d = np.where(np.arange(spec_k) < n_ok, true,
+                                 (true + 1) % VOCAB)
+                out[s.index * s.lanes + lane] = d
+        state["round"] += 1
+        return out
+
+    return draft
+
+
+def mixed_main() -> int:
+    """One batch, three draft qualities: reject-all / accept-all / mixed."""
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(1, VOCAB, PREFILL).astype(np.int32)
+               for _ in range(3)]
+    trace = [
+        Request(rid=0, prompt=prompts[0], max_new_tokens=8, arrival=0),
+        Request(rid=1, prompt=prompts[1], max_new_tokens=8, arrival=0),
+        Request(rid=2, prompt=prompts[2], max_new_tokens=6, arrival=1),
+    ]
+    modes = {0: "reject", 1: "accept", 2: "mixed"}
+    refs = {r.rid: solo_tokens(r.prompt, r.max_new_tokens + K)
+            for r in trace}
+    _, sess = make_session(schedule="serve_spec_1f", spec_k=K)
+    sess.start(jax.random.key(0))
+    server = ContinuousBatchingSession(sess)
+    server.draft_fn = oracle_draft_fn(server, refs, modes, K)
+    report = server.run(trace)
+    assert len(report.completed) == 3, report.summary()
+    ok = True
+    for r in trace:
+        want = refs[r.rid][:r.max_new_tokens]
+        mark = "==" if r.tokens == want else "!="
+        print(f"  [{modes[r.rid]:>6}] request {r.rid}: {r.tokens} {mark} "
+              f"solo {want}")
+        ok &= r.tokens == want
+    # the reject-all slot advances one bonus token per round, the
+    # accept-all slot spec_k + 1 — same output length, ~4x the rounds
+    rounds = {r.rid: r.step_done - r.step_admitted for r in trace}
+    assert rounds[0] > 2 * rounds[1], rounds
+    assert 0.0 < report.acceptance_rate < 1.0, report.summary()
+    if not ok:
+        print("SPEC SMOKE FAILED: injected-draft decode is not bit-exact")
+        return 1
+    print(f"spec smoke OK (mixed draft quality in one batch: reject-all "
+          f"took {rounds[0]} rounds vs accept-all {rounds[1]}, batch "
+          f"acc_rate={report.acceptance_rate:.2f}, all bit-exact)\n")
+    return bucket_main()
+
+
+def bucket_main() -> int:
+    """Mid-stream bucket switches under verify, bit-exact vs full-R."""
+    R4 = 4
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(1, VOCAB, PREFILL).astype(np.int32)
+               for _ in range(5)]
+
+    def trace():
+        return [
+            Request(rid=0, prompt=prompts[0], max_new_tokens=3, arrival=0),
+            Request(rid=1, prompt=prompts[1], max_new_tokens=3, arrival=0),
+            Request(rid=2, prompt=prompts[2], max_new_tokens=24, arrival=0),
+            Request(rid=3, prompt=prompts[3], max_new_tokens=24, arrival=0),
+            Request(rid=4, prompt=prompts[4], max_new_tokens=4, arrival=3),
+        ]
+
+    runs = {}
+    for name, kw in (("full_R", {}),
+                     ("bucketed", {"buckets": True}),
+                     ("bucketed_paged", {"buckets": True, "page_size": 16})):
+        t = trace()
+        _, sess = make_session(schedule="serve_spec_1f", spec_k=K,
+                               n_slots=R4, **kw)
+        sess.start(jax.random.key(0))
+        report = ContinuousBatchingSession(sess).run(t)
+        assert len(report.completed) == 5, (name, report.summary())
+        assert report.spec_rounds > 0, (name, report.summary())
+        runs[name] = t
+        if kw.get("buckets"):
+            log = sess._bucket_log
+            shrank = any(b2 < b1 for b1, b2 in zip(log, log[1:]))
+            grew = any(b2 > b1 for b1, b2 in zip(log, log[1:]))
+            assert len(set(log)) >= 2 and shrank and grew, (
+                f"{name}: trace must switch buckets both ways, log={log}")
+            print(f"  {name} bucket log: {log}")
+        if kw.get("page_size"):
+            sess._alloc.check()
+            assert sess._alloc.live_pages == 0, sess._alloc.tables
+    ok = True
+    for r_full, r_bkt, r_pg in zip(runs["full_R"], runs["bucketed"],
+                                   runs["bucketed_paged"]):
+        solo = solo_tokens(r_full.prompt, r_full.max_new_tokens,
+                           n_slots=R4)
+        same = (r_full.tokens == r_bkt.tokens == r_pg.tokens == solo)
+        mark = "==" if same else "!="
+        print(f"  request {r_full.rid}: full-R {r_full.tokens} {mark} "
+              f"bucketed {r_bkt.tokens} (paged {r_pg.tokens}, "
+              f"solo {solo})")
+        ok &= same
+    if not ok:
+        print("SPEC SMOKE FAILED: verify bucket switches are not bit-exact")
+        return 1
+    print("\nspec smoke OK (verify bucket shrink/grow mid-stream, "
+          "bit-exact vs full-R and solo, dense + paged)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(self_draft_main())

@@ -2,6 +2,10 @@
 # Tier-1 verify (ROADMAP): fast default selection, bounded time.
 #   scripts/tier1.sh            # fast set (pytest.ini deselects -m slow)
 #   scripts/tier1.sh --full     # everything, including the slow SPMD matrix
+#   scripts/tier1.sh --coverage # + pytest-cov over repro.core/serving with
+#                               # a COV_FLOOR (default 80) line floor; needs
+#                               # pytest-cov (requirements-dev.txt), skipped
+#                               # with a notice when not importable
 # Both variants first run the plan_search smoke (scripts/plan_smoke.py)
 # — the chosen plan for qwen3 + olmoe must fit the config's HBM budget —
 # the serve smoke (scripts/serve_smoke.py): both serving schedules
@@ -11,7 +15,11 @@
 # bit-identical to its solo run —
 # the page smoke (scripts/page_smoke.py): paged-KV allocator invariant
 # fuzz plus an undersized-pool run where exhaustion queues admissions
-# instead of crashing — the docs-check gate
+# instead of crashing —
+# the spec smoke (scripts/spec_smoke.py): speculative draft–verify
+# decode (self-draft, injected mixed/total-rejection/full-acceptance
+# drafts, verify bucket switches) bit-identical to non-speculative
+# decode, dense and paged — the docs-check gate
 # (scripts/docs_check.py): every `path.py::symbol` reference in
 # docs/*.md + README.md must resolve against the source tree, so
 # renamed symbols fail fast — and the bench-check gate
@@ -21,14 +29,31 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 ARGS=(-x -q)
-if [[ "${1:-}" == "--full" ]]; then
+COV=0
+while [[ "${1:-}" == "--full" || "${1:-}" == "--coverage" ]]; do
+    case "$1" in
+        --full) ARGS+=(-m "") ;;
+        --coverage) COV=1 ;;
+    esac
     shift
-    ARGS+=(-m "")
+done
+if [[ "$COV" == 1 ]]; then
+    # opt-in (make coverage) so the fast default never pays the tracer;
+    # pytest-cov is a dev-only extra (requirements-dev.txt) — gate on
+    # importability instead of failing environments that lack it
+    if python -c "import pytest_cov" 2>/dev/null; then
+        ARGS+=(--cov=repro.core --cov=repro.serving
+               --cov-report=term-missing:skip-covered
+               --cov-fail-under="${COV_FLOOR:-80}")
+    else
+        echo "tier1: pytest-cov not importable; running without coverage" >&2
+    fi
 fi
 python scripts/plan_smoke.py
 python scripts/serve_smoke.py
 python scripts/batch_smoke.py
 python scripts/page_smoke.py
+python scripts/spec_smoke.py
 python scripts/docs_check.py
 python scripts/bench_check.py
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest "${ARGS[@]}" "$@"

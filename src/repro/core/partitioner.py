@@ -318,6 +318,9 @@ class PlanChoice:
     # the bucket-lattice variant the round_time was scored on: the
     # smallest compacted size >= occupancy·R slots (R at occupancy 1)
     bucket: Optional[int] = None
+    # speculative decode: the draft depth this candidate was priced at
+    # (None = non-speculative); round_time is then per *accepted* token
+    spec_k: Optional[int] = None
 
     @property
     def per_microbatch(self) -> float:
@@ -329,6 +332,7 @@ class PlanChoice:
         return (f"pp={self.plan.pp} tp={self.plan.tp} "
                 f"sched={self.plan.schedule}/{self.plan.stash_mode}"
                 f"{f' v={self.plan.virtual_stages}' if self.plan.virtual_stages > 1 else ''}"
+                f"{f' k={self.spec_k}' if self.spec_k is not None else ''}"
                 f" {score}={self.round_time * 1e3:.3f} ms"
                 f" bubble={self.bubble_fraction:.3f}"
                 f" hbm={self.memory.total_bytes / 1e9:.2f}"
@@ -389,7 +393,11 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
                 global_batch: Optional[int] = None,
                 sp: bool = False,
                 occupancy: float = 1.0,
-                page_size: int = 0):
+                page_size: int = 0,
+                spec_k: Optional[int] = None,
+                spec_acceptance: float = 0.8,
+                spec_draft_cost: float = 0.05,
+                spec_verify_cost: float = 0.15):
     """Jointly pick (pp, tp, schedule, virtual_stages) for a model axis.
 
     Enumerates every pp dividing ``model_axis`` whose chunk count
@@ -448,6 +456,24 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
     that is HBM-infeasible dense can therefore fit paged at the same R.
     Rejected with ``sp`` (the engine refuses that combination too).
 
+    ``spec_k`` (decode only) prices the speculative draft–verify
+    schedules (``serve_spec_1f``, ``serve_spec_interleaved``) alongside
+    the plain ones: every draft depth k in ``1..spec_k`` becomes a
+    candidate, scored per *accepted* token — the verify round is
+    stretched by the k extra query positions
+    (``1 + k·spec_verify_cost``) plus k head-only draft steps
+    (``k·spec_draft_cost`` of a mean stage forward), then divided by
+    the expected advance under the acceptance-rate parameter
+    ``spec_acceptance`` (alpha):
+
+        E[advance] = (1 - alpha^(k+1)) / (1 - alpha)
+
+    the standard speculative-decoding expectation (Leviathan et al.) —
+    at alpha = 0.7, k = 4 one verify round commits ~2.77 tokens.  The
+    chosen depth lands on :attr:`PlanChoice.spec_k`; plain schedules
+    stay in the pool, so a low ``spec_acceptance`` simply prices
+    speculation out of the ranking instead of forcing it.
+
     Pass measured-calibrated ``profiles``
     (profiler.scale_profiles_to_measurements) to make the search respond
     to live straggler measurements.  Tie-breaking is deterministic:
@@ -473,6 +499,12 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
     assert not (page_size and sp), (
         "paged KV and sequence-parallel decode are mutually exclusive "
         "(the engine rejects the combination)")
+    if spec_k is not None:
+        assert workload == "decode", (
+            "spec_k prices speculative draft-verify decode; prefill and "
+            "train rounds have no draft loop")
+        assert spec_k >= 1, f"spec_k must be >= 1, got {spec_k}"
+        assert 0.0 < spec_acceptance <= 1.0, spec_acceptance
     if profiles is None:
         profiles = profile_analytic(
             spec, hw, minibatch_tokens=minibatch_tokens,
@@ -489,8 +521,17 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
     else:
         R = base_plan.microbatches
     names = tuple(schedules) if schedules else (
-        ("serve_1f", "serve_interleaved") if serving
+        (("serve_1f", "serve_interleaved")
+         + (("serve_spec_1f", "serve_spec_interleaved")
+            if workload == "decode" and spec_k else ()))
+        if serving
         else ("1f1b", "gpipe", "interleaved", "interleaved_async"))
+    if spec_k is None and any(
+            getattr(SCHEDULES.get(n), "is_speculative", False)
+            for n in names):
+        raise ValueError(
+            "speculative schedules in schedules= need spec_k= (the max "
+            "draft depth to price); got spec_k=None")
     base_name = (make_serving_schedule(base_plan).name if serving
                  else make_schedule(base_plan).name)
     cands: List[PlanChoice] = []
@@ -526,20 +567,7 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
                 except AssertionError:
                     continue
                 plan = _candidate_plan(base_plan, pp, tp, name, v)
-                sched = plan.make_schedule()
-                if serving:
-                    mm = sched.memory_model(
-                        spec, plan, hw,
-                        microbatch_tokens=minibatch_tokens,
-                        data_replicas=data_replicas, cache_len=cache_len,
-                        global_batch=global_batch, sp=sp,
-                        prefill=(workload == "prefill"),
-                        page_size=page_size, kv_occupancy=occupancy)
-                else:
-                    mm = sched.memory_model(
-                        spec, plan, hw,
-                        microbatch_tokens=minibatch_tokens,
-                        data_replicas=data_replicas)
+                base_sched = plan.make_schedule()
                 part = parts.get(n_chunks)
                 if part is None:
                     part = parts[n_chunks] = partition_rectangular(
@@ -550,23 +578,59 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
                         profiles, part, pp, tp, hw,
                         data_replicas=data_replicas)
                 tf, tb = phases[key]
-                scored = sched
-                bucket = None
-                if serving and occupancy < 1.0:
-                    # price what the bucketed executor executes: the
-                    # smallest compacted variant covering the expected
-                    # live count, not a fractional-slot analytic bound
-                    n_live = max(1, math.ceil(occupancy * R))
-                    bucket = pick_bucket(n_live, bucket_lattice(R))
-                    scored = sched.bucketed(bucket)
-                rt, bubble = weighted_round_time(scored, tf, tb)
-                if workload == "prefill":
-                    rt = serve_ttft(scored, tf)
-                cands.append(PlanChoice(plan, part, rt, bubble, mm, budget,
-                                        feasible=mm.fits(budget),
-                                        workload=workload,
-                                        occupancy=occupancy,
-                                        bucket=bucket))
+                # a speculative schedule is one candidate per draft
+                # depth k in 1..spec_k; plain schedules sweep (None,)
+                ks = (tuple(range(1, spec_k + 1))
+                      if getattr(cls, "is_speculative", False)
+                      else (None,))
+                for kk in ks:
+                    sched = (base_sched if kk is None else
+                             dataclasses.replace(base_sched, spec_k=kk))
+                    if serving:
+                        mm = sched.memory_model(
+                            spec, plan, hw,
+                            microbatch_tokens=minibatch_tokens,
+                            data_replicas=data_replicas,
+                            cache_len=cache_len,
+                            global_batch=global_batch, sp=sp,
+                            prefill=(workload == "prefill"),
+                            page_size=page_size, kv_occupancy=occupancy)
+                    else:
+                        mm = sched.memory_model(
+                            spec, plan, hw,
+                            microbatch_tokens=minibatch_tokens,
+                            data_replicas=data_replicas)
+                    scored = sched
+                    bucket = None
+                    if serving and occupancy < 1.0:
+                        # price what the bucketed executor executes: the
+                        # smallest compacted variant covering the
+                        # expected live count, not a fractional-slot
+                        # analytic bound
+                        n_live = max(1, math.ceil(occupancy * R))
+                        bucket = pick_bucket(n_live, bucket_lattice(R))
+                        scored = sched.bucketed(bucket)
+                    rt, bubble = weighted_round_time(scored, tf, tb)
+                    if workload == "prefill":
+                        rt = serve_ttft(scored, tf)
+                    if kk is not None:
+                        # per-ACCEPTED-token round: stretch the verify
+                        # round for the k extra query positions, add k
+                        # head-only draft steps, divide by the expected
+                        # advance under the acceptance rate alpha
+                        alpha = spec_acceptance
+                        exp_adv = (float(kk + 1) if alpha >= 1.0 else
+                                   (1.0 - alpha ** (kk + 1))
+                                   / (1.0 - alpha))
+                        rt = (rt * (1.0 + kk * spec_verify_cost)
+                              + kk * spec_draft_cost
+                              * float(np.mean(tf))) / exp_adv
+                    cands.append(PlanChoice(plan, part, rt, bubble, mm,
+                                            budget,
+                                            feasible=mm.fits(budget),
+                                            workload=workload,
+                                            occupancy=occupancy,
+                                            bucket=bucket, spec_k=kk))
     assert cands, f"no structurally valid plan for model_axis={model_axis}"
 
     def rank(c: PlanChoice):

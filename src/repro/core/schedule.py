@@ -250,6 +250,12 @@ class PipelineSchedule:
     #: forward-only inference schedule (no B slots; memory_model takes the
     #: serving cache terms) — see :class:`ServingSchedule`
     is_serving = False
+    #: speculative draft–verify serving family (``serve_spec_*``): decode
+    #: rounds score ``spec_k + 1`` positions per slot and roll back
+    #: rejected suffixes — see :class:`_SpeculativeServe`
+    is_speculative = False
+    #: draft depth (tokens proposed per verify round); 0 = not speculative
+    spec_k = 0
 
     def __post_init__(self):
         assert self.n_stages >= 1 and self.n_microbatches >= 1
@@ -1332,6 +1338,169 @@ class ScheduleServeInterleaved(ServingSchedule):
                    virtual_stages=getattr(plan, "virtual_stages", 1) or 1)
 
 
+class _SpeculativeServe:
+    """Mixin: the draft–verify accept/rollback contract for serving.
+
+    A speculative round feeds each live slot ``spec_k + 1`` tokens —
+    its current token plus ``spec_k`` drafts — and one ramp through the
+    UNCHANGED serve tables (the table walk is qlen-agnostic; only the
+    per-row qlen grows from 1 to ``verify_qlen``) scores all positions
+    at once.  Greedy verification accepts the longest draft prefix that
+    matches the verifier's own argmax, emits ``accepted + 1`` tokens
+    (the matched drafts plus the verifier's bonus token — so progress
+    per round is in ``[1, spec_k + 1]`` and never worse than plain
+    decode), and rolls the remaining ``spec_k - accepted`` positions
+    back: a masked ``pos`` decrement (stale dense KV is invisible
+    behind the position mask) plus, paged, releasing the rejected
+    suffix's pages (``serving/batcher.py::PageAllocator.truncate_slot``).
+    Rollback makes speculation a pure latency optimization — greedy
+    output is bit-exact vs non-speculative decode by construction.
+
+    The mixin adds the contract on top of any :class:`ServingSchedule`
+    timing: :meth:`accept_pos_delta` (the accept/rollback arithmetic),
+    :meth:`rollback_table` (the second exit table — the tick each
+    slot's rejected suffix resolves), a :meth:`validate` extension that
+    proves both, and a :meth:`memory_model` term for the widened
+    verify workspace and the draft state.
+    """
+
+    is_speculative = True
+
+    @property
+    def verify_qlen(self) -> int:
+        """Positions scored per slot per round: spec_k drafts + 1."""
+        return self.spec_k + 1
+
+    def accept_pos_delta(self, accepted: int) -> Tuple[int, int]:
+        """(advance, rolled_back) for a slot that accepted ``accepted``.
+
+        advance = accepted + 1 (matched drafts + the verifier's bonus
+        token), rolled_back = spec_k - accepted; together they account
+        for every scored position.  ``accepted`` outside [0, spec_k]
+        is a caller bug and raises.
+        """
+        a = int(accepted)
+        if not 0 <= a <= self.spec_k:
+            raise ValueError(
+                f"accepted={accepted} outside [0, spec_k={self.spec_k}]")
+        return a + 1, self.spec_k - a
+
+    def rollback_table(self) -> np.ndarray:
+        """Second exit table: tick → slot whose rejected suffix resolves.
+
+        Acceptance for a slot is known the tick its last chunk exits
+        (``tables().exit_mb``), and the rollback — masked ``pos``
+        decrement + KV truncation — applies in that same tick's
+        epilogue, before the next round's drafts are drawn.  The table
+        therefore mirrors ``exit_mb`` over live slots: every live slot
+        resolves exactly once per round, dead slots never.
+        """
+        return np.asarray(self.tables().exit_mb).copy()
+
+    def validate(self) -> None:
+        """Forward-only contract plus the accept/rollback contract."""
+        super().validate()
+        k = self.spec_k
+        assert k >= 1, f"spec_k={k} must be >= 1 for a speculative schedule"
+        rb = self.rollback_table()
+        tabs = self.tables()
+        assert rb.shape == tabs.exit_mb.shape and (rb == tabs.exit_mb).all(), (
+            "rollback table must resolve each slot at its exit tick")
+        live = self.live_mask()
+        counts = np.bincount(rb[rb >= 0], minlength=self.n_microbatches)
+        for m in range(self.n_microbatches):
+            assert counts[m] == (1 if live[m] else 0), (
+                f"slot {m} resolves {counts[m]} times per round")
+        # accept/rollback arithmetic: every acceptance a ∈ [0, k]
+        # advances a+1 and rolls back k-a — all k+1 scored positions
+        # accounted for, and advance ≥ 1 (the bonus token always lands)
+        for a in range(k + 1):
+            adv, rolled = self.accept_pos_delta(a)
+            assert adv == a + 1 and rolled == k - a, (a, adv, rolled)
+            assert adv + rolled == self.verify_qlen and adv >= 1
+        try:
+            self.accept_pos_delta(k + 1)
+            raise AssertionError("accept_pos_delta(k+1) must raise")
+        except ValueError:
+            pass
+
+    def memory_model(self, spec, plan, hw, *, microbatch_tokens: int,
+                     data_replicas: int = 1, cache_len: int = None,
+                     global_batch: int = None, sp: bool = False,
+                     prefill: bool = False, page_size: int = 0,
+                     kv_occupancy: float = 1.0) -> MemoryModel:
+        """Serving footprint with the verify-width and draft-state terms.
+
+        The in-flight rings hold ``verify_qlen`` positions per slot
+        instead of 1, so the workspace scales by spec_k + 1; the draft
+        state (per-slot draft tokens + one embeds row in flight through
+        the head-only drafter) rides on top.
+        """
+        from repro.core.profiler import ACT_BYTES
+        mm = super().memory_model(
+            spec, plan, hw, microbatch_tokens=microbatch_tokens,
+            data_replicas=data_replicas, cache_len=cache_len,
+            global_batch=global_batch, sp=sp, prefill=prefill,
+            page_size=page_size, kv_occupancy=kv_occupancy)
+        act = microbatch_tokens * spec.d_model * ACT_BYTES
+        draft_bytes = (self.n_microbatches * self.spec_k * 4.0  # tokens
+                       + act)                  # one drafter row in flight
+        return dataclasses.replace(
+            mm,
+            workspace_bytes=mm.workspace_bytes * self.verify_qlen
+            + draft_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleServeSpec1F(_SpeculativeServe, ScheduleServe1F):
+    """Speculative draft–verify decode on the 1F serving pipe.
+
+    Identical tick program to :class:`ScheduleServe1F` — each slot's
+    row is just ``spec_k + 1`` positions wide instead of 1, so one
+    R + S − 1 tick round verifies up to spec_k + 1 tokens per slot.
+    """
+
+    spec_k: int = 4
+
+    name = "serve_spec_1f"
+
+    def __post_init__(self):
+        super().__post_init__()
+        assert self.spec_k >= 1, (
+            f"spec_k={self.spec_k} must be >= 1 (0 drafts is plain "
+            "serve_1f)")
+
+    @classmethod
+    def from_plan(cls, plan) -> "ScheduleServeSpec1F":
+        return cls(plan.pp, plan.decode_microbatches)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleServeSpecInterleaved(_SpeculativeServe,
+                                   ScheduleServeInterleaved):
+    """Speculative draft–verify decode on the interleaved serving pipe.
+
+    :class:`ScheduleServeInterleaved` timing (v chunks per stage,
+    ramp/v), verify rows ``spec_k + 1`` wide.  Shares the training
+    storage order, so train → serve checkpoints round-trip unchanged.
+    """
+
+    spec_k: int = 4
+
+    name = "serve_spec_interleaved"
+
+    def __post_init__(self):
+        super().__post_init__()
+        assert self.spec_k >= 1, (
+            f"spec_k={self.spec_k} must be >= 1 (0 drafts is plain "
+            "serve_interleaved)")
+
+    @classmethod
+    def from_plan(cls, plan) -> "ScheduleServeSpecInterleaved":
+        return cls(plan.pp, plan.decode_microbatches,
+                   virtual_stages=getattr(plan, "virtual_stages", 1) or 1)
+
+
 def serve_ttft(sched: PipelineSchedule, t_fwd=1.0) -> float:
     """Weighted time-to-first-token of a prefill round.
 
@@ -1417,8 +1586,8 @@ def fit_serving_microbatches(decode_microbatches: int, global_batch: int,
     return R
 
 
-def make_serving_schedule(plan, n_microbatches: int = None
-                          ) -> "ServingSchedule":
+def make_serving_schedule(plan, n_microbatches: int = None,
+                          spec_k: int = None) -> "ServingSchedule":
     """The forward-only schedule a plan asks for, from the registry.
 
     A plan whose ``schedule`` names a serving schedule gets exactly
@@ -1426,7 +1595,10 @@ def make_serving_schedule(plan, n_microbatches: int = None
     serving analogue of its chunking — ``serve_interleaved`` when
     ``virtual_stages > 1``, else ``serve_1f``.  ``n_microbatches``
     overrides ``plan.decode_microbatches`` (the engine passes its
-    batch-fitted R).  Unknown or non-serving resolutions raise a
+    batch-fitted R).  ``spec_k`` overrides the draft depth of a
+    speculative (``serve_spec_*``) schedule; passing it for a
+    non-speculative resolution is a typed error (never silently
+    ignored).  Unknown or non-serving resolutions raise a
     registry-lookup error naming the registered serving schedules.
     """
     name = getattr(plan, "schedule", "auto")
@@ -1443,11 +1615,19 @@ def make_serving_schedule(plan, n_microbatches: int = None
             f"no serving schedule {name!r} in the registry; registered "
             f"serving schedules: "
             f"{sorted(n for n, c in SCHEDULES.items() if c.is_serving)}")
+    if spec_k is not None and not cls.is_speculative:
+        raise ValueError(
+            f"spec_k={spec_k} passed but schedule {name!r} is not "
+            "speculative; speculative serving schedules: "
+            f"{sorted(n for n, c in SCHEDULES.items() if c.is_speculative)}")
     R = (n_microbatches if n_microbatches is not None
          else plan.decode_microbatches)
+    kw = {}
     if cls.takes_virtual_stages:
-        return cls(plan.pp, R, virtual_stages=plan.virtual_stages)
-    return cls(plan.pp, R)
+        kw["virtual_stages"] = plan.virtual_stages
+    if spec_k is not None:
+        kw["spec_k"] = int(spec_k)
+    return cls(plan.pp, R, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -1498,6 +1678,8 @@ SCHEDULES: Dict[str, Type[PipelineSchedule]] = {
     "interleaved_async": ScheduleInterleavedAsync1F1B,
     "serve_1f": ScheduleServe1F,
     "serve_interleaved": ScheduleServeInterleaved,
+    "serve_spec_1f": ScheduleServeSpec1F,
+    "serve_spec_interleaved": ScheduleServeSpecInterleaved,
 }
 
 

@@ -63,8 +63,9 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = -1,
 
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
                     window=-1):
-    """Decode attention over a paged KV pool (no padding needed: page and
-    table extents are already block-exact by construction)."""
+    """Decode (q (B, H, Dh)) or speculative verify (q (B, Q, H, Dh))
+    attention over a paged KV pool (no padding needed: page and table
+    extents are already block-exact by construction)."""
     return _paged(q, k_pages, v_pages, block_tables, lengths,
                   window=window, interpret=interpret_mode())
 

@@ -16,15 +16,22 @@ running state across pages.  GQA is handled by processing one KV head's
 whole query-head group (G = H // KV) per grid step — the (G, page)
 score tile hits the MXU as one matmul.
 
+Speculative verify generalizes the query tile from one position to
+``Q = spec_k + 1``: the tile becomes the row-flattened (Q·G, page)
+score matrix — row r is query position ``lengths - Q + r // G`` — and
+causal masking happens *inside* the tile (``kpos <= qpos`` per row), so
+drafts never attend to the suffix they precede.  Q = 1 is plain decode
+and reproduces the original kernel bit-for-bit.
+
 Scalar-prefetch operands (SMEM, available before the body runs):
   block_tables (B, n_pages) int32   page ids, -1 = not allocated
   lengths      (B,)         int32   valid keys per sequence
   window       (1,)         int32   sliding window (<= 0: global)
 
 ``pl.when`` skips pages past the sequence's valid length (and pages
-wholly outside the window), so a short sequence in a long-capacity batch
-costs only its own pages — the roofline win paging buys at the kernel
-level on top of the HBM-capacity win.
+wholly outside the window for every query row), so a short sequence in a
+long-capacity batch costs only its own pages — the roofline win paging
+buys at the kernel level on top of the HBM-capacity win.
 """
 from __future__ import annotations
 
@@ -43,12 +50,14 @@ NEG_INF = -1e30
 
 def _paged_kernel(tab_ref, len_ref, w_ref, q_ref, k_ref, v_ref, o_ref,
                   m_scr, l_scr, acc_scr, *, page: int, n_pages: int,
-                  scale: float):
+                  q_len: int, group: int, scale: float):
     b = pl.program_id(0)
     i = pl.program_id(2)
     length = len_ref[b]              # valid keys for this sequence
     window = w_ref[0]                # <= 0 means global
-    qpos = length - 1                # the decode query's position
+    # the q_len queries sit at positions length - q_len .. length - 1;
+    # score-tile row r belongs to query position length - q_len + r//group
+    min_qpos = length - q_len
 
     @pl.when(i == 0)
     def _init():
@@ -57,19 +66,22 @@ def _paged_kernel(tab_ref, len_ref, w_ref, q_ref, k_ref, v_ref, o_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     # Page-level visibility: skip unallocated pages, pages past the valid
-    # length, and pages wholly older than the sliding window.
+    # length, and pages wholly older than the window for even the OLDEST
+    # query (younger queries see strictly less of the past).
     live = (tab_ref[b, i] >= 0) & (i * page < length)
-    live &= (window <= 0) | (qpos - (i * page + page - 1)
+    live &= (window <= 0) | (min_qpos - (i * page + page - 1)
                              < jnp.maximum(window, 1))
 
     @pl.when(live)
     def _compute():
-        q = q_ref[0, 0]                                   # (G, Dh)
+        q = q_ref[0, 0]                                   # (Q·G, Dh)
         k = k_ref[0, :, 0, :]                             # (page, Dh)
         v = v_ref[0, :, 0, :]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale   # (G, page)
+            preferred_element_type=jnp.float32) * scale   # (Q·G, page)
+        r = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        qpos = min_qpos + r // group                      # per-row query pos
         kpos = i * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
         mask = kpos <= qpos
         mask &= (window <= 0) | ((qpos - kpos) < jnp.maximum(window, 1))
@@ -93,29 +105,39 @@ def _paged_kernel(tab_ref, len_ref, w_ref, q_ref, k_ref, v_ref, o_ref,
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
                     window=-1, interpret: bool = False):
-    """q: (B, H, Dh); k_pages, v_pages: (P, page, KV, Dh); H % KV == 0.
+    """q: (B, H, Dh) decode or (B, Q, H, Dh) verify; pools (P, page, KV, Dh).
 
     ``block_tables``: (B, n_pages) int32 page ids into the pool, -1 for
     unallocated entries; ``lengths``: (B,) int32 valid keys per sequence
-    (the decode query sits at position ``lengths - 1``).  ``window`` may
-    be a Python int or traced scalar (<= 0: global).  Returns
-    (B, H, Dh) in q.dtype; softmax statistics in f32.
+    — the Q queries sit at positions ``lengths - Q .. lengths - 1``
+    (Q = 1 for plain decode, spec_k + 1 for speculative verify; causal
+    masking between the queries happens inside the tile).  ``window``
+    may be a Python int or traced scalar (<= 0: global).  Returns the
+    query shape back ((B, H, Dh) or (B, Q, H, Dh)) in q.dtype; softmax
+    statistics in f32.  H % KV == 0.
     """
-    b, h, dh = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    b, q_len, h, dh = q.shape
     n_pool, page, kv, dh_k = k_pages.shape
     assert dh == dh_k and h % kv == 0, (q.shape, k_pages.shape)
     n_pages = block_tables.shape[1]
     group = h // kv
     scale = 1.0 / np.sqrt(dh)
-    qg = q.reshape(b, kv, group, dh)
+    # row-flatten (Q, G) so one (Q·G, page) tile scores all queries of a
+    # KV head per grid step
+    qg = (q.reshape(b, q_len, kv, group, dh)
+          .transpose(0, 2, 1, 3, 4)
+          .reshape(b, kv, q_len * group, dh))
 
     kernel = functools.partial(_paged_kernel, page=page, n_pages=n_pages,
-                               scale=scale)
+                               q_len=q_len, group=group, scale=scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(b, kv, n_pages),
         in_specs=[
-            pl.BlockSpec((1, 1, group, dh),
+            pl.BlockSpec((1, 1, q_len * group, dh),
                          lambda b_, h_, i, tab, lens, w: (b_, h_, 0, 0)),
             pl.BlockSpec((1, page, 1, dh),
                          lambda b_, h_, i, tab, lens, w:
@@ -125,18 +147,18 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
                          (jnp.maximum(tab[b_, i], 0), 0, h_, 0)),
         ],
         out_specs=pl.BlockSpec(
-            (1, 1, group, dh),
+            (1, 1, q_len * group, dh),
             lambda b_, h_, i, tab, lens, w: (b_, h_, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((group,), jnp.float32),
-            pltpu.VMEM((group,), jnp.float32),
-            pltpu.VMEM((group, dh), jnp.float32),
+            pltpu.VMEM((q_len * group,), jnp.float32),
+            pltpu.VMEM((q_len * group,), jnp.float32),
+            pltpu.VMEM((q_len * group, dh), jnp.float32),
         ],
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kv, group, dh), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, kv, q_len * group, dh), q.dtype),
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
@@ -144,4 +166,7 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
       jnp.asarray(lengths, jnp.int32),
       jnp.asarray(window, jnp.int32).reshape(1),
       qg, k_pages, v_pages)
-    return out.reshape(b, h, dh)
+    out = (out.reshape(b, kv, q_len, group, dh)
+           .transpose(0, 2, 1, 3, 4)
+           .reshape(b, q_len, h, dh))
+    return out[:, 0] if squeeze else out

@@ -76,7 +76,8 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
                plan: Optional[ParallelismPlan] = None,
                optimizer=None, serve_op: str = "auto",
                page_size: int = 0,
-               bucket: Optional[int] = None) -> Cell:
+               bucket: Optional[int] = None,
+               spec_k: Optional[int] = None) -> Cell:
     """Build one (arch × shape × mesh) cell.
 
     ``serve_op`` selects the serving step lowered for prefill shapes:
@@ -95,10 +96,18 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
     ``bucket``-slot decode variant (``EngineSession.decode_step_for``)
     instead of the full-R step — same state/token signature, shorter
     table scan — so bucketed programs get the same dry-run proof.
+
+    ``spec_k`` (decode shapes only) builds the session on the
+    speculative ``serve_spec_*`` schedule and lowers the draft–verify
+    step (``EngineSession.verify_step``: (state, tokens[B, k+1]) ->
+    (state, (scores, accepted))) instead of the one-token decode step,
+    so the verify pass gets the same lowering/SPMD-sharding proof.
     """
     assert serve_op in ("auto", "admit"), serve_op
     assert bucket is None or configs.SHAPES[shape_name].kind in (
         "decode", "long_decode"), "bucket= lowers a decode variant"
+    assert spec_k is None or configs.SHAPES[shape_name].kind == "decode", (
+        "spec_k lowers the speculative verify step, a decode variant")
     shape_kind = configs.SHAPES[shape_name].kind
     assert page_size == 0 or shape_kind != "train", (
         "page_size pages the serving KV cache; training shapes have none")
@@ -134,11 +143,16 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
     # (virtual-stage plans run the serve_interleaved schedule)
     sp = shape.kind == "long_decode"
     prefill_len = shape.seq_len if shape.kind == "prefill" else 0
+    if spec_k is not None:
+        plan = plan.with_(schedule=("serve_spec_interleaved"
+                                    if plan.virtual_stages > 1
+                                    else "serve_spec_1f"))
     session = build_serving(spec, plan, dmesh, cache_len=shape.seq_len,
                             global_batch=shape.global_batch,
                             prefill_len=prefill_len, sp=sp,
                             page_size=page_size,
-                            buckets=bucket is not None)
+                            buckets=bucket is not None,
+                            spec_k=spec_k)
     state_shape = jax.eval_shape(session.init_state, jax.random.key(0))
     state_sds = _sds(state_shape, session.state_shardings())
     state_sh = session.state_shardings()
@@ -167,20 +181,25 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh, *,
         return Cell(arch, shape, plan, mesh, dmesh, session.prefill_step,
                     (state_sds, batch_sds), in_sh, out_sh, spec, session)
 
-    # decode / long_decode: one new token per sequence
+    # decode / long_decode: one new token per sequence (spec_k + 1
+    # proposed tokens per row under the speculative verify step)
     tok_sh = NamedSharding(dmesh, P())
-    tok_sds = jax.ShapeDtypeStruct(session.token_spec.shape,
-                                   session.token_spec.dtype,
+    tok_shape = session.token_spec.shape
+    if spec_k is not None:
+        tok_shape = tok_shape + (spec_k + 1,)
+    tok_sds = jax.ShapeDtypeStruct(tok_shape, session.token_spec.dtype,
                                    sharding=tok_sh)
     in_sh = (state_sh, tok_sh)
     out_sh = (state_sh, None)
-    step = session.decode_step
+    step = session.verify_step if spec_k is not None \
+        else session.decode_step
     if bucket is not None:
         if bucket not in session.buckets:
             raise ValueError(f"bucket {bucket} not in the lattice "
                              f"{session.buckets} for R="
                              f"{session.sched.n_microbatches}")
-        step = session.decode_step_for(bucket)
+        step = (session.verify_step_for(bucket) if spec_k is not None
+                else session.decode_step_for(bucket))
     return Cell(arch, shape, plan, mesh, dmesh, step,
                 (state_sds, tok_sds), in_sh, out_sh, spec, session)
 

@@ -38,7 +38,7 @@ def _data_replicas(mesh, plan) -> int:
 def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
              plan=None, note: str = "", verbose: bool = True,
              do_plan_search: bool = False, hw=prof.TPU_V5E,
-             page_size: int = 0):
+             page_size: int = 0, spec_k=None):
     mesh_name = "2x16x16" if multi_pod else "16x16"
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -63,10 +63,14 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
         #                         build_serving resolves them via the
         #                         registry (make_serving_schedule)
     # train has no KV cache; long_decode runs sp, which excludes paging
+    # (and speculative verify — the lowered step is a decode variant)
     sh_kind = configs.SHAPES[shape].kind
     if sh_kind not in ("prefill", "decode"):
         page_size = 0
-    cell = build_cell(arch, shape, mesh, plan=plan, page_size=page_size)
+    if sh_kind != "decode":
+        spec_k = None
+    cell = build_cell(arch, shape, mesh, plan=plan, page_size=page_size,
+                      spec_k=spec_k)
     lowered = cell.lower()
     t_lower = time.time() - t0
     compiled = lowered.compile()
@@ -162,6 +166,11 @@ def main(argv=None):
                     help="serving shapes: lower the paged-KV engine "
                          "(page pool + page tables) instead of the dense "
                          "cache; ignored for train shapes")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="decode shapes: lower the speculative verify "
+                         "step (serve_spec_* schedule, k drafts + 1 "
+                         "bonus position per round) instead of the "
+                         "one-token decode step; ignored elsewhere")
     args = ap.parse_args(argv)
     err = virtual_stages_error(args.schedule, args.virtual_stages)
     if err:
@@ -199,7 +208,7 @@ def main(argv=None):
                          out_dir=args.out, note=args.note,
                          plan=plan_for(arch),
                          do_plan_search=args.plan_search,
-                         page_size=args.page_size)
+                         page_size=args.page_size, spec_k=args.spec_k)
             except Exception:
                 failures.append((arch, shape))
                 traceback.print_exc()
@@ -212,7 +221,8 @@ def main(argv=None):
     assert args.arch and args.shape, "--arch/--shape or --all"
     run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
              out_dir=args.out, note=args.note, plan=plan_for(args.arch),
-             do_plan_search=args.plan_search, page_size=args.page_size)
+             do_plan_search=args.plan_search, page_size=args.page_size,
+             spec_k=args.spec_k)
 
 
 if __name__ == "__main__":

@@ -116,6 +116,11 @@ def serve_arrivals(session, spec, args):
           f"latency p50 {s['p50_per_token_latency_s'] * 1e3:.1f} ms / "
           f"p99 {s['p99_per_token_latency_s'] * 1e3:.1f} ms; mean TTFT "
           f"{s['mean_ttft_s'] * 1e3:.1f} ms")
+    if s.get("spec_rounds"):
+        print(f"  speculative: {s['spec_rounds']} verify rounds, "
+              f"acceptance {s['acceptance_rate']:.2f}, "
+              f"{s['accepted_per_round']:.2f} accepted tok/lane-round "
+              "(goodput counts accepted tokens only)")
     if getattr(session, "buckets", None) and session._bucket_log:
         from collections import Counter
         hist = Counter(session._bucket_log)
@@ -151,6 +156,11 @@ def main(argv=None):
     ap.add_argument("--schedule", type=str, default=None,
                     choices=[None, *serve_names])
     ap.add_argument("--virtual-stages", type=int, default=None)
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="speculative decode: draft depth (routes onto "
+                         "the serve_spec_* schedules; each decode round "
+                         "drafts k tokens and verifies k+1 positions in "
+                         "one pipelined pass)")
     ap.add_argument("--arrivals", type=str, default=None,
                     help="continuous batching: 't0,t1,...' arrival steps "
                          "(one request each) or 'poisson:RATE:N'")
@@ -161,9 +171,19 @@ def main(argv=None):
                     help="prompt + poisson-trace seed under --arrivals")
     args = ap.parse_args(argv)
     if args.virtual_stages and args.virtual_stages > 1 \
-            and args.schedule not in (None, "serve_interleaved"):
+            and args.schedule not in (None, "serve_interleaved",
+                                      "serve_spec_interleaved"):
         ap.error("--virtual-stages > 1 requires --schedule "
-                 "serve_interleaved")
+                 "serve_interleaved or serve_spec_interleaved")
+    if args.spec_k is not None and args.schedule is not None \
+            and not getattr(SCHEDULES[args.schedule], "is_speculative",
+                            False):
+        ap.error(f"--spec-k needs a speculative schedule "
+                 f"(--schedule serve_spec_1f / serve_spec_interleaved), "
+                 f"got {args.schedule}")
+    if args.spec_k is None and args.schedule is not None \
+            and getattr(SCHEDULES[args.schedule], "is_speculative", False):
+        args.spec_k = 4         # the schedules' default draft depth
 
     cfg = configs.get(args.arch)
     if args.smoke:
@@ -176,10 +196,12 @@ def main(argv=None):
         shape = configs.SHAPES["decode_32k"]
         batch, prefill, cache_len = (shape.global_batch, args.prefill,
                                      shape.seq_len)
-    if args.schedule or args.virtual_stages:
-        name = args.schedule or ("serve_interleaved"
-                                 if (args.virtual_stages or 1) > 1
-                                 else "serve_1f")
+    if args.schedule or args.virtual_stages or args.spec_k:
+        v2 = (args.virtual_stages or 1) > 1
+        name = args.schedule or (
+            ("serve_spec_interleaved" if v2 else "serve_spec_1f")
+            if args.spec_k else
+            ("serve_interleaved" if v2 else "serve_1f"))
         plan = plan.with_(**plan_kwargs_for_schedule(
             name, virtual_stages=args.virtual_stages,
             stash_mode=plan.stash_mode))
@@ -191,10 +213,12 @@ def main(argv=None):
                             compute_dtype=(jnp.float32 if args.smoke
                                            else jnp.bfloat16),
                             page_size=args.page_size,
-                            buckets=args.buckets)
+                            buckets=args.buckets,
+                            spec_k=args.spec_k)
     print(f"serve schedule: {session.sched.name} "
           f"(S={session.sched.n_stages} R={session.sched.n_microbatches}"
           f"{f' v={session.sched.virtual_stages}' if session.sched.virtual_stages > 1 else ''}"
+          f"{f' spec_k={session.sched.spec_k}' if getattr(session.sched, 'is_speculative', False) else ''}"
           f", {session.sched.n_ticks} ticks/pass)")
     if session.paged:
         pg = session.paged
@@ -223,14 +247,38 @@ def main(argv=None):
           f"first tokens {np.asarray(nxt)[:8]}")
 
     t0 = time.time()
-    outs = []
-    for _ in range(args.tokens):
-        nxt = session.decode(nxt)
-        outs.append(np.asarray(nxt))
-    dt = time.time() - t0
-    print(f"decoded {args.tokens} steps × {batch} seqs in {dt:.2f}s "
-          f"({args.tokens * batch / max(dt, 1e-9):.1f} tok/s)")
-    print("sample:", np.stack(outs)[:, 0])
+    if getattr(session.sched, "is_speculative", False):
+        # draft-verify rounds: each commits 1..spec_k+1 tokens per slot
+        last = np.asarray(nxt, np.int32)
+        rows_g = last.shape[0] // session.sched.n_microbatches
+        emitted, rounds, acc_total = 0, 0, 0
+        sample = []
+        while emitted < args.tokens * batch:
+            drafts = session.draft(last)
+            toks = np.concatenate([last[:, None], drafts], axis=1)
+            scores, acc = session.verify(toks.astype(np.int32))
+            rounds += 1
+            acc_total += int(np.sum(acc))
+            emitted += int(np.sum(acc + 1)) * rows_g
+            sample.append(int(scores[0, 0]))
+            acc_rows = np.asarray(acc).repeat(rows_g)
+            last = scores[np.arange(scores.shape[0]),
+                          acc_rows].astype(np.int32)
+        dt = time.time() - t0
+        print(f"spec-decoded {emitted} tokens in {rounds} verify rounds "
+              f"(k={session.sched.spec_k}, mean accepted/round "
+              f"{acc_total / max(rounds * session.sched.n_microbatches, 1):.2f}) "
+              f"in {dt:.2f}s ({emitted / max(dt, 1e-9):.1f} tok/s)")
+        print("sample (first emitted/round):", sample[:args.tokens])
+    else:
+        outs = []
+        for _ in range(args.tokens):
+            nxt = session.decode(nxt)
+            outs.append(np.asarray(nxt))
+        dt = time.time() - t0
+        print(f"decoded {args.tokens} steps × {batch} seqs in {dt:.2f}s "
+              f"({args.tokens * batch / max(dt, 1e-9):.1f} tok/s)")
+        print("sample:", np.stack(outs)[:, 0])
 
 
 if __name__ == "__main__":

@@ -84,3 +84,28 @@ def sample_greedy(head, final_norm_scale, h, *, norm_kind: str = "rmsnorm",
         neg = jnp.full((pad,), -1e30, jnp.float32)
         logits = logits + jnp.concatenate([jnp.zeros((vocab,)), neg])
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def greedy_tokens(head, final_norm_scale, h, *, norm_kind: str = "rmsnorm",
+                  norm_bias=None, vocab: Optional[int] = None):
+    """Greedy token ids at EVERY position. h: (B, S, d) -> (B, S) int32.
+
+    The verify half of speculative decode: one pipelined pass scores a
+    slot's spec_k + 1 positions at once, and position j's argmax is the
+    model's next token after the prefix ending at j — identical to what
+    :func:`sample_greedy` would emit one position at a time, which is
+    what makes draft rejection bit-exact.  Padded vocab ids are masked
+    with the same -1e30 additive mask as the loss path.
+    """
+    from repro.models import nn
+
+    if norm_kind == "rmsnorm":
+        h = nn.rmsnorm(h, final_norm_scale)
+    else:
+        h = nn.layernorm(h, final_norm_scale, norm_bias)
+    logits = (h @ head).astype(jnp.float32)            # (B, S, Vpad)
+    if vocab is not None and vocab < logits.shape[-1]:
+        pad = logits.shape[-1] - vocab
+        neg = jnp.full((pad,), -1e30, jnp.float32)
+        logits = logits + jnp.concatenate([jnp.zeros((vocab,)), neg])
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -233,7 +233,7 @@ def attention(
     cache_pos=None,            # scalar write offset into the cache
     cross_x=None,              # encoder output for cross attention
     seq_axis: Optional[str] = None,  # cache sharded over this axis (SP)
-    paged_kv=None,             # (k_pool, v_pool, table_row, write_gate)
+    paged_kv=None,        # (k_pool, v_pool, table_row, write_gate[, tokenwise])
 ):
     """Returns (out, new_kv_cache). x: (B, S, d_local-replicated)."""
     b, s, _ = x.shape
@@ -285,7 +285,10 @@ def attention(
         # outputs are bit-identical to the dense cache (masked entries
         # contribute exact zeros to the softmax).
         assert kv_cache is None and cross_x is None and seq_axis is None
-        k_pool, v_pool, row, gate = paged_kv
+        k_pool, v_pool, row, gate = paged_kv[:4]
+        # token-wise writes: decode always; s > 1 only when the caller
+        # says so (speculative verify) — prefill keeps the aligned slab.
+        tokenwise = (s == 1) or (len(paged_kv) > 4 and bool(paged_kv[4]))
         n_pool, _, ps, n_kv, dh = k_pool.shape
         npg = row.shape[0]
         L = npg * ps
@@ -303,13 +306,18 @@ def attention(
             return jax.lax.dynamic_update_slice(
                 pool, upd, (pid_safe, 0, 0, 0, 0))
 
-        if s == 1:
-            # decode: one key lands at offset cache_pos % ps inside the
-            # slot's page cache_pos // ps.
-            pi = cache_pos // ps
-            off = cache_pos % ps
+        if tokenwise:
+            # decode / verify: key t lands at offset (cache_pos + t) % ps
+            # inside the slot's page (cache_pos + t) // ps.  Token-wise
+            # (static unroll over s, a compile-time constant: 1 for
+            # decode, spec_k + 1 for verify) because a verify round
+            # starts at an arbitrary mid-page position — the aligned
+            # slab write below would clobber the page's earlier tokens.
 
-            def _write_tok(pool, new):
+            def _write_tok(pool, new, t):
+                posn = cache_pos + t
+                pi = posn // ps
+                off = posn % ps
                 pid = jax.lax.dynamic_index_in_dim(row, pi, keepdims=False)
                 ok = gate & (pid >= 0)
                 pid_safe = jnp.clip(pid, 0, n_pool - 1)
@@ -320,21 +328,23 @@ def attention(
                 return jax.lax.dynamic_update_slice(
                     pool, upd, (pid_safe, 0, off, 0, 0))
 
-            k_pool = _write_tok(k_pool, k[:, 0])
-            v_pool = _write_tok(v_pool, v[:, 0])
+            for t in range(s):
+                k_pool = _write_tok(k_pool, k[:, t], t)
+                v_pool = _write_tok(v_pool, v[:, t], t)
             if st.causal and kernel_ops.use_pallas():
                 # Pallas paged kernel: flatten (page, lane) so every lane
                 # gets its own table row (all lanes of a slot share page
-                # ids and the slot's length).
+                # ids and the slot's length); the s queries sit at
+                # positions cache_pos .. cache_pos + s - 1.
                 lane = jnp.arange(b, dtype=jnp.int32)
                 tabs = jnp.where(row[None, :] >= 0,
                                  row[None, :] * b + lane[:, None], -1)
-                lens_v = jnp.full((b,), cache_pos + 1, jnp.int32)
+                lens_v = jnp.full((b,), cache_pos + s, jnp.int32)
                 kp = k_pool.swapaxes(0, 1).reshape(n_pool * b, ps, n_kv, dh)
                 vp = v_pool.swapaxes(0, 1).reshape(n_pool * b, ps, n_kv, dh)
-                out = kernel_ops.paged_attention(q[:, 0], kp, vp, tabs,
+                out = kernel_ops.paged_attention(q, kp, vp, tabs,
                                                  lens_v, window=window)
-                out = out[:, None].reshape(b, s, st.n_heads_local * st.d_head)
+                out = out.reshape(b, s, st.n_heads_local * st.d_head)
                 out = jnp.einsum("bsk,kd->bsd", out, p["wo"])
                 return maybe_psum(out, tp_axis), (k_pool, v_pool)
         else:

@@ -67,9 +67,10 @@ def _block_apply(st: StageStatics, blk: spec_lib.BlockSpec, lp, x, *,
     """One block: mixer + ffn with pre-norm residuals.
 
     Returns (x, new_state, aux_loss).  ``paged`` (serving only) is a
-    ((k_pool, v_pool), table_row, write_gate) triple routing this
-    layer's attention through the block-paged KV pool instead of the
-    dense per-slot cache; the updated pools come back under the
+    ((k_pool, v_pool), table_row, write_gate[, tokenwise]) tuple routing
+    this layer's attention through the block-paged KV pool instead of
+    the dense per-slot cache (``tokenwise`` forces token-wise writes for
+    s > 1 — speculative verify); the updated pools come back under the
     ``"paged_kv"`` key of new_state (popped off by stage_fwd).
     """
     aux = jnp.zeros((), jnp.float32)
@@ -77,11 +78,12 @@ def _block_apply(st: StageStatics, blk: spec_lib.BlockSpec, lp, x, *,
     if blk.mixer == "attn":
         h = nn.apply_norm(lp["norm1"], x, st.spec.norm)
         if paged is not None:
-            pools, row, gate = paged
+            pools, row, gate = paged[0], paged[1], paged[2]
+            tokenwise = paged[3] if len(paged) > 3 else False
             out, new_pools = nn.attention(
                 lp["attn"], h, st.attn, positions=positions, window=window,
                 theta=theta, tp_axis=tp_axis, cache_pos=cache_pos,
-                paged_kv=(pools[0], pools[1], row, gate))
+                paged_kv=(pools[0], pools[1], row, gate, tokenwise))
             x = x + out
             new_state["paged_kv"] = new_pools
         else:
@@ -145,8 +147,10 @@ def stage_fwd(stage_params, x, st: StageStatics, *, positions, windows,
     *list* with one entry per stage position (SP shards only full-length
     caches — serving/engine.py).
     paged: optional {"pools": {'layer_i': (k_pool, v_pool)}, "row",
-    "gate"} routing the listed attention layers through the block-paged
-    KV pool (serving/engine.py).  When given, returns
+    "gate"[, "tokenwise"]} routing the listed attention layers through
+    the block-paged KV pool (serving/engine.py; "tokenwise" selects
+    token-wise writes for s > 1 — speculative verify).  When given,
+    returns
     (x, (new_state, new_pools), aux_loss_sum) — the pools are global
     across slots, so they cannot ride in the per-slot state tree.
     Returns (x, new_state, aux_loss_sum) otherwise.
@@ -161,7 +165,8 @@ def stage_fwd(stage_params, x, st: StageStatics, *, positions, windows,
         sa = seq_axis[i] if isinstance(seq_axis, list) else seq_axis
         pg = None
         if paged is not None and f"layer_{i}" in paged["pools"]:
-            pg = (paged["pools"][f"layer_{i}"], paged["row"], paged["gate"])
+            pg = (paged["pools"][f"layer_{i}"], paged["row"], paged["gate"],
+                  paged.get("tokenwise", False))
         return _block_apply(
             st, blk, lp, x, positions=positions, window=windows[i],
             theta=thetas[i], tp_axis=tp_axis, state=lstate,

@@ -154,6 +154,42 @@ class PageAllocator:
             self.counts[slot] += 1
         self.tokens[slot] = max(int(self.tokens[slot]), int(n_tokens))
 
+    def truncate_slot(self, slot: int, n_tokens: int) -> int:
+        """Shrink ``slot`` to ``n_tokens``, freeing now-unused tail pages.
+
+        The speculative-decode epilogue: verify writes KV for all
+        ``spec_k + 1`` proposed positions, then the accepted prefix
+        keeps only ``pos'`` of them — pages wholly past the accepted
+        length go straight back on the free list (the k_pos mask hides
+        the stale partial tail of the last kept page).  Returns the
+        number of pages freed.  Growing is :meth:`extend_slot`'s job:
+        asking for more tokens than the slot holds raises.
+        """
+        n_tokens = int(n_tokens)
+        if n_tokens < 0:
+            raise ValueError(f"slot {slot}: cannot truncate to "
+                             f"{n_tokens} tokens")
+        if n_tokens > int(self.tokens[slot]):
+            raise ValueError(
+                f"slot {slot}: truncate_slot({n_tokens}) exceeds the "
+                f"slot's {int(self.tokens[slot])} tokens — truncate "
+                "only shrinks (extend_slot grows)")
+        need = self.pages_needed(n_tokens)
+        freed = 0
+        while self.counts[slot] > need:
+            self.counts[slot] -= 1
+            pid = int(self.tables[slot, self.counts[slot]])
+            if pid < 0:
+                raise AssertionError(
+                    f"slot {slot} table corrupt: entry "
+                    f"{int(self.counts[slot])} unallocated inside the "
+                    "counted range")
+            self.tables[slot, self.counts[slot]] = -1
+            self.free.append(pid)
+            freed += 1
+        self.tokens[slot] = n_tokens
+        return freed
+
     def permute_slots(self, perm) -> None:
         """Reorder the slot rows: new slot i takes old slot perm[i].
 
@@ -339,6 +375,12 @@ class BatchingReport:
     decode_rounds: int
     admit_rounds: int
     wall_seconds: float
+    # -- speculative decode accounting (zero on a plain session) ----------
+    spec_rounds: int = 0        # verify rounds run
+    spec_lane_rounds: int = 0   # live (lane, round) pairs across the run
+    drafted_tokens: int = 0     # spec_k drafts proposed per live lane-round
+    accepted_drafts: int = 0    # drafts the verifier accepted
+    accepted_tokens: int = 0    # tokens actually committed to requests
 
     @property
     def completed(self) -> List[Request]:
@@ -351,8 +393,22 @@ class BatchingReport:
     @property
     def goodput_tokens_per_s(self) -> float:
         """Completed tokens per second — tokens of unfinished requests
-        do not count (that is what makes it goodput, not throughput)."""
+        do not count (that is what makes it goodput, not throughput).
+        Under speculative decode only *accepted* tokens ever reach
+        ``Request.tokens``, so rejected drafts never inflate this number:
+        spec goodput is accepted-token goodput by construction."""
         return self.completed_tokens / max(self.wall_seconds, 1e-12)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Fraction of proposed drafts the verifier accepted."""
+        return self.accepted_drafts / max(self.drafted_tokens, 1)
+
+    @property
+    def accepted_per_round(self) -> float:
+        """Mean tokens committed per lane per verify round (the
+        speculative speedup over one-token-per-round decode)."""
+        return self.accepted_tokens / max(self.spec_lane_rounds, 1)
 
     def per_token_latency_s(self) -> np.ndarray:
         """Per-request (completion − arrival) / tokens, seconds."""
@@ -378,7 +434,14 @@ class BatchingReport:
                 float(np.percentile(lat, 99)) if lat.size else float("nan"),
             "mean_ttft_s":
                 float(ttft.mean()) if ttft.size else float("nan"),
-        }
+        } | ({
+            "spec_rounds": self.spec_rounds,
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_drafts": self.accepted_drafts,
+            "accepted_tokens": self.accepted_tokens,
+            "acceptance_rate": self.acceptance_rate,
+            "accepted_per_round": self.accepted_per_round,
+        } if self.spec_rounds else {})
 
 
 class ContinuousBatchingSession:
@@ -400,7 +463,8 @@ class ContinuousBatchingSession:
 
     def __init__(self, session, *, eos_id: Optional[int] = None,
                  policy: str = "continuous",
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 draft_fn: Optional[Callable] = None):
         if policy not in ("continuous", "synchronized"):
             raise ValueError(f"unknown policy {policy!r}")
         if getattr(session, "admit_step", None) is None:
@@ -411,6 +475,18 @@ class ContinuousBatchingSession:
         self.eos_id = eos_id
         self.policy = policy
         self.clock = clock
+        sched = getattr(session, "sched", None)
+        self.spec_k = (int(getattr(sched, "spec_k", 0))
+                       if getattr(sched, "is_speculative", False) else 0)
+        if draft_fn is not None and not self.spec_k:
+            raise ValueError(
+                "draft_fn= passed but the session's schedule is not "
+                "speculative; build with spec_k= (serve_spec_* schedule) "
+                "or drop draft_fn")
+        # default draft source: the engine's head-only self-draft;
+        # injectable so tests/benchmarks can force acceptance extremes
+        self.draft_fn = (draft_fn if draft_fn is not None
+                         else getattr(session, "draft", None))
         self.R = int(session.sched.n_microbatches)
         gb = int(session.token_spec.shape[0])
         tok = session.prefill_specs["tokens"].shape   # (R, rows, text_len)
@@ -426,6 +502,17 @@ class ContinuousBatchingSession:
         self.decode_rounds = 0
         self.admit_rounds = 0
         self._all: List[Request] = []
+        self._reset_spec_counters()
+
+    def _reset_spec_counters(self) -> None:
+        self.spec_rounds = 0
+        self.spec_lane_rounds = 0
+        self.drafted_tokens = 0
+        self.accepted_drafts = 0
+        self.accepted_tokens = 0
+        # per-slot committed-token counts (speculative accounting: how
+        # many tokens each schedule slot actually emitted)
+        self.accepted_per_slot = np.zeros(self.R, np.int64)
 
     # ---- admission -------------------------------------------------------
 
@@ -533,6 +620,7 @@ class ContinuousBatchingSession:
         old = {s.index: s.requests for s in self.slots}
         for new_i, old_i in enumerate(perm):
             self.slots[new_i].requests = old[old_i]
+        self.accepted_per_slot = self.accepted_per_slot[list(perm)].copy()
 
     def _evict_exhausted(self, slot_idx, now: float) -> None:
         """Backpressure for a :class:`CacheExhausted` decode.
@@ -562,12 +650,54 @@ class ContinuousBatchingSession:
         return [(s, lane, r) for s in self.slots
                 for lane, r in s.live_lanes()]
 
-    def _decode_round(self, live) -> np.ndarray:
+    def _decode_round(self, live) -> None:
         tokens = np.zeros((self.R, self.rows), np.int32)
         for s, lane, r in live:
             tokens[s.index, lane] = r.tokens[-1]
         nxt = self.session.decode(tokens.reshape(-1))
-        return np.asarray(nxt).reshape(self.R, self.rows)
+        nxt = np.asarray(nxt).reshape(self.R, self.rows)
+        now = self.clock()
+        for s, lane, r in live:
+            r._record(nxt[s.index, lane], self.steps, now, self.eos_id)
+
+    def _spec_round(self, live) -> None:
+        """One draft–verify round: commit up to spec_k + 1 tokens/lane.
+
+        Drafts come from ``draft_fn`` (default: the engine's head-only
+        self-draft); the verifier scores all spec_k + 1 positions in one
+        pipelined pass, and each live lane commits its slot's accepted
+        prefix plus the bonus token — a request finishing mid-prefix
+        (EOS / max_new_tokens) stops committing there, while its slot
+        mates keep the full prefix.
+        """
+        K = self.spec_k
+        last = np.zeros((self.R, self.rows), np.int32)
+        for s, lane, r in live:
+            last[s.index, lane] = r.tokens[-1]
+        flat = last.reshape(-1)
+        drafts = np.asarray(self.draft_fn(flat), np.int32)
+        if drafts.shape != (flat.shape[0], K):
+            raise ValueError(
+                f"draft_fn returned shape {drafts.shape}, expected "
+                f"({flat.shape[0]}, {K}) = (global_batch, spec_k)")
+        toks = np.concatenate([flat[:, None], drafts], axis=1)
+        scores, acc = self.session.verify(toks)
+        scores = np.asarray(scores).reshape(self.R, self.rows, K + 1)
+        acc = np.asarray(acc).reshape(-1)
+        now = self.clock()
+        self.spec_rounds += 1
+        for s, lane, r in live:
+            a = int(acc[s.index])
+            self.spec_lane_rounds += 1
+            self.drafted_tokens += K
+            self.accepted_drafts += a
+            for j in range(a + 1):
+                r._record(scores[s.index, lane, j], self.steps, now,
+                          self.eos_id)
+                self.accepted_tokens += 1
+                self.accepted_per_slot[s.index] += 1
+                if r.finished:
+                    break
 
     # ---- one scheduler step ----------------------------------------------
 
@@ -588,26 +718,26 @@ class ContinuousBatchingSession:
         self.queue.absorb_arrivals(self.steps, now)
         if self.queue.n_ready:
             self._admit()
-        # 3) decode every live lane one token; a CacheExhausted decode
-        #    evicts the blocked slots (truncating their requests) and
-        #    retries once — backpressure instead of a crashed serve loop
+        # 3) one decode (or draft–verify) round for every live lane; a
+        #    CacheExhausted round evicts the blocked slots (truncating
+        #    their requests) and retries once — backpressure instead of
+        #    a crashed serve loop
         live = self._live_lanes()
         if live:
+            round_fn = self._spec_round if self.spec_k \
+                else self._decode_round
             try:
-                nxt = self._decode_round(live)
+                round_fn(live)
             except RuntimeError as e:
                 from repro.serving.engine import CacheExhausted
                 if not isinstance(e, CacheExhausted):
                     raise
                 self._evict_exhausted(e.slots, self.clock())
                 live = self._live_lanes()
-                nxt = self._decode_round(live) if live else None
+                if live:
+                    round_fn(live)
             if live:
                 self.decode_rounds += 1
-                now = self.clock()
-                for s, lane, r in live:
-                    r._record(nxt[s.index, lane], self.steps, now,
-                              self.eos_id)
         self.steps += 1
         return bool(len(self.queue) or live
                     or any(not s.free for s in self.slots))
@@ -624,6 +754,7 @@ class ContinuousBatchingSession:
         self.steps = 0
         self.decode_rounds = 0
         self.admit_rounds = 0
+        self._reset_spec_counters()
         if self.session.state is None:
             self.session.start()
         # begin empty: every slot free until its first admission
@@ -638,4 +769,9 @@ class ContinuousBatchingSession:
             requests=self._all, policy=self.policy, steps=self.steps,
             decode_rounds=self.decode_rounds,
             admit_rounds=self.admit_rounds,
-            wall_seconds=self.clock() - t0)
+            wall_seconds=self.clock() - t0,
+            spec_rounds=self.spec_rounds,
+            spec_lane_rounds=self.spec_lane_rounds,
+            drafted_tokens=self.drafted_tokens,
+            accepted_drafts=self.accepted_drafts,
+            accepted_tokens=self.accepted_tokens)

@@ -143,6 +143,16 @@ class EngineSession:
     # the model carries recurrent (mamba/rwkv) state, whose prefill
     # would absorb the padding tokens.
     ragged_ok: bool = True
+    # speculative draft–verify (serve_spec_* schedules): verify_step
+    # (state, (B, spec_k+1) tokens) -> (state, (scores, accepted)),
+    # its per-bucket factory, the head-only self-drafter, and the pure
+    # rollback step (present for EVERY serving session — rollback is
+    # just a masked pos decrement)
+    verify_step: Optional[Callable] = None
+    verify_step_for: Optional[Callable] = None
+    draft_step: Optional[Callable] = None
+    rollback_step: Optional[Callable] = None
+    cache_len: int = 0             # KV capacity (headroom checks)
     _jit: Dict[Any, Callable] = dataclasses.field(default_factory=dict)
     _alloc: Any = None             # host-side PageAllocator (paged mode)
     # host mirrors of state["pos"]/state["live"] — maintained in EVERY
@@ -150,6 +160,8 @@ class EngineSession:
     # tests/test_paged.py locks them to the device values)
     _pos: Any = None
     _live: Any = None
+    # per-slot prompt length mirror: rollback may never cross it
+    _prompt_len: Any = None
     _bucket_log: list = dataclasses.field(default_factory=list)
 
     def state_shardings(self):
@@ -167,6 +179,7 @@ class EngineSession:
         R = self.sched.n_microbatches
         self._pos = np.zeros(R, np.int64)
         self._live = np.ones(R, np.int64)
+        self._prompt_len = np.zeros(R, np.int64)
         self._bucket_log = []
         if self.paged is not None:
             from repro.serving.batcher import PageAllocator
@@ -205,7 +218,16 @@ class EngineSession:
         text_len = self.prefill_specs["tokens"].shape[2]
         R = self.sched.n_microbatches
         if isinstance(batch, dict) and batch.get("lens") is not None:
-            return np.asarray(batch["lens"]).reshape(R), text_len
+            lens = np.asarray(batch["lens"]).reshape(-1)
+            if lens.shape[0] != R:
+                raise ValueError(
+                    f"lens has {lens.shape[0]} entries for R={R} slots; "
+                    "pass exactly one prompt length per slot")
+            if (lens < 1).any() or (lens > text_len).any():
+                raise ValueError(
+                    f"lens entries must lie in [1, {text_len}] (the "
+                    f"session prompt width); got {lens.tolist()}")
+            return lens.astype(np.int64), text_len
         return np.full(R, text_len, np.int64), text_len
 
     def prefill(self, batch):
@@ -224,6 +246,7 @@ class EngineSession:
             self._push_tables()
         self._pos[:] = lens
         self._live[:] = 1
+        self._prompt_len[:] = lens
         if "prefill" not in self._jit:
             sh = self.state_shardings()
             self._jit["prefill"] = jax.jit(
@@ -244,7 +267,9 @@ class EngineSession:
         slots outside the bucket are garbage (they are dead).
         """
         if self.state is None:
-            self.start()
+            raise ValueError(
+                "decode() before start(): no session state — call "
+                "start() (and prefill prompts) before decoding")
         R = self.sched.n_microbatches
         b = self._resolve_bucket(bucket)
         if b < R and int(self._live[b:].sum()):
@@ -297,6 +322,180 @@ class EngineSession:
             self._bucket_log.append(b)
         return tokens
 
+    # ---- speculative draft–verify ----------------------------------------
+
+    def draft(self, tokens):
+        """k greedy self-drafts per row: (B_global,) -> (B_global, spec_k).
+
+        Head-only (embed → head, no pipeline pass); callers may
+        substitute any draft source — verify() accepts arbitrary drafts
+        and rollback keeps output exact regardless of their quality.
+        """
+        if self.draft_step is None:
+            raise ValueError(
+                "draft() on a non-speculative session: build with "
+                "plan.schedule='serve_spec_1f'/'serve_spec_interleaved'")
+        if self.state is None:
+            raise ValueError(
+                "draft() before start(): no session state — call "
+                "start() (and prefill/admit prompts) first")
+        if "draft" not in self._jit:
+            sh = self.state_shardings()
+            self._jit["draft"] = jax.jit(self.draft_step,
+                                         in_shardings=(sh, None))
+        return np.asarray(
+            self._jit["draft"](self.state, jnp.asarray(tokens, jnp.int32)))
+
+    def verify(self, tokens, bucket=None):
+        """One draft–verify round: score spec_k + 1 positions per slot.
+
+        ``tokens``: (global_batch, spec_k + 1) int32 — column 0 each
+        row's current token (what ``decode()`` would be fed), columns
+        1..k its draft continuation.  One ramp through the serve tables
+        scores every position; each live slot advances by
+        ``accepted + 1`` (its accepted draft prefix plus the verifier's
+        bonus token — never less than plain decode) and the rejected
+        suffix rolls back: dense KV past the new pos is invisible
+        behind the position mask, paged suffix pages are released via
+        the allocator.  Returns ``(scores, accepted)``: scores
+        (global_batch, spec_k + 1) — the tokens to emit per row are
+        ``scores[row, :accepted[slot] + 1]`` — and accepted [R] (min
+        over each slot's lanes).  Bit-exact vs non-speculative greedy
+        decode by construction.
+        """
+        if self.verify_step is None:
+            raise ValueError(
+                "verify() on a non-speculative session: build with "
+                "plan.schedule='serve_spec_1f'/'serve_spec_interleaved'")
+        if self.state is None:
+            raise ValueError(
+                "verify() before start(): no session state — call "
+                "start() (and prefill/admit prompts) first")
+        K = int(self.sched.spec_k)
+        Q = K + 1
+        toks = np.asarray(tokens)
+        if toks.ndim != 2 or toks.shape[1] != Q:
+            raise ValueError(
+                f"tokens must be (global_batch, spec_k+1) = "
+                f"(..., {Q}); got {toks.shape}")
+        R = self.sched.n_microbatches
+        cap = self.cache_len
+        if cap and Q > cap:
+            raise ValueError(
+                f"spec_k={K} exceeds the cache_len headroom: a verify "
+                f"round writes spec_k+1={Q} positions but "
+                f"cache_len={cap}")
+        live_r = np.flatnonzero(self._live)
+        if cap:
+            # capacity backpressure (evictable), mirroring decode()
+            over = [int(r) for r in live_r if self._pos[r] + Q > cap]
+            if over:
+                raise CacheExhausted(
+                    f"slots {over} lack verify headroom (pos + spec_k+1 "
+                    f"> cache_len={cap}); evict them or lower spec_k",
+                    slots=over)
+        b = self._resolve_bucket(bucket)
+        if b < R and int(self._live[b:].sum()):
+            raise ValueError(
+                f"verify bucket {b} excludes live slots "
+                f"{(np.flatnonzero(self._live[b:]) + b).tolist()}; "
+                "compact_slots first")
+        if self.paged is not None:
+            # pre-extend every live slot to pos + Q (all Q writes land
+            # in owned pages); all blockers found BEFORE any mutation
+            free = self._alloc.free_pages
+            dry = []
+            for r in live_r:
+                need = (self._alloc.pages_needed(int(self._pos[r]) + Q)
+                        - int(self._alloc.counts[r]))
+                if need > free:
+                    dry.append(int(r))
+                else:
+                    free -= need
+            if dry:
+                raise CacheExhausted(
+                    f"page pool exhausted growing slots {dry} for a "
+                    f"spec_k={K} verify round "
+                    f"({self._alloc.free_pages} pages free); evict a "
+                    "slot or size pool_pages for the worst case",
+                    slots=dry)
+            for r in live_r:
+                self._alloc.extend_slot(int(r), int(self._pos[r]) + Q)
+            self._push_tables()
+        key = ("verify", b)
+        if key not in self._jit:
+            sh = self.state_shardings()
+            fn = (self.verify_step if b == R
+                  else self.verify_step_for(b))
+            self._jit[key] = jax.jit(
+                fn, in_shardings=(sh, None),
+                out_shardings=(sh, (None, None)), donate_argnums=0)
+        self.state, (scores, accepted) = self._jit[key](
+            self.state, jnp.asarray(toks, jnp.int32))
+        accepted = np.asarray(accepted, np.int64)
+        self._pos += (accepted + 1) * (self._live > 0)
+        if self.paged is not None:
+            # release the rejected suffixes' pages (truncate never
+            # grows; slots whose round fit in already-owned pages are
+            # no-ops)
+            for r in np.flatnonzero(self._live):
+                self._alloc.truncate_slot(int(r), int(self._pos[r]))
+            self._push_tables()
+        if self.buckets is not None:
+            self._bucket_log.append(b)
+        return np.asarray(scores), accepted
+
+    def rollback_slots(self, slot_mask, new_pos):
+        """Roll masked slots back to ``new_pos`` (pure pos decrement).
+
+        The rejection path exposed directly (verify() applies it
+        implicitly): dense KV needs no touch-up — stale entries past
+        pos are invisible behind the attention position mask — and
+        paged mode releases the truncated suffix's pages.  Typed
+        guards: a rollback may never cross a slot's prompt length
+        (``new_pos`` below the prompt would orphan prefill KV) nor
+        move forward.
+        """
+        if self.state is None:
+            raise ValueError(
+                "rollback_slots() before start(): no session state")
+        R = self.sched.n_microbatches
+        m = np.asarray(slot_mask).reshape(-1) > 0
+        if m.shape[0] != R:
+            raise ValueError(
+                f"slot_mask has {m.shape[0]} entries for R={R} slots")
+        npos = np.asarray(new_pos, np.int64).reshape(-1)
+        if npos.shape[0] != R:
+            raise ValueError(
+                f"new_pos has {npos.shape[0]} entries for R={R} slots")
+        below = [int(r) for r in np.flatnonzero(m)
+                 if npos[r] < self._prompt_len[r]]
+        if below:
+            raise ValueError(
+                f"new_pos rolls slots {below} below their prompt length "
+                f"(new_pos={[int(npos[r]) for r in below]}, prompt_len="
+                f"{[int(self._prompt_len[r]) for r in below]}): rollback "
+                "may only drop generated positions, never the prompt")
+        fwd = [int(r) for r in np.flatnonzero(m) if npos[r] > self._pos[r]]
+        if fwd:
+            raise ValueError(
+                f"new_pos advances slots {fwd} (new_pos > pos); "
+                "rollback_slots only moves positions backward")
+        if "rollback" not in self._jit:
+            sh = self.state_shardings()
+            self._jit["rollback"] = jax.jit(
+                self.rollback_step, in_shardings=(sh, None, None),
+                out_shardings=sh, donate_argnums=0)
+        self.state = self._jit["rollback"](
+            self.state, jnp.asarray(m, jnp.int32),
+            jnp.asarray(npos, jnp.int32))
+        self._pos[m] = npos[m]
+        if self._alloc is not None:
+            for r in np.flatnonzero(m):
+                self._alloc.truncate_slot(int(r), int(npos[r]))
+            self._push_tables()
+        return self
+
     # ---- continuous-batching slot ops (serving/batcher.py drives these) ---
 
     def reset_slots(self, slot_mask):
@@ -310,6 +509,7 @@ class EngineSession:
             self._push_tables()
         self._pos[m] = 0
         self._live[m] = 0
+        self._prompt_len[m] = 0
         if "reset" not in self._jit:
             sh = self.state_shardings()
             self._jit["reset"] = jax.jit(
@@ -362,6 +562,7 @@ class EngineSession:
             self._push_tables()
         self._pos[mask] = lens[mask]
         self._live[mask] = 1
+        self._prompt_len[mask] = lens[mask]
         key = ("admit", b)
         if key not in self._jit:
             sh = self.state_shardings()
@@ -409,6 +610,7 @@ class EngineSession:
                                           jnp.asarray(perm, jnp.int32))
         self._pos = self._pos[perm]
         self._live = self._live[perm]
+        self._prompt_len = self._prompt_len[perm]
         if self._alloc is not None:
             # host allocator rows follow the same permutation; the device
             # tables were permuted identically by compact_step, so no
@@ -422,7 +624,8 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                   prefill_len: int = 0, sp: bool = False,
                   compute_dtype=jnp.bfloat16, page_size: int = 0,
                   pool_pages: Optional[int] = None,
-                  buckets: bool = False) -> EngineSession:
+                  buckets: bool = False,
+                  spec_k: Optional[int] = None) -> EngineSession:
     """``page_size > 0`` switches full-length attention KV to the
     block-paged layout: a global per-layer page pool
     (n_chunks, pool_pages, rows, page_size, KV, Dh) plus one per-slot
@@ -443,6 +646,16 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
     bit-exact with the full-R path (the bucketed table is provably the
     masked full-R table with dead slots deleted —
     ``ServingSchedule.bucketed``).
+
+    A speculative plan (``schedule='serve_spec_1f'/'serve_spec_interleaved'``,
+    draft depth overridable with ``spec_k=``) additionally equips the
+    session with the draft–verify API: ``session.draft(tokens)`` (k
+    head-only self-draft hops), ``session.verify(tokens)`` (one ramp
+    scoring all spec_k + 1 positions per live slot, advancing each slot
+    by its accepted prefix + 1 and rolling the rejected suffix back) and
+    ``session.rollback_slots(mask, new_pos)``.  Greedy output is
+    bit-exact (fp32) vs the non-speculative schedule by construction —
+    rollback makes speculation a pure latency optimization.
     """
     S = plan.pp
     if page_size:
@@ -478,8 +691,9 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
     # raises the lookup error for names with no serving analogue); a plan
     # with virtual_stages > 1 interleaves its chunks exactly like the
     # training side.
-    sched = make_serving_schedule(plan, R)
+    sched = make_serving_schedule(plan, R, spec_k=spec_k)
     sched.validate()
+    speculative = bool(getattr(sched, "is_speculative", False))
     v = sched.virtual_stages
     n_chunks = sched.n_chunks
     # model-side construction (init, statics, per-chunk scalars) sees the
@@ -492,7 +706,32 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
     statics = make_statics(spec, mplan,
                            tokens_per_mb=gb * max(prefill_len, 1))
     lps = spec.layers_per_stage(n_chunks)
-    if prefill_len:
+    if speculative:
+        # rollback is a pos decrement: recurrent (mamba/rwkv/cmix) state
+        # cannot rewind, encoder/vision frontends have no draft path, and
+        # the SP cache write is decode-only (qlen = 1).
+        if sp:
+            raise ValueError(
+                "speculative decode (serve_spec_*) and sequence-parallel "
+                "decode (sp=True) are exclusive: the SP cache write path "
+                "is single-token")
+        bad = [i for i, blk in enumerate(statics.program)
+               if blk.mixer in ("mamba", "rwkv") or blk.ffn == "rwkv_cmix"]
+        if bad or spec.encoder is not None or spec.frontend == "vision":
+            raise ValueError(
+                "speculative decode needs a pure-attention decoder stack: "
+                "rejected drafts roll back by a masked pos decrement, and "
+                f"recurrent state cannot rewind (layers {bad}, "
+                f"encoder={spec.encoder is not None}, "
+                f"frontend={spec.frontend!r})")
+        if sched.verify_qlen > cache_len:
+            raise ValueError(
+                f"spec_k={sched.spec_k} exceeds the cache_len headroom: a "
+                f"verify round writes spec_k+1={sched.verify_qlen} "
+                f"positions but cache_len={cache_len}")
+    if prefill_len or speculative:
+        # (speculative verify also writes contiguous qlen > 1 slabs
+        # mid-stream, so it needs full-length caches like prefill)
         # Prefill writes a contiguous qlen slab: every attention cache must
         # be full-length (windowed layers still *mask* to their window; the
         # ring-buffer memory optimization only applies to decode-only use).
@@ -612,7 +851,7 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
     # stays full-R shaped either way, a bucket just scans fewer ticks.
     def _pipe_forward_impl(params, cache, pages, embeds_ring, pos, tables,
                            qlen, enc_ring, slot_mask, ft_tab, exit_tab,
-                           n_ticks_b):
+                           n_ticks_b, tokenwise=False):
         """embeds_ring: (R, Bg_rows, qlen, d); returns (h_ring, cache',
         pages').
 
@@ -685,7 +924,7 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                 row_r = jax.lax.dynamic_index_in_dim(tables, rsafe, 0,
                                                      keepdims=False)
                 paged_arg = {"pools": pools_r, "row": row_r,
-                             "gate": valid}
+                             "gate": valid, "tokenwise": tokenwise}
             h, st_out, _ = stage_fwd(
                 w_loc, x_in, statics, positions=positions,
                 windows=win_loc, thetas=th_loc, tp_axis=tp_axis,
@@ -767,12 +1006,15 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         # only the output stage's ring shard carries the exits
         return h_ring[S - 1], cache, pages
 
-    def _make_pipe_forward(bsched):
+    def _make_pipe_forward(bsched, tokenwise=False):
+        # tokenwise=True routes paged cache writes token-by-token (the
+        # speculative verify pass starts at arbitrary mid-page positions;
+        # prefill keeps the page-aligned slab write)
         bt = bsched.tables()
         ft = np.asarray(bt.fwd)
         ex = np.asarray(bt.exit_mb)
         nt = bsched.n_ticks
-        return lambda *a: _pipe_forward_impl(*a, ft, ex, nt)
+        return lambda *a: _pipe_forward_impl(*a, ft, ex, nt, tokenwise)
 
     _pipe_forward = _make_pipe_forward(sched)
 
@@ -827,6 +1069,111 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         return decode_step
 
     decode_step = _make_decode_step(_pipe_forward, None)
+
+    # ---------------- speculative verify / draft / rollback ----------------
+    def _make_verify_step(pipe_forward, in_bucket):
+        """Build one draft–verify step over ``pipe_forward``'s tables.
+
+        The pass is the decode step with qlen = spec_k + 1: each slot's
+        row carries its current token plus the k drafts, one ramp
+        through the UNCHANGED serve tables scores every position, and
+        greedy acceptance keeps the longest draft prefix matching the
+        verifier's own argmax chain.  Per-slot acceptance is the MIN
+        over the slot's data-parallel lanes (all lanes share one pos —
+        a lane that matched further simply regenerates the identical
+        greedy token next round, so output stays bit-exact).
+        """
+        K = int(sched.spec_k)
+        Q = K + 1
+
+        def verify_step(state, tokens):
+            """tokens: (B_global, spec_k+1) int32 — column 0 the current
+            token, columns 1..k the drafts.  Returns (state', (scores,
+            accepted)): scores (B_global, spec_k+1) — position j's
+            greedy token after prefix ..j — and accepted [R].  pos
+            advances by (accepted + 1) · gate; KV written past the new
+            pos is stale and invisible behind the position mask (paged
+            suffix pages are released host-side by ``verify()``).
+            """
+            params, cache = state["params"], state["cache"]
+            pos, live = state["pos"], state["live"]
+            pages = state.get("pages", {})
+            tables = state.get("tables", jnp.zeros((R, 1), jnp.int32))
+            emb = lm_head.embed_tokens(params["embed"], tokens)  # (B, Q, d)
+            embeds_ring = emb.reshape(R, rows_g, Q, spec.d_model)
+            enc_ring = jnp.zeros((1, 1, 1, 1), compute_dtype)
+            gate = (live if in_bucket is None
+                    else live * jnp.asarray(in_bucket, jnp.int32))
+            h_ring, cache, pages = pipe_forward(params, cache, pages,
+                                                embeds_ring, pos, tables,
+                                                Q, enc_ring, gate)
+            h = h_ring.reshape(R * rows_g, Q, spec.d_model)
+            scores = lm_head.greedy_tokens(
+                params["head"], params["final_norm"]["scale"], h,
+                norm_kind=spec.norm,
+                norm_bias=params["final_norm"].get("bias"),
+                vocab=spec.vocab)                         # (B, Q)
+            # longest accepted draft prefix per row: draft d_i (column i
+            # of tokens[:, 1:]) is accepted iff it equals the verifier's
+            # token after prefix ..i-1 (scores[:, :-1]) AND all earlier
+            # drafts were
+            match = (tokens[:, 1:] == scores[:, :-1]).astype(jnp.int32)
+            acc_rows = jnp.cumprod(match, axis=1).sum(axis=1)     # (B,)
+            accepted = acc_rows.reshape(R, rows_g).min(axis=1)    # (R,)
+            adv = (accepted.astype(jnp.int32) + 1) * gate
+            new_state = {**state, "cache": cache,
+                         "pos": pos + adv}
+            if pages:
+                new_state["pages"] = pages
+            return new_state, (scores, accepted.astype(jnp.int32))
+
+        return verify_step
+
+    def draft_step(state, tokens):
+        """Self-draft: k head-only hops.  tokens (B,) -> drafts (B, k).
+
+        Reuses the target model's embedding and head ONLY — the
+        pipeline never runs, so a draft costs k (embed + head) matmuls
+        instead of k full rounds.  Draft quality affects the acceptance
+        rate, never correctness: verify rolls back every rejected
+        suffix.
+        """
+        params = state["params"]
+
+        def hop(t, _):
+            h = lm_head.embed_tokens(params["embed"], t)[:, None]
+            nxt = lm_head.sample_greedy(
+                params["head"], params["final_norm"]["scale"],
+                h.astype(compute_dtype), norm_kind=spec.norm,
+                norm_bias=params["final_norm"].get("bias"),
+                vocab=spec.vocab)
+            return nxt, nxt
+
+        _, drafts = jax.lax.scan(hop, jnp.asarray(tokens, jnp.int32), None,
+                                 length=int(getattr(sched, "spec_k", 0)))
+        return drafts.T                                   # (B, k)
+
+    def rollback_slots_step(state, slot_mask, new_pos):
+        """Masked pos rollback — the whole device-side rejection path.
+
+        ``slot_mask`` [R] selects slots, ``new_pos`` [R] their rolled-
+        back positions.  Dense KV needs nothing else: entries past pos
+        are invisible behind the attention position mask and the next
+        write overwrites them.  Paged suffix pages are released by the
+        host allocator (``EngineSession.rollback_slots``).
+        """
+        m = slot_mask > 0
+        return {**state,
+                "pos": jnp.where(m, new_pos,
+                                 state["pos"]).astype(jnp.int32)}
+
+    verify_step = None
+    verify_step_for = None
+    session_draft_step = None
+    if speculative:
+        verify_step = _make_verify_step(
+            _make_pipe_forward(sched, tokenwise=True), None)
+        session_draft_step = draft_step
 
     # ---------------- slot reset (eviction) --------------------------------
     def reset_slots_step(state, slot_mask):
@@ -1049,6 +1396,13 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                 return _make_admit_step(
                     _make_pipe_forward(sched.bucketed(R_b)), in_b)
 
+        if speculative:
+            def verify_step_for(R_b):
+                in_b = (np.arange(R) < int(R_b)).astype(np.int32)
+                return _make_verify_step(
+                    _make_pipe_forward(sched.bucketed(R_b), tokenwise=True),
+                    in_b)
+
     return EngineSession(spec=spec, plan=plan, mesh=mesh, sched=sched,
                          decode_step=decode_step, prefill_step=prefill_step,
                          init_state=init_state, state_pspecs=state_pspecs,
@@ -1057,4 +1411,9 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                          compact_step=compact_slots_step, buckets=lattice,
                          decode_step_for=decode_step_for,
                          admit_step_for=admit_step_for,
-                         paged=paged_cfg, ragged_ok=ragged_ok)
+                         paged=paged_cfg, ragged_ok=ragged_ok,
+                         verify_step=verify_step,
+                         verify_step_for=verify_step_for,
+                         draft_step=session_draft_step,
+                         rollback_step=rollback_slots_step,
+                         cache_len=cache_len)

@@ -29,9 +29,9 @@ def _attn_spec(n_layers=8, window=0):
         norm="rmsnorm", act="silu")
 
 
-def _serve_plan(pp=2, r=8):
+def _serve_plan(pp=2, r=8, schedule="serve_1f"):
     return ParallelismPlan(pp=pp, tp=1, microbatches=r,
-                           decode_microbatches=r, schedule="serve_1f")
+                           decode_microbatches=r, schedule=schedule)
 
 
 # ---------------------------------------------------------------------------
@@ -231,7 +231,8 @@ def test_build_serving_rejects_bad_paged_configs():
 # ---------------------------------------------------------------------------
 
 def _tiny_session(page_size, n_slots=4, prefill=8, cache=64,
-                  buckets=True, pool_pages=None):
+                  buckets=True, pool_pages=None, spec_k=None,
+                  start=True):
     import jax
     from repro.launch.mesh import make_host_mesh
     from repro.parallel.mesh import split_model_axis
@@ -240,24 +241,33 @@ def _tiny_session(page_size, n_slots=4, prefill=8, cache=64,
     spec = _attn_spec(n_layers=2)
     mesh = make_host_mesh(data=1, model=1)
     dmesh = split_model_axis(mesh, 1, 1)
-    plan = _serve_plan(pp=1, r=n_slots)
+    plan = _serve_plan(pp=1, r=n_slots,
+                       schedule="serve_spec_1f" if spec_k else "serve_1f")
     sess = build_serving(spec, plan, dmesh, cache_len=cache,
                          global_batch=n_slots, prefill_len=prefill,
                          compute_dtype=jnp.float32, page_size=page_size,
-                         buckets=buckets, pool_pages=pool_pages)
-    sess.start(jax.random.key(0))
+                         buckets=buckets, pool_pages=pool_pages,
+                         spec_k=spec_k)
+    if start:
+        sess.start(jax.random.key(0))
     return sess
 
 
 @pytest.mark.parametrize("page_size", [0, 16])
-def test_host_mirrors_track_device_state_under_random_ops(page_size):
-    """ISSUE-7: the engine's host ``_pos``/``_live`` mirrors (which the
-    bucket picker and paged allocator trust) must equal the device
+@pytest.mark.parametrize("spec_k", [None, 2])
+def test_host_mirrors_track_device_state_under_random_ops(page_size,
+                                                          spec_k):
+    """ISSUE-7/8: the engine's host ``_pos``/``_live`` mirrors (which
+    the bucket picker and paged allocator trust) must equal the device
     ``state["pos"]``/``state["live"]`` after EVERY admit / decode /
-    reset / compact, under a randomized legal op sequence — and the
-    page allocator invariants must hold throughout."""
+    reset / compact — and, on a speculative session, after every
+    verify (variable per-slot advance + rejected-suffix page release)
+    and rollback_slots (pos rewind + page truncation) — under a
+    randomized legal op sequence, with the page allocator invariants
+    holding throughout."""
     R, PREFILL = 4, 8
-    sess = _tiny_session(page_size, n_slots=R, prefill=PREFILL)
+    sess = _tiny_session(page_size, n_slots=R, prefill=PREFILL,
+                         spec_k=spec_k)
     rng = np.random.default_rng(42)
 
     def check(op):
@@ -271,8 +281,11 @@ def test_host_mirrors_track_device_state_under_random_ops(page_size):
             sess._alloc.check()
 
     prefix = True          # live slots known to form a bucket prefix?
+    ops = ["admit", "decode", "reset", "compact"]
+    if spec_k:
+        ops += ["verify", "rollback"]
     for step in range(40):
-        op = rng.choice(["admit", "decode", "reset", "compact"])
+        op = rng.choice(ops)
         if op == "admit":
             free = [i for i in range(R) if not sess._live[i]]
             if not free:
@@ -291,6 +304,30 @@ def test_host_mirrors_track_device_state_under_random_ops(page_size):
             bucket = None if prefix else R
             sess.decode(rng.integers(1, 256, R).astype(np.int32),
                         bucket=bucket)
+        elif op == "verify":
+            # variable per-slot advance (accepted + 1) + rejected-
+            # suffix rollback; random drafts exercise the whole 0..k
+            # acceptance range.  Skip when a live slot lacks headroom —
+            # the typed CacheExhausted path has its own test below.
+            if any(sess._pos[i] + spec_k + 1 > sess.cache_len
+                   for i in range(R) if sess._live[i]):
+                continue
+            toks = rng.integers(1, 256, (R, spec_k + 1)).astype(np.int32)
+            sess.verify(toks, bucket=None if prefix else R)
+        elif op == "rollback":
+            live = [i for i in range(R) if sess._live[i]]
+            if not live:
+                continue
+            mask = np.zeros(R, np.int32)
+            new_pos = sess._pos.copy()
+            for i in live:
+                if rng.random() < 0.5:
+                    mask[i] = 1
+                    new_pos[i] = rng.integers(sess._prompt_len[i],
+                                              sess._pos[i] + 1)
+            if not mask.any():
+                continue
+            sess.rollback_slots(mask, new_pos)
         elif op == "reset":
             mask = (rng.random(R) < 0.5).astype(np.int32)
             sess.reset_slots(mask)
@@ -371,3 +408,130 @@ def test_cache_exhausted_truncates_request_instead_of_crashing():
     for i in (0, 1):
         sess2._alloc.release_slot(i)
     sess2.decode(np.zeros(2, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# Negative paths: typed errors that name the offending argument (ISSUE-8)
+# ---------------------------------------------------------------------------
+
+def test_ops_before_start_raise_typed_errors():
+    """Session ops before start() fail with a ValueError naming the op
+    — never an opaque AttributeError on the missing device state."""
+    R, K = 4, 2
+    sess = _tiny_session(0, n_slots=R, spec_k=K, start=False)
+    tok = np.zeros(R, np.int32)
+    with pytest.raises(ValueError, match=r"decode\(\) before start"):
+        sess.decode(tok)
+    with pytest.raises(ValueError, match=r"draft\(\) before start"):
+        sess.draft(tok)
+    with pytest.raises(ValueError, match=r"verify\(\) before start"):
+        sess.verify(np.zeros((R, K + 1), np.int32))
+    with pytest.raises(ValueError,
+                       match=r"rollback_slots\(\) before start"):
+        sess.rollback_slots(np.ones(R, np.int32), np.zeros(R, np.int64))
+
+
+def test_spec_ops_on_plain_session_raise_typed_errors():
+    sess = _tiny_session(0)          # serve_1f, no spec_k
+    with pytest.raises(ValueError, match="non-speculative session"):
+        sess.draft(np.zeros(4, np.int32))
+    with pytest.raises(ValueError, match="non-speculative session"):
+        sess.verify(np.zeros((4, 3), np.int32))
+
+
+def test_spec_k_exceeding_cache_headroom_rejected_at_build():
+    """A spec_k whose verify round could never fit (spec_k+1 >
+    cache_len) is rejected by build_serving, naming both numbers."""
+    with pytest.raises(ValueError,
+                       match=r"spec_k=4 exceeds the cache_len headroom"):
+        _tiny_session(0, prefill=2, cache=4, spec_k=4)
+
+
+def test_verify_without_headroom_raises_evictable_cache_exhausted():
+    """verify() on slots within spec_k+1 of capacity raises the typed
+    CacheExhausted (listing the blocked slots) before touching state —
+    the batcher's evict-and-retry path, same as decode()."""
+    from repro.serving.engine import CacheExhausted
+
+    R, K, PREFILL, CACHE = 4, 2, 8, 16
+    sess = _tiny_session(0, n_slots=R, prefill=PREFILL, cache=CACHE,
+                         spec_k=K)
+    rng = np.random.default_rng(3)
+    toks = rng.integers(1, 256, (R, 1, PREFILL)).astype(np.int32)
+    sess.write_prefill_into_slots({"tokens": toks},
+                                  np.ones(R, np.int32))
+    while sess._pos[0] + K + 1 <= CACHE:
+        sess.decode(rng.integers(1, 256, R).astype(np.int32))
+    pos_before = sess._pos.copy()
+    with pytest.raises(CacheExhausted, match="lack verify headroom") as ei:
+        sess.verify(rng.integers(1, 256, (R, K + 1)).astype(np.int32))
+    assert set(ei.value.slots) == set(range(R))
+    np.testing.assert_array_equal(sess._pos, pos_before)
+
+
+def test_verify_rejects_wrong_token_shape():
+    sess = _tiny_session(0, spec_k=2)
+    with pytest.raises(ValueError,
+                       match=r"tokens must be \(global_batch, spec_k\+1\)"):
+        sess.verify(np.zeros((4, 2), np.int32))     # spec_k, not spec_k+1
+    with pytest.raises(ValueError,
+                       match=r"tokens must be \(global_batch, spec_k\+1\)"):
+        sess.verify(np.zeros(4, np.int32))          # missing draft axis
+
+
+def test_admit_rejects_mismatched_and_out_of_range_lens():
+    R, PREFILL = 4, 8
+    sess = _tiny_session(0, n_slots=R, prefill=PREFILL)
+    toks = np.ones((R, 1, PREFILL), np.int32)
+    mask = np.ones(R, np.int32)
+    with pytest.raises(ValueError,
+                       match=rf"lens has {R - 1} entries for R={R} slots"):
+        sess.write_prefill_into_slots(
+            {"tokens": toks, "lens": np.full(R - 1, PREFILL)}, mask)
+    with pytest.raises(ValueError,
+                       match=rf"lens entries must lie in \[1, {PREFILL}\]"):
+        sess.write_prefill_into_slots(
+            {"tokens": toks, "lens": np.full(R, PREFILL + 1)}, mask)
+    with pytest.raises(ValueError,
+                       match=rf"lens entries must lie in \[1, {PREFILL}\]"):
+        sess.write_prefill_into_slots(
+            {"tokens": toks, "lens": np.zeros(R, np.int64)}, mask)
+
+
+def test_rollback_slots_validates_mask_bounds_and_direction():
+    """rollback_slots: wrong-length arguments, positions below the
+    prompt, and forward 'rollbacks' each get a typed ValueError naming
+    the argument; state is untouched on every rejection."""
+    R, K, PREFILL = 4, 2, 8
+    sess = _tiny_session(0, n_slots=R, prefill=PREFILL, spec_k=K)
+    rng = np.random.default_rng(7)
+    toks = rng.integers(1, 256, (R, 1, PREFILL)).astype(np.int32)
+    sess.write_prefill_into_slots({"tokens": toks},
+                                  np.ones(R, np.int32))
+    for _ in range(4):
+        sess.decode(rng.integers(1, 256, R).astype(np.int32))
+    pos_before = sess._pos.copy()            # PREFILL + 4 everywhere
+    ones = np.ones(R, np.int32)
+
+    with pytest.raises(ValueError,
+                       match=rf"slot_mask has {R + 1} entries for R={R}"):
+        sess.rollback_slots(np.ones(R + 1, np.int32), pos_before)
+    with pytest.raises(ValueError,
+                       match=rf"new_pos has {R - 1} entries for R={R}"):
+        sess.rollback_slots(ones, pos_before[:-1])
+    below = pos_before.copy()
+    below[1] = PREFILL - 1                   # would orphan prompt KV
+    with pytest.raises(ValueError, match="below their prompt length"):
+        sess.rollback_slots(ones, below)
+    fwd = pos_before.copy()
+    fwd[2] += 1                              # rollback can't advance
+    with pytest.raises(ValueError, match=r"new_pos advances slots \[2\]"):
+        sess.rollback_slots(ones, fwd)
+
+    np.testing.assert_array_equal(sess._pos, pos_before)
+    np.testing.assert_array_equal(sess._pos,
+                                  np.asarray(sess.state["pos"]))
+    # and the legal rollback still works after the rejections
+    legal = pos_before - 2
+    sess.rollback_slots(ones, legal)
+    np.testing.assert_array_equal(sess._pos, legal)

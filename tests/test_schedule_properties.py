@@ -1,0 +1,142 @@
+"""Registry-wide schedule property sweep (ISSUE-8 acceptance).
+
+Every schedule in ``core/schedule.py::SCHEDULES`` — training, serving,
+and speculative alike — is swept over an (S, v, R, k) space using ONLY
+registry-declared traits (``takes_virtual_stages``,
+``needs_group_microbatches``, ``is_serving``, ``is_speculative``) to
+construct instances: no schedule-specific code, so a newly registered
+schedule is covered the moment it registers.
+
+Checked per instance:
+  * ``validate()`` passes (each family proves its own invariants);
+  * table structure: int32 tables, microbatch ids within range, and
+    forward completeness — every (stage, chunk) cell forwards every
+    microbatch exactly once;
+  * serving only: the bucketed round-trip — ``bucketed(R)`` is the
+    identity on the tables, every smaller bucket revalidates with
+    exactly ``n_live`` slots and a matching ``live_mask``;
+  * speculative only: the accept/rollback contract —
+    ``verify_qlen == spec_k + 1``, ``accept_pos_delta`` arithmetic over
+    the full 0..spec_k range (typed ValueError outside it), and the
+    rollback table mirroring the exit table.
+
+Property-based variants run when hypothesis is installed (it is in
+requirements-dev.txt); a fixed-seed random sweep carries the same
+checks otherwise.
+"""
+import numpy as np
+import pytest
+
+from repro.core.schedule import F_MB, SCHEDULES
+
+try:
+    from hypothesis import given
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _build(cls, s, r, v, k):
+    """Instantiate any registered schedule from its declared traits."""
+    kw = {}
+    if cls.takes_virtual_stages:
+        kw["virtual_stages"] = v
+    if cls.is_speculative:
+        kw["spec_k"] = k
+    if (cls.takes_virtual_stages and cls.needs_group_microbatches
+            and not cls.is_serving):
+        r = max(r - r % s, s)          # full microbatch groups
+    return cls(s, r, **kw)
+
+
+def _check_tables(sched):
+    tabs = sched.tables()
+    fwd = np.asarray(tabs.fwd)
+    S, R = sched.n_stages, sched.n_microbatches
+    assert fwd.dtype == np.int32 and fwd.shape[:2] == (sched.n_ticks, S)
+    mbs = fwd[:, :, F_MB]
+    assert mbs.min() >= -1 and mbs.max() < R
+    # forward completeness: every stage forwards every microbatch once
+    # per chunk it hosts (v chunks per stage)
+    for stage in range(S):
+        named = mbs[:, stage]
+        counts = np.bincount(named[named >= 0], minlength=R)
+        assert (counts == sched.virtual_stages).all(), (
+            sched.name, stage, counts)
+
+
+def _check_bucketed(sched):
+    R = sched.n_microbatches
+    full = sched.bucketed(R)
+    np.testing.assert_array_equal(np.asarray(full.tables().fwd),
+                                  np.asarray(sched.tables().fwd))
+    assert sched.live_mask().shape == (R,) and sched.live_mask().all()
+    for n_live in sorted({1, max(R // 2, 1), R}):
+        b = sched.bucketed(n_live)
+        b.validate()
+        assert b.n_microbatches == n_live
+        assert b.live_mask().sum() == n_live
+        assert b.n_stages == sched.n_stages
+        assert b.virtual_stages == sched.virtual_stages
+
+
+def _check_speculative(sched):
+    k = sched.spec_k
+    assert sched.verify_qlen == k + 1
+    for a in range(k + 1):
+        adv, rolled = sched.accept_pos_delta(a)
+        assert (adv, rolled) == (a + 1, k - a)
+    for bad in (-1, k + 1):
+        with pytest.raises(ValueError, match="accept"):
+            sched.accept_pos_delta(bad)
+    rb = np.asarray(sched.rollback_table())
+    assert rb.shape[0] == sched.n_ticks
+    # rollback mirrors the exits: each slot rolls back exactly once
+    counts = np.bincount(rb[rb >= 0], minlength=sched.n_microbatches)
+    assert (counts == 1).all(), (sched.name, counts)
+
+
+def check_registry(s, r, v, k):
+    """Run the full invariant suite across the whole registry."""
+    for name, cls in sorted(SCHEDULES.items()):
+        sched = _build(cls, s, r, v, k)
+        assert sched.name == name
+        sched.validate()
+        _check_tables(sched)
+        if cls.is_serving:
+            _check_bucketed(sched)
+        if cls.is_speculative:
+            _check_speculative(sched)
+
+
+GRID = [(1, 1, 1, 1), (2, 2, 1, 1), (2, 4, 2, 3), (3, 6, 2, 2),
+        (4, 8, 2, 4), (4, 4, 3, 1)]
+
+
+@pytest.mark.parametrize("s,r,v,k", GRID)
+def test_registry_sweep_grid(s, r, v, k):
+    check_registry(s, r, v, k)
+
+
+def test_registry_covers_all_families():
+    """The sweep exercises every declared trait combination present."""
+    assert any(c.is_serving for c in SCHEDULES.values())
+    assert any(c.is_speculative for c in SCHEDULES.values())
+    assert any(c.takes_virtual_stages for c in SCHEDULES.values())
+    assert any(not c.is_serving for c in SCHEDULES.values())
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(1, 4), st.integers(1, 12), st.integers(1, 3),
+           st.integers(1, 4))
+    def test_prop_registry_sweep(s, r, v, k):
+        check_registry(s, r, v, k)
+else:
+    def test_seeded_registry_sweep():
+        rng = np.random.default_rng(0)
+        for _ in range(40):
+            check_registry(int(rng.integers(1, 5)),
+                           int(rng.integers(1, 13)),
+                           int(rng.integers(1, 4)),
+                           int(rng.integers(1, 5)))
