@@ -1,7 +1,8 @@
 # Convenience entry points matching the ROADMAP commands.
 .PHONY: tier1 tier1-full coverage bench bench-serving bench-batching \
-	bench-paging bench-buckets bench-spec bench-check plan-smoke \
-	serve-smoke batch-smoke page-smoke spec-smoke docs-check
+	bench-paging bench-buckets bench-spec bench-quant bench-check \
+	plan-smoke serve-smoke batch-smoke page-smoke spec-smoke \
+	convert-smoke docs-check
 
 tier1:
 	scripts/tier1.sh
@@ -30,6 +31,9 @@ bench-buckets:
 bench-spec:
 	PYTHONPATH=src:. python benchmarks/spec_bench.py
 
+bench-quant:
+	PYTHONPATH=src:. python benchmarks/quant_bench.py
+
 bench-check:
 	python scripts/bench_check.py
 
@@ -47,6 +51,9 @@ page-smoke:
 
 spec-smoke:
 	python scripts/spec_smoke.py
+
+convert-smoke:
+	python scripts/convert_smoke.py
 
 docs-check:
 	python scripts/docs_check.py

@@ -1,0 +1,132 @@
+"""Quantized-storage benchmark: what int8/fp8 weights and int8 KV buy.
+
+Entirely analytic (like serving_bench): walks the serving memory model
+(``core/schedule.py::ServingSchedule.memory_model``) for the reference
+configs at the production decode shape across a grid of storage dtypes —
+weights in {fp32, bf16, int8, fp8} × KV cache in {fp32 dense, bf16
+dense, int8 paged} — and reports, per cell:
+
+  * ``weight_bytes`` / ``cache_bytes`` / ``total_bytes`` — the worst
+    device's footprint terms;
+  * ``weight_reduction_vs_fp32`` — the headline compression ratio (the
+    gate: int8 rows must clear 1.9x, they analytically sit at ~3.76x =
+    4 / (1 + 4/d_model));
+  * ``slots_per_hbm`` — decode slots (concurrent sequences) that fit
+    one device's HBM after the non-cache terms are paid, the planner's
+    currency for "how much batch does quantization unlock";
+  * ``feasible_plans`` — how many (pp, schedule, v) candidates
+    ``plan_search`` finds feasible under the stock HBM budget with
+    these storage dtypes.
+
+Emits ``BENCH_quant.json`` and prints CSV rows.  Exits non-zero if any
+int8 weight row fails the >= 1.9x weight-bytes reduction gate.  Run via
+``make bench-quant``:
+
+  PYTHONPATH=src:. python benchmarks/quant_bench.py [--out BENCH_quant.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro import configs
+from repro.core import profiler as prof
+from repro.core.partitioner import plan_search
+from repro.core.schedule import fit_serving_microbatches
+
+ARCHS = ("qwen3_14b", "olmoe_1b_7b")
+HW = prof.TPU_V5E
+DATA = 16                       # production mesh: 16 data × 16 model
+SHAPE = "decode_32k"
+GATE = 1.9                      # weight-bytes reduction floor for int8
+
+# (weight_dtype, kv_dtype, page_size) storage grid; page_size=0 = dense
+GRID = [
+    ("fp32", "fp32", 0),
+    ("fp32", "int8", 64),
+    ("bf16", "bf16", 0),
+    ("bf16", "int8", 64),
+    ("int8", "bf16", 0),
+    ("int8", "int8", 64),
+    ("fp8", "int8", 64),
+]
+
+
+def bench_arch(arch: str):
+    cfg = configs.get(arch)
+    spec, base = cfg.full_spec(), cfg.PLAN
+    shape = configs.SHAPES[SHAPE]
+    R = fit_serving_microbatches(base.decode_microbatches,
+                                 shape.global_batch, DATA)
+    rows_dev = max(shape.global_batch // DATA // R, 1)
+    plan = base.with_(schedule="serve_1f")
+    sched = plan.make_schedule()
+    rows, base_weight = [], None
+    for weight_dtype, kv_dtype, page_size in GRID:
+        mm = sched.memory_model(
+            spec, plan, HW, microbatch_tokens=rows_dev,
+            data_replicas=DATA, cache_len=shape.seq_len,
+            global_batch=shape.global_batch, page_size=page_size,
+            weight_dtype=weight_dtype, kv_dtype=kv_dtype)
+        if base_weight is None:
+            base_weight = mm.weight_bytes       # fp32 row comes first
+        per_slot = mm.cache_bytes / shape.global_batch
+        slots = max((HW.hbm_bytes - (mm.total_bytes - mm.cache_bytes))
+                    / per_slot, 0.0)
+        cands = plan_search(
+            spec, base, base.pp * base.tp, HW, minibatch_tokens=rows_dev,
+            data_replicas=DATA, workload="decode",
+            cache_len=shape.seq_len, global_batch=shape.global_batch,
+            page_size=page_size, weight_dtype=weight_dtype,
+            kv_dtype=kv_dtype, return_all=True)
+        rows.append({
+            "arch": arch, "shape": SHAPE,
+            "weight_dtype": weight_dtype, "kv_dtype": kv_dtype,
+            "page_size": page_size,
+            "weight_bytes": mm.weight_bytes,
+            "cache_bytes": mm.cache_bytes,
+            "total_bytes": mm.total_bytes,
+            "weight_reduction_vs_fp32": base_weight / mm.weight_bytes,
+            "slots_per_hbm": slots,
+            "feasible_plans": sum(c.feasible for c in cands),
+        })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_quant.json")
+    args = ap.parse_args(argv)
+
+    rows = []
+    for arch in ARCHS:
+        rows += bench_arch(arch)
+
+    print("arch,weight_dtype,kv_dtype,page_size,weight_gb,cache_gb,"
+          "w_reduction,slots_per_hbm,feasible_plans")
+    for r in rows:
+        print(f"{r['arch']},{r['weight_dtype']},{r['kv_dtype']},"
+              f"{r['page_size']},{r['weight_bytes'] / 1e9:.2f},"
+              f"{r['cache_bytes'] / 1e9:.2f},"
+              f"{r['weight_reduction_vs_fp32']:.2f},"
+              f"{r['slots_per_hbm']:.0f},{r['feasible_plans']}")
+
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"wrote {args.out} ({len(rows)} rows)")
+
+    bad = [r for r in rows if r["weight_dtype"] == "int8"
+           and r["weight_reduction_vs_fp32"] < GATE]
+    if bad:
+        for r in bad:
+            print(f"GATE FAIL: {r['arch']} int8 weight reduction "
+                  f"{r['weight_reduction_vs_fp32']:.2f}x < {GATE}x",
+                  file=sys.stderr)
+        return 1
+    print(f"gate OK: every int8 row >= {GATE}x weight-bytes reduction")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

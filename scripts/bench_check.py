@@ -56,6 +56,12 @@ SCHEMAS = {
                          "slot_multiplier", "per_slot_bytes_multiplier",
                          "kv_budget_gb") + _COMMON_RUN,
     },
+    "BENCH_quant.json": {
+        None: ("arch", "shape", "weight_dtype", "kv_dtype", "page_size",
+               "weight_bytes", "cache_bytes", "total_bytes",
+               "weight_reduction_vs_fp32", "slots_per_hbm",
+               "feasible_plans"),
+    },
     "BENCH_spec.json": {
         None: ("arch", "schedule", "slots", "rows_per_slot", "spec_k",
                "alpha", "decode_round_ms", "verify_round_ms", "draft_ms",

@@ -19,7 +19,11 @@
 # the spec smoke (scripts/spec_smoke.py): speculative draft–verify
 # decode (self-draft, injected mixed/total-rejection/full-acceptance
 # drafts, verify bucket switches) bit-identical to non-speculative
-# decode, dense and paged — the docs-check gate
+# decode, dense and paged —
+# the convert smoke (scripts/convert_smoke.py): synthetic HF fixture ->
+# storage-chunk conversion at (pp=2, v=2) -> engine load_params ->
+# greedy decode bit-identical to the direct in-memory load, plus the
+# int8-weight/int8-KV engine tracking it — the docs-check gate
 # (scripts/docs_check.py): every `path.py::symbol` reference in
 # docs/*.md + README.md must resolve against the source tree, so
 # renamed symbols fail fast — and the bench-check gate
@@ -54,6 +58,7 @@ python scripts/serve_smoke.py
 python scripts/batch_smoke.py
 python scripts/page_smoke.py
 python scripts/spec_smoke.py
+python scripts/convert_smoke.py
 python scripts/docs_check.py
 python scripts/bench_check.py
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest "${ARGS[@]}" "$@"

@@ -28,6 +28,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# npz cannot represent the ml_dtypes extension floats: np.savez silently
+# degrades bfloat16 to a raw void ``|V2`` (and fp8 to ``|V1``), which
+# jnp.asarray then rejects on restore.  Dump those leaves as their uint
+# payload instead and view them back through the restore template, which
+# knows the true dtype.  Gated on ml_dtypes importability so the manager
+# keeps working (fp32-only) in environments without it.
+try:
+    import ml_dtypes
+    _EXT_PAYLOAD = {np.dtype(ml_dtypes.bfloat16): np.uint16,
+                    np.dtype(ml_dtypes.float8_e4m3fn): np.uint8,
+                    np.dtype(ml_dtypes.float8_e5m2): np.uint8}
+except ImportError:              # pragma: no cover - baked into the image
+    _EXT_PAYLOAD = {}
+
 
 def _flatten(tree, prefix=""):
     out = {}
@@ -38,7 +52,10 @@ def _flatten(tree, prefix=""):
         for i, v in enumerate(tree):
             out.update(_flatten(v, f"{prefix}{i}/"))
     else:
-        out[prefix[:-1]] = np.asarray(tree)
+        a = np.asarray(tree)
+        if a.dtype in _EXT_PAYLOAD:
+            a = a.view(_EXT_PAYLOAD[a.dtype])
+        out[prefix[:-1]] = a
     return out
 
 
@@ -50,7 +67,12 @@ def _unflatten_into(template, flat, prefix=""):
         vals = [_unflatten_into(v, flat, f"{prefix}{i}/")
                 for i, v in enumerate(template)]
         return type(template)(vals)
-    arr = flat[prefix[:-1]]
+    arr = np.asarray(flat[prefix[:-1]])
+    tdt = np.dtype(template.dtype)
+    if tdt in _EXT_PAYLOAD and arr.dtype != tdt:
+        # uint payload written by _flatten (or a legacy void dump):
+        # reinterpret the bits — astype would numerically convert
+        arr = arr.view(tdt)
     return jnp.asarray(arr).astype(template.dtype)
 
 
@@ -61,6 +83,16 @@ class CheckpointManager:
 
     def _round_dir(self, rnd: int) -> str:
         return os.path.join(self.dir, f"round_{rnd:08d}")
+
+    @staticmethod
+    def _write_manifest(d: str, manifest: Dict[str, Any]):
+        """Atomic manifest update: tmp file + os.replace, so a crash
+        mid-write leaves either the previous manifest or none — never a
+        truncated JSON that poisons every later restart scan."""
+        tmp = os.path.join(d, "MANIFEST.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+        os.replace(tmp, os.path.join(d, "MANIFEST.json"))
 
     # ---------------- save ------------------------------------------------
 
@@ -84,8 +116,7 @@ class CheckpointManager:
             np.savez(os.path.join(d, f"stage_{s}.npz"), **_flatten(part))
             written.append(s)
             manifest["stages"] = written
-            with open(os.path.join(d, "MANIFEST.json"), "w") as f:
-                json.dump(manifest, f)
+            self._write_manifest(d, manifest)
 
         if len(written) == n_stages:
             shared = {k: v for k, v in state["params"].items()
@@ -94,8 +125,7 @@ class CheckpointManager:
             rest = {k: v for k, v in state.items() if k != "params"}
             np.savez(os.path.join(d, "opt.npz"), **_flatten(rest))
             manifest["done"] = True
-            with open(os.path.join(d, "MANIFEST.json"), "w") as f:
-                json.dump(manifest, f)
+            self._write_manifest(d, manifest)
 
     # ---------------- restore --------------------------------------------
 
@@ -105,9 +135,15 @@ class CheckpointManager:
             mf = os.path.join(self.dir, name, "MANIFEST.json")
             if not os.path.exists(mf):
                 continue
-            with open(mf) as f:
-                m = json.load(f)
-            if m.get("done"):
+            try:
+                with open(mf) as f:
+                    m = json.load(f)
+            except (OSError, ValueError):
+                # truncated / corrupt manifest (crash mid-write on a
+                # pre-atomic layout, disk fault): treat the round as
+                # incomplete instead of killing the restart scan
+                continue
+            if isinstance(m, dict) and m.get("done"):
                 best = max(best or -1, m["round"])
         return best
 

@@ -321,6 +321,10 @@ class PlanChoice:
     # speculative decode: the draft depth this candidate was priced at
     # (None = non-speculative); round_time is then per *accepted* token
     spec_k: Optional[int] = None
+    # quantized storage the candidate was priced at (repro.quant):
+    # weight payload dtype and KV-cache storage dtype (None = compute)
+    weight_dtype: Optional[str] = None
+    kv_dtype: Optional[str] = None
 
     @property
     def per_microbatch(self) -> float:
@@ -333,6 +337,8 @@ class PlanChoice:
                 f"sched={self.plan.schedule}/{self.plan.stash_mode}"
                 f"{f' v={self.plan.virtual_stages}' if self.plan.virtual_stages > 1 else ''}"
                 f"{f' k={self.spec_k}' if self.spec_k is not None else ''}"
+                f"{f' w={self.weight_dtype}' if self.weight_dtype else ''}"
+                f"{f' kv={self.kv_dtype}' if self.kv_dtype else ''}"
                 f" {score}={self.round_time * 1e3:.3f} ms"
                 f" bubble={self.bubble_fraction:.3f}"
                 f" hbm={self.memory.total_bytes / 1e9:.2f}"
@@ -397,7 +403,9 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
                 spec_k: Optional[int] = None,
                 spec_acceptance: float = 0.8,
                 spec_draft_cost: float = 0.05,
-                spec_verify_cost: float = 0.15):
+                spec_verify_cost: float = 0.15,
+                weight_dtype: Optional[str] = None,
+                kv_dtype: Optional[str] = None):
     """Jointly pick (pp, tp, schedule, virtual_stages) for a model axis.
 
     Enumerates every pp dividing ``model_axis`` whose chunk count
@@ -496,6 +504,9 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
     assert page_size == 0 or serving, (
         "page_size prices the serving engine's paged KV cache; training "
         "plans have no KV cache")
+    assert (weight_dtype is None and kv_dtype is None) or serving, (
+        "weight_dtype/kv_dtype price quantized *serving* storage; "
+        "training keeps full-precision weights")
     assert not (page_size and sp), (
         "paged KV and sequence-parallel decode are mutually exclusive "
         "(the engine rejects the combination)")
@@ -594,7 +605,8 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
                             cache_len=cache_len,
                             global_batch=global_batch, sp=sp,
                             prefill=(workload == "prefill"),
-                            page_size=page_size, kv_occupancy=occupancy)
+                            page_size=page_size, kv_occupancy=occupancy,
+                            weight_dtype=weight_dtype, kv_dtype=kv_dtype)
                     else:
                         mm = sched.memory_model(
                             spec, plan, hw,
@@ -630,7 +642,9 @@ def plan_search(spec, base_plan, model_axis: int, hw: Hardware, *,
                                             feasible=mm.fits(budget),
                                             workload=workload,
                                             occupancy=occupancy,
-                                            bucket=bucket, spec_k=kk))
+                                            bucket=bucket, spec_k=kk,
+                                            weight_dtype=weight_dtype,
+                                            kv_dtype=kv_dtype))
     assert cands, f"no structurally valid plan for model_axis={model_axis}"
 
     def rank(c: PlanChoice):

@@ -943,7 +943,8 @@ def serving_cache_bytes(spec, plan, sched, *, cache_len: int,
                         data_replicas: int = 1,
                         page_size: int = 0,
                         kv_occupancy: float = 1.0,
-                        n_slots: Optional[int] = None) -> float:
+                        n_slots: Optional[int] = None,
+                        kv_dtype: Optional[str] = None) -> float:
     """Worst-stage per-device KV/SSM/WKV cache bytes of one serve state.
 
     Mirrors the engine's cache template (serving/engine.py): stage s
@@ -966,8 +967,23 @@ def serving_cache_bytes(spec, plan, sched, *, cache_len: int,
     buffers stay dense — paging only thins full-length KV.  The shared
     per-slot page tables (int32, replicated across stages) are priced
     once.  Paged + sp is rejected, matching the engine.
+
+    ``kv_dtype`` prices the KV storage dtype (repro.quant): "fp32" /
+    "bf16" re-price every attention cache; "int8" prices the *paged*
+    layers at one payload byte plus the amortized per-page scale —
+    dense leftovers stay at the compute-dtype ACT_BYTES, exactly the
+    engine's layout (int8 KV lives only in the page pools).
     """
+    from repro import quant
     from repro.core.profiler import ACT_BYTES
+
+    def _kv_elt_bytes(paged: bool) -> float:
+        if kv_dtype is None:
+            return ACT_BYTES
+        if kv_dtype == "int8":
+            return (quant.kv_byte_cost("int8", spec, page_size) if paged
+                    else ACT_BYTES)
+        return quant.kv_byte_cost(kv_dtype, spec, page_size)
 
     S, v = sched.n_stages, sched.virtual_stages
     L = S * v
@@ -1008,7 +1024,7 @@ def serving_cache_bytes(spec, plan, sched, *, cache_len: int,
                 rows_eff = rows * occ if paged_flags[i] else rows
                 any_paged |= paged_flags[i]
                 b += 2.0 * rows_eff * lens[i] * kv_local * spec.d_head \
-                    * ACT_BYTES
+                    * _kv_elt_bytes(paged_flags[i])
             elif blk.mixer == "mamba":
                 ms = spec.mamba
                 d_inner = ms.expand * spec.d_model // tp
@@ -1252,7 +1268,9 @@ class ServingSchedule(PipelineSchedule):
                      data_replicas: int = 1, cache_len: int = None,
                      global_batch: int = None, sp: bool = False,
                      prefill: bool = False, page_size: int = 0,
-                     kv_occupancy: float = 1.0) -> MemoryModel:
+                     kv_occupancy: float = 1.0,
+                     weight_dtype: Optional[str] = None,
+                     kv_dtype: Optional[str] = None) -> MemoryModel:
         """Serving footprint: weights + KV/SSM cache + in-flight rings.
 
         No version ring, residual ring, gradient accumulator or
@@ -1263,10 +1281,16 @@ class ServingSchedule(PipelineSchedule):
         ring, the R-slot exiting-hidden ring, and one activation in
         flight per stage (each slot is one microbatch × qlen of hidden
         state — ``microbatch_tokens`` rows·qlen per device).
+
+        ``weight_dtype`` / ``kv_dtype`` price quantized storage
+        (repro.quant): int8/fp8 weights pay 1 byte + the amortized
+        per-channel scale instead of ``hw.param_bytes``; int8 KV
+        re-prices the paged pools.
         """
         assert cache_len is not None and global_batch is not None, (
             "serving memory_model needs cache_len= and global_batch= "
             "(the KV/SSM cache term is sized from them)")
+        from repro import quant
         from repro.core.profiler import ACT_BYTES
 
         blocks, shared = stage_weight_params(spec, plan, self)
@@ -1275,10 +1299,12 @@ class ServingSchedule(PipelineSchedule):
             spec, plan, self, cache_len=cache_len,
             global_batch=global_batch, sp=sp, prefill=prefill,
             data_replicas=data_replicas, page_size=page_size,
-            kv_occupancy=kv_occupancy, n_slots=self.n_microbatches)
+            kv_occupancy=kv_occupancy, n_slots=self.n_microbatches,
+            kv_dtype=kv_dtype)
         return MemoryModel(
             schedule=self.name,
-            weight_bytes=(blocks + shared) * hw.param_bytes,
+            weight_bytes=(blocks + shared)
+            * quant.weight_byte_cost(weight_dtype, spec, hw),
             stash_bytes=0.0,
             resid_bytes=0.0,
             workspace_bytes=(2.0 * self.n_microbatches + 2.0) * act,

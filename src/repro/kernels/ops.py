@@ -62,12 +62,14 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = -1,
 
 
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
-                    window=-1):
+                    window=-1, k_scale=None, v_scale=None):
     """Decode (q (B, H, Dh)) or speculative verify (q (B, Q, H, Dh))
     attention over a paged KV pool (no padding needed: page and table
-    extents are already block-exact by construction)."""
+    extents are already block-exact by construction).  ``k_scale`` /
+    ``v_scale`` (P, KV) activate the int8-pool dequantizing page walk."""
     return _paged(q, k_pages, v_pages, block_tables, lengths,
-                  window=window, interpret=interpret_mode())
+                  window=window, k_scale=k_scale, v_scale=v_scale,
+                  interpret=interpret_mode())
 
 
 def mamba_scan(u, dt, A, B, C, D, *, chunk: int = 128,

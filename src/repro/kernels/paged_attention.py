@@ -48,9 +48,16 @@ from repro.parallel.compat import tpu_compiler_params
 NEG_INF = -1e30
 
 
-def _paged_kernel(tab_ref, len_ref, w_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_scr, l_scr, acc_scr, *, page: int, n_pages: int,
-                  q_len: int, group: int, scale: float):
+def _paged_kernel(tab_ref, len_ref, w_ref, q_ref, k_ref, v_ref, *rest,
+                  page: int, n_pages: int, q_len: int, group: int,
+                  scale: float, quantized: bool):
+    if quantized:
+        # int8 pools ride with per-(page, kv-head) f32 scales; the scale
+        # tile is gathered by the same table entry as its page.
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        ks_ref = vs_ref = None
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     i = pl.program_id(2)
     length = len_ref[b]              # valid keys for this sequence
@@ -77,6 +84,12 @@ def _paged_kernel(tab_ref, len_ref, w_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0]                                   # (Q·G, Dh)
         k = k_ref[0, :, 0, :]                             # (page, Dh)
         v = v_ref[0, :, 0, :]
+        if quantized:
+            # dequantize the page tile in VMEM: int8 payload times the
+            # page's per-kv-head scale, compute in f32 end to end
+            q = q.astype(jnp.float32)
+            k = k.astype(jnp.float32) * ks_ref[0, 0]
+            v = v.astype(jnp.float32) * vs_ref[0, 0]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # (Q·G, page)
@@ -104,7 +117,8 @@ def _paged_kernel(tab_ref, len_ref, w_ref, q_ref, k_ref, v_ref, o_ref,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
-                    window=-1, interpret: bool = False):
+                    window=-1, k_scale=None, v_scale=None,
+                    interpret: bool = False):
     """q: (B, H, Dh) decode or (B, Q, H, Dh) verify; pools (P, page, KV, Dh).
 
     ``block_tables``: (B, n_pages) int32 page ids into the pool, -1 for
@@ -115,6 +129,10 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
     may be a Python int or traced scalar (<= 0: global).  Returns the
     query shape back ((B, H, Dh) or (B, Q, H, Dh)) in q.dtype; softmax
     statistics in f32.  H % KV == 0.
+
+    int8 pools: pass ``k_scale`` / ``v_scale`` (P, KV) f32 per-page
+    per-kv-head scales; the kernel dequantizes each page tile in VMEM
+    and computes scores/weighted values in f32.
     """
     squeeze = q.ndim == 3
     if squeeze:
@@ -122,6 +140,8 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
     b, q_len, h, dh = q.shape
     n_pool, page, kv, dh_k = k_pages.shape
     assert dh == dh_k and h % kv == 0, (q.shape, k_pages.shape)
+    quantized = k_scale is not None
+    assert (v_scale is not None) == quantized
     n_pages = block_tables.shape[1]
     group = h // kv
     scale = 1.0 / np.sqrt(dh)
@@ -132,20 +152,30 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
           .reshape(b, kv, q_len * group, dh))
 
     kernel = functools.partial(_paged_kernel, page=page, n_pages=n_pages,
-                               q_len=q_len, group=group, scale=scale)
+                               q_len=q_len, group=group, scale=scale,
+                               quantized=quantized)
+    page_spec = pl.BlockSpec((1, page, 1, dh),
+                             lambda b_, h_, i, tab, lens, w:
+                             (jnp.maximum(tab[b_, i], 0), 0, h_, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, q_len * group, dh),
+                     lambda b_, h_, i, tab, lens, w: (b_, h_, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = [qg, k_pages, v_pages]
+    if quantized:
+        # scale tiles gather with the same table entry as their page
+        scale_spec = pl.BlockSpec((1, 1),
+                                  lambda b_, h_, i, tab, lens, w:
+                                  (jnp.maximum(tab[b_, i], 0), h_))
+        in_specs += [scale_spec, scale_spec]
+        operands += [jnp.asarray(k_scale, jnp.float32),
+                     jnp.asarray(v_scale, jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
         grid=(b, kv, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, q_len * group, dh),
-                         lambda b_, h_, i, tab, lens, w: (b_, h_, 0, 0)),
-            pl.BlockSpec((1, page, 1, dh),
-                         lambda b_, h_, i, tab, lens, w:
-                         (jnp.maximum(tab[b_, i], 0), 0, h_, 0)),
-            pl.BlockSpec((1, page, 1, dh),
-                         lambda b_, h_, i, tab, lens, w:
-                         (jnp.maximum(tab[b_, i], 0), 0, h_, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, q_len * group, dh),
             lambda b_, h_, i, tab, lens, w: (b_, h_, 0, 0)),
@@ -165,7 +195,7 @@ def paged_attention(q, k_pages, v_pages, block_tables, lengths, *,
     )(jnp.asarray(block_tables, jnp.int32),
       jnp.asarray(lengths, jnp.int32),
       jnp.asarray(window, jnp.int32).reshape(1),
-      qg, k_pages, v_pages)
+      *operands)
     out = (out.reshape(b, kv, q_len, group, dh)
            .transpose(0, 2, 1, 3, 4)
            .reshape(b, q_len, h, dh))

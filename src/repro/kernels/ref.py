@@ -101,7 +101,7 @@ def wkv6_ref(r, k, v, w, u, s0=None):
 
 
 def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
-                        window: int = -1):
+                        window: int = -1, k_scale=None, v_scale=None):
     """Decode-step oracle over a paged KV pool.
 
     q: (B, H, Dh); k_pages, v_pages: (P, page, KV, Dh);
@@ -109,10 +109,18 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, lengths, *,
     lengths: (B,) int32 valid keys (query sits at lengths - 1).
     Gathers every table entry into a dense (B, n_pages*page, KV, Dh)
     slab, masks invalid keys, and runs the naive f32 softmax.
+
+    int8 pools: ``k_scale`` / ``v_scale`` (P, KV) f32 per-page scales
+    dequantize the whole pool up front — the obvious formulation the
+    kernel's in-VMEM tile dequantization is checked against.
     """
     b, h, dh = q.shape
     n_pool, page, kv, _ = k_pages.shape
     n_pages = block_tables.shape[1]
+    if k_scale is not None:
+        k_pages = k_pages.astype(jnp.float32) * k_scale[:, None, :, None]
+    if v_scale is not None:
+        v_pages = v_pages.astype(jnp.float32) * v_scale[:, None, :, None]
     tab = jnp.asarray(block_tables, jnp.int32)
     safe = jnp.clip(tab, 0, n_pool - 1)
     k = k_pages[safe].reshape(b, n_pages * page, kv, dh)

@@ -38,7 +38,8 @@ def _data_replicas(mesh, plan) -> int:
 def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
              plan=None, note: str = "", verbose: bool = True,
              do_plan_search: bool = False, hw=prof.TPU_V5E,
-             page_size: int = 0, spec_k=None):
+             page_size: int = 0, spec_k=None,
+             weight_dtype=None, kv_dtype=None):
     mesh_name = "2x16x16" if multi_pod else "16x16"
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -58,7 +59,9 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
             global_batch=sh.global_batch,
             data_replicas=_data_replicas(mesh, base),
             prefix=f"[{arch} × {shape} @ {mesh_name}] ",
-            workload=workload, sp=sh.kind == "long_decode")
+            workload=workload, sp=sh.kind == "long_decode",
+            weight_dtype=None if sh.kind == "train" else weight_dtype,
+            kv_dtype=None if sh.kind == "train" else kv_dtype)
         plan = choice.plan      # serve choices carry schedule="serve_*";
         #                         build_serving resolves them via the
         #                         registry (make_serving_schedule)
@@ -69,6 +72,10 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
         page_size = 0
     if sh_kind != "decode":
         spec_k = None
+    # quantized storage dtypes only price serving cells; training keeps
+    # full-precision weights (plan_search asserts the same invariant)
+    if sh_kind == "train":
+        weight_dtype = kv_dtype = None
     cell = build_cell(arch, shape, mesh, plan=plan, page_size=page_size,
                       spec_k=spec_k)
     lowered = cell.lower()
@@ -104,7 +111,8 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
             data_replicas=dp, cache_len=cell.shape.seq_len,
             global_batch=cell.shape.global_batch, sp=sp,
             prefill=cell.shape.kind == "prefill",
-            page_size=0 if sp else page_size)
+            page_size=0 if sp else page_size,
+            weight_dtype=weight_dtype, kv_dtype=kv_dtype)
     _, bubble = weighted_round_time(sched)
     print(f"  {label} memory_model (analytic): {mm}")
     print(f"  predicted weighted bubble: {bubble:.3f} "
@@ -171,6 +179,17 @@ def main(argv=None):
                          "step (serve_spec_* schedule, k drafts + 1 "
                          "bonus position per round) instead of the "
                          "one-token decode step; ignored elsewhere")
+    ap.add_argument("--weight-dtype", type=str, default=None,
+                    choices=[None, "fp32", "bf16", "int8", "fp8"],
+                    help="serving shapes: price quantized weight storage "
+                         "in the analytic memory cross-check (and "
+                         "plan_search, with --plan-search); ignored for "
+                         "train shapes")
+    ap.add_argument("--kv-dtype", type=str, default=None,
+                    choices=[None, "fp32", "bf16", "int8"],
+                    help="serving shapes: KV-cache storage dtype for the "
+                         "analytic memory model (int8 prices the paged "
+                         "pools + scale planes); ignored for train shapes")
     args = ap.parse_args(argv)
     err = virtual_stages_error(args.schedule, args.virtual_stages)
     if err:
@@ -208,7 +227,9 @@ def main(argv=None):
                          out_dir=args.out, note=args.note,
                          plan=plan_for(arch),
                          do_plan_search=args.plan_search,
-                         page_size=args.page_size, spec_k=args.spec_k)
+                         page_size=args.page_size, spec_k=args.spec_k,
+                         weight_dtype=args.weight_dtype,
+                         kv_dtype=args.kv_dtype)
             except Exception:
                 failures.append((arch, shape))
                 traceback.print_exc()
@@ -222,7 +243,8 @@ def main(argv=None):
     run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
              out_dir=args.out, note=args.note, plan=plan_for(args.arch),
              do_plan_search=args.plan_search, page_size=args.page_size,
-             spec_k=args.spec_k)
+             spec_k=args.spec_k, weight_dtype=args.weight_dtype,
+             kv_dtype=args.kv_dtype)
 
 
 if __name__ == "__main__":

@@ -89,6 +89,30 @@ def parse_arrivals(spec_str: str, seed: int = 0):
     return steps
 
 
+def load_checkpoint(session, spec, args):
+    """Install a converted checkpoint (checkpoint/convert.py) into the
+    freshly started session, validating the conversion plan matches
+    this schedule's storage chunk order."""
+    from repro.checkpoint.convert import ConvertError, load_converted
+    params, manifest = load_converted(args.ckpt, spec)
+    sched = session.sched
+    want = (list(int(c) for c in sched.storage_chunk_order())
+            if sched.virtual_stages > 1 else list(range(sched.n_chunks)))
+    if (manifest["n_chunks"] != sched.n_chunks
+            or list(manifest["storage_order"]) != want):
+        raise ConvertError(
+            f"checkpoint at '{args.ckpt}' was converted for "
+            f"pp={manifest['pp']} v={manifest['virtual_stages']} "
+            f"(storage order {manifest['storage_order']}); this session "
+            f"runs {sched.n_chunks} chunks in order {want} — reconvert "
+            f"with --pp {sched.n_stages} --virtual-stages "
+            f"{sched.virtual_stages}")
+    session.load_params(params)
+    print(f"loaded checkpoint {args.ckpt} (family={manifest['family']}, "
+          f"{manifest['n_chunks']} chunks"
+          f"{f', weights quantized to {session.weight_dtype}' if session.weight_dtype in ('int8', 'fp8') else ''})")
+
+
 def serve_arrivals(session, spec, args):
     """Continuous batching over a request trace (--arrivals)."""
     from repro.serving.batcher import ContinuousBatchingSession, Request
@@ -103,6 +127,8 @@ def serve_arrivals(session, spec, args):
                      max_new_tokens=args.tokens, arrival=int(t))
              for i, t in enumerate(sorted(arrivals))]
     session.start(jax.random.key(0))
+    if args.ckpt:
+        load_checkpoint(session, spec, args)
     server = ContinuousBatchingSession(session, policy=args.policy)
     t0 = time.time()
     report = server.run(trace)
@@ -151,6 +177,19 @@ def main(argv=None):
                          "lattice of compacted decode variants and run "
                          "the smallest bucket covering the live slots "
                          "(bit-exact vs the full-R path)")
+    ap.add_argument("--ckpt", type=str, default=None,
+                    help="converted checkpoint directory (see "
+                         "repro.checkpoint.convert: HF safetensors -> "
+                         "per-chunk files in this plan's storage order)")
+    ap.add_argument("--weight-dtype", type=str, default=None,
+                    choices=[None, "fp32", "bf16", "int8", "fp8"],
+                    help="weight storage dtype: int8/fp8 store matmul "
+                         "weights quantized with per-output-channel "
+                         "scales, dequantized on the fly")
+    ap.add_argument("--kv-dtype", type=str, default=None,
+                    choices=[None, "fp32", "bf16", "int8"],
+                    help="KV-cache storage dtype; int8 needs --page-size "
+                         "> 0 (per-page scales live in the page pools)")
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--host-devices", type=int, default=None)
     ap.add_argument("--schedule", type=str, default=None,
@@ -214,7 +253,9 @@ def main(argv=None):
                                            else jnp.bfloat16),
                             page_size=args.page_size,
                             buckets=args.buckets,
-                            spec_k=args.spec_k)
+                            spec_k=args.spec_k,
+                            weight_dtype=args.weight_dtype,
+                            kv_dtype=args.kv_dtype)
     print(f"serve schedule: {session.sched.name} "
           f"(S={session.sched.n_stages} R={session.sched.n_microbatches}"
           f"{f' v={session.sched.virtual_stages}' if session.sched.virtual_stages > 1 else ''}"
@@ -228,11 +269,16 @@ def main(argv=None):
     if session.buckets:
         print(f"bucket lattice: {session.buckets} (liveness-aware "
               "compacted decode variants, jitted lazily per bucket)")
+    if args.weight_dtype or args.kv_dtype:
+        print(f"storage dtypes: weights={args.weight_dtype or 'compute'} "
+              f"kv={args.kv_dtype or 'compute'}")
 
     if args.arrivals:
         return serve_arrivals(session, spec, args)
 
     session.start(jax.random.key(0))
+    if args.ckpt:
+        load_checkpoint(session, spec, args)
     rng = np.random.default_rng(0)
     batch_in = {k: jnp.asarray(
         rng.integers(0, spec.vocab, v.shape).astype(np.int32)

@@ -13,10 +13,24 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.quant import is_quantized, maybe_dequant
 
-def embed_tokens(embed, tokens):
-    """embed: (Vpad, d) sharded on d; tokens: (..., S) int32 -> (..., S, d)."""
-    return jnp.take(embed, tokens, axis=0)
+
+def embed_tokens(embed, tokens, dtype=None):
+    """embed: (Vpad, d) sharded on d; tokens: (..., S) int32 -> (..., S, d).
+
+    Quantized embeds gather the int8/fp8 rows AND their per-row scales,
+    multiplying only the gathered slice — the full-precision table never
+    materializes.  ``dtype`` pins the output (serving passes its compute
+    dtype so an f32 dequant cannot promote the bf16 activation rings).
+    """
+    if is_quantized(embed):
+        rows = jnp.take(embed["q"], tokens, axis=0).astype(jnp.float32)
+        scales = jnp.take(embed["scale"], tokens, axis=0)
+        out = rows * scales
+    else:
+        out = jnp.take(embed, tokens, axis=0)
+    return out if dtype is None else out.astype(dtype)
 
 
 def head_loss(head, final_norm_scale, h, labels, *, norm_kind: str = "rmsnorm",
@@ -32,7 +46,8 @@ def head_loss(head, final_norm_scale, h, labels, *, norm_kind: str = "rmsnorm",
         h = nn.rmsnorm(h, final_norm_scale)
     else:
         h = nn.layernorm(h, final_norm_scale, norm_bias)
-    logits = (h @ head).astype(jnp.float32)           # (B, S, Vpad) sharded
+    logits = (h @ maybe_dequant(head, h.dtype)).astype(jnp.float32)
+    # (B, S, Vpad) sharded on vocab
     if vocab is not None and vocab < logits.shape[-1]:
         pad = logits.shape[-1] - vocab
         neg = jnp.full((pad,), -1e30, jnp.float32)
@@ -78,7 +93,7 @@ def sample_greedy(head, final_norm_scale, h, *, norm_kind: str = "rmsnorm",
         h = nn.rmsnorm(h, final_norm_scale)
     else:
         h = nn.layernorm(h, final_norm_scale, norm_bias)
-    logits = (h[:, -1] @ head).astype(jnp.float32)
+    logits = (h[:, -1] @ maybe_dequant(head, h.dtype)).astype(jnp.float32)
     if vocab is not None and vocab < logits.shape[-1]:
         pad = logits.shape[-1] - vocab
         neg = jnp.full((pad,), -1e30, jnp.float32)
@@ -103,7 +118,8 @@ def greedy_tokens(head, final_norm_scale, h, *, norm_kind: str = "rmsnorm",
         h = nn.rmsnorm(h, final_norm_scale)
     else:
         h = nn.layernorm(h, final_norm_scale, norm_bias)
-    logits = (h @ head).astype(jnp.float32)            # (B, S, Vpad)
+    logits = (h @ maybe_dequant(head, h.dtype)).astype(jnp.float32)
+    # (B, S, Vpad)
     if vocab is not None and vocab < logits.shape[-1]:
         pad = logits.shape[-1] - vocab
         neg = jnp.full((pad,), -1e30, jnp.float32)

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.kernels import ops as kernel_ops
 from repro.parallel.mesh import maybe_axis_index, maybe_psum
+from repro.quant import maybe_dequant, quantize_kv_page_batched
 
 # Sequence-length product above which attention switches to the blockwise
 # (flash-style) jnp implementation to keep activation memory O(S * block).
@@ -117,7 +118,8 @@ class AttnStatic:
 
 def _project_kv(p, x, st: AttnStatic, tp_axis):
     """Project K/V, handling replicated-kv slicing when kv < tp."""
-    wk, wv = p["wk"], p["wv"]
+    wk = maybe_dequant(p["wk"], x.dtype)
+    wv = maybe_dequant(p["wv"], x.dtype)
     if not st.kv_sharded:
         rank = maybe_axis_index(tp_axis)
         grp = rank // st.kv_groups_per_device if st.kv_groups_per_device else 0
@@ -233,11 +235,13 @@ def attention(
     cache_pos=None,            # scalar write offset into the cache
     cross_x=None,              # encoder output for cross attention
     seq_axis: Optional[str] = None,  # cache sharded over this axis (SP)
-    paged_kv=None,        # (k_pool, v_pool, table_row, write_gate[, tokenwise])
+    paged_kv=None,        # (pools, table_row, write_gate, tokenwise);
+                          # pools = (k, v) or int8 (k, v, k_scale, v_scale)
 ):
     """Returns (out, new_kv_cache). x: (B, S, d_local-replicated)."""
     b, s, _ = x.shape
-    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    wo = maybe_dequant(p["wo"], x.dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x, maybe_dequant(p["wq"], x.dtype))
     kv_src = cross_x if cross_x is not None else x
     k, v = _project_kv(p, kv_src, st, tp_axis)
 
@@ -272,7 +276,7 @@ def attention(
         out = _sdpa_decode_seq_sharded(q, kk, vv, q_pos, k_pos, window,
                                        seq_axis)
         out = out.reshape(b, s, st.n_heads_local * st.d_head)
-        out = jnp.einsum("bsk,kd->bsd", out, p["wo"])
+        out = jnp.einsum("bsk,kd->bsd", out, wo)
         return maybe_psum(out, tp_axis), new_cache
 
     if paged_kv is not None:
@@ -285,10 +289,15 @@ def attention(
         # outputs are bit-identical to the dense cache (masked entries
         # contribute exact zeros to the softmax).
         assert kv_cache is None and cross_x is None and seq_axis is None
-        k_pool, v_pool, row, gate = paged_kv[:4]
+        pools, row, gate = paged_kv[0], paged_kv[1], paged_kv[2]
         # token-wise writes: decode always; s > 1 only when the caller
         # says so (speculative verify) — prefill keeps the aligned slab.
-        tokenwise = (s == 1) or (len(paged_kv) > 4 and bool(paged_kv[4]))
+        tokenwise = (s == 1) or (len(paged_kv) > 3 and bool(paged_kv[3]))
+        kq = len(pools) == 4      # int8 pools carry per-page scale planes
+        if kq:
+            k_pool, v_pool, ks_pool, vs_pool = pools
+        else:
+            (k_pool, v_pool), ks_pool, vs_pool = pools, None, None
         n_pool, _, ps, n_kv, dh = k_pool.shape
         npg = row.shape[0]
         L = npg * ps
@@ -305,6 +314,29 @@ def attention(
             upd = jnp.where(ok, upd, cur)
             return jax.lax.dynamic_update_slice(
                 pool, upd, (pid_safe, 0, 0, 0, 0))
+
+        def _write_page_q(pool, spool, new, pi, width):
+            # int8 prefill write: quantize a freshly built zero-padded
+            # page (one scale per kv head per page).  Zeroing the tail
+            # past ``width`` is safe — decode appends token-wise later,
+            # requantizing the whole page.
+            pid = jax.lax.dynamic_index_in_dim(row, pi, keepdims=False)
+            ok = gate & (pid >= 0)
+            pid_safe = jnp.clip(pid, 0, n_pool - 1)
+            page = jnp.zeros((b, ps, n_kv, dh), jnp.float32)
+            page = page.at[:, :width].set(new.astype(jnp.float32))
+            qpage, scale = quantize_kv_page_batched(page)
+            cur = jax.lax.dynamic_slice(
+                pool, (pid_safe, 0, 0, 0, 0), (1, b, ps, n_kv, dh))
+            cur_s = jax.lax.dynamic_slice(
+                spool, (pid_safe, 0, 0), (1, b, n_kv))
+            pool = jax.lax.dynamic_update_slice(
+                pool, jnp.where(ok, qpage[None], cur),
+                (pid_safe, 0, 0, 0, 0))
+            spool = jax.lax.dynamic_update_slice(
+                spool, jnp.where(ok, scale[None], cur_s),
+                (pid_safe, 0, 0))
+            return pool, spool
 
         if tokenwise:
             # decode / verify: key t lands at offset (cache_pos + t) % ps
@@ -328,9 +360,43 @@ def attention(
                 return jax.lax.dynamic_update_slice(
                     pool, upd, (pid_safe, 0, off, 0, 0))
 
+            def _write_tok_q(pool, spool, new, t):
+                posn = cache_pos + t
+                pi = posn // ps
+                off = posn % ps
+                pid = jax.lax.dynamic_index_in_dim(row, pi, keepdims=False)
+                ok = gate & (pid >= 0)
+                pid_safe = jnp.clip(pid, 0, n_pool - 1)
+                cur = jax.lax.dynamic_slice(
+                    pool, (pid_safe, 0, 0, 0, 0), (1, b, ps, n_kv, dh))
+                cur_s = jax.lax.dynamic_slice(
+                    spool, (pid_safe, 0, 0), (1, b, n_kv))
+                # dequantize the whole page, insert the token, requantize:
+                # one scale per page stays valid under arbitrary new-token
+                # magnitudes (requantization drift is bounded by the page
+                # length and gated by the serving tolerance tests).
+                page = (cur[0].astype(jnp.float32)
+                        * cur_s[0][:, None, :, None])
+                page = jax.lax.dynamic_update_slice(
+                    page, new[:, None].astype(jnp.float32), (0, off, 0, 0))
+                qpage, scale = quantize_kv_page_batched(page)
+                pool = jax.lax.dynamic_update_slice(
+                    pool, jnp.where(ok, qpage[None], cur),
+                    (pid_safe, 0, 0, 0, 0))
+                spool = jax.lax.dynamic_update_slice(
+                    spool, jnp.where(ok, scale[None], cur_s),
+                    (pid_safe, 0, 0))
+                return pool, spool
+
             for t in range(s):
-                k_pool = _write_tok(k_pool, k[:, t], t)
-                v_pool = _write_tok(v_pool, v[:, t], t)
+                if kq:
+                    k_pool, ks_pool = _write_tok_q(k_pool, ks_pool,
+                                                   k[:, t], t)
+                    v_pool, vs_pool = _write_tok_q(v_pool, vs_pool,
+                                                   v[:, t], t)
+                else:
+                    k_pool = _write_tok(k_pool, k[:, t], t)
+                    v_pool = _write_tok(v_pool, v[:, t], t)
             if st.causal and kernel_ops.use_pallas():
                 # Pallas paged kernel: flatten (page, lane) so every lane
                 # gets its own table row (all lanes of a slot share page
@@ -342,11 +408,19 @@ def attention(
                 lens_v = jnp.full((b,), cache_pos + s, jnp.int32)
                 kp = k_pool.swapaxes(0, 1).reshape(n_pool * b, ps, n_kv, dh)
                 vp = v_pool.swapaxes(0, 1).reshape(n_pool * b, ps, n_kv, dh)
-                out = kernel_ops.paged_attention(q, kp, vp, tabs,
-                                                 lens_v, window=window)
+                if kq:
+                    ks = ks_pool.swapaxes(0, 1).reshape(n_pool * b, n_kv)
+                    vs = vs_pool.swapaxes(0, 1).reshape(n_pool * b, n_kv)
+                else:
+                    ks = vs = None
+                out = kernel_ops.paged_attention(q, kp, vp, tabs, lens_v,
+                                                 window=window,
+                                                 k_scale=ks, v_scale=vs)
                 out = out.reshape(b, s, st.n_heads_local * st.d_head)
-                out = jnp.einsum("bsk,kd->bsd", out, p["wo"])
-                return maybe_psum(out, tp_axis), (k_pool, v_pool)
+                out = jnp.einsum("bsk,kd->bsd", out, wo)
+                new_cache = ((k_pool, v_pool, ks_pool, vs_pool) if kq
+                             else (k_pool, v_pool))
+                return maybe_psum(out, tp_axis), new_cache
         else:
             # prefill: write the fresh slab page-by-page (static unroll —
             # n_pages_slab is a compile-time constant). Unallocated pages
@@ -354,23 +428,38 @@ def attention(
             for ii in range(-(-s // ps)):
                 lo = ii * ps
                 width = min(ps, s - lo)
-                k_pool = _write_page(k_pool, k[:, lo:lo + width],
-                                     cache_pos // ps + ii, width)
-                v_pool = _write_page(v_pool, v[:, lo:lo + width],
-                                     cache_pos // ps + ii, width)
+                pi = cache_pos // ps + ii
+                if kq:
+                    k_pool, ks_pool = _write_page_q(
+                        k_pool, ks_pool, k[:, lo:lo + width], pi, width)
+                    v_pool, vs_pool = _write_page_q(
+                        v_pool, vs_pool, v[:, lo:lo + width], pi, width)
+                else:
+                    k_pool = _write_page(k_pool, k[:, lo:lo + width],
+                                         pi, width)
+                    v_pool = _write_page(v_pool, v[:, lo:lo + width],
+                                         pi, width)
 
         # XLA twin read: gather the table into a dense slab and fall
         # through to the shared masked-softmax tail.
         safe = jnp.clip(row, 0, n_pool - 1)
         kk = jnp.take(k_pool, safe, axis=0)      # (npg, B, ps, KV, Dh)
         vv = jnp.take(v_pool, safe, axis=0)
+        if kq:
+            sk = jnp.take(ks_pool, safe, axis=0)   # (npg, B, KV)
+            sv = jnp.take(vs_pool, safe, axis=0)
+            kk = (kk.astype(jnp.float32)
+                  * sk[:, :, None, :, None]).astype(q.dtype)
+            vv = (vv.astype(jnp.float32)
+                  * sv[:, :, None, :, None]).astype(q.dtype)
         k = kk.transpose(1, 0, 2, 3, 4).reshape(b, L, n_kv, dh)
         v = vv.transpose(1, 0, 2, 3, 4).reshape(b, L, n_kv, dh)
         j_idx = jnp.arange(L)
         alive = jnp.repeat(row >= 0, ps)
         k_pos = jnp.where((j_idx < cache_pos + s) & alive, j_idx,
                           _INVALID_POS)
-        new_cache = (k_pool, v_pool)
+        new_cache = ((k_pool, v_pool, ks_pool, vs_pool) if kq
+                     else (k_pool, v_pool))
     elif kv_cache is not None:
         ck, cv = kv_cache  # (B, L, KV, Dh)
         L = ck.shape[1]
@@ -408,7 +497,7 @@ def attention(
         out = kernel_ops.flash_attention(q, k, v, causal=True,
                                          window=window)
         out = out.reshape(b, s, st.n_heads_local * st.d_head)
-        out = jnp.einsum("bsk,kd->bsd", out, p["wo"])
+        out = jnp.einsum("bsk,kd->bsd", out, wo)
         return maybe_psum(out, tp_axis), None
 
     # GQA: broadcast kv heads to query heads
@@ -424,7 +513,7 @@ def attention(
         out = _sdpa_flash_jnp(q, k, v, q_pos, k_pos, window, causal)
 
     out = out.reshape(b, s, st.n_heads_local * st.d_head)
-    out = jnp.einsum("bsk,kd->bsd", out, p["wo"])
+    out = jnp.einsum("bsk,kd->bsd", out, wo)
     return maybe_psum(out, tp_axis), new_cache
 
 
@@ -433,11 +522,13 @@ def attention(
 # --------------------------------------------------------------------------
 
 def mlp(p, x, act: str, tp_axis: Optional[str]):
+    w1 = maybe_dequant(p["w1"], x.dtype)
+    w2 = maybe_dequant(p["w2"], x.dtype)
     if act == "silu":
-        h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+        h = jax.nn.silu(x @ w1) * (x @ maybe_dequant(p["w3"], x.dtype))
     else:
-        h = jax.nn.gelu(x @ p["w1"])
-    return maybe_psum(h @ p["w2"], tp_axis)
+        h = jax.nn.gelu(x @ w1)
+    return maybe_psum(h @ w2, tp_axis)
 
 
 # --------------------------------------------------------------------------
@@ -503,12 +594,15 @@ def moe(p, x, ms: MoEStatic, act: str, tp_axis: Optional[str]):
     # Each device computes only its expert shard.
     rank = maybe_axis_index(tp_axis)
     local = jax.lax.dynamic_slice_in_dim(buf, rank * ms.n_local, ms.n_local, 0)
+    mw1 = maybe_dequant(p["w1"], x.dtype)
     if act == "silu":
-        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", local, p["w1"])) * \
-            jnp.einsum("ecd,edf->ecf", local, p["w3"])
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", local, mw1)) * \
+            jnp.einsum("ecd,edf->ecf", local,
+                       maybe_dequant(p["w3"], x.dtype))
     else:
-        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", local, p["w1"]))
-    y_local = jnp.einsum("ecf,efd->ecd", h, p["w2"])
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", local, mw1))
+    y_local = jnp.einsum("ecf,efd->ecd", h,
+                         maybe_dequant(p["w2"], x.dtype))
 
     # EP combine: all-gather the per-device expert outputs over the
     # tensor axis (rank order == expert order).  Half the wire bytes of

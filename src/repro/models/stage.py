@@ -67,9 +67,10 @@ def _block_apply(st: StageStatics, blk: spec_lib.BlockSpec, lp, x, *,
     """One block: mixer + ffn with pre-norm residuals.
 
     Returns (x, new_state, aux_loss).  ``paged`` (serving only) is a
-    ((k_pool, v_pool), table_row, write_gate[, tokenwise]) tuple routing
-    this layer's attention through the block-paged KV pool instead of
-    the dense per-slot cache (``tokenwise`` forces token-wise writes for
+    (pools, table_row, write_gate[, tokenwise]) tuple routing this
+    layer's attention through the block-paged KV pool instead of the
+    dense per-slot cache; ``pools`` is (k, v) or, for int8 storage,
+    (k, v, k_scale, v_scale) (``tokenwise`` forces token-wise writes for
     s > 1 — speculative verify); the updated pools come back under the
     ``"paged_kv"`` key of new_state (popped off by stage_fwd).
     """
@@ -83,7 +84,7 @@ def _block_apply(st: StageStatics, blk: spec_lib.BlockSpec, lp, x, *,
             out, new_pools = nn.attention(
                 lp["attn"], h, st.attn, positions=positions, window=window,
                 theta=theta, tp_axis=tp_axis, cache_pos=cache_pos,
-                paged_kv=(pools[0], pools[1], row, gate, tokenwise))
+                paged_kv=(pools, row, gate, tokenwise))
             x = x + out
             new_state["paged_kv"] = new_pools
         else:

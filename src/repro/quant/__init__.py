@@ -1,0 +1,257 @@
+"""Quantized weight / KV-cache storage dtypes.
+
+Serving memory is dominated by two pools the planner must price: the
+resident weights and the KV cache.  This package provides the storage
+formats for both:
+
+  * **int8 weights** — per-output-channel scale.  Each matmul weight
+    ``w`` is stored as ``{"q": int8, "scale": f32}`` where the scale has
+    ``w``'s shape with the *contraction* axis reduced to 1 (keepdims), so
+    dequantization is a broadcasted ``q * scale``.  Per-output-channel
+    scaling keeps the rounding error of each output feature independent
+    of every other channel's magnitude.
+  * **fp8-e4m3 weights** — same layout, payload ``float8_e4m3fn``
+    scaled so each channel's absmax maps to the format max (448).
+  * **int8 KV cache** — per-page, per-kv-head scales for the paged
+    pool (``kernels/paged_attention.py`` dequantizes inside the page
+    walk; ``kernels/ref.py`` carries the oracle).
+
+A quantized leaf is a plain ``{"q", "scale"}`` dict, NOT a custom pytree
+node: the params tree stays a nested dict, so jit/shard_map/checkpoint
+flattening all work unchanged — only the matmul call sites in
+``models/nn.py`` / ``models/lm_head.py`` need the ``maybe_dequant``
+shim.  The parallel pspec tree is transformed the same way
+(``quantize_params`` returns both), with the scale's entry for the
+reduced axis forced to ``None`` (a size-1 axis cannot be sharded).
+
+Pricing (``weight_byte_cost`` / ``kv_byte_cost``) is what
+``core/schedule.py`` / ``core/partitioner.py`` use: payload bytes plus
+the f32 scale overhead amortized per parameter / per cache element.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+WEIGHT_DTYPES = ("fp32", "bf16", "fp8", "int8")
+KV_DTYPES = ("fp32", "bf16", "int8")
+
+_STORAGE_BYTES = {"fp32": 4.0, "bf16": 2.0, "fp16": 2.0,
+                  "fp8": 1.0, "int8": 1.0}
+_INT8_MAX = 127.0
+_FP8_MAX = 448.0          # float8_e4m3fn finite max
+
+
+def storage_bytes(name: str) -> float:
+    """Payload bytes per element for a storage dtype name."""
+    return _STORAGE_BYTES[name]
+
+
+def is_quantized(leaf) -> bool:
+    """True for the ``{"q", "scale"}`` dict encoding of a quantized leaf."""
+    return isinstance(leaf, dict) and set(leaf) == {"q", "scale"}
+
+
+# --------------------------------------------------------------------------
+# Leaf-level quantize / dequantize
+# --------------------------------------------------------------------------
+
+def _channel_absmax(w, axis: int):
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axis, keepdims=True)
+    return jnp.where(amax > 0, amax, 1.0)
+
+
+def quantize(w, dtype_name: str, axis: int) -> Dict[str, jax.Array]:
+    """Quantize one weight along its contraction ``axis``.
+
+    Returns ``{"q": payload, "scale": f32}`` with a keepdims scale so
+    ``dequantize`` is a single broadcasted multiply.
+    """
+    if dtype_name == "int8":
+        scale = _channel_absmax(w, axis) / _INT8_MAX
+        q = jnp.round(w.astype(jnp.float32) / scale)
+        q = jnp.clip(q, -_INT8_MAX, _INT8_MAX).astype(jnp.int8)
+    elif dtype_name == "fp8":
+        scale = _channel_absmax(w, axis) / _FP8_MAX
+        q = (w.astype(jnp.float32) / scale).astype(jnp.float8_e4m3fn)
+    else:
+        raise ValueError(f"unknown quantized weight dtype {dtype_name!r}; "
+                         f"expected one of ('int8', 'fp8')")
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def dequantize(w: Dict[str, jax.Array], dtype=None):
+    out = w["q"].astype(jnp.float32) * w["scale"]
+    return out.astype(dtype) if dtype is not None else out
+
+
+def maybe_dequant(w, dtype=None):
+    """Dequantize a ``{"q", "scale"}`` leaf; pass plain arrays through.
+
+    The single shim ``models/nn.py`` / ``models/lm_head.py`` wrap around
+    every weight use — on-the-fly dequantization at the matmul site, so
+    only one layer's weights ever exist at full precision at a time.
+    """
+    if is_quantized(w):
+        return dequantize(w, dtype)
+    return w if dtype is None else w.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Whole-tree quantization (params + pspecs in lockstep)
+# --------------------------------------------------------------------------
+
+# (parent key, leaf key) -> contraction axis of the stage-stacked array.
+# Only the attn / dense-mlp / moe matmul families quantize — norms,
+# routers, rope scalars and the mamba/rwkv mixers stay in compute dtype
+# (they are a rounding error of the footprint and some are numerically
+# load-bearing).
+_STAGE_RULES = {
+    ("attn", "wq"): 1, ("attn", "wk"): 1, ("attn", "wv"): 1,
+    ("attn", "wo"): 1,
+    ("xattn", "wq"): 1, ("xattn", "wk"): 1, ("xattn", "wv"): 1,
+    ("xattn", "wo"): 1,
+    ("mlp", "w1"): 1, ("mlp", "w2"): 1, ("mlp", "w3"): 1,
+    ("shared", "w1"): 1, ("shared", "w2"): 1, ("shared", "w3"): 1,
+    ("moe", "w1"): 2, ("moe", "w2"): 2, ("moe", "w3"): 2,
+}
+
+
+def quantized_axis(path: Tuple[str, ...]) -> Optional[int]:
+    """Contraction axis for a stages-tree leaf path, or None (skip)."""
+    if len(path) >= 2:
+        return _STAGE_RULES.get((path[-2], path[-1]))
+    return None
+
+
+def _scale_pspec(pspec, axis: int):
+    from jax.sharding import PartitionSpec as P
+    entries = list(pspec)
+    while len(entries) <= axis:
+        entries.append(None)
+    entries[axis] = None
+    return P(*entries)
+
+
+def quantize_params(params: Dict, pspecs: Optional[Dict], dtype_name: str
+                    ) -> Tuple[Dict, Optional[Dict]]:
+    """Quantize a full serving params tree (and its pspec twin).
+
+    Stage matmuls follow ``_STAGE_RULES``; ``embed`` quantizes per
+    vocab row (axis 1), ``head`` per vocab column (axis 0).  Everything
+    else passes through untouched.  Works under ``jax.eval_shape``.
+    ``pspecs=None`` quantizes the params tree alone (host-side loads
+    where the sharding twin is derived separately).
+    """
+    if dtype_name in ("fp32", "bf16", None):
+        return params, pspecs
+    if dtype_name not in WEIGHT_DTYPES:
+        raise ValueError(f"unknown weight dtype {dtype_name!r}; expected "
+                         f"one of {WEIGHT_DTYPES}")
+
+    def walk(p, s, path):
+        if isinstance(p, dict):
+            out_p, out_s = {}, {}
+            for k in p:
+                out_p[k], out_s[k] = walk(p[k], None if s is None else s[k],
+                                          path + (k,))
+            return out_p, out_s
+        axis = quantized_axis(path)
+        if axis is None:
+            return p, s
+        qp = quantize(p, dtype_name, axis)
+        if s is None:
+            return qp, None
+        return qp, {"q": s, "scale": _scale_pspec(s, axis)}
+
+    out_params = dict(params)
+    out_pspecs = None if pspecs is None else dict(pspecs)
+    out_params["stages"], qs = walk(
+        params["stages"], None if pspecs is None else pspecs["stages"], ())
+    if out_pspecs is not None:
+        out_pspecs["stages"] = qs
+    for name, axis in (("embed", 1), ("head", 0)):
+        if name in params:
+            out_params[name] = quantize(params[name], dtype_name, axis)
+            if out_pspecs is not None:
+                out_pspecs[name] = {
+                    "q": pspecs[name],
+                    "scale": _scale_pspec(pspecs[name], axis)}
+    return out_params, out_pspecs
+
+
+# --------------------------------------------------------------------------
+# int8 KV-cache page helpers (write-side; the read side lives in the
+# Pallas page walk and the ref.py oracle)
+# --------------------------------------------------------------------------
+
+def quantize_kv_page(page_f32):
+    """Quantize one (page, n_kv, dh) page; scale is per kv head.
+
+    Returns ``(q int8 (page, kv, dh), scale f32 (kv,))``.
+    """
+    amax = jnp.max(jnp.abs(page_f32.astype(jnp.float32)), axis=(0, 2))
+    scale = jnp.where(amax > 0, amax, 1.0) / _INT8_MAX
+    q = jnp.round(page_f32.astype(jnp.float32) / scale[None, :, None])
+    return jnp.clip(q, -_INT8_MAX, _INT8_MAX).astype(jnp.int8), scale
+
+
+def quantize_kv_page_batched(pages_f32):
+    """Quantize a batch of pages: (B, page, kv, dh) -> (q, (B, kv) f32).
+
+    The per-(page, kv-head) scale layout the paged pools store — one f32
+    per kv head per physical page, amortized over ``page * dh`` elements.
+    """
+    amax = jnp.max(jnp.abs(pages_f32.astype(jnp.float32)), axis=(1, 3))
+    scale = jnp.where(amax > 0, amax, 1.0) / _INT8_MAX
+    q = jnp.round(pages_f32.astype(jnp.float32)
+                  / scale[:, None, :, None])
+    return jnp.clip(q, -_INT8_MAX, _INT8_MAX).astype(jnp.int8), scale
+
+
+def dequantize_kv_pages(q_pages, scales, dtype=jnp.float32):
+    """(P, page, kv, dh) int8 + (P, kv) f32 -> dequantized pages."""
+    return (q_pages.astype(jnp.float32)
+            * scales[:, None, :, None]).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Analytic pricing (consumed by core/schedule.py, core/partitioner.py)
+# --------------------------------------------------------------------------
+
+def weight_byte_cost(dtype_name: Optional[str], spec, hw) -> float:
+    """Bytes per weight parameter under a storage dtype.
+
+    ``None``/"auto" defaults to the hardware's ``param_bytes`` (the
+    pre-quantization behaviour).  Quantized dtypes pay the payload byte
+    plus the per-output-channel f32 scale amortized over the fan-in —
+    priced at ``4 / d_model`` per parameter (the dominant matmuls
+    contract over d_model; w2's d_ff fan-in only makes this an upper
+    bound).
+    """
+    if dtype_name in (None, "auto"):
+        return hw.param_bytes
+    b = storage_bytes(dtype_name)
+    if dtype_name in ("int8", "fp8"):
+        b += 4.0 / spec.d_model
+    return b
+
+
+def kv_byte_cost(dtype_name: Optional[str], spec, page_size: int = 0) -> float:
+    """Bytes per KV-cache element (one scalar of one K or V vector).
+
+    ``None`` keeps the schedule's ACT_BYTES default.  int8 adds the
+    per-page, per-kv-head f32 scale amortized over the
+    ``page_size * d_head`` elements it covers (dense caches price the
+    same way with an effective page of ``d_head`` — per-token scales).
+    """
+    if dtype_name in (None, "auto"):
+        from repro.core.profiler import ACT_BYTES
+        return ACT_BYTES
+    b = storage_bytes(dtype_name)
+    if dtype_name == "int8":
+        span = (page_size if page_size else 1) * spec.d_head
+        b += 4.0 / span
+    return b

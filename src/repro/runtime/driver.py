@@ -147,7 +147,8 @@ def plan_choice(spec, old_plan, new_model_axis: int, hw=prof.TPU_V5E, *,
 def plan_search_report(spec, base_plan, hw=prof.TPU_V5E, *, seq_len: int,
                        global_batch: int, data_replicas: int,
                        prefix: str = "", workload: str = "train",
-                       sp: bool = False) -> PlanChoice:
+                       sp: bool = False, weight_dtype=None,
+                       kv_dtype=None) -> PlanChoice:
     """Shared launch-entry-point surface: search, print, return.
 
     Used by launch/train.py and launch/dryrun.py so the microbatch-token
@@ -174,7 +175,8 @@ def plan_search_report(spec, base_plan, hw=prof.TPU_V5E, *, seq_len: int,
                              hw, minibatch_tokens=mb_tokens,
                              data_replicas=data_replicas,
                              workload=workload, cache_len=seq_len,
-                             global_batch=global_batch, sp=sp)
+                             global_batch=global_batch, sp=sp,
+                             weight_dtype=weight_dtype, kv_dtype=kv_dtype)
     print(f"{prefix}plan_search[{workload}]: {choice.describe()}")
     print(f"{prefix}  predicted {choice.memory}")
     return choice

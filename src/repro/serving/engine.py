@@ -55,6 +55,7 @@ from repro.core.schedule import (F_CHUNK, F_FROM_EMBEDS, F_MB,
                                  default_cache_lens,
                                  fit_serving_microbatches,
                                  make_serving_schedule, pick_bucket)
+from repro import quant
 from repro.models import lm_head
 from repro.models import spec as spec_lib
 from repro.models.init import init_params
@@ -153,6 +154,12 @@ class EngineSession:
     draft_step: Optional[Callable] = None
     rollback_step: Optional[Callable] = None
     cache_len: int = 0             # KV capacity (headroom checks)
+    # storage dtypes (build_serving(weight_dtype=, kv_dtype=)) and the
+    # raw (unquantized) param template load_params casts against
+    weight_dtype: Optional[str] = None
+    kv_dtype: Optional[str] = None
+    compute_dtype: Any = None
+    param_template: Any = None
     _jit: Dict[Any, Callable] = dataclasses.field(default_factory=dict)
     _alloc: Any = None             # host-side PageAllocator (paged mode)
     # host mirrors of state["pos"]/state["live"] — maintained in EVERY
@@ -168,6 +175,28 @@ class EngineSession:
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
                             self.state_pspecs,
                             is_leaf=lambda x: isinstance(x, P))
+
+    def load_params(self, params_host) -> "EngineSession":
+        """Install externally loaded weights into the live session state.
+
+        ``params_host`` (e.g. ``checkpoint.convert.load_converted``
+        output) must already be in this schedule's storage chunk order —
+        the converter writes per-chunk files that way for any
+        (pp, tp, v) plan.  Leaves are cast to the engine's param dtypes,
+        quantized when the session was built with ``weight_dtype``, and
+        placed with the session's param shardings.
+        """
+        if self.state is None:
+            raise RuntimeError("call start() before load_params()")
+        cast = jax.tree.map(lambda t, a: jnp.asarray(a).astype(t.dtype),
+                            self.param_template, params_host)
+        cast, _ = quant.quantize_params(cast, None, self.weight_dtype)
+        sh = jax.tree.map(lambda s: NamedSharding(self.mesh, s),
+                          self.state_pspecs["params"],
+                          is_leaf=lambda x: isinstance(x, P))
+        self.state = {**self.state,
+                      "params": jax.device_put(cast, sh)}
+        return self
 
     def start(self, key=None) -> "EngineSession":
         """Initialize (or reset) the session state on the mesh."""
@@ -625,7 +654,9 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                   compute_dtype=jnp.bfloat16, page_size: int = 0,
                   pool_pages: Optional[int] = None,
                   buckets: bool = False,
-                  spec_k: Optional[int] = None) -> EngineSession:
+                  spec_k: Optional[int] = None,
+                  weight_dtype: Optional[str] = None,
+                  kv_dtype: Optional[str] = None) -> EngineSession:
     """``page_size > 0`` switches full-length attention KV to the
     block-paged layout: a global per-layer page pool
     (n_chunks, pool_pages, rows, page_size, KV, Dh) plus one per-slot
@@ -656,6 +687,14 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
     ``session.rollback_slots(mask, new_pos)``.  Greedy output is
     bit-exact (fp32) vs the non-speculative schedule by construction —
     rollback makes speculation a pure latency optimization.
+
+    ``weight_dtype`` ("int8"/"fp8") stores the matmul weights quantized
+    (per-output-channel scales, dequantized on the fly at each matmul —
+    repro.quant); ``kv_dtype`` picks the KV-cache storage dtype:
+    "fp32"/"bf16" re-types the dense caches, "int8" stores the paged
+    pools as int8 payloads with per-(page, kv-head) f32 scale planes
+    (requires ``page_size > 0``; the Pallas page walk dequantizes
+    in-VMEM).  Both default to the unquantized behaviour.
     """
     S = plan.pp
     if page_size:
@@ -666,6 +705,20 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
             raise ValueError(
                 f"cache_len={cache_len} must be a multiple of "
                 f"page_size={page_size}")
+    if weight_dtype is not None and weight_dtype not in quant.WEIGHT_DTYPES:
+        raise ValueError(f"weight_dtype={weight_dtype!r} not in "
+                         f"{quant.WEIGHT_DTYPES}")
+    if kv_dtype is not None and kv_dtype not in quant.KV_DTYPES:
+        raise ValueError(f"kv_dtype={kv_dtype!r} not in {quant.KV_DTYPES}")
+    if kv_dtype == "int8" and not page_size:
+        raise ValueError(
+            "kv_dtype='int8' requires the paged cache (page_size > 0): "
+            "the per-page scale planes live alongside the page pools")
+    kv_q = kv_dtype == "int8"
+    # dense caches re-type wholesale; int8 keeps the dense leftovers
+    # (windowed rings, recurrent state) in compute dtype
+    cache_dtype = ({"fp32": jnp.float32, "bf16": jnp.bfloat16}
+                   .get(kv_dtype, compute_dtype))
     daxes = data_axes(mesh)
     dp = int(np.prod([mesh.devices.shape[mesh.axis_names.index(a)]
                       for a in daxes]))
@@ -792,7 +845,7 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         its chunks' caches.  Every chunk shares the (union-maxed) state
         structure, so the zero template needs no per-row permute.
         """
-        base = init_stage_state(statics, rows_g, glens, compute_dtype,
+        base = init_stage_state(statics, rows_g, glens, cache_dtype,
                                 paged_layers=paged_layers)
 
         def stack(leaf):
@@ -801,7 +854,10 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         return jax.tree.map(stack, base)
 
     def _pages_template():
-        """Global page pools, one (k, v) pair per paged layer.
+        """Global page pools, one (k, v) pair per paged layer — or, for
+        int8 KV storage, (k, v, k_scale, v_scale) with per-(page,
+        kv-head) f32 scale planes (initialized to 1 so dequantizing an
+        untouched zero page yields exact zeros).
 
         Leaves are (n_chunks, pool_pages, rows_g, page, KV, Dh): the
         pool is global across slots (no R dim) — that is the whole
@@ -811,15 +867,24 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         """
         z = jnp.zeros((n_chunks, pool_pages, rows_g, page_size,
                        statics.attn.n_kv_local, statics.attn.d_head),
-                      compute_dtype)
+                      jnp.int8 if kv_q else cache_dtype)
+        if kv_q:
+            s1 = jnp.ones((n_chunks, pool_pages, rows_g,
+                           statics.attn.n_kv_local), jnp.float32)
+            return {f"layer_{i}": (z, z, s1, s1)
+                    for i in sorted(paged_layers)}
         return {f"layer_{i}": (z, z) for i in sorted(paged_layers)}
 
     def _pages_pspec():
         pp = P(AXIS_STAGE, None, batch_dim_spec, None, None, None)
+        if kv_q:
+            sp_ = P(AXIS_STAGE, None, batch_dim_spec, None)
+            return {f"layer_{i}": (pp, pp, sp_, sp_)
+                    for i in sorted(paged_layers)}
         return {f"layer_{i}": (pp, pp) for i in sorted(paged_layers)}
 
     def _cache_pspec():
-        base = init_stage_state(statics, rows_g, glens, compute_dtype,
+        base = init_stage_state(statics, rows_g, glens, cache_dtype,
                                 paged_layers=paged_layers)
 
         def pspec(path, leaf):
@@ -1044,7 +1109,8 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
             pos, live = state["pos"], state["live"]
             pages = state.get("pages", {})
             tables = state.get("tables", jnp.zeros((R, 1), jnp.int32))
-            emb = lm_head.embed_tokens(params["embed"], tokens)[:, None]
+            emb = lm_head.embed_tokens(params["embed"], tokens,
+                                       dtype=compute_dtype)[:, None]
             embeds_ring = emb.reshape(R, rows_g, 1, spec.d_model)
             if has_enc:
                 enc_ring = state["enc_out"]
@@ -1099,7 +1165,8 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
             pos, live = state["pos"], state["live"]
             pages = state.get("pages", {})
             tables = state.get("tables", jnp.zeros((R, 1), jnp.int32))
-            emb = lm_head.embed_tokens(params["embed"], tokens)  # (B, Q, d)
+            emb = lm_head.embed_tokens(params["embed"], tokens,
+                                       dtype=compute_dtype)  # (B, Q, d)
             embeds_ring = emb.reshape(R, rows_g, Q, spec.d_model)
             enc_ring = jnp.zeros((1, 1, 1, 1), compute_dtype)
             gate = (live if in_bucket is None
@@ -1141,7 +1208,8 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         params = state["params"]
 
         def hop(t, _):
-            h = lm_head.embed_tokens(params["embed"], t)[:, None]
+            h = lm_head.embed_tokens(params["embed"], t,
+                                     dtype=compute_dtype)[:, None]
             nxt = lm_head.sample_greedy(
                 params["head"], params["final_norm"]["scale"],
                 h.astype(compute_dtype), norm_kind=spec.norm,
@@ -1249,7 +1317,8 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                 lens_vec = batch.get("lens")            # (R,) or None
                 gate = (slot_mask if in_bucket is None
                         else slot_mask * jnp.asarray(in_bucket, jnp.int32))
-                emb = lm_head.embed_tokens(params["embed"], tokens)
+                emb = lm_head.embed_tokens(params["embed"], tokens,
+                                           dtype=compute_dtype)
                 if spec.frontend == "vision" and "patches" in batch:
                     emb = jnp.concatenate(
                         [batch["patches"].astype(emb.dtype), emb], axis=2)
@@ -1323,11 +1392,17 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
 
     def _shapes():
         p, s = init_params(spec, mplan, jax.random.key(0), compute_dtype)
+        p, s = quant.quantize_params(p, s, weight_dtype)
         _box["pspecs"] = s
         return p
 
     params_shape = jax.eval_shape(_shapes)
     pspecs = _box["pspecs"]
+    # raw (unquantized) template: load_params casts an incoming host
+    # checkpoint to these dtypes before the optional quantization pass
+    param_template = jax.eval_shape(
+        lambda: init_params(spec, mplan, jax.random.key(0),
+                            compute_dtype)[0])
 
     def init_state(key):
         params, _ = init_params(spec, mplan, key, compute_dtype)
@@ -1342,6 +1417,7 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                                             params["stages"])
             params["layer_windows"] = params["layer_windows"][perm]
             params["layer_thetas"] = params["layer_thetas"][perm]
+        params, _ = quant.quantize_params(params, None, weight_dtype)
         # per-slot serving state: each schedule microbatch slot carries
         # its own cache position and liveness.  A fresh session is fully
         # live (the one-shot flows behave as before); the continuous
@@ -1416,4 +1492,7 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                          verify_step_for=verify_step_for,
                          draft_step=session_draft_step,
                          rollback_step=rollback_slots_step,
-                         cache_len=cache_len)
+                         cache_len=cache_len,
+                         weight_dtype=weight_dtype, kv_dtype=kv_dtype,
+                         compute_dtype=compute_dtype,
+                         param_template=param_template)

@@ -1,0 +1,103 @@
+"""Subprocess worker: converted checkpoint == direct in-memory load,
+through the real engine, at any (pp, tp, v).
+
+Usage: convert_check.py PP TP V STEPS
+
+Writes a synthetic HF safetensors fixture, converts it to storage-chunk
+files for the requested plan, and asserts:
+
+  1. ``load_converted`` equals ``hf_to_params`` bit-for-bit (the disk
+     round-trip adds nothing).
+  2. The engine serves identical greedy tokens from the converted
+     checkpoint and from the direct in-memory load (fp32: the decode is
+     bit-exact, not tolerance-gated).
+  3. For v > 1, a v=1 conversion of the SAME fixture served under
+     ``serve_1f`` emits the same tokens — conversion is plan-invariant.
+  4. The int8-weight + int8-KV engine loaded from the same checkpoint
+     tracks the fp32 greedy continuation (match-rate gate) — the
+     quantized sharding (scale pspecs) works across the same mesh.
+
+Prints MATCH on success.
+"""
+import sys
+
+pp, tp, v, steps = map(int, sys.argv[1:5])
+
+import os  # noqa: E402
+
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={pp * tp}")
+
+import tempfile           # noqa: E402
+
+import jax                # noqa: E402
+import jax.numpy as jnp   # noqa: E402
+import numpy as np        # noqa: E402
+
+from repro.checkpoint import convert as cv                    # noqa: E402
+from repro.launch.mesh import make_host_mesh                  # noqa: E402
+from repro.models import spec as spec_lib                     # noqa: E402
+from repro.parallel.mesh import ParallelismPlan, split_model_axis  # noqa: E402
+from repro.serving.engine import build_serving                # noqa: E402
+
+n_layers = pp * v * 2
+blocks = tuple(spec_lib.BlockSpec(mixer="attn", ffn="dense")
+               for _ in range(n_layers))
+spec = spec_lib.ModelSpec(
+    name="convert-check", d_model=64, n_layers=n_layers, n_heads=4,
+    n_kv=2, d_head=16, d_ff=128, vocab=256,
+    blocks=blocks, norm="rmsnorm", act="silu", qk_norm=True)
+
+tmp = tempfile.mkdtemp(prefix="convert_check_")
+fixture = os.path.join(tmp, "model.safetensors")
+tensors = cv.make_synthetic_checkpoint(fixture, spec, seed=11)
+
+ck = os.path.join(tmp, "ck")
+cv.convert(fixture, ck, spec, pp=pp, tp=tp, virtual_stages=v)
+params_conv, manifest = cv.load_converted(ck, spec)
+assert manifest["storage_order"] == cv.storage_order(pp, v)
+params_direct = cv.hf_to_params(tensors, spec, pp=pp, tp=tp,
+                                virtual_stages=v)
+jax.tree.map(np.testing.assert_array_equal, params_conv, params_direct)
+
+mesh = make_host_mesh(data=1, model=pp * tp)
+dmesh = split_model_axis(mesh, pp, tp)
+batch, prefill, cache = 4, 8, 64
+start_tokens = np.asarray(jax.random.randint(
+    jax.random.key(1), (batch, prefill), 1, spec.vocab, jnp.int32))
+
+
+def run(params, v_run, weight_dtype=None, kv_dtype=None, page_size=0):
+    plan = ParallelismPlan(
+        pp=pp, tp=tp, microbatches=4, decode_microbatches=4,
+        schedule="serve_interleaved" if v_run > 1 else "auto",
+        virtual_stages=v_run)
+    sess = build_serving(spec, plan, dmesh, cache_len=cache,
+                         global_batch=batch, prefill_len=prefill,
+                         compute_dtype=jnp.float32, page_size=page_size,
+                         weight_dtype=weight_dtype, kv_dtype=kv_dtype)
+    sess.start(jax.random.key(0))
+    sess.load_params(params)
+    tk = jnp.asarray(start_tokens.reshape(
+        sess.prefill_specs["tokens"].shape))
+    toks = [np.asarray(sess.prefill({"tokens": tk}))]
+    for _ in range(steps):
+        toks.append(np.asarray(sess.decode(jnp.asarray(toks[-1]))))
+    return np.stack(toks)
+
+got_conv = run(params_conv, v)
+got_direct = run(params_direct, v)
+np.testing.assert_array_equal(got_conv, got_direct)
+
+if v > 1:
+    ck1 = os.path.join(tmp, "ck_v1")
+    cv.convert(fixture, ck1, spec, pp=pp, tp=tp, virtual_stages=1)
+    params_v1, _ = cv.load_converted(ck1, spec)
+    np.testing.assert_array_equal(got_conv, run(params_v1, 1))
+
+got_q = run(params_conv, v, weight_dtype="int8", kv_dtype="int8",
+            page_size=16)
+match = float(np.mean(got_q == got_conv))
+assert match >= 0.7, f"int8 greedy match rate {match} < 0.7"
+print(f"int8 match rate {match:.3f}")
+print("MATCH")

@@ -115,6 +115,72 @@ def test_driver_gives_up_after_max_restarts(tmp_path):
         driver.run(state, 4)
 
 
+def test_truncated_manifest_is_skipped(tmp_path):
+    """A torn MANIFEST.json (crash mid-write on a pre-atomic layout, or
+    a disk fault) must read as 'round incomplete', not crash the restart
+    scan with json.JSONDecodeError."""
+    spec, plan, state = _tiny_state()
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, state, plan.pp)
+    mgr.save(2, state, plan.pp)
+    assert mgr.latest_complete_round() == 2
+    mf = tmp_path / "round_00000002" / "MANIFEST.json"
+    raw = mf.read_text()
+    mf.write_text(raw[: len(raw) // 2])          # deliberately truncated
+    assert mgr.latest_complete_round() == 1
+    # the older round is still restorable
+    template = jax.tree.map(lambda a: np.zeros(a.shape, a.dtype), state)
+    restored = mgr.restore(1, template)
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["stages"]["layer_0"]["mlp"]["w1"]),
+        np.asarray(state["params"]["stages"]["layer_0"]["mlp"]["w1"]))
+
+
+def test_manifest_write_is_atomic(tmp_path):
+    """save() must never leave a MANIFEST.json.tmp behind and the final
+    manifest must always parse (written via tmp + os.replace)."""
+    import json
+
+    spec, plan, state = _tiny_state()
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(0, state, plan.pp)
+    d = tmp_path / "round_00000000"
+    assert not (d / "MANIFEST.json.tmp").exists()
+    with open(d / "MANIFEST.json") as f:
+        m = json.load(f)
+    assert m["done"] and m["stages"] == list(range(plan.pp))
+
+
+def test_save_restore_preserves_dtypes(tmp_path):
+    """bf16 leaves must survive the npz round-trip bit-exactly: np.savez
+    silently degrades ml_dtypes bfloat16 to a raw void ``|V2``, so the
+    manager dumps the uint16 payload and views it back through the
+    template dtype (seed bug: restore died on the void array)."""
+    key = jax.random.key(7)
+    mk = lambda k, shape, dt: jax.random.normal(
+        jax.random.fold_in(key, k), shape, jnp.float32).astype(dt)
+    state = {
+        "params": {
+            "stages": {"layer_0": {"w": mk(0, (2, 4, 8), jnp.bfloat16),
+                                   "b": mk(1, (2, 4), jnp.float32)}},
+            "embed": mk(2, (16, 8), jnp.bfloat16),
+            "layer_windows": jnp.full((2, 1), -1, jnp.int32),
+        },
+        "step": jnp.zeros((), jnp.int32),
+    }
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(0, state, 2)
+    assert mgr.latest_complete_round() == 0
+    template = jax.tree.map(lambda a: np.zeros(a.shape, a.dtype), state)
+    restored = mgr.restore(0, template)
+    for (pa, a), (pb, b) in zip(
+            jax.tree_util.tree_leaves_with_path(state),
+            jax.tree_util.tree_leaves_with_path(restored)):
+        assert pa == pb
+        assert np.asarray(b).dtype == np.asarray(a).dtype, pa
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), pa
+
+
 def test_reshard_stages_preserves_global_layers():
     """pp=2 -> pp=4 -> pp=2 roundtrip keeps every global layer's params."""
     spec, plan, state = _tiny_state(pp=2)

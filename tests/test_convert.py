@@ -1,0 +1,249 @@
+"""Checkpoint converter: HF safetensors -> storage-chunk files.
+
+Host-level tests run in-process on one device (pure numpy routing); the
+engine round-trip golden — fixture -> convert at (pp, tp, v) -> engine
+``load_params`` -> greedy tokens bit-exact vs the direct in-memory load —
+runs in subprocesses (tests/convert_check.py) so each case can set its
+own host-device count.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import convert as cv
+from repro.models import spec as spec_lib
+from repro.parallel.mesh import ParallelismPlan
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+pytestmark = pytest.mark.skipif(
+    not cv.HAVE_SAFETENSORS, reason="safetensors not importable")
+
+
+def _conv_spec(n_layers=8, vocab=200):
+    """Dense qwen3-family spec; vocab=200 forces real vocab padding."""
+    blocks = tuple(spec_lib.BlockSpec(mixer="attn", ffn="dense")
+                   for _ in range(n_layers))
+    return spec_lib.ModelSpec(
+        name="conv-test", d_model=64, n_layers=n_layers, n_heads=4,
+        n_kv=2, d_head=16, d_ff=128, vocab=vocab, blocks=blocks,
+        norm="rmsnorm", act="silu", qk_norm=True)
+
+
+def _moe_spec(n_layers=4):
+    blocks = tuple(spec_lib.BlockSpec(mixer="attn", ffn="moe")
+                   for _ in range(n_layers))
+    return spec_lib.ModelSpec(
+        name="conv-moe-test", d_model=64, n_layers=n_layers, n_heads=4,
+        n_kv=4, d_head=16, d_ff=32, vocab=200, blocks=blocks,
+        norm="rmsnorm", act="silu", qk_norm=True,
+        moe=spec_lib.MoESpec(n_experts=8, top_k=2, d_expert=32))
+
+
+def _assert_trees_equal(a, b):
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), a, b)
+
+
+# ---------------------------------------------------------------------------
+# Storage layout: the converter's arithmetic == the schedule's contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pp,v", [(2, 2), (2, 3), (4, 2), (3, 4)])
+def test_storage_order_matches_schedule(pp, v):
+    plan = ParallelismPlan(pp=pp, tp=1, microbatches=2 * pp,
+                           decode_microbatches=2 * pp,
+                           schedule="serve_interleaved", virtual_stages=v)
+    assert cv.storage_order(pp, v) == \
+        list(plan.make_schedule().storage_chunk_order())
+
+
+# ---------------------------------------------------------------------------
+# Round trips (disk == in-memory; export inverts convert)
+# ---------------------------------------------------------------------------
+
+def test_convert_load_matches_direct(tmp_path):
+    spec = _conv_spec()
+    fix = str(tmp_path / "model.safetensors")
+    tensors = cv.make_synthetic_checkpoint(fix, spec, seed=1)
+    mf = cv.convert(fix, str(tmp_path / "ck"), spec, pp=2, tp=2,
+                    virtual_stages=2)
+    assert mf["n_chunks"] == 4
+    assert mf["storage_order"] == [0, 2, 1, 3]
+    for row in range(4):
+        assert (tmp_path / "ck" / f"chunk_{row:04d}.npz").exists()
+    assert (tmp_path / "ck" / "shared.npz").exists()
+    params, manifest = cv.load_converted(str(tmp_path / "ck"), spec)
+    assert manifest["spec"] == spec.name
+    direct = cv.hf_to_params(tensors, spec, pp=2, tp=2, virtual_stages=2)
+    _assert_trees_equal(params, direct)
+
+
+def test_sharded_fixture_resolves_and_converts(tmp_path):
+    spec = _conv_spec(n_layers=4)
+    src = str(tmp_path / "hf")
+    tensors = cv.make_synthetic_checkpoint(src, spec, seed=2, shards=3)
+    assert len(cv.resolve_shards(src)) == 3
+    cv.convert(src, str(tmp_path / "ck"), spec, pp=2, virtual_stages=2)
+    params, _ = cv.load_converted(str(tmp_path / "ck"), spec)
+    _assert_trees_equal(
+        params, cv.hf_to_params(tensors, spec, pp=2, virtual_stages=2))
+
+
+def test_export_inverts_convert(tmp_path):
+    spec = _conv_spec(n_layers=4)
+    fix = str(tmp_path / "model.safetensors")
+    tensors = cv.make_synthetic_checkpoint(fix, spec, seed=3)
+    cv.convert(fix, str(tmp_path / "ck"), spec, pp=2, virtual_stages=2)
+    out = cv.export_checkpoint(str(tmp_path / "ck"),
+                               str(tmp_path / "back.safetensors"), spec)
+    assert set(out) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(out[k], tensors[k])
+
+
+def test_moe_family_round_trip(tmp_path):
+    spec = _moe_spec()
+    fix = str(tmp_path / "model.safetensors")
+    tensors = cv.make_synthetic_checkpoint(fix, spec, seed=4)
+    mf = cv.convert(fix, str(tmp_path / "ck"), spec, pp=2)
+    assert mf["family"] == "olmoe"
+    params, _ = cv.load_converted(str(tmp_path / "ck"), spec)
+    _assert_trees_equal(params, cv.hf_to_params(tensors, spec, pp=2))
+    # per-expert accumulation landed each expert slice where it belongs
+    w1 = params["stages"]["layer_0"]["moe"]["w1"]
+    np.testing.assert_array_equal(
+        w1[0, 3], tensors["model.layers.0.mlp.experts.3.gate_proj.weight"].T)
+    out = cv.export_checkpoint(str(tmp_path / "ck"),
+                               str(tmp_path / "back.safetensors"), spec)
+    for k in tensors:
+        np.testing.assert_array_equal(out[k], tensors[k])
+
+
+def test_two_plan_conversion_matches_reshard(tmp_path):
+    """Converting directly at (pp=2, v=2) == converting at (pp=2, v=1)
+    and resharding the resulting state with the runtime's
+    ``reshard_state_for_plan`` — the two layout paths agree."""
+    from repro.runtime.driver import reshard_state_for_plan
+
+    spec = _conv_spec()
+    fix = str(tmp_path / "model.safetensors")
+    tensors = cv.make_synthetic_checkpoint(fix, spec, seed=5)
+    pa = cv.hf_to_params(tensors, spec, pp=2, virtual_stages=1)
+    pb = cv.hf_to_params(tensors, spec, pp=2, virtual_stages=2)
+    plan_a = ParallelismPlan(pp=2, tp=1, microbatches=4,
+                             decode_microbatches=4, schedule="serve_1f")
+    plan_b = ParallelismPlan(pp=2, tp=1, microbatches=4,
+                             decode_microbatches=4,
+                             schedule="serve_interleaved", virtual_stages=2)
+    out = reshard_state_for_plan({"params": pa}, spec, plan_a, plan_b)
+    _assert_trees_equal(out["params"], pb)
+
+
+# ---------------------------------------------------------------------------
+# Typed error paths (every failure is a ConvertError naming the culprit)
+# ---------------------------------------------------------------------------
+
+def test_unknown_key_raises():
+    spec = _conv_spec(n_layers=4)
+    tensors = {"model.layers.0.self_attn.bogus.weight":
+               np.zeros((4, 4), np.float32)}
+    with pytest.raises(cv.ConvertError, match="unknown checkpoint key"):
+        cv.hf_to_params(tensors, spec, pp=2)
+
+
+def test_shape_mismatch_names_key_and_shapes():
+    spec = _conv_spec(n_layers=4)
+    tensors = {"model.layers.0.self_attn.q_proj.weight":
+               np.zeros((7, 7), np.float32)}
+    with pytest.raises(cv.ConvertError,
+                       match=r"does not match expected shape"):
+        cv.hf_to_params(tensors, spec, pp=2)
+
+
+def test_tp_indivisible_names_axis():
+    spec = _conv_spec(n_layers=4)
+    with pytest.raises(cv.ConvertError, match="does not divide axis"):
+        cv.hf_to_params({}, spec, pp=2, tp=3)
+
+
+def test_layers_indivisible_by_chunks():
+    spec = _conv_spec(n_layers=6)
+    with pytest.raises(cv.ConvertError, match="not divisible"):
+        cv.hf_to_params({}, spec, pp=4)
+
+
+def test_layer_out_of_range():
+    spec = _conv_spec(n_layers=4)
+    tensors = {"model.layers.9.input_layernorm.weight":
+               np.zeros((64,), np.float32)}
+    with pytest.raises(cv.ConvertError, match="out of range"):
+        cv.hf_to_params(tensors, spec, pp=2)
+
+
+def test_incomplete_checkpoint_lists_missing(tmp_path):
+    spec = _conv_spec(n_layers=4)
+    fix = str(tmp_path / "model.safetensors")
+    tensors = cv.make_synthetic_checkpoint(fix, spec, seed=6)
+    del tensors["model.layers.3.mlp.down_proj.weight"]
+    with pytest.raises(cv.ConvertError, match="incomplete checkpoint"):
+        cv.hf_to_params(tensors, spec, pp=2)
+
+
+def test_missing_shard_paths(tmp_path):
+    with pytest.raises(cv.ConvertError, match="missing safetensors shard"):
+        cv.resolve_shards(str(tmp_path / "nope"))
+    # an index.json referencing an absent shard file names it
+    d = tmp_path / "hf"
+    d.mkdir()
+    with open(d / "model.safetensors.index.json", "w") as f:
+        json.dump({"weight_map": {"a": "model-00001-of-00002.safetensors"}},
+                  f)
+    with pytest.raises(cv.ConvertError, match="missing safetensors shard"):
+        cv.resolve_shards(str(d))
+
+
+def test_load_rejects_wrong_spec_and_missing_files(tmp_path):
+    spec = _conv_spec(n_layers=4)
+    fix = str(tmp_path / "model.safetensors")
+    cv.make_synthetic_checkpoint(fix, spec, seed=7)
+    ck = str(tmp_path / "ck")
+    cv.convert(fix, ck, spec, pp=2)
+    import dataclasses
+    other = dataclasses.replace(_conv_spec(n_layers=4), name="other-spec")
+    with pytest.raises(cv.ConvertError, match="was converted for spec"):
+        cv.load_converted(ck, other)
+    os.remove(os.path.join(ck, "chunk_0001.npz"))
+    with pytest.raises(cv.ConvertError, match="missing chunk file"):
+        cv.load_converted(ck, spec)
+    with pytest.raises(cv.ConvertError, match="missing manifest"):
+        cv.load_converted(str(tmp_path / "empty"), spec)
+
+
+# ---------------------------------------------------------------------------
+# Engine round-trip golden (subprocess: own device count per case)
+# ---------------------------------------------------------------------------
+
+def _run_case(case):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, os.path.join(HERE, "convert_check.py"),
+         *[str(a) for a in case]],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nERR:\n{out.stderr}"
+    assert "MATCH" in out.stdout
+
+
+# pp, tp, v, steps — (2, 2, 2) is the acceptance-criteria cell
+@pytest.mark.parametrize("case", [(2, 1, 2, 3), (2, 2, 2, 3)],
+                         ids=lambda c: "-".join(str(x) for x in c))
+def test_converted_checkpoint_serves_bit_exact(case):
+    _run_case(case)

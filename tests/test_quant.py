@@ -1,0 +1,351 @@
+"""Quantized weight / KV storage: leaf codecs, tree transform, kernel
+parity, engine greedy-match, and the planner's pricing of it all."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import quant
+from repro.core.partitioner import plan_search
+from repro.core.profiler import TPU_V5E
+from repro.kernels import ops, ref
+from repro.models import spec as spec_lib
+from repro.parallel.mesh import ParallelismPlan
+
+KEY = jax.random.key(0)
+
+
+def _attn_spec(n_layers=8, window=0):
+    blocks = tuple(spec_lib.BlockSpec(mixer="attn", ffn="dense",
+                                      window=window)
+                   for _ in range(n_layers))
+    return spec_lib.ModelSpec(
+        name="quant-test", d_model=64, n_layers=n_layers, n_heads=4,
+        n_kv=2, d_head=16, d_ff=128, vocab=256, blocks=blocks,
+        norm="rmsnorm", act="silu")
+
+
+def _serve_plan(pp=2, r=8, schedule="serve_1f"):
+    return ParallelismPlan(pp=pp, tp=1, microbatches=r,
+                           decode_microbatches=r, schedule=schedule)
+
+
+# ---------------------------------------------------------------------------
+# Leaf codecs
+# ---------------------------------------------------------------------------
+
+def test_int8_quantize_shape_and_error_bound():
+    w = jax.random.normal(KEY, (32, 48), jnp.float32)
+    q = quant.quantize(w, "int8", axis=0)
+    assert q["q"].dtype == jnp.int8 and q["q"].shape == w.shape
+    assert q["scale"].shape == (1, 48)        # keepdims on the reduced axis
+    deq = np.asarray(quant.dequantize(q))
+    # round-to-nearest: per-element error <= scale/2 of its channel
+    bound = 0.5 * np.asarray(q["scale"]) + 1e-6
+    assert (np.abs(np.asarray(w) - deq) <= bound).all()
+
+
+def test_int8_zero_channel_dequantizes_to_exact_zero():
+    w = jnp.zeros((8, 4), jnp.float32)
+    q = quant.quantize(w, "int8", axis=0)
+    np.testing.assert_array_equal(np.asarray(quant.dequantize(q)), 0.0)
+
+
+def test_fp8_quantize_roundtrip_tolerance():
+    w = jax.random.normal(jax.random.key(1), (64, 32), jnp.float32)
+    q = quant.quantize(w, "fp8", axis=0)
+    assert q["q"].dtype == jnp.float8_e4m3fn
+    deq = np.asarray(quant.dequantize(q))
+    assert np.isfinite(deq).all()
+    # e4m3: 3 mantissa bits -> <= 2^-4 relative error on normal values
+    np.testing.assert_allclose(deq, np.asarray(w), rtol=0.08, atol=1e-3)
+
+
+def test_maybe_dequant_passthrough_and_dtype():
+    w = jax.random.normal(KEY, (4, 4), jnp.float32)
+    assert quant.maybe_dequant(w) is w
+    assert quant.maybe_dequant(w, jnp.bfloat16).dtype == jnp.bfloat16
+    q = quant.quantize(w, "int8", axis=1)
+    assert quant.maybe_dequant(q, jnp.bfloat16).dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# Whole-tree transform (params + pspec twin in lockstep)
+# ---------------------------------------------------------------------------
+
+def test_quantize_params_structure_and_pspecs():
+    stages = {
+        "layer_0": {
+            "norm1": {"scale": jnp.ones((2, 64))},
+            "attn": {"wq": jax.random.normal(KEY, (2, 64, 4, 16))},
+            "moe": {"router": jax.random.normal(KEY, (2, 64, 8)),
+                    "w1": jax.random.normal(KEY, (2, 8, 64, 32))},
+        }}
+    pspecs = {
+        "layer_0": {
+            "norm1": {"scale": P("stage", None)},
+            "attn": {"wq": P("stage", None, "model", None)},
+            "moe": {"router": P("stage", None, None),
+                    "w1": P("stage", "model", None, None)},
+        }}
+    params = {"stages": stages,
+              "embed": jax.random.normal(KEY, (256, 64)),
+              "head": jax.random.normal(KEY, (64, 256))}
+    full = {"stages": pspecs, "embed": P(None, None),
+            "head": P(None, "model")}
+    qp, qs = quant.quantize_params(params, full, "int8")
+    l0, s0 = qp["stages"]["layer_0"], qs["stages"]["layer_0"]
+    # norms and routers pass through untouched
+    assert not quant.is_quantized(l0["norm1"]["scale"])
+    assert not quant.is_quantized(l0["moe"]["router"])
+    assert s0["norm1"]["scale"] == P("stage", None)
+    # matmuls quantize along their contraction axis (stage-stacked)
+    assert quant.is_quantized(l0["attn"]["wq"])
+    assert l0["attn"]["wq"]["scale"].shape == (2, 1, 4, 16)
+    assert quant.is_quantized(l0["moe"]["w1"])
+    assert l0["moe"]["w1"]["scale"].shape == (2, 8, 1, 32)
+    # the scale pspec zeroes the reduced axis, keeps the rest
+    assert s0["attn"]["wq"]["scale"] == P("stage", None, "model", None)
+    assert s0["moe"]["w1"]["scale"] == P("stage", "model", None, None)
+    # shared leaves: embed per vocab row, head per vocab column
+    assert qp["embed"]["scale"].shape == (256, 1)
+    assert qp["head"]["scale"].shape == (1, 256)
+    assert qs["head"]["scale"] == P(None, "model")
+    # fp32/bf16/None are identity
+    same, _ = quant.quantize_params(params, full, "bf16")
+    assert same["stages"] is not None
+    assert not quant.is_quantized(same["stages"]["layer_0"]["attn"]["wq"])
+
+
+def test_quantize_params_rejects_unknown_dtype():
+    with pytest.raises(ValueError, match="unknown weight dtype"):
+        quant.quantize_params({"stages": {}}, None, "int4")
+
+
+def test_quantize_params_works_under_eval_shape():
+    params = {"stages": {"layer_0": {"attn": {
+        "wq": jnp.zeros((2, 64, 4, 16))}}},
+        "embed": jnp.zeros((256, 64)), "head": jnp.zeros((64, 256))}
+    shapes = jax.eval_shape(
+        lambda p: quant.quantize_params(p, None, "int8")[0], params)
+    wq = shapes["stages"]["layer_0"]["attn"]["wq"]
+    assert wq["q"].dtype == jnp.int8
+    assert wq["scale"].shape == (2, 1, 4, 16)
+
+
+# ---------------------------------------------------------------------------
+# int8 KV pages: write-side helpers + kernel/oracle parity
+# ---------------------------------------------------------------------------
+
+def test_kv_page_batched_roundtrip_and_zero_pages():
+    pages = jax.random.normal(jax.random.key(2), (3, 16, 2, 8), jnp.float32)
+    q, s = quant.quantize_kv_page_batched(pages)
+    assert q.dtype == jnp.int8 and q.shape == pages.shape
+    assert s.shape == (3, 2)
+    deq = np.asarray(quant.dequantize_kv_pages(q, s))
+    bound = 0.5 * np.asarray(s)[:, None, :, None] + 1e-6
+    assert (np.abs(np.asarray(pages) - deq) <= bound).all()
+    # all-zero pages survive exactly (scale falls back to 1/127)
+    qz, sz = quant.quantize_kv_page_batched(jnp.zeros((2, 4, 2, 8)))
+    np.testing.assert_array_equal(
+        np.asarray(quant.dequantize_kv_pages(qz, sz)), 0.0)
+
+
+def _paged_case(b, h, kv, dh, page, n_pages, seed):
+    rng = np.random.default_rng(seed)
+    n_pool = b * n_pages + 3
+    ks = jax.random.split(jax.random.fold_in(KEY, seed), 3)
+    q = jax.random.normal(ks[0], (b, h, dh), jnp.float32)
+    k_pages = jax.random.normal(ks[1], (n_pool, page, kv, dh), jnp.float32)
+    v_pages = jax.random.normal(ks[2], (n_pool, page, kv, dh), jnp.float32)
+    lengths = rng.integers(1, n_pages * page + 1, b).astype(np.int32)
+    perm = rng.permutation(n_pool)
+    tables = np.full((b, n_pages), -1, np.int32)
+    used = 0
+    for r in range(b):
+        need = -(-int(lengths[r]) // page)
+        tables[r, :need] = perm[used:used + need]
+        used += need
+    return q, k_pages, v_pages, jnp.asarray(tables), jnp.asarray(lengths)
+
+
+@pytest.mark.parametrize("b,h,kv,dh,page,n_pages,window", [
+    (2, 4, 2, 64, 16, 8, -1),
+    (2, 8, 2, 64, 64, 4, -1),        # big pages, 4:1 GQA
+    (2, 4, 2, 64, 16, 8, 20),        # windowed: dead-page skipping
+])
+def test_paged_attention_int8_kernel_matches_ref(b, h, kv, dh, page,
+                                                 n_pages, window):
+    q, kp, vp, tables, lengths = _paged_case(
+        b, h, kv, dh, page, n_pages, seed=b + h + page)
+    kq, ks = quant.quantize_kv_page_batched(kp)
+    vq, vs = quant.quantize_kv_page_batched(vp)
+    got = ops.paged_attention(q, kq, vq, tables, lengths, window=window,
+                              k_scale=ks, v_scale=vs)
+    want = ref.paged_attention_ref(q, kq, vq, tables, lengths,
+                                   window=window, k_scale=ks, v_scale=vs)
+    # kernel vs oracle on the SAME int8 pools: f32 noise only
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-3)
+    # and both track the unquantized attention within int8 rounding
+    full = ref.paged_attention_ref(q, kp, vp, tables, lengths,
+                                   window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                               atol=0.05, rtol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# Engine: quantized decode tracks the fp32 greedy continuation
+# ---------------------------------------------------------------------------
+
+def _session(weight_dtype=None, kv_dtype=None, page_size=0, n_slots=4,
+             prefill=8, cache=64):
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel.mesh import split_model_axis
+    from repro.serving.engine import build_serving
+
+    spec = _attn_spec(n_layers=2)
+    mesh = make_host_mesh(data=1, model=1)
+    dmesh = split_model_axis(mesh, 1, 1)
+    sess = build_serving(spec, _serve_plan(pp=1, r=n_slots), dmesh,
+                         cache_len=cache, global_batch=n_slots,
+                         prefill_len=prefill, compute_dtype=jnp.float32,
+                         page_size=page_size, weight_dtype=weight_dtype,
+                         kv_dtype=kv_dtype)
+    sess.start(jax.random.key(0))
+    return sess
+
+
+def _greedy_run(sess, steps=8):
+    tokens = jax.random.randint(jax.random.key(3), (4, 8), 1, 256,
+                                jnp.int32)
+    tk = jnp.asarray(np.asarray(tokens).reshape(
+        sess.prefill_specs["tokens"].shape))
+    toks = [np.asarray(sess.prefill({"tokens": tk}))]
+    for _ in range(steps):
+        toks.append(np.asarray(sess.decode(jnp.asarray(toks[-1]))))
+    return np.stack(toks)
+
+
+@pytest.mark.parametrize("weight_dtype,kv_dtype,page_size", [
+    ("int8", None, 0),               # int8 weights, dense fp32 cache
+    (None, "int8", 16),              # fp32 weights, paged int8 KV
+    ("int8", "int8", 16),            # both
+])
+def test_quantized_engine_tracks_fp32_greedy(weight_dtype, kv_dtype,
+                                             page_size):
+    """Same init key -> same underlying weights; the quantized session
+    must emit (mostly) the same greedy continuation as the fp32 one."""
+    want = _greedy_run(_session())
+    got = _greedy_run(_session(weight_dtype=weight_dtype,
+                               kv_dtype=kv_dtype, page_size=page_size))
+    match = float(np.mean(got == want))
+    assert match >= 0.75, f"greedy match rate {match} < 0.75 for " \
+        f"w={weight_dtype} kv={kv_dtype}"
+
+
+def test_build_serving_int8_kv_requires_paged_cache():
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel.mesh import split_model_axis
+    from repro.serving.engine import build_serving
+
+    mesh = make_host_mesh(data=1, model=1)
+    dmesh = split_model_axis(mesh, 1, 1)
+    with pytest.raises(ValueError, match="paged"):
+        build_serving(_attn_spec(n_layers=2), _serve_plan(pp=1, r=2),
+                      dmesh, cache_len=64, global_batch=2,
+                      kv_dtype="int8")
+    with pytest.raises(ValueError, match="weight_dtype"):
+        build_serving(_attn_spec(n_layers=2), _serve_plan(pp=1, r=2),
+                      dmesh, cache_len=64, global_batch=2,
+                      weight_dtype="int4")
+    with pytest.raises(ValueError, match="kv_dtype"):
+        build_serving(_attn_spec(n_layers=2), _serve_plan(pp=1, r=2),
+                      dmesh, cache_len=64, global_batch=2,
+                      kv_dtype="fp8")
+
+
+# ---------------------------------------------------------------------------
+# Planner pricing
+# ---------------------------------------------------------------------------
+
+def test_weight_byte_cost_ratios():
+    spec = _attn_spec()
+    assert quant.weight_byte_cost(None, spec, TPU_V5E) == \
+        TPU_V5E.param_bytes
+    fp32 = quant.weight_byte_cost("fp32", spec, TPU_V5E)
+    int8 = quant.weight_byte_cost("int8", spec, TPU_V5E)
+    assert fp32 / int8 >= 1.9          # the BENCH_quant gate's floor
+    # scale overhead is priced: strictly more than the raw payload byte
+    assert 1.0 < int8 < 1.5
+    assert quant.kv_byte_cost("int8", spec, page_size=64) < \
+        quant.kv_byte_cost("fp32", spec) / 3
+
+
+def test_memory_model_prices_quantized_serving():
+    spec, plan = _attn_spec(), _serve_plan()
+    sched = plan.make_schedule()
+    kw = dict(microbatch_tokens=32, data_replicas=1, cache_len=4096,
+              global_batch=32)
+    mm32 = sched.memory_model(spec, plan, TPU_V5E, weight_dtype="fp32",
+                              kv_dtype="fp32", **kw)
+    mm8 = sched.memory_model(spec, plan, TPU_V5E, weight_dtype="int8",
+                             kv_dtype="int8", page_size=64, **kw)
+    assert mm32.weight_bytes / mm8.weight_bytes >= 1.9
+    assert mm8.cache_bytes < mm32.cache_bytes
+    # default (None) keeps the pre-quantization pricing exactly
+    mm_def = sched.memory_model(spec, plan, TPU_V5E, **kw)
+    mm_none = sched.memory_model(spec, plan, TPU_V5E, weight_dtype=None,
+                                 kv_dtype=None, **kw)
+    assert mm_def.weight_bytes == mm_none.weight_bytes
+    assert mm_def.cache_bytes == mm_none.cache_bytes
+
+
+def test_plan_search_rejects_quantized_training():
+    with pytest.raises(AssertionError, match="full-precision"):
+        plan_search(_attn_spec(), _serve_plan(), 2, TPU_V5E,
+                    minibatch_tokens=32, workload="train",
+                    weight_dtype="int8")
+
+
+def test_plan_search_int8_unlocks_infeasible_decode_plan():
+    """The acceptance golden: a budget the fp32 weights+cache blow but
+    int8 weights + paged int8 KV fit — quantization changes the
+    feasible set, and the choice records what unlocked it."""
+    spec = _attn_spec(n_layers=8)
+    plan = _serve_plan(pp=2, r=32)
+    sched = plan.make_schedule()
+    kw = dict(microbatch_tokens=32, data_replicas=1, cache_len=4096,
+              global_batch=32)
+    mm32p = sched.memory_model(spec, plan, TPU_V5E, weight_dtype="fp32",
+                               kv_dtype="fp32", page_size=64,
+                               kv_occupancy=0.25, **kw)
+    mm8 = sched.memory_model(spec, plan, TPU_V5E, weight_dtype="int8",
+                             kv_dtype="int8", page_size=64,
+                             kv_occupancy=0.25, **kw)
+    budget = 0.5 * (mm32p.total_bytes + mm8.total_bytes)
+    assert mm8.fits(budget) and not mm32p.fits(budget)
+    hw = dataclasses.replace(TPU_V5E, hbm_bytes=budget)
+    skw = dict(minibatch_tokens=32, workload="decode", cache_len=4096,
+               global_batch=32, return_all=True)
+    fp32_dense = plan_search(spec, plan, 2, hw, weight_dtype="fp32",
+                             kv_dtype="fp32", **skw)
+    fp32_paged = plan_search(spec, plan, 2, hw, weight_dtype="fp32",
+                             kv_dtype="fp32", page_size=64,
+                             occupancy=0.25, **skw)
+    int8 = plan_search(spec, plan, 2, hw, weight_dtype="int8",
+                       kv_dtype="int8", page_size=64, occupancy=0.25,
+                       **skw)
+
+    def feas(cands):
+        return [c.feasible for c in cands if c.plan.pp == 2
+                and c.plan.schedule == "serve_1f"]
+    assert not any(feas(fp32_dense)), "fp32 dense pp=2 should blow it"
+    assert not any(feas(fp32_paged)), "fp32 paged pp=2 should blow it"
+    assert all(feas(int8)), "int8 pp=2 should fit"
+    best = [c for c in int8 if c.feasible][0]
+    assert best.weight_dtype == "int8" and best.kv_dtype == "int8"
+    assert " w=int8" in best.describe() and " kv=int8" in best.describe()
