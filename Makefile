@@ -2,7 +2,7 @@
 .PHONY: tier1 tier1-full coverage bench bench-serving bench-batching \
 	bench-paging bench-buckets bench-spec bench-quant bench-check \
 	plan-smoke serve-smoke batch-smoke page-smoke spec-smoke \
-	convert-smoke docs-check
+	convert-smoke obs-smoke docs-check
 
 tier1:
 	scripts/tier1.sh
@@ -54,6 +54,9 @@ spec-smoke:
 
 convert-smoke:
 	python scripts/convert_smoke.py
+
+obs-smoke:
+	python scripts/obs_smoke.py
 
 docs-check:
 	python scripts/docs_check.py

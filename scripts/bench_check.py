@@ -112,6 +112,59 @@ def _bad_numbers(row: dict, prefix=""):
     return bad
 
 
+# metrics-registry snapshots (repro.obs.metrics.Registry.snapshot /
+# launch --metrics-out / METRICS_*.json): one object, not a row list
+_METRIC_ROW = ("name", "labels", "value")
+_HIST_ROW = ("name", "labels", "count", "sum", "mean", "min", "max",
+             "p50", "p99")
+
+
+def check_metrics_snapshot(snap, fname: str = "metrics"):
+    """Validate one Registry.snapshot() object; returns failure strings.
+
+    Shape: ``{"kind": "metrics", "counters": [...], "gauges": [...],
+    "histograms": [...]}``; counter/gauge rows carry
+    ``(name, labels, value)``, histogram rows the summary stats.
+    ``None`` stats (empty series) are legal; NaN/Infinity are not —
+    same finiteness rule as the benchmark artifacts.
+    """
+    failures = []
+    if not isinstance(snap, dict) or snap.get("kind") != "metrics":
+        return [f"{fname}: expected a kind='metrics' object, got "
+                f"{type(snap).__name__}"]
+    for section, required in (("counters", _METRIC_ROW),
+                              ("gauges", _METRIC_ROW),
+                              ("histograms", _HIST_ROW)):
+        rows = snap.get(section)
+        if not isinstance(rows, list):
+            failures.append(f"{fname}: missing list section {section!r}")
+            continue
+        for i, row in enumerate(rows):
+            where = f"{fname}.{section}[{i}]"
+            if not isinstance(row, dict):
+                failures.append(f"{where}: row is "
+                                f"{type(row).__name__}, not an object")
+                continue
+            missing = [k for k in required if k not in row]
+            if missing:
+                failures.append(f"{where}: missing keys {missing}")
+            if not isinstance(row.get("labels", {}), dict):
+                failures.append(f"{where}: labels must be an object")
+            failures.extend(f"{where}: non-finite value {b}"
+                            for b in _bad_numbers(row))
+    return failures
+
+
+def check_metrics_file(path: str):
+    fname = os.path.basename(path)
+    try:
+        with open(path) as f:
+            snap = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{fname}: does not parse: {e}"]
+    return check_metrics_snapshot(snap, fname)
+
+
 def check_artifact(path: str):
     fname = os.path.basename(path)
     failures = []
@@ -147,6 +200,7 @@ def check_artifact(path: str):
 def main() -> int:
     paths = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
     assert paths, "bench-check found no BENCH_*.json artifacts"
+    metric_paths = sorted(glob.glob(os.path.join(ROOT, "METRICS_*.json")))
     failures = []
     n_rows = 0
     for p in paths:
@@ -156,12 +210,16 @@ def main() -> int:
                 n_rows += len(json.load(f))
         except Exception:
             pass
+    for p in metric_paths:
+        failures.extend(check_metrics_file(p))
     if failures:
         print("BENCH CHECK FAILED:")
         for f in failures:
             print(f"  - {f}")
         return 1
-    print(f"bench check OK ({len(paths)} artifacts, {n_rows} rows)")
+    print(f"bench check OK ({len(paths)} artifacts, {n_rows} rows"
+          + (f"; {len(metric_paths)} metrics snapshots"
+             if metric_paths else "") + ")")
     return 0
 
 

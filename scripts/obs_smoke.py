@@ -1,0 +1,187 @@
+#!/usr/bin/env python
+"""obs-smoke: the observability subsystem's tier-1 gate (numpy-only).
+
+Drives ``repro.obs`` end to end on the analytic clock — no jax, no
+devices, sub-second — and asserts the invariants the subsystem is built
+on:
+
+  * the emitted Chrome trace-event JSON is schema-valid (only M/X
+    events, per-stage tid tracks named by metadata, spans carrying
+    (kind, round, tick, stage, phase[, bucket, microbatch, chunk])
+    args, ts monotone per track, ticks monotone per round);
+  * per-stage non-bubble span counts equal the schedule table's
+    non-bubble cells, full-R and for every bucketed variant;
+  * measured-vs-predicted reconciliation has its fixed point: rounds
+    timed on a modeled clock that charges exactly
+    ``weighted_round_time`` seconds reconcile at round ratio 1.0, and
+    the span-measured bubble fraction equals the table's weighted
+    bubble prediction;
+  * bucketed rounds tag their spans with the ``pick_bucket`` choice and
+    count into ``bucket_rounds_total`` consistently with the trace;
+  * the registry snapshot passes
+    scripts/bench_check.py::check_metrics_snapshot and survives a JSON
+    round-trip (no NaN leaks).
+
+Wired into scripts/tier1.sh and ``make obs-smoke``.
+"""
+import json
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, ROOT)                        # scripts.bench_check
+sys.path.insert(0, os.path.join(ROOT, "src"))   # repro.*
+
+from repro.core.schedule import (F_MB, SCHEDULES, bucket_lattice,  # noqa: E402
+                                 pick_bucket, weighted_round_time)
+from repro.obs import Observability, reconcile  # noqa: E402
+from scripts.bench_check import check_metrics_snapshot  # noqa: E402
+
+S, R = 2, 4
+TF = np.array([1.0e-3, 2.0e-3])    # per-stage forward seconds (stage 1
+#                                    deliberately 2x: non-trivial bubble)
+
+
+class ModeledClock:
+    """Advancing analytic clock: the engine 'runs' by adding seconds."""
+
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self):
+        return self.now
+
+    def advance(self, dt):
+        self.now += dt
+
+
+def nonbubble_cells(sched):
+    """Per-stage non-bubble forward cells of one table walk."""
+    return (np.asarray(sched.tables().fwd)[:, :, F_MB] >= 0).sum(axis=0)
+
+
+def run_rounds(obs, clock, sched, n_rounds, *, bucket=None):
+    """Model ``n_rounds`` decode rounds, each costing exactly the
+    weighted_round_time prediction on the modeled clock."""
+    cost, _ = weighted_round_time(sched, TF, 0.0)
+    for _ in range(n_rounds):
+        t0 = clock()
+        clock.advance(cost)
+        obs.on_round("decode", sched, t0, clock(), bucket=bucket,
+                     t_fwd=TF, t_bwd=0.0)
+
+
+def check_trace_schema(trace):
+    """Structural validity of the Chrome trace-event output."""
+    doc = trace.to_json()
+    doc = json.loads(json.dumps(doc))           # must survive round-trip
+    events = doc["traceEvents"]
+    assert events, "trace has no events"
+    named = set()
+    last_ts = {}
+    last_tick = {}
+    for e in events:
+        assert e["ph"] in ("M", "X"), e
+        if e["ph"] == "M":
+            if e["name"] == "thread_name":
+                named.add(e["tid"])
+            continue
+        tid, args = e["tid"], e["args"]
+        assert tid in named, f"span on unnamed track {tid}"
+        assert e["ts"] >= 0 and e["dur"] >= 0, e
+        assert args["stage"] == tid, (
+            f"span for stage {args['stage']} landed on track {tid}")
+        assert args["phase"] in ("F", "B", "bubble"), e
+        if args["phase"] != "bubble":
+            assert args["microbatch"] >= 0 and args["chunk"] >= 0, e
+        # ts monotone per track; ticks monotone within a round per track
+        assert e["ts"] >= last_ts.get(tid, 0.0) - 1e-9, (
+            f"track {tid} time went backwards at {e}")
+        last_ts[tid] = e["ts"]
+        key = (tid, args["kind"], args["round"])
+        assert args["tick"] >= last_tick.get(key, 0), (
+            f"ticks not monotone within round on track {tid}: {e}")
+        last_tick[key] = args["tick"]
+
+
+def main():
+    # ---- full-R rounds: span counts + exact reconciliation fixed point
+    sched = SCHEDULES["serve_1f"](S, R)
+    sched.validate()
+    clock = ModeledClock()
+    obs = Observability(trace=True, clock=clock)
+    n_rounds = 5
+    run_rounds(obs, clock, sched, n_rounds)
+    check_trace_schema(obs.trace)
+
+    counts = obs.trace.span_counts("decode")
+    want = nonbubble_cells(sched) * n_rounds
+    assert [counts.get(s, 0) for s in range(S)] == want.tolist(), (
+        f"per-stage span counts {counts} != table non-bubble cells "
+        f"{want.tolist()}")
+
+    rep = reconcile(sched, trace=obs.trace, registry=obs.registry,
+                    kind="decode", t_fwd=TF)
+    assert rep.rounds == n_rounds, rep
+    assert abs(rep.round_ratio - 1.0) < 1e-9, (
+        f"analytic round ratio should be exactly 1.0, got "
+        f"{rep.round_ratio}")
+    assert abs(rep.measured_bubble - rep.predicted_bubble) < 1e-9, (
+        f"span-measured bubble {rep.measured_bubble} != weighted "
+        f"prediction {rep.predicted_bubble}")
+    assert rep.predicted_bubble > 0, "smoke config should have a bubble"
+    print(f"obs-smoke: full-R {rep}")
+
+    # ---- bucketed rounds: pick_bucket tags agree between trace,
+    #      bucket log, and the registry's bucket_rounds_total series
+    lattice = bucket_lattice(R)
+    liveness = [4, 3, 2, 1, 2, 4]
+    picked = [pick_bucket(n, lattice) for n in liveness]
+    base = len(obs.trace.rounds)
+    for n_live, b in zip(liveness, picked):
+        sb = sched.bucketed(b)
+        run_rounds(obs, clock, sb, 1, bucket=b)
+        rec = obs.trace.rounds[-1]
+        assert rec.bucket == b and rec.n_spans == nonbubble_cells(sb).sum()
+    check_trace_schema(obs.trace)
+    traced = [r.bucket for r in obs.trace.rounds[base:]]
+    assert traced == picked, (traced, picked)
+    ctr = obs.registry.counter("bucket_rounds_total")
+    for b in set(picked):
+        assert ctr.value(kind="decode", bucket=b) == picked.count(b), (
+            b, ctr.value(kind="decode", bucket=b))
+    # bucket= span tags match the picked bucket per round
+    by_round = {}
+    for e in obs.trace.to_json()["traceEvents"]:
+        if e["ph"] == "X" and "bucket" in e["args"]:
+            by_round.setdefault(e["args"]["round"], set()).add(
+                e["args"]["bucket"])
+        assert "bucket" not in e.get("args", {}) or e["ph"] == "X"
+    assert all(len(v) == 1 for v in by_round.values())
+    assert [next(iter(by_round[base + i])) for i in
+            range(len(picked))] == picked
+    print(f"obs-smoke: bucketed rounds {picked} traced + counted OK")
+
+    # ---- artifacts: trace file + metrics snapshot schema
+    with tempfile.TemporaryDirectory() as tmp:
+        tr, mt = (os.path.join(tmp, "trace.json"),
+                  os.path.join(tmp, "metrics.json"))
+        obs.save(trace_out=tr, metrics_out=mt)
+        with open(tr) as f:
+            assert json.load(f)["traceEvents"]
+        with open(mt) as f:
+            snap = json.load(f)
+        failures = check_metrics_snapshot(snap, "metrics.json")
+        assert not failures, failures
+    n_hist = len(snap["histograms"])
+    print(f"obs-smoke OK: {len(obs.trace.rounds)} rounds, "
+          f"{len(obs.trace.events)} trace events, "
+          f"{len(snap['counters'])} counter / {n_hist} histogram series")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

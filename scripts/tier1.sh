@@ -23,7 +23,12 @@
 # the convert smoke (scripts/convert_smoke.py): synthetic HF fixture ->
 # storage-chunk conversion at (pp=2, v=2) -> engine load_params ->
 # greedy decode bit-identical to the direct in-memory load, plus the
-# int8-weight/int8-KV engine tracking it — the docs-check gate
+# int8-weight/int8-KV engine tracking it —
+# the obs smoke (scripts/obs_smoke.py): the observability subsystem on
+# the analytic clock — trace JSON schema-valid, per-stage span counts
+# equal the table's non-bubble cells, measured-vs-predicted round ratio
+# exactly 1.0, bucketed span tags matching pick_bucket, metrics
+# snapshot schema-clean — the docs-check gate
 # (scripts/docs_check.py): every `path.py::symbol` reference in
 # docs/*.md + README.md must resolve against the source tree, so
 # renamed symbols fail fast — and the bench-check gate
@@ -59,6 +64,7 @@ python scripts/batch_smoke.py
 python scripts/page_smoke.py
 python scripts/spec_smoke.py
 python scripts/convert_smoke.py
+python scripts/obs_smoke.py
 python scripts/docs_check.py
 python scripts/bench_check.py
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest "${ARGS[@]}" "$@"

@@ -106,6 +106,10 @@ class PipelineBundle:
     batch_shapes: Dict[str, jax.ShapeDtypeStruct]
     seq_len: int
     microbatch_size: int
+    # observability hook (repro.obs.Observability or None = off): the
+    # driver reports one on_round("train", sched, ...) per executed
+    # round against this bundle's schedule table
+    obs: Any = None
 
     def state_shardings(self):
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
@@ -124,7 +128,7 @@ class PipelineBundle:
 def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                    mesh: Mesh, *, seq_len: int, global_batch: int,
                    optimizer, aux_weight: float = 0.01,
-                   compute_dtype=jnp.bfloat16) -> PipelineBundle:
+                   compute_dtype=jnp.bfloat16, obs=None) -> PipelineBundle:
     """Construct the pipelined train step for one (arch, shape, mesh)."""
     S = plan.pp
     R = plan.microbatches
@@ -655,4 +659,5 @@ def build_pipeline(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
         spec=spec, plan=plan, mesh=mesh, statics=statics, sched=sched,
         train_step=train_step, init_state=init_state,
         state_pspecs=state_pspecs, batch_pspecs=batch_pspecs,
-        batch_shapes=batch_shapes, seq_len=seq_len, microbatch_size=mb)
+        batch_shapes=batch_shapes, seq_len=seq_len, microbatch_size=mb,
+        obs=obs)

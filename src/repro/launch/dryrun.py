@@ -19,7 +19,6 @@ Usage:
 import argparse          # noqa: E402
 import json              # noqa: E402
 import sys               # noqa: E402
-import time              # noqa: E402
 import traceback         # noqa: E402
 
 import jax               # noqa: E402
@@ -29,6 +28,7 @@ from repro.core import profiler as prof           # noqa: E402
 from repro.launch import roofline as RL           # noqa: E402
 from repro.launch.cell import build_cell          # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.obs import Observability               # noqa: E402
 
 
 def _data_replicas(mesh, plan) -> int:
@@ -39,9 +39,12 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
              plan=None, note: str = "", verbose: bool = True,
              do_plan_search: bool = False, hw=prof.TPU_V5E,
              page_size: int = 0, spec_k=None,
-             weight_dtype=None, kv_dtype=None):
+             weight_dtype=None, kv_dtype=None, obs=None):
+    if obs is None:
+        obs = Observability()
     mesh_name = "2x16x16" if multi_pod else "16x16"
-    t0 = time.time()
+    t_low = obs.timer("launch_phase_seconds", phase="lower")
+    t_low.__enter__()
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
     if do_plan_search:
@@ -79,9 +82,11 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
     cell = build_cell(arch, shape, mesh, plan=plan, page_size=page_size,
                       spec_k=spec_k)
     lowered = cell.lower()
-    t_lower = time.time() - t0
-    compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+    t_low.__exit__(None, None, None)
+    t_lower = t_low.elapsed
+    with obs.timer("launch_phase_seconds", phase="compile") as t_comp:
+        compiled = lowered.compile()
+    t_compile = t_comp.elapsed
 
     mem = compiled.memory_analysis()
     print(f"[{arch} × {shape} @ {mesh_name}] memory_analysis:")

@@ -32,7 +32,6 @@ CPU example:
       --host-devices 2 --batch 4 --arrivals 0,0,2,5,9
 """
 import argparse        # noqa: E402
-import time            # noqa: E402
 
 import jax             # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -40,6 +39,7 @@ import numpy as np     # noqa: E402
 
 from repro import configs                          # noqa: E402
 from repro.launch.mesh import make_host_mesh, make_production_mesh  # noqa: E402
+from repro.obs import Observability, reconcile     # noqa: E402
 from repro.parallel.mesh import split_model_axis   # noqa: E402
 from repro.serving.engine import build_serving     # noqa: E402
 
@@ -130,18 +130,20 @@ def serve_arrivals(session, spec, args):
     if args.ckpt:
         load_checkpoint(session, spec, args)
     server = ContinuousBatchingSession(session, policy=args.policy)
-    t0 = time.time()
-    report = server.run(trace)
-    dt = time.time() - t0
+    obs = session.obs
+    with obs.timer("launch_phase_seconds", phase="run") as t:
+        report = server.run(trace)
+    dt = t.elapsed
     s = report.summary()
     print(f"{args.policy} batching: {s['requests']} requests over "
           f"{session.sched.n_microbatches} slots, {s['steps']} steps "
           f"({s['decode_rounds']} decode + {s['admit_rounds']} admit "
           f"rounds) in {dt:.2f}s")
+    fmt_ms = lambda v: "n/a" if v is None else f"{v * 1e3:.1f} ms"  # noqa: E731
     print(f"  goodput {s['goodput_tokens_per_s']:.1f} tok/s; per-token "
-          f"latency p50 {s['p50_per_token_latency_s'] * 1e3:.1f} ms / "
-          f"p99 {s['p99_per_token_latency_s'] * 1e3:.1f} ms; mean TTFT "
-          f"{s['mean_ttft_s'] * 1e3:.1f} ms")
+          f"latency p50 {fmt_ms(s['p50_per_token_latency_s'])} / "
+          f"p99 {fmt_ms(s['p99_per_token_latency_s'])}; mean TTFT "
+          f"{fmt_ms(s['mean_ttft_s'])}")
     if s.get("spec_rounds"):
         print(f"  speculative: {s['spec_rounds']} verify rounds, "
               f"acceptance {s['acceptance_rate']:.2f}, "
@@ -208,6 +210,14 @@ def main(argv=None):
                     help="slot scheduler policy under --arrivals")
     ap.add_argument("--seed", type=int, default=0,
                     help="prompt + poisson-trace seed under --arrivals")
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="write a Chrome trace-event JSON of every "
+                         "executed pipeline round (one track per stage; "
+                         "open in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    help="write the metrics-registry snapshot JSON "
+                         "(counters/gauges/histograms; schema-checked by "
+                         "scripts/bench_check.py)")
     args = ap.parse_args(argv)
     if args.virtual_stages and args.virtual_stages > 1 \
             and args.schedule not in (None, "serve_interleaved",
@@ -247,6 +257,7 @@ def main(argv=None):
     if spec.frontend == "vision":
         prefill = max(prefill, spec.n_patches + 8)
     dmesh = split_model_axis(mesh, plan.pp, plan.tp)
+    obs = Observability(trace=bool(args.trace_out))
     session = build_serving(spec, plan, dmesh, cache_len=cache_len,
                             global_batch=batch, prefill_len=prefill,
                             compute_dtype=(jnp.float32 if args.smoke
@@ -255,7 +266,8 @@ def main(argv=None):
                             buckets=args.buckets,
                             spec_k=args.spec_k,
                             weight_dtype=args.weight_dtype,
-                            kv_dtype=args.kv_dtype)
+                            kv_dtype=args.kv_dtype,
+                            obs=obs)
     print(f"serve schedule: {session.sched.name} "
           f"(S={session.sched.n_stages} R={session.sched.n_microbatches}"
           f"{f' v={session.sched.virtual_stages}' if session.sched.virtual_stages > 1 else ''}"
@@ -274,7 +286,8 @@ def main(argv=None):
               f"kv={args.kv_dtype or 'compute'}")
 
     if args.arrivals:
-        return serve_arrivals(session, spec, args)
+        serve_arrivals(session, spec, args)
+        return _finish_obs(obs, session, args)
 
     session.start(jax.random.key(0))
     if args.ckpt:
@@ -285,32 +298,31 @@ def main(argv=None):
         if v.dtype == jnp.int32 else
         rng.standard_normal(v.shape).astype(np.float32) * 0.02)
         for k, v in session.prefill_specs.items()}
-    t0 = time.time()
-    nxt = session.prefill(batch_in)
-    jax.block_until_ready(nxt)
-    t_pre = time.time() - t0
-    print(f"prefill[{prefill}] batch={batch}: {t_pre:.2f}s "
+    with obs.timer("launch_phase_seconds", phase="prefill") as tp:
+        nxt = session.prefill(batch_in)
+        jax.block_until_ready(nxt)
+    print(f"prefill[{prefill}] batch={batch}: {tp.elapsed:.2f}s "
           f"first tokens {np.asarray(nxt)[:8]}")
 
-    t0 = time.time()
     if getattr(session.sched, "is_speculative", False):
         # draft-verify rounds: each commits 1..spec_k+1 tokens per slot
         last = np.asarray(nxt, np.int32)
         rows_g = last.shape[0] // session.sched.n_microbatches
         emitted, rounds, acc_total = 0, 0, 0
         sample = []
-        while emitted < args.tokens * batch:
-            drafts = session.draft(last)
-            toks = np.concatenate([last[:, None], drafts], axis=1)
-            scores, acc = session.verify(toks.astype(np.int32))
-            rounds += 1
-            acc_total += int(np.sum(acc))
-            emitted += int(np.sum(acc + 1)) * rows_g
-            sample.append(int(scores[0, 0]))
-            acc_rows = np.asarray(acc).repeat(rows_g)
-            last = scores[np.arange(scores.shape[0]),
-                          acc_rows].astype(np.int32)
-        dt = time.time() - t0
+        with obs.timer("launch_phase_seconds", phase="decode") as td:
+            while emitted < args.tokens * batch:
+                drafts = session.draft(last)
+                toks = np.concatenate([last[:, None], drafts], axis=1)
+                scores, acc = session.verify(toks.astype(np.int32))
+                rounds += 1
+                acc_total += int(np.sum(acc))
+                emitted += int(np.sum(acc + 1)) * rows_g
+                sample.append(int(scores[0, 0]))
+                acc_rows = np.asarray(acc).repeat(rows_g)
+                last = scores[np.arange(scores.shape[0]),
+                              acc_rows].astype(np.int32)
+        dt = td.elapsed
         print(f"spec-decoded {emitted} tokens in {rounds} verify rounds "
               f"(k={session.sched.spec_k}, mean accepted/round "
               f"{acc_total / max(rounds * session.sched.n_microbatches, 1):.2f}) "
@@ -318,13 +330,30 @@ def main(argv=None):
         print("sample (first emitted/round):", sample[:args.tokens])
     else:
         outs = []
-        for _ in range(args.tokens):
-            nxt = session.decode(nxt)
-            outs.append(np.asarray(nxt))
-        dt = time.time() - t0
+        with obs.timer("launch_phase_seconds", phase="decode") as td:
+            for _ in range(args.tokens):
+                nxt = session.decode(nxt)
+                outs.append(np.asarray(nxt))
+        dt = td.elapsed
         print(f"decoded {args.tokens} steps × {batch} seqs in {dt:.2f}s "
               f"({args.tokens * batch / max(dt, 1e-9):.1f} tok/s)")
         print("sample:", np.stack(outs)[:, 0])
+    _finish_obs(obs, session, args)
+
+
+def _finish_obs(obs, session, args):
+    """Print the measured-vs-predicted report and write --trace-out /
+    --metrics-out artifacts (repro.obs)."""
+    for kind in ("decode", "verify"):
+        if obs.registry.counter("rounds_total").value(kind=kind):
+            print(" ", reconcile(session.sched, trace=obs.trace,
+                                 registry=obs.registry, kind=kind))
+    obs.save(trace_out=args.trace_out, metrics_out=args.metrics_out)
+    if args.trace_out:
+        print(f"wrote pipeline trace to {args.trace_out} "
+              "(open in Perfetto / chrome://tracing)")
+    if args.metrics_out:
+        print(f"wrote metrics snapshot to {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -19,7 +19,6 @@ CPU example (the --smoke config fits a laptop):
 """
 import argparse        # noqa: E402
 import json            # noqa: E402
-import time            # noqa: E402
 
 import jax             # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -28,12 +27,13 @@ from repro import configs                          # noqa: E402
 from repro.core.pipeline import build_pipeline     # noqa: E402
 from repro.data.pipeline import ShardedLoader, SyntheticLM, vlm_patch_stub  # noqa: E402
 from repro.launch.mesh import make_host_mesh, make_production_mesh  # noqa: E402
+from repro.obs import Observability, reconcile     # noqa: E402
 from repro.optim.optimizers import by_name         # noqa: E402
 from repro.parallel.mesh import split_model_axis   # noqa: E402
 from repro.runtime.driver import DriverConfig, TrainDriver  # noqa: E402
 
 
-def build(args):
+def build(args, obs=None):
     cfg = configs.get(args.arch)
     if args.smoke:
         spec = cfg.smoke_spec()
@@ -75,7 +75,7 @@ def build(args):
     bundle = build_pipeline(spec, plan, dmesh, seq_len=seq_len,
                             global_batch=global_batch, optimizer=opt,
                             compute_dtype=(jnp.float32 if args.smoke
-                                           else jnp.bfloat16))
+                                           else jnp.bfloat16), obs=obs)
     return spec, bundle
 
 
@@ -104,9 +104,17 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=10)
     ap.add_argument("--host-devices", type=int, default=None)
     ap.add_argument("--log", type=str, default=None)
+    ap.add_argument("--trace-out", type=str, default=None,
+                    help="write a Chrome trace-event JSON of every "
+                         "training round (one track per stage; open in "
+                         "Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    help="write the metrics-registry snapshot JSON "
+                         "(schema-checked by scripts/bench_check.py)")
     args = ap.parse_args(argv)
 
-    spec, bundle = build(args)
+    obs = Observability(trace=bool(args.trace_out))
+    spec, bundle = build(args, obs=obs)
     from repro.core.schedule import weighted_round_time
     plan = bundle.plan
     _, bubble = weighted_round_time(bundle.sched)
@@ -123,12 +131,19 @@ def main(argv=None):
     state = jax.jit(bundle.init_state,
                     out_shardings=bundle.state_shardings())(
         jax.random.key(0))
-    t0 = time.time()
-    state, step = driver.run(state, args.steps)
-    dt = time.time() - t0
+    with obs.timer("launch_phase_seconds", phase="run") as t:
+        state, step = driver.run(state, args.steps)
+    dt = t.elapsed
     losses = [m["loss"] for m in driver.metrics_log]
     print(f"arch={spec.name} steps={step} time={dt:.1f}s "
           f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    print(" ", reconcile(bundle.sched, trace=obs.trace,
+                         registry=obs.registry, kind="train"))
+    obs.save(trace_out=args.trace_out, metrics_out=args.metrics_out)
+    if args.trace_out:
+        print(f"wrote pipeline trace to {args.trace_out}")
+    if args.metrics_out:
+        print(f"wrote metrics snapshot to {args.metrics_out}")
     if args.log:
         with open(args.log, "w") as f:
             json.dump({"arch": spec.name, "losses": losses,

@@ -1,0 +1,134 @@
+"""Measured-vs-predicted reconciliation: close the replan loop.
+
+The planner's predictions (``weighted_round_time``,
+``benchmarks/simulator.py::simulate_schedule``) and the executor's
+measurements (:class:`~repro.obs.trace.TraceRecorder` rounds, the
+``round_seconds`` / ``stage_round_seconds`` registry series) describe
+the same quantity — wall seconds per schedule round — so comparing
+them is the repro's first-class health check: a ratio far from 1.0
+means the cost model the planner searched over does not describe the
+machine it planned for.
+
+Two consumers:
+
+  * :func:`reconcile` → :class:`ReconcileReport` — measured round time
+    and span-measured bubble fraction next to the table predictions,
+    printed by ``launch/serve.py``/``launch/train.py`` and asserted
+    (ratio ≈ 1 on an analytic clock) by ``scripts/obs_smoke.py``;
+  * :func:`stage_seconds` — per-stage mean wall seconds read back out
+    of a :class:`~repro.obs.metrics.Registry`, in the exact shape
+    ``core/profiler.py::scale_profiles_to_measurements`` consumes, so
+    ``runtime/driver.py::replan_from_registry`` can re-search plans off
+    telemetry the run actually produced.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.core.schedule import weighted_round_time
+
+__all__ = ["ReconcileReport", "reconcile", "stage_seconds"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ReconcileReport:
+    """Measured vs predicted for one round kind on one schedule."""
+
+    kind: Optional[str]
+    rounds: int                            # measured rounds folded in
+    measured_round_s: Optional[float]      # mean wall seconds / round
+    predicted_round_s: Optional[float]     # None without absolute costs
+    round_ratio: Optional[float]           # measured / predicted
+    measured_bubble: Optional[float]       # from emitted spans
+    predicted_bubble: float                # weighted_round_time's bubble
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        ratio = ("n/a" if self.round_ratio is None
+                 else f"{self.round_ratio:.3f}")
+        meas = ("n/a" if self.measured_round_s is None
+                else f"{self.measured_round_s * 1e3:.3f} ms")
+        bub = ("n/a" if self.measured_bubble is None
+               else f"{self.measured_bubble:.3f}")
+        return (f"reconcile[{self.kind or 'all'}]: "
+                f"round {meas} measured vs ratio {ratio}; "
+                f"bubble {bub} measured vs "
+                f"{self.predicted_bubble:.3f} predicted "
+                f"({self.rounds} rounds)")
+
+
+def reconcile(sched, *, trace=None, registry=None,
+              kind: Optional[str] = None,
+              t_fwd=None, t_bwd=None) -> ReconcileReport:
+    """Compare measured rounds against ``sched``'s table prediction.
+
+    Measurements come from ``trace`` (span-derived bubble + round
+    durations) and/or ``registry`` (the ``round_seconds{kind=}``
+    histogram — used when no trace was recorded).  ``t_fwd``/``t_bwd``
+    are per-stage (or scalar) *absolute seconds* as taken by
+    ``weighted_round_time``; when given, the report carries a predicted
+    round time and a measured/predicted ratio — without them only the
+    unit-free bubble fractions are compared (predicted with uniform
+    costs).
+    """
+    measured_round = None
+    measured_bubble = None
+    n_rounds = 0
+    if trace is not None:
+        recs = [r for r in trace.rounds if kind is None or r.kind == kind]
+        n_rounds = len(recs)
+        if recs:
+            measured_round = trace.measured_round_seconds(kind)
+            measured_bubble = trace.measured_bubble_fraction(kind)
+    if measured_round is None and registry is not None:
+        labels = {} if kind is None else {"kind": kind}
+        stats = registry.histogram("round_seconds").stats(**labels)
+        n_rounds = stats["count"]
+        measured_round = stats["mean"]
+
+    # without absolute costs the bubble prediction is unit-free
+    # (uniform costs); with t_fwd but no t_bwd we are on a forward-only
+    # serving table, where backward cost is definitionally zero
+    have_costs = t_fwd is not None
+    pf = t_fwd if have_costs else 1.0
+    if t_bwd is None:
+        t_bwd = 0.0 if have_costs else 1.0
+    predicted_round, predicted_bubble = weighted_round_time(sched, pf, t_bwd)
+
+    predicted_round_s = float(predicted_round) if have_costs else None
+    ratio = None
+    if predicted_round_s and measured_round is not None:
+        ratio = measured_round / predicted_round_s
+    return ReconcileReport(
+        kind=kind, rounds=int(n_rounds),
+        measured_round_s=measured_round,
+        predicted_round_s=predicted_round_s,
+        round_ratio=ratio,
+        measured_bubble=measured_bubble,
+        predicted_bubble=float(predicted_bubble))
+
+
+def stage_seconds(registry, n_stages: int, *,
+                  name: str = "stage_round_seconds") -> List[float]:
+    """Per-stage mean wall seconds out of the registry.
+
+    Reads the ``name{stage=s}`` histogram for ``s`` in
+    ``range(n_stages)`` — the series ``runtime/driver.py``'s training
+    loop populates — and returns the per-stage means in the exact shape
+    ``scale_profiles_to_measurements`` expects.  Raises ``ValueError``
+    when a stage has no samples: replanning off partial telemetry would
+    silently mis-balance.
+    """
+    hist = registry.histogram(name)
+    out = []
+    for s in range(n_stages):
+        mean = hist.stats(stage=s)["mean"]
+        if mean is None:
+            raise ValueError(
+                f"registry has no {name}{{stage={s}}} samples; "
+                f"cannot replan from partial telemetry")
+        out.append(float(mean))
+    return out

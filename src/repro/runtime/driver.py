@@ -36,12 +36,22 @@ class DriverConfig:
 class TrainDriver:
     def __init__(self, bundle, loader, ckpt_dir: str,
                  cfg: DriverConfig = DriverConfig(),
-                 failure_hook: Optional[Callable[[int], None]] = None):
+                 failure_hook: Optional[Callable[[int], None]] = None,
+                 obs=None,
+                 stage_seconds_fn: Optional[Callable[[int], Any]] = None):
         self.bundle = bundle
         self.loader = loader
         self.cfg = cfg
         self.ckpt = CheckpointManager(ckpt_dir)
         self.failure_hook = failure_hook or (lambda step: None)
+        # observability (repro.obs.Observability): one on_round("train")
+        # per executed round.  The SPMD step is one fused device program,
+        # so the host cannot time stages individually; stage_seconds_fn
+        # (step -> per-stage seconds, e.g. from a profiler hook or a
+        # straggler harness) feeds the stage_round_seconds{stage=}
+        # histograms that replan_from_registry re-plans from.
+        self.obs = obs if obs is not None else getattr(bundle, "obs", None)
+        self.stage_seconds_fn = stage_seconds_fn
         self._jit_step = jax.jit(
             bundle.train_step,
             in_shardings=(bundle.state_shardings(), bundle.batch_shardings()),
@@ -59,10 +69,19 @@ class TrainDriver:
             try:
                 self.failure_hook(step)          # may raise (simulated fault)
                 batch = self.loader.get(step)
-                t0 = time.perf_counter()
+                clk = (self.obs.clock if self.obs is not None
+                       else time.perf_counter)
+                t0 = clk()
                 state, metrics = self._jit_step(state, batch)
                 jax.block_until_ready(metrics["loss"])
-                self.stage_times.append(time.perf_counter() - t0)
+                t1 = clk()
+                self.stage_times.append(t1 - t0)
+                if self.obs is not None:
+                    self.obs.on_round("train", self.bundle.sched, t0, t1)
+                    if self.stage_seconds_fn is not None:
+                        hist = self.obs.histogram("stage_round_seconds")
+                        for s, sec in enumerate(self.stage_seconds_fn(step)):
+                            hist.observe(float(sec), stage=s)
                 self.metrics_log.append(
                     {k: float(v) for k, v in metrics.items()})
                 step += 1
@@ -361,6 +380,30 @@ def rebalance_from_measurements(spec, plan, measured_stage_seconds,
                               hbm_bytes=hbm_bytes):
             new_plan = fb
     return new_plan, True
+
+
+def replan_from_registry(spec, plan, registry, hw=prof.TPU_V5E, *,
+                         minibatch_tokens: int, data_replicas: int,
+                         slack: float = 1.25, schedules=None,
+                         hbm_bytes=None):
+    """Rebalance off telemetry the run actually collected.
+
+    Reads the per-stage mean wall seconds out of the metrics registry's
+    ``stage_round_seconds{stage=}`` histograms (populated by
+    :class:`TrainDriver` via its ``stage_seconds_fn`` hook, or by any
+    executor timing its stages through ``Registry.timer``) and hands
+    them to :func:`rebalance_from_measurements` — the end of the
+    paper's profile→plan→measure→replan loop, with no hand-injected
+    numbers between the measurement and the search.  Returns
+    ``(new_plan, rebalanced)``; raises ``ValueError`` when any of
+    ``plan.pp`` stages has no samples.
+    """
+    from repro.obs.reconcile import stage_seconds
+    measured = stage_seconds(registry, plan.pp)
+    return rebalance_from_measurements(
+        spec, plan, measured, hw, minibatch_tokens=minibatch_tokens,
+        data_replicas=data_replicas, slack=slack, schedules=schedules,
+        hbm_bytes=hbm_bytes)
 
 
 def _plan_is_buildable(spec, plan, hw, *, minibatch_tokens: int,

@@ -418,6 +418,8 @@ class BatchingReport:
     def summary(self) -> dict:
         lat = self.per_token_latency_s()
         ttft = np.asarray([r.t_first - r.t_arrival for r in self.completed])
+        # latency stats over zero completed requests are None, not NaN:
+        # NaN survives json.dump and trips bench_check's non-finite gate
         return {
             "policy": self.policy,
             "requests": len(self.requests),
@@ -429,11 +431,11 @@ class BatchingReport:
             "wall_seconds": self.wall_seconds,
             "goodput_tokens_per_s": self.goodput_tokens_per_s,
             "p50_per_token_latency_s":
-                float(np.percentile(lat, 50)) if lat.size else float("nan"),
+                float(np.percentile(lat, 50)) if lat.size else None,
             "p99_per_token_latency_s":
-                float(np.percentile(lat, 99)) if lat.size else float("nan"),
+                float(np.percentile(lat, 99)) if lat.size else None,
             "mean_ttft_s":
-                float(ttft.mean()) if ttft.size else float("nan"),
+                float(ttft.mean()) if ttft.size else None,
         } | ({
             "spec_rounds": self.spec_rounds,
             "drafted_tokens": self.drafted_tokens,
@@ -464,7 +466,7 @@ class ContinuousBatchingSession:
     def __init__(self, session, *, eos_id: Optional[int] = None,
                  policy: str = "continuous",
                  clock: Callable[[], float] = time.perf_counter,
-                 draft_fn: Optional[Callable] = None):
+                 draft_fn: Optional[Callable] = None, obs=None):
         if policy not in ("continuous", "synchronized"):
             raise ValueError(f"unknown policy {policy!r}")
         if getattr(session, "admit_step", None) is None:
@@ -475,6 +477,9 @@ class ContinuousBatchingSession:
         self.eos_id = eos_id
         self.policy = policy
         self.clock = clock
+        # scheduler-level metrics ride the engine's Observability unless
+        # a separate one is passed; the engine itself reports its rounds
+        self.obs = obs if obs is not None else getattr(session, "obs", None)
         sched = getattr(session, "sched", None)
         self.spec_k = (int(getattr(sched, "spec_k", 0))
                        if getattr(sched, "is_speculative", False) else 0)
@@ -634,6 +639,7 @@ class ContinuousBatchingSession:
         behavior.
         """
         mask = np.zeros((self.R,), np.int32)
+        n_truncated = 0
         for i in slot_idx:
             slot = self.slots[int(i)]
             for r in slot.requests:
@@ -641,10 +647,14 @@ class ContinuousBatchingSession:
                     r.state = "finished"
                     r.truncated = True
                     r.t_done, r.step_done = now, self.steps
+                    n_truncated += 1
             slot.clear()
             mask[int(i)] = 1
         self.session.reset_slots(mask)
         self._compact()
+        if self.obs is not None:
+            self.obs.counter("exhausted_evictions_total").inc(len(slot_idx))
+            self.obs.counter("requests_truncated_total").inc(n_truncated)
 
     def _live_lanes(self):
         return [(s, lane, r) for s in self.slots
@@ -739,6 +749,10 @@ class ContinuousBatchingSession:
             if live:
                 self.decode_rounds += 1
         self.steps += 1
+        if self.obs is not None:
+            self.obs.gauge("queue_depth").set(self.queue.n_ready)
+            self.obs.gauge("slots_live").set(
+                sum(1 for s in self.slots if not s.free))
         return bool(len(self.queue) or live
                     or any(not s.free for s in self.slots))
 
@@ -765,7 +779,7 @@ class ContinuousBatchingSession:
         while self.steps < max_steps:
             if not self.step():
                 break
-        return BatchingReport(
+        report = BatchingReport(
             requests=self._all, policy=self.policy, steps=self.steps,
             decode_rounds=self.decode_rounds,
             admit_rounds=self.admit_rounds,
@@ -775,3 +789,29 @@ class ContinuousBatchingSession:
             drafted_tokens=self.drafted_tokens,
             accepted_drafts=self.accepted_drafts,
             accepted_tokens=self.accepted_tokens)
+        if self.obs is not None:
+            self._publish(report)
+        return report
+
+    def _publish(self, report: BatchingReport) -> None:
+        """Fold a finished run into the registry: request/token totals,
+        goodput, per-request TTFT and per-token latency histograms (p50/
+        p99 fall out of the snapshot), and the speculative acceptance
+        counters that used to live only in the summary dict."""
+        c, g, h = self.obs.counter, self.obs.gauge, self.obs.histogram
+        pol = self.policy
+        c("requests_total").inc(len(report.requests), policy=pol)
+        c("requests_completed_total").inc(len(report.completed), policy=pol)
+        c("tokens_completed_total").inc(report.completed_tokens, policy=pol)
+        g("goodput_tokens_per_s").set(report.goodput_tokens_per_s,
+                                      policy=pol)
+        for r in report.completed:
+            h("ttft_seconds").observe(r.t_first - r.t_arrival, policy=pol)
+            h("per_token_latency_seconds").observe(
+                (r.t_done - r.t_arrival) / len(r.tokens), policy=pol)
+        if report.spec_rounds:
+            c("spec_rounds_total").inc(report.spec_rounds)
+            c("spec_lane_rounds_total").inc(report.spec_lane_rounds)
+            c("drafted_tokens_total").inc(report.drafted_tokens)
+            c("accepted_drafts_total").inc(report.accepted_drafts)
+            c("accepted_tokens_total").inc(report.accepted_tokens)

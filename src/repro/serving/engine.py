@@ -154,6 +154,10 @@ class EngineSession:
     draft_step: Optional[Callable] = None
     rollback_step: Optional[Callable] = None
     cache_len: int = 0             # KV capacity (headroom checks)
+    # observability hook (repro.obs.Observability or None = off): every
+    # host-driven table walk reports one on_round(); CacheExhausted and
+    # slot ops feed counters; the allocator feeds page gauges
+    obs: Any = None
     # storage dtypes (build_serving(weight_dtype=, kv_dtype=)) and the
     # raw (unquantized) param template load_params casts against
     weight_dtype: Optional[str] = None
@@ -170,6 +174,8 @@ class EngineSession:
     # per-slot prompt length mirror: rollback may never cross it
     _prompt_len: Any = None
     _bucket_log: list = dataclasses.field(default_factory=list)
+    # bucketed schedule variants built once per bucket for trace spans
+    _bucket_scheds: Dict[int, Any] = dataclasses.field(default_factory=dict)
 
     def state_shardings(self):
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s),
@@ -236,6 +242,41 @@ class EngineSession:
                 f"bucket {bucket} is not in the lattice {self.buckets}")
         return int(bucket)
 
+    # ---- observability hooks ----------------------------------------------
+
+    def _obs_t0(self):
+        """Round start stamp — taken only when obs is on (zero cost off)."""
+        return self.obs.clock() if self.obs is not None else None
+
+    def _obs_round(self, kind, b, t0, *sync):
+        """Report one executed round [t0, now) over bucket ``b``'s table.
+
+        ``sync``: device outputs to block on so the stamp covers the
+        compute, not just the async dispatch.  The bucketed table is
+        built once per bucket (``bucketed()`` re-proves its invariants
+        on every call) and reused for every round's trace spans.
+        """
+        if self.obs is None:
+            return
+        if sync:
+            jax.block_until_ready(sync)
+        R = self.sched.n_microbatches
+        sched = self.sched
+        if b != R:
+            sched = self._bucket_scheds.get(b)
+            if sched is None:
+                sched = self._bucket_scheds[b] = self.sched.bucketed(b)
+        self.obs.on_round(kind, sched, t0, self.obs.clock(),
+                          bucket=b if self.buckets is not None else None)
+        if self._alloc is not None:
+            self.obs.page_gauges(self._alloc)
+
+    def _obs_exhausted(self, kind, reason):
+        """Count a CacheExhausted about to be raised from ``kind``."""
+        if self.obs is not None:
+            self.obs.counter("cache_exhausted_total").inc(
+                kind=kind, reason=reason)
+
     # ---- paged-KV host-side hooks (allocator lives in serving/batcher) ----
 
     def _push_tables(self):
@@ -281,7 +322,9 @@ class EngineSession:
             self._jit["prefill"] = jax.jit(
                 self.prefill_step, in_shardings=(sh, None),
                 out_shardings=(sh, None))
+        t0 = self._obs_t0()
         self.state, tokens = self._jit["prefill"](self.state, batch)
+        self._obs_round("prefill", self.sched.n_microbatches, t0, tokens)
         return tokens
 
     def decode(self, tokens, bucket=None):
@@ -316,6 +359,7 @@ class EngineSession:
             live_r = np.flatnonzero(self._live)
             over = [int(r) for r in live_r if self._pos[r] >= cap]
             if over:
+                self._obs_exhausted("decode", "capacity")
                 raise CacheExhausted(
                     f"slots {over} are at paged KV capacity "
                     f"(cache_len={cap} tokens); evict or raise cache_len",
@@ -330,6 +374,7 @@ class EngineSession:
                 else:
                     free -= need
             if dry:
+                self._obs_exhausted("decode", "pool")
                 raise CacheExhausted(
                     f"page pool exhausted growing slots {dry} "
                     f"({self._alloc.free_pages} pages free); evict a slot "
@@ -345,7 +390,9 @@ class EngineSession:
             self._jit[key] = jax.jit(
                 fn, in_shardings=(sh, None),
                 out_shardings=(sh, None), donate_argnums=0)
+        t0 = self._obs_t0()
         self.state, tokens = self._jit[key](self.state, tokens)
+        self._obs_round("decode", b, t0, tokens)
         self._pos += self._live
         if self.buckets is not None:
             self._bucket_log.append(b)
@@ -419,6 +466,7 @@ class EngineSession:
             # capacity backpressure (evictable), mirroring decode()
             over = [int(r) for r in live_r if self._pos[r] + Q > cap]
             if over:
+                self._obs_exhausted("verify", "capacity")
                 raise CacheExhausted(
                     f"slots {over} lack verify headroom (pos + spec_k+1 "
                     f"> cache_len={cap}); evict them or lower spec_k",
@@ -442,6 +490,7 @@ class EngineSession:
                 else:
                     free -= need
             if dry:
+                self._obs_exhausted("verify", "pool")
                 raise CacheExhausted(
                     f"page pool exhausted growing slots {dry} for a "
                     f"spec_k={K} verify round "
@@ -459,8 +508,10 @@ class EngineSession:
             self._jit[key] = jax.jit(
                 fn, in_shardings=(sh, None),
                 out_shardings=(sh, (None, None)), donate_argnums=0)
+        t0 = self._obs_t0()
         self.state, (scores, accepted) = self._jit[key](
             self.state, jnp.asarray(toks, jnp.int32))
+        self._obs_round("verify", b, t0, (scores, accepted))
         accepted = np.asarray(accepted, np.int64)
         self._pos += (accepted + 1) * (self._live > 0)
         if self.paged is not None:
@@ -546,6 +597,10 @@ class EngineSession:
                 donate_argnums=0)
         self.state = self._jit["reset"](self.state,
                                         jnp.asarray(slot_mask, jnp.int32))
+        if self.obs is not None:
+            self.obs.counter("slot_resets_total").inc(int(m.sum()))
+            if self._alloc is not None:
+                self.obs.page_gauges(self._alloc)
         return self
 
     def write_prefill_into_slots(self, batch, slot_mask, bucket=None):
@@ -602,8 +657,10 @@ class EngineSession:
             self._jit[key] = jax.jit(
                 fn, in_shardings=(sh, None, None),
                 out_shardings=(sh, None), donate_argnums=0)
+        t0 = self._obs_t0()
         self.state, tokens = self._jit[key](
             self.state, batch, jnp.asarray(slot_mask, jnp.int32))
+        self._obs_round("admit", b, t0, tokens)
         if self.buckets is not None:
             self._bucket_log.append(b)
         return tokens
@@ -640,6 +697,8 @@ class EngineSession:
         self._pos = self._pos[perm]
         self._live = self._live[perm]
         self._prompt_len = self._prompt_len[perm]
+        if self.obs is not None:
+            self.obs.counter("compactions_total").inc()
         if self._alloc is not None:
             # host allocator rows follow the same permutation; the device
             # tables were permuted identically by compact_step, so no
@@ -656,7 +715,8 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                   buckets: bool = False,
                   spec_k: Optional[int] = None,
                   weight_dtype: Optional[str] = None,
-                  kv_dtype: Optional[str] = None) -> EngineSession:
+                  kv_dtype: Optional[str] = None,
+                  obs=None) -> EngineSession:
     """``page_size > 0`` switches full-length attention KV to the
     block-paged layout: a global per-layer page pool
     (n_chunks, pool_pages, rows, page_size, KV, Dh) plus one per-slot
@@ -1492,7 +1552,7 @@ def build_serving(spec: spec_lib.ModelSpec, plan: ParallelismPlan,
                          verify_step_for=verify_step_for,
                          draft_step=session_draft_step,
                          rollback_step=rollback_slots_step,
-                         cache_len=cache_len,
+                         cache_len=cache_len, obs=obs,
                          weight_dtype=weight_dtype, kv_dtype=kv_dtype,
                          compute_dtype=compute_dtype,
                          param_template=param_template)
